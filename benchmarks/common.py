@@ -1,0 +1,116 @@
+"""Shared benchmark infrastructure: trained small engine (cached), ground
+truth from the synthetic world, AveP metric."""
+from __future__ import annotations
+
+import pathlib
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "cache"
+
+EVAL_QUERIES = [
+    ("a red square", {"color": "red", "shape": "square"}),
+    ("a blue circle", {"color": "blue", "shape": "circle"}),
+    ("a green triangle", {"color": "green", "shape": "triangle"}),
+    ("a large yellow square", {"color": "yellow", "shape": "square",
+                               "size": "large"}),
+    ("a small white circle", {"color": "white", "shape": "circle",
+                              "size": "small"}),
+    ("a black bar", {"color": "black", "shape": "bar"}),
+    ("a purple square in the center of the frame",
+     {"color": "purple", "shape": "square", "position": "center"}),
+    ("an orange circle on the left",
+     {"color": "orange", "shape": "circle", "position": "left"}),
+]
+
+
+def train_alignment_params(steps: int = 300, seed: int = 0, res: int = 96,
+                           cache_tag: str = "align_v2") -> dict:
+    """Train the small dual encoder + rerank on synthetic pairs (cached)."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"{cache_tag}_{steps}.pkl"
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    from repro.data.synthetic import Tokenizer, alignment_batches
+    from repro.models import rerank as RR
+    from repro.models import text_encoder as TE
+    from repro.models import vit as V
+    from repro.train.alignment import AlignConfig, alignment_loss, init_all
+    from repro.train.optimizer import AdamConfig, adam_init
+    from repro.train.train_loop import make_train_step
+
+    d = 64
+    cfg = AlignConfig(
+        vit=V.ViTConfig(n_layers=2, d_model=d, n_heads=2, d_ff=4 * d,
+                        patch=16, img_res=res, embed_dim=64),
+        txt=TE.TextConfig(n_layers=2, d_model=d, n_heads=2, d_ff=4 * d,
+                          vocab=32_000, max_len=16, embed_dim=64),
+        rerank=RR.RerankConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                               n_queries=4, img_dim=d, txt_dim=d,
+                               decoder_layers=1))
+    params = init_all(jax.random.PRNGKey(seed), cfg)
+    adam = AdamConfig(lr=1e-3, total_steps=steps, warmup_steps=20)
+    step = jax.jit(make_train_step(
+        lambda p, **b: alignment_loss(p, b, cfg), adam),
+        donate_argnums=(0, 1))
+    opt = adam_init(params, adam)
+    tok = Tokenizer(vocab=32_000, max_len=16)
+    it = alignment_batches(seed, batch=16, res=res, tokenizer=tok)
+    metrics = {}
+    for i in range(steps):
+        batch = jax.tree.map(lambda x: jnp.asarray(x)[None], next(it))
+        params, opt, metrics = step(params, opt, batch)
+    out = {"params": jax.tree.map(np.asarray, params),
+           "final_loss": float(metrics["loss"]), "cfg_note": "64d small"}
+    with open(f, "wb") as fh:
+        pickle.dump(out, fh)
+    return out
+
+
+def build_eval_engine(steps: int = 300, n_videos: int = 8, seed: int = 1):
+    """Trained engine + per-keyframe ground-truth labels for EVAL_QUERIES."""
+    from repro.launch.serve import build_engine
+    trained = train_alignment_params(steps=steps)
+    engine, videos = build_engine(seed=seed, n_videos=n_videos, res=96,
+                                  vit_layers=2, d_model=64,
+                                  trained_params=trained["params"])
+    # ground truth: keyframe row -> object attribute sets
+    labels = []
+    for row in range(len(engine.built.keyframes)):
+        vi = int(engine.built.keyframe_video[row])
+        fi = int(engine.built.keyframe_frame[row])
+        labels.append([
+            {"color": o.color, "shape": o.shape, "size": o.size,
+             "position": o.position}
+            for o in videos[vi].objects[fi]])
+    return engine, labels
+
+
+def relevant(attrs: dict, frame_objects: list[dict]) -> bool:
+    return any(all(o.get(k) == v for k, v in attrs.items())
+               for o in frame_objects)
+
+
+def average_precision(ranked_rows: np.ndarray, labels: list, attrs: dict,
+                      n_relevant_total: int | None = None) -> float:
+    rel = np.asarray([relevant(attrs, labels[int(r)]) for r in ranked_rows])
+    if n_relevant_total is None:
+        n_relevant_total = sum(relevant(attrs, l) for l in labels)
+    if n_relevant_total == 0:
+        return float("nan")
+    hits = np.cumsum(rel)
+    prec = hits / (np.arange(len(rel)) + 1)
+    return float(np.sum(prec * rel) / n_relevant_total)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeats

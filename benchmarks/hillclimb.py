@@ -1,0 +1,121 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb harness: lower a cell with config overrides, print the roofline
+delta vs baseline.  Each §Perf iteration is one invocation.
+
+  python -m benchmarks.hillclimb --arch llama3-405b --shape train_4k \
+      --set grad_accum=4 --rules "seq_act=model" --tag accum4
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "hillclimb"
+
+
+def parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                if v in ("true", "false"):
+                    v = v == "true"
+        out[k] = v
+    return out
+
+
+def parse_rules(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        out[k] = tuple(v.split("+")) if v and v != "none" else None
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", help="arch field overrides k=v")
+    ap.add_argument("--shape-set", nargs="*", help="shape dim overrides k=v")
+    ap.add_argument("--rules", nargs="*",
+                    help="rule overrides k=axis1+axis2 or k=none")
+    ap.add_argument("--moe-set", nargs="*", help="MoESpec overrides")
+    ap.add_argument("--tag", required=True)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.base import LMArch, get_arch
+    from repro.launch import roofline as RL
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    arch = get_arch(args.arch)
+    overrides = parse_kv(args.set)
+    if args.moe_set and getattr(arch, "moe", None) is not None:
+        arch = dataclasses.replace(
+            arch, moe=dataclasses.replace(arch.moe, **parse_kv(args.moe_set)))
+    shape_over = parse_kv(args.shape_set)
+    rule_over = parse_rules(args.rules)
+
+    spec = next(s for s in arch.shapes if s.name == args.shape)
+    if "grad_accum" in overrides:
+        spec = dataclasses.replace(spec, grad_accum=overrides.pop("grad_accum"))
+    if shape_over:
+        dims = dict(spec.dims)
+        dims.update(shape_over)
+        spec = dataclasses.replace(spec, dims=tuple(dims.items()))
+    if rule_over:
+        merged = dict(spec.rules)
+        merged.update({k: (tuple(v) if v else None)
+                       for k, v in rule_over.items()})
+        spec = dataclasses.replace(spec, rules=tuple(sorted(merged.items())))
+    if overrides:
+        arch = dataclasses.replace(arch, **overrides)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    chips = int(mesh.devices.size)
+    cell = build_cell(arch, spec, mesh)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           donate_argnums=cell.donate).lower(
+            *cell.inputs).compile()
+    rl = RL.analyse(args.arch, args.shape, mesh_name, chips, compiled,
+                    cell.model_flops)
+    if isinstance(arch, LMArch):
+        from repro.launch.probes import probe_corrected_costs
+        cor = probe_corrected_costs(arch, spec, mesh, verbose=False)
+        rl.hlo_flops, rl.hlo_bytes = cor["flops"], cor["bytes"]
+        rl.coll_wire_bytes = cor["wire"]
+    mem = compiled.memory_analysis()
+    rec = rl.row()
+    rec.update({"tag": args.tag, "compile_s": round(time.time() - t0, 1),
+                "temp_gb": mem.temp_size_in_bytes / 1e9,
+                "arg_gb": mem.argument_size_in_bytes / 1e9,
+                "overrides": {"set": args.set, "rules": args.rules,
+                              "shape": args.shape_set,
+                              "moe": args.moe_set}})
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{args.arch}__{args.shape}__{mesh_name}__{args.tag}.json"
+     ).write_text(json.dumps(rec, indent=1, default=str))
+    print(f"[{args.tag}] compute={RL.fmt_seconds(rl.t_compute)} "
+          f"memory={RL.fmt_seconds(rl.t_memory)} "
+          f"collective={RL.fmt_seconds(rl.t_collective)} "
+          f"bound={rl.bottleneck} frac={rl.roofline_fraction:.4f} "
+          f"temp={mem.temp_size_in_bytes/1e9:.1f}GB "
+          f"args={mem.argument_size_in_bytes/1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

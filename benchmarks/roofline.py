@@ -1,0 +1,71 @@
+"""§Roofline table builder: collects experiments/dryrun/*.json into the
+per-(arch x shape x mesh) three-term table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, fmt_seconds
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+V5E_HBM = 16e9
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16", markdown: bool = True) -> str:
+    recs = [r for r in load_records(mesh) if r.get("ok")]
+    lines = []
+    hdr = ("| arch | shape | t_comp | t_mem | t_coll | bound | "
+           "GB/dev | fits | useful | roofl.frac |")
+    sep = "|" + "---|" * 10
+    lines += [hdr, sep]
+    for r in recs:
+        mem = r.get("memory_analysis", {})
+        gb = (mem.get("temp_size_in_bytes", 0)
+              + mem.get("argument_size_in_bytes", 0)) / 1e9
+        fits = "Y" if gb * 1e9 <= V5E_HBM else "OVER"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_seconds(r['t_compute_s'])} | {fmt_seconds(r['t_memory_s'])} | "
+            f"{fmt_seconds(r['t_collective_s'])} | {r['bottleneck'][:4]} | "
+            f"{gb:.1f} | {fits} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    fails = [r for r in load_records(mesh) if not r.get("ok")]
+    for r in fails:
+        lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+    return "\n".join(lines)
+
+
+def summary() -> dict:
+    recs = [r for r in load_records() if r.get("ok")]
+    n_fail = len([r for r in load_records() if not r.get("ok")])
+    by_bound = {}
+    for r in recs:
+        by_bound[r["bottleneck"]] = by_bound.get(r["bottleneck"], 0) + 1
+    return {"cells_ok": len(recs), "cells_failed": n_fail,
+            "by_bottleneck": by_bound,
+            "constants": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                          "ici_bw": ICI_BW}}
+
+
+def main():
+    print(f"# roofline summary: {summary()}")
+    for mesh in ("16x16", "2x16x16"):
+        recs = load_records(mesh)
+        if recs:
+            print(f"\n## mesh {mesh}")
+            print(table(mesh))
+    return summary()
+
+
+if __name__ == "__main__":
+    main()

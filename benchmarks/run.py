@@ -1,0 +1,116 @@
+"""Benchmark entrypoint: one harness per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows, one per table/figure, plus the
+roofline summary (from the dry-run artifacts).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+import numpy as np
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the trained-engine accuracy benches")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    benches = []
+
+    def bench(name):
+        def deco(fn):
+            benches.append((name, fn))
+            return fn
+        return deco
+
+    @bench("fig6_accuracy")
+    def fig6():
+        from benchmarks import accuracy
+        t0 = time.perf_counter()
+        means = accuracy.main()
+        us = (time.perf_counter() - t0) * 1e6
+        return us, (f"AveP LOVO={means['LOVO']:.3f} "
+                    f"worerank={means['LOVO_wo_rerank']:.3f} "
+                    f"BF={means['BF']:.3f} global={means['GlobalFrame']:.3f}")
+
+    @bench("tab4_ablation")
+    def tab4():
+        from benchmarks import ablation
+        t0 = time.perf_counter()
+        rows = ablation.main()
+        us = (time.perf_counter() - t0) * 1e6
+        return us, (f"anns_speedup={rows['wo_ANNS']['anns_speedup']:.2f}x "
+                    f"index_growth={rows['wo_Keyframe']['index_growth']:.2f}x")
+
+    @bench("tab5_ann_variants")
+    def tab5():
+        from benchmarks import ann_variants
+        t0 = time.perf_counter()
+        rows = ann_variants.main()
+        us = (time.perf_counter() - t0) * 1e6
+        return us, (f"recall IVFPQ={rows['IVF-PQ']['recall']:.3f} "
+                    f"HNSW={rows['HNSW']['recall']:.3f}")
+
+    @bench("fig11_scaling")
+    def fig11():
+        from benchmarks import scaling
+        t0 = time.perf_counter()
+        out = scaling.main()
+        us = (time.perf_counter() - t0) * 1e6
+        s = out["search"]
+        flatness = s[-1]["fast_search_s"] / max(s[0]["fast_search_s"], 1e-9)
+        growth = s[-1]["index_rows"] / s[0]["index_rows"]
+        return us, (f"search_time_growth={flatness:.2f}x over "
+                    f"{growth:.0f}x index growth")
+
+    @bench("kernel_pq_scan")
+    def kpq():
+        import jax
+        from repro.kernels import ops
+        luts = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 256))
+        codes = jax.random.randint(jax.random.PRNGKey(1), (65536, 64), 0, 256)
+        ops.pq_scan_batched(luts, codes).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            ops.pq_scan_batched(luts, codes).block_until_ready()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        return us, "interpret-mode 8q x 65536rows x P64 M256"
+
+    @bench("roofline_summary")
+    def roof():
+        from benchmarks import roofline
+        t0 = time.perf_counter()
+        s = roofline.summary()
+        us = (time.perf_counter() - t0) * 1e6
+        return us, (f"cells_ok={s['cells_ok']} failed={s['cells_failed']} "
+                    f"bottlenecks={s['by_bottleneck']}")
+
+    skip_slow = {"fig6_accuracy", "tab4_ablation"} if args.quick else set()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        if name in skip_slow or (args.only and args.only != name):
+            continue
+        try:
+            us, derived = fn()
+            _row(name, us, derived)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            _row(name, float("nan"), f"FAILED: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

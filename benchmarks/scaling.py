@@ -1,0 +1,93 @@
+"""Fig. 10/11 reproduction: scaling behavior.
+
+  (a) processing time vs number of key frames (linear, Fig. 11a)
+  (b) fast-search time vs index size (flat / sub-linear, Fig. 11b)
+  (c) fast-search time per entity (Fig. 11c)
+  (d) rerank time vs number of candidate objects (gradual, Fig. 11d)
+
+All on the small-but-real engine models; the paper's claims are about
+SHAPES of these curves, which transfer.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import anns, imi as imimod, pq as pqmod
+
+
+def processing_vs_frames(sizes=(8, 16, 32)) -> list[dict]:
+    from repro.core.index_builder import encode_keyframes
+    from repro.models import vit as V
+    vcfg = V.ViTConfig(n_layers=2, d_model=64, n_heads=2, d_ff=256,
+                       patch=16, img_res=96, embed_dim=64)
+    vp = V.init_vit(jax.random.PRNGKey(0), vcfg)[0]
+    rows = []
+    for n in sizes:
+        frames = np.random.default_rng(0).random((n, 96, 96, 3)
+                                                 ).astype(np.float32)
+        encode_keyframes(vp, frames[:8], vcfg)  # warm compile
+        t0 = time.perf_counter()
+        encode_keyframes(vp, frames, vcfg)
+        rows.append({"frames": n, "s": time.perf_counter() - t0})
+    return rows
+
+
+def search_vs_index_size(sizes=(10_000, 40_000, 160_000), d=64) -> list[dict]:
+    rows = []
+    for n in sizes:
+        x = pqmod.normalize(jax.random.normal(jax.random.PRNGKey(1), (n, d)))
+        index = imimod.build_imi(jax.random.PRNGKey(0), x, jnp.arange(n),
+                                 K=32, P=8, M=64, kmeans_iters=5)
+        q = pqmod.normalize(jax.random.normal(jax.random.PRNGKey(2), (d,)))
+        cfg = anns.SearchConfig(top_a=32, max_cell_size=1024, top_k=100)
+        _, dt = timed(
+            lambda: anns.search(index, q, cfg)["ids"].block_until_ready(),
+            repeats=5)
+        rows.append({"index_rows": n, "fast_search_s": dt,
+                     "s_per_entity": dt / n})
+    return rows
+
+
+def rerank_vs_objects(counts=(4, 8, 16, 32)) -> list[dict]:
+    from repro.models import rerank as RR
+    rcfg = RR.RerankConfig(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                           n_queries=4, img_dim=64, txt_dim=64,
+                           decoder_layers=1)
+    params = RR.init_rerank(jax.random.PRNGKey(0), rcfg)[0]
+    fn = jax.jit(lambda p, i, t, m: RR.rerank_frame(p, i, t, m, rcfg))
+    rows = []
+    for c in counts:
+        img = jax.random.normal(jax.random.PRNGKey(1), (c, 36, 64))
+        txt = jax.random.normal(jax.random.PRNGKey(2), (c, 16, 64))
+        msk = jnp.ones((c, 16))
+        _, dt = timed(lambda: fn(params, img, txt, msk)[0].block_until_ready(),
+                      repeats=5)
+        rows.append({"objects": c, "rerank_s": dt})
+    return rows
+
+
+def main():
+    out = {}
+    print("# processing vs frames (expect ~linear)")
+    out["processing"] = processing_vs_frames()
+    for r in out["processing"]:
+        print(f"frames={r['frames']},s={r['s']:.3f}")
+    print("# fast search vs index size (expect flat-ish)")
+    out["search"] = search_vs_index_size()
+    for r in out["search"]:
+        print(f"rows={r['index_rows']},s={r['fast_search_s']*1e3:.2f}ms,"
+              f"per_entity={r['s_per_entity']:.2e}s")
+    print("# rerank vs objects (expect gradual)")
+    out["rerank"] = rerank_vs_objects()
+    for r in out["rerank"]:
+        print(f"objects={r['objects']},s={r['rerank_s']*1e3:.1f}ms")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Distributed LOVO index on an 8-device mesh (forced host devices):
+shard the index, run batched queries, show the merge ships only top-k.
+
+  PYTHONPATH=src python examples/distributed_search.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    from repro.core import anns, distributed as dist, imi as imimod, pq as pqmod
+
+    n, d = 65_536, 64
+    cents = jax.random.normal(jax.random.PRNGKey(1), (64, d))
+    a = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, 64)
+    x = pqmod.normalize(cents[a] + 0.4 * jax.random.normal(
+        jax.random.PRNGKey(3), (n, d)))
+    print(f"building IMI over {n} vectors ...")
+    index = imimod.build_imi(jax.random.PRNGKey(0), x, jnp.arange(n),
+                             K=16, P=8, M=64, kmeans_iters=8)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    sidx = jax.tree.map(jax.device_put, dist.shard_index(index, 8),
+                        dist.index_shardings(mesh))
+    print(f"sharded: {sidx.codes.shape[0]} shards x "
+          f"{sidx.codes.shape[1]} rows")
+
+    qs = pqmod.normalize(cents[:16] + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(9), (16, d)))
+    for mode in ("exhaustive", "cell_probe"):
+        search = jax.jit(dist.make_sharded_search(
+            mesh, top_k=50, mode=mode, top_a=32, max_cell_size=512))
+        res = search(sidx, qs)  # compile
+        jax.block_until_ready(res["ids"])
+        t0 = time.perf_counter()
+        res = search(sidx, qs)
+        jax.block_until_ready(res["ids"])
+        dt = time.perf_counter() - t0
+        bf = anns.brute_force(index, qs[0], k=50)
+        rec = len(set(np.asarray(res["ids"])[0].tolist())
+                  & set(np.asarray(bf["ids"]).tolist())) / 50
+        merged_bytes = 8 * 50 * 8  # devices x top_k x (score+id)
+        print(f"[{mode:10s}] 16 queries in {dt*1e3:.1f}ms "
+              f"({dt/16*1e3:.2f}ms/q), recall@50 vs BF {rec:.2f}, "
+              f"interconnect payload/query ~{merged_bytes} B "
+              f"(independent of N={n})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Fault-tolerant LM training demo: failures injected mid-run, job killed and
+restarted, loss curve continues exactly from the checkpoint.
+
+  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import logging
+import shutil
+
+import jax
+import numpy as np
+
+logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
+
+
+def main():
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.configs.base import get_arch
+    from repro.data.pipeline import DeterministicSource, lm_batch_fn
+    from repro.launch.fault_tolerance import (RunnerConfig, StepFailure,
+                                              TrainRunner, TrainState)
+    from repro.launch.train import scaled_lm_arch
+    from repro.models import transformer as T
+    from repro.train.optimizer import AdamConfig, adam_init
+    from repro.train.train_loop import make_train_step
+
+    ckpt_dir = "/tmp/repro_ft_demo"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    arch = scaled_lm_arch(get_arch("qwen2-0.5b"), 0.05)
+    rng = jax.random.PRNGKey(0)
+    params, _ = T.init_lm(rng, arch)
+    adam = AdamConfig(lr=3e-3, total_steps=60, warmup_steps=5)
+    opt = adam_init(params, adam)
+    step = jax.jit(make_train_step(
+        lambda p, tokens, labels: T.lm_loss(p, tokens, labels, arch), adam),
+        donate_argnums=(0, 1))
+    src = DeterministicSource(lm_batch_fn(arch.vocab, 1, 8, 64), 0)
+
+    def make_runner(fail_at=(), die_at=None):
+        fails = set(fail_at)
+
+        def hook(s):
+            if s in fails:
+                fails.discard(s)
+                raise StepFailure(f"injected node failure at step {s}")
+            if die_at is not None and s == die_at:
+                raise KeyboardInterrupt("simulated job preemption")
+        return TrainRunner(step, Checkpointer(ckpt_dir),
+                           RunnerConfig(total_steps=60, checkpoint_every=10),
+                           failure_hook=hook)
+
+    init = TrainState(params=params, opt_state=opt, step=0, rng=rng,
+                      data_cursor=0)
+
+    print("=== run 1: transient failures at steps 7 and 13; preempt at 25 ===")
+    r1 = make_runner(fail_at=(7, 13), die_at=25)
+    try:
+        r1.run(r1.restore_or_init(init), iter(src.iterate()))
+    except KeyboardInterrupt as e:
+        print(f"!! {e} — job killed at step 25")
+
+    print("=== run 2: fresh process restarts from the checkpoint ===")
+    r2 = make_runner()
+    state = r2.restore_or_init(init)
+    print(f"resumed at step {state.step}, data cursor {state.data_cursor}")
+    out = r2.run(state, iter(src.iterate(state.data_cursor)))
+    l0 = r1.metrics_log[0]["loss"]
+    l1 = r2.metrics_log[-1]["loss"]
+    print(f"done: step {out.step}; loss {l0:.3f} -> {l1:.3f} "
+          f"(continuous across the restart)")
+    assert l1 < l0
+
+
+if __name__ == "__main__":
+    main()

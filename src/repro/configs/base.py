@@ -1,0 +1,300 @@
+"""Config system: architecture/shape dataclasses, registry, sharding rules.
+
+Every assigned architecture is a frozen dataclass instance registered under its
+public id (``--arch <id>``).  A config carries (a) exact model hyperparameters
+from the public literature, (b) its own shape set, and (c) per-shape sharding
+rules (logical axis -> mesh axes) which are the main perf-iteration lever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Logical axis names used throughout the model zoo.  Sharding rules map these
+# to mesh axis names ('pod', 'data', 'model').  None -> replicated.
+# ---------------------------------------------------------------------------
+Rules = Mapping[str, Optional[tuple[str, ...]]]
+
+
+def _freeze_rules(rules: Mapping[str, Any]) -> tuple[tuple[str, Any], ...]:
+    return tuple(sorted((k, tuple(v) if v else None) for k, v in rules.items()))
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell for an architecture."""
+
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode' | graph/* | rec/* | lovo/*
+    dims: tuple[tuple[str, int], ...]  # frozen dict of shape dims
+    # sharding-rule overrides for this shape (merged over arch defaults)
+    rules: tuple[tuple[str, Any], ...] = ()
+    # number of gradient-accumulation microsteps for train kinds
+    grad_accum: int = 1
+    notes: str = ""
+
+    def dim(self, key: str) -> int:
+        for k, v in self.dims:
+            if k == key:
+                return v
+        raise KeyError(f"shape {self.name} has no dim {key}")
+
+    def get(self, key: str, default: int | None = None) -> int | None:
+        for k, v in self.dims:
+            if k == key:
+                return v
+        return default
+
+
+def shape(name: str, kind: str, *, rules: Mapping[str, Any] | None = None,
+          grad_accum: int = 1, notes: str = "", **dims: int) -> ShapeSpec:
+    return ShapeSpec(name=name, kind=kind, dims=tuple(dims.items()),
+                     rules=_freeze_rules(rules or {}), grad_accum=grad_accum,
+                     notes=notes)
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    expert_ff: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    first_k_dense: int = 0  # leading layers that stay dense
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class LMArch:
+    """Decoder-only transformer family (dense + MoE)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu -> SwiGLU; gelu -> GeGLU
+    attn_softcap: float = 0.0  # gemma2: 50.0
+    final_softcap: float = 0.0  # gemma2: 30.0
+    sliding_window: int = 0  # gemma2: 4096
+    local_global_pattern: bool = False  # gemma2: alternate local/global layers
+    post_norms: bool = False  # gemma2: post-attn/post-ffn norms
+    tie_embeddings: bool = True
+    moe: Optional[MoESpec] = None
+    # default sharding rules for this arch (overridable per shape)
+    rules: tuple[tuple[str, Any], ...] = ()
+    shapes: tuple[ShapeSpec, ...] = ()
+    citation: str = ""
+    # training defaults
+    param_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"  # bf16/int8 for the very large archs
+    remat_policy: str = "full"  # 'none' | 'full' | 'dots'
+    scan_layers: bool = True
+    # attention implementation: chunked (flash-memory-class, XLA-lowerable
+    # twin of the Pallas kernel) kicks in when seq > attn_chunk; 0 = full
+    attn_chunk: int = 1024
+    attn_unroll: bool = False  # dry-run cost probes: unroll the chunk scan
+    # re-constrain layer weights to their 2D (fsdp x tp) sharding inside the
+    # scan body: pins FSDP gathers to per-layer lifetime (§Perf llama iter)
+    constrain_layer_weights: bool = False
+    # int8 KV cache (KIVI/KVQuant-class): per-(token, head) absmax scales;
+    # halves decode cache HBM footprint+traffic vs bf16 (§Perf decode iter)
+    kv_quant: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once if tied)."""
+        hd = self.resolved_head_dim
+        d = self.d_model
+        attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+            + hd * self.n_heads * d
+        if self.qkv_bias:
+            attn += hd * (self.n_heads + 2 * self.n_kv_heads)
+        if self.moe is not None:
+            moe_layers = self.n_layers - self.moe.first_k_dense
+            dense_layers = self.moe.first_k_dense
+            expert = 3 * d * self.moe.expert_ff
+            mlp_total = moe_layers * (self.moe.n_experts + self.moe.n_shared_experts) * expert \
+                + moe_layers * d * self.moe.n_experts \
+                + dense_layers * 3 * d * self.d_ff
+        else:
+            mlp_total = self.n_layers * 3 * d * self.d_ff
+        norms = self.n_layers * d * (4 if self.post_norms else 2) + d
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * attn + mlp_total + norms + embed
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed top-k + shared)."""
+        if self.moe is None:
+            return self.n_params()
+        hd = self.resolved_head_dim
+        d = self.d_model
+        attn = d * hd * self.n_heads + 2 * d * hd * self.n_kv_heads \
+            + hd * self.n_heads * d
+        moe_layers = self.n_layers - self.moe.first_k_dense
+        active_mlp = moe_layers * (self.moe.top_k + self.moe.n_shared_experts) \
+            * 3 * d * self.moe.expert_ff \
+            + self.moe.first_k_dense * 3 * d * self.d_ff
+        embed = self.vocab * d
+        return self.n_layers * attn + active_mlp + embed
+
+
+@dataclass(frozen=True)
+class GNNArch:
+    name: str
+    family: str  # 'egnn'
+    n_layers: int
+    d_hidden: int
+    equivariance: str = "E(n)"
+    agg_dtype: str = "float32"  # bf16 halves the full-graph psum (§Perf)
+    rules: tuple[tuple[str, Any], ...] = ()
+    shapes: tuple[ShapeSpec, ...] = ()
+    citation: str = ""
+    param_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class RecArch:
+    name: str
+    family: str  # 'xdeepfm' | 'mind' | 'dlrm' | 'bert4rec'
+    embed_dim: int
+    n_dense: int = 0
+    n_sparse: int = 0
+    vocab_sizes: tuple[int, ...] = ()  # per sparse feature
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    cin_layers: tuple[int, ...] = ()
+    mlp_layers: tuple[int, ...] = ()
+    n_interests: int = 0
+    capsule_iters: int = 0
+    n_blocks: int = 0
+    n_heads: int = 0
+    seq_len: int = 0
+    interaction: str = ""
+    rules: tuple[tuple[str, Any], ...] = ()
+    shapes: tuple[ShapeSpec, ...] = ()
+    citation: str = ""
+    param_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class LovoArch:
+    """The paper's own system: index + two-stage query pipeline."""
+
+    name: str
+    # visual / text encoders (ViT-B/32-class by default)
+    vit_layers: int = 12
+    vit_d_model: int = 768
+    vit_heads: int = 12
+    vit_patch: int = 32
+    img_res: int = 768  # -> 24x24 = 576 patches per key frame
+    txt_layers: int = 12
+    txt_d_model: int = 512
+    txt_heads: int = 8
+    txt_vocab: int = 32_000
+    txt_seq: int = 64
+    embed_dim: int = 512  # D' class-embedding dim (shared with text space)
+    # PQ / IMI
+    pq_subspaces: int = 64  # P
+    pq_centroids: int = 256  # M
+    imi_k: int = 128  # coarse centroids per half -> K^2 cells
+    top_a_cells: int = 64
+    max_cell_size: int = 4096
+    # rerank transformer
+    rerank_layers: int = 6
+    rerank_d_model: int = 256
+    rerank_heads: int = 8
+    rules: tuple[tuple[str, Any], ...] = ()
+    shapes: tuple[ShapeSpec, ...] = ()
+    citation: str = "LOVO (CS.IR 2025); Owl-ViT arXiv:2205.06230; IMI Babenko&Lempitsky 2012; PQ Jegou TPAMI'11"
+    param_dtype: str = "float32"
+
+
+Arch = Any  # LMArch | GNNArch | RecArch | LovoArch
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, Callable[[], Arch]] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable[[], Arch]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_arch(name: str) -> Arch:
+    if name not in _REGISTRY:
+        # import config modules lazily so `import repro` stays cheap
+        import importlib
+        for mod in ("gemma2_9b", "llama3_405b", "qwen2_0_5b", "phi35_moe",
+                    "kimi_k2", "egnn", "xdeepfm", "mind", "dlrm_rm2",
+                    "bert4rec", "lovo"):
+            importlib.import_module(f"repro.configs.{mod}")
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    get_arch.__wrapped__ = None  # noqa: trigger lazy imports below
+    try:
+        get_arch("__none__")
+    except KeyError:
+        pass
+    return sorted(_REGISTRY)
+
+
+def merged_rules(arch: Arch, spec: ShapeSpec) -> dict[str, Optional[tuple[str, ...]]]:
+    """Arch default rules overlaid with per-shape overrides."""
+    out: dict[str, Optional[tuple[str, ...]]] = dict(DEFAULT_RULES)
+    out.update({k: (tuple(v) if v else None) for k, v in arch.rules})
+    out.update({k: (tuple(v) if v else None) for k, v in spec.rules})
+    return out
+
+
+# Default logical->mesh mapping (single-pod).  The multi-pod dryrun prepends
+# 'pod' to the batch axis mapping automatically (see launch/sharding.py).
+DEFAULT_RULES: dict[str, Optional[tuple[str, ...]]] = {
+    # activations
+    "batch": ("data",),
+    "seq": None,
+    "seq_act": None,
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_kv_heads": None,
+    "act_ff": ("model",),
+    "vocab_out": ("model",),
+    # params
+    "embed": None,
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": None,
+    "qkv": None,
+    "ff": ("model",),
+    "experts": ("model",),
+    "expert_ff": None,
+    "layers": None,
+    # fsdp-style weight sharding axis (applied to the *other* dim of big mats)
+    "fsdp": ("data",),
+    # recsys / lovo
+    "table_rows": ("model",),
+    "index_rows": ("data", "model"),
+    "candidates": ("data", "model"),
+    # gnn
+    "nodes": ("data",),
+    "edges": ("data", "model"),
+}

@@ -1,0 +1,16 @@
+"""bert4rec [arXiv:1904.06690] — bidirectional item-sequence transformer:
+dim 64, 2 blocks, 2 heads, seq 200.  Item vocabulary 1M."""
+from repro.configs.base import RecArch, register
+from repro.configs.rec_shapes import rec_shapes
+
+
+@register("bert4rec")
+def config() -> RecArch:
+    return RecArch(
+        name="bert4rec", family="bert4rec", embed_dim=64,
+        n_sparse=1, vocab_sizes=(1_000_000,),
+        n_blocks=2, n_heads=2, seq_len=200,
+        interaction="bidir-seq",
+        shapes=rec_shapes(),
+        citation="arXiv:1904.06690 (BERT4Rec)",
+    )

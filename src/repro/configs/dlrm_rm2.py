@@ -1,0 +1,22 @@
+"""dlrm-rm2 [arXiv:1906.00091] — 13 dense + 26 sparse features, dim 64,
+bot 13-512-256-64, top 512-512-256-1, dot interaction.
+
+Table sizes follow the Criteo-scale RM2 mix (4x10M + 6x1M + 16x100k rows =
+47.6M rows x 64 = 12.2 GB f32), row-sharded over 'model'.
+"""
+from repro.configs.base import RecArch, register
+from repro.configs.rec_shapes import rec_shapes
+
+VOCABS = tuple([10_000_000] * 4 + [1_000_000] * 6 + [100_000] * 16)
+
+
+@register("dlrm-rm2")
+def config() -> RecArch:
+    return RecArch(
+        name="dlrm-rm2", family="dlrm", embed_dim=64,
+        n_dense=13, n_sparse=26, vocab_sizes=VOCABS,
+        bot_mlp=(13, 512, 256, 64), top_mlp=(512, 512, 256, 1),
+        interaction="dot",
+        shapes=rec_shapes(),
+        citation="arXiv:1906.00091 (DLRM)",
+    )

@@ -1,0 +1,39 @@
+"""egnn [arXiv:2102.09844] — E(n)-equivariant GNN, 4 layers, d_hidden 64.
+
+LOVO's technique (vector index / ANN) is inapplicable to message passing —
+implemented without it (DESIGN.md §5).  Four shape regimes per the
+assignment; ``minibatch_lg`` uses the real layer-wise neighbor sampler in
+``repro.data.graph``.
+"""
+from repro.configs.base import GNNArch, register, shape
+from repro.data.graph import SamplerSpec
+
+SAMPLER = SamplerSpec(batch_nodes=1024, fanouts=(15, 10))
+
+
+@register("egnn")
+def config() -> GNNArch:
+    return GNNArch(
+        name="egnn", family="egnn", n_layers=4, d_hidden=64,
+        equivariance="E(n)",
+        shapes=(
+            shape("full_graph_sm", "gnn_train", n_nodes=2708, n_edges=10556,
+                  d_feat=1433, n_classes=7,
+                  rules={"nodes": None, "edges": None}),
+            shape("minibatch_lg", "gnn_sampled",
+                  n_nodes=232_965, n_edges=114_615_892,
+                  batch_nodes=1024, d_feat=602, n_classes=41,
+                  pad_nodes=SAMPLER.max_nodes, pad_edges=SAMPLER.max_edges,
+                  # sampled subgraphs are independent -> shard the *batch of
+                  # subgraphs* over data; one subgraph per device group
+                  graphs_per_step=16,
+                  rules={"batch": ("data",)}),
+            shape("ogb_products", "gnn_train", n_nodes=2_449_029,
+                  n_edges=61_859_140, d_feat=100, n_classes=47,
+                  rules={"edges": ("data", "model"), "nodes": None}),
+            shape("molecule", "gnn_molecule", n_nodes=30, n_edges=64,
+                  batch=128, d_feat=16,
+                  rules={"nodes": ("data",), "edges": ("data",)}),
+        ),
+        citation="arXiv:2102.09844 (EGNN)",
+    )

@@ -1,0 +1,20 @@
+"""gemma2-9b [arXiv:2408.00118; hf] — dense, GQA kv=8, local+global
+alternating sliding-window attention, attn/final logit softcaps, pre+post
+sandwich norms, GeGLU, 256k vocab."""
+from repro.configs.base import LMArch, register
+from repro.configs.lm_shapes import lm_shapes
+
+
+@register("gemma2-9b")
+def config() -> LMArch:
+    return LMArch(
+        name="gemma2-9b",
+        n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+        d_ff=14336, vocab=256_000,
+        act="gelu", attn_softcap=50.0, final_softcap=30.0,
+        sliding_window=4096, local_global_pattern=True, post_norms=True,
+        tie_embeddings=True, rope_theta=10_000.0,
+        rules=(("embed", ("data",)),),  # FSDP big matrices over 'data'
+        shapes=lm_shapes(train_accum=8),
+        citation="arXiv:2408.00118 (Gemma 2); hf:google/gemma-2-9b",
+    )

@@ -1,0 +1,30 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2 paper-table] — 61L, MoE 384 experts
+top-8 + 1 shared expert, GQA kv=8, 163k vocab.
+
+Memory notes: ~1.03e12 params.  Full-f32 Adam (12 B/param) = 12.4 TB — does
+not fit 256 or 512 v5e chips; int8 moment states (Dettmers 8-bit Adam) bring
+train state to ~6 B/param = 6.2 TB -> 12.1 GB/chip at 512 chips (multi-pod
+fits; single-pod 256 is flagged over-budget in EXPERIMENTS.md with the
+mitigation recorded).
+"""
+from repro.configs.base import LMArch, MoESpec, register
+from repro.configs.lm_shapes import lm_shapes
+
+
+@register("kimi-k2-1t-a32b")
+def config() -> LMArch:
+    return LMArch(
+        name="kimi-k2-1t-a32b",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=2048, vocab=163_840,
+        act="silu", tie_embeddings=False, rope_theta=50_000.0,
+        moe=MoESpec(n_experts=384, top_k=8, expert_ff=2048,
+                    n_shared_experts=1, first_k_dense=0),
+        opt_state_dtype="int8",
+        rules=(("embed", ("data",)),),
+        shapes=lm_shapes(
+            train_accum=16,
+            train_rules={"seq_act": ("model",)},
+        ),
+        citation="arXiv:2501.kimi2 (Kimi K2 paper table; unverified tier)",
+    )

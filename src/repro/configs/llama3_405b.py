@@ -1,0 +1,26 @@
+"""llama3-405b [arXiv:2407.21783] — dense, GQA kv=8, 128k vocab, untied head.
+
+Memory notes (v5e 16 GB): f32 Adam states need 4.86 TB -> 19 GB/chip at 256
+chips; we use bf16 moment states (12.7 GB/chip) + sequence-sharded
+activations + grad-accum 16 so train_4k fits a single pod.  Decode shards the
+KV cache (batch x 'data', seq x 'model') and 2D-shards weights.
+"""
+from repro.configs.base import LMArch, register
+from repro.configs.lm_shapes import lm_shapes
+
+
+@register("llama3-405b")
+def config() -> LMArch:
+    return LMArch(
+        name="llama3-405b",
+        n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, head_dim=128,
+        d_ff=53248, vocab=128_256,
+        act="silu", tie_embeddings=False, rope_theta=500_000.0,
+        opt_state_dtype="bfloat16",
+        rules=(("embed", ("data",)),),  # FSDP + TP 2D weight sharding
+        shapes=lm_shapes(
+            train_accum=16,
+            train_rules={"seq_act": ("model",)},  # Megatron-SP activations
+        ),
+        citation="arXiv:2407.21783 (Llama 3 herd)",
+    )

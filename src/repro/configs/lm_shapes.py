@@ -1,0 +1,24 @@
+"""Shared LM-family shape set: every LM arch gets the same four cells with
+per-arch grad-accum / rule overrides supplied by the config file."""
+from __future__ import annotations
+
+from repro.configs.base import ShapeSpec, shape
+
+
+def lm_shapes(*, train_accum: int = 8,
+              train_rules: dict | None = None,
+              decode_rules: dict | None = None,
+              long_rules: dict | None = None) -> tuple[ShapeSpec, ...]:
+    decode_rules = decode_rules or {"seq": ("model",)}
+    long_rules = long_rules or {"seq": ("data", "model"), "batch": None}
+    return (
+        shape("train_4k", "train", seq_len=4096, global_batch=256,
+              grad_accum=train_accum, rules=train_rules or {}),
+        shape("prefill_32k", "prefill", seq_len=32768, global_batch=32),
+        shape("decode_32k", "decode", seq_len=32768, global_batch=128,
+              rules=decode_rules),
+        shape("long_500k", "decode", seq_len=524288, global_batch=1,
+              rules=long_rules,
+              notes="long-context decode: O(L) per step vs the 500k KV cache;"
+                    " quadratic-prefill caveat recorded in DESIGN.md"),
+    )

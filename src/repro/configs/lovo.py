@@ -1,0 +1,28 @@
+"""The paper's own system as an arch: LOVO index + two-stage query.
+
+Shapes cover the paper's three cost regimes (Fig. 9): offline encode+index
+build, online fast search (scaling N per Fig. 10/11), and cross-modality
+rerank.  ``query_256m`` is the pod-scale cell: 256M indexed patches ~ 450k
+key frames x 576 patches ~ 3.7k hours of video at the paper's key-frame
+rates — the "large-scale video dataset" regime the paper targets.
+"""
+from repro.configs.base import LovoArch, register, shape
+
+
+@register("lovo")
+def config() -> LovoArch:
+    return LovoArch(
+        name="lovo",
+        pq_subspaces=64, pq_centroids=256, imi_k=128,
+        top_a_cells=64, max_cell_size=4096,
+        shapes=(
+            shape("build_encode", "lovo_build", frames=4096,
+                  notes="offline: ViT encode 4096 key frames + PQ encode"),
+            shape("query_16m", "lovo_query", n_rows=16_777_216, queries=64,
+                  notes="online fast search, 16M indexed patches"),
+            shape("query_256m", "lovo_query", n_rows=268_435_456, queries=64,
+                  notes="pod-scale fast search, 256M patches"),
+            shape("rerank_64", "lovo_rerank", candidates=64,
+                  notes="stage-2 cross-modality rerank of 64 frames"),
+        ),
+    )

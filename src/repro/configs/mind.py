@@ -1,0 +1,16 @@
+"""mind [arXiv:1904.08030] — multi-interest capsule retrieval: dim 64,
+4 interests, 3 routing iterations.  Item vocabulary 1M (retrieval corpus)."""
+from repro.configs.base import RecArch, register
+from repro.configs.rec_shapes import rec_shapes
+
+
+@register("mind")
+def config() -> RecArch:
+    return RecArch(
+        name="mind", family="mind", embed_dim=64,
+        n_sparse=1, vocab_sizes=(1_000_000,),
+        n_interests=4, capsule_iters=3, seq_len=50,
+        interaction="multi-interest",
+        shapes=rec_shapes(),
+        citation="arXiv:1904.08030 (MIND)",
+    )

@@ -1,0 +1,18 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct] — 32L MoE,
+16 experts top-2, GQA kv=8."""
+from repro.configs.base import LMArch, MoESpec, register
+from repro.configs.lm_shapes import lm_shapes
+
+
+@register("phi3.5-moe-42b-a6.6b")
+def config() -> LMArch:
+    return LMArch(
+        name="phi3.5-moe-42b-a6.6b",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=6400, vocab=32_064,
+        act="silu", tie_embeddings=False, rope_theta=10_000.0,
+        moe=MoESpec(n_experts=16, top_k=2, expert_ff=6400),
+        rules=(("embed", ("data",)),),
+        shapes=lm_shapes(train_accum=8),
+        citation="hf:microsoft/Phi-3.5-MoE-instruct",
+    )

@@ -1,0 +1,15 @@
+"""qwen2-0.5b [arXiv:2407.10671; hf] — dense, GQA kv=2, QKV bias, tied head."""
+from repro.configs.base import LMArch, register
+from repro.configs.lm_shapes import lm_shapes
+
+
+@register("qwen2-0.5b")
+def config() -> LMArch:
+    return LMArch(
+        name="qwen2-0.5b",
+        n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, head_dim=64,
+        d_ff=4864, vocab=151_936,
+        act="silu", qkv_bias=True, tie_embeddings=True, rope_theta=1_000_000.0,
+        shapes=lm_shapes(train_accum=4),
+        citation="arXiv:2407.10671 (Qwen2); hf:Qwen/Qwen2-0.5B",
+    )

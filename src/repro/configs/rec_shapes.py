@@ -1,0 +1,17 @@
+"""Shared recsys shape set (4 cells per arch)."""
+from repro.configs.base import ShapeSpec, shape
+
+
+def rec_shapes(*, train_accum: int = 1) -> tuple[ShapeSpec, ...]:
+    return (
+        shape("train_batch", "rec_train", batch=65_536,
+              grad_accum=train_accum),
+        shape("serve_p99", "rec_serve", batch=512,
+              notes="online inference: latency-critical, small batch"),
+        shape("serve_bulk", "rec_serve", batch=262_144,
+              notes="offline scoring: throughput regime"),
+        shape("retrieval_cand", "rec_retrieval", batch=1,
+              n_candidates=1_000_000,
+              rules={"candidates": ("data", "model")},
+              notes="1 query vs 1e6 candidates = LOVO fast-search regime"),
+    )

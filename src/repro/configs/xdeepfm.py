@@ -1,0 +1,18 @@
+"""xdeepfm [arXiv:1803.05170] — 39 sparse fields, dim 10, CIN 200-200-200,
+deep MLP 400-400, linear term.  Criteo-style vocabulary mix."""
+from repro.configs.base import RecArch, register
+from repro.configs.rec_shapes import rec_shapes
+
+VOCABS = tuple([1_000_000] * 8 + [100_000] * 15 + [10_000] * 16)
+
+
+@register("xdeepfm")
+def config() -> RecArch:
+    return RecArch(
+        name="xdeepfm", family="xdeepfm", embed_dim=10,
+        n_sparse=39, vocab_sizes=VOCABS,
+        cin_layers=(200, 200, 200), mlp_layers=(400, 400),
+        interaction="cin",
+        shapes=rec_shapes(),
+        citation="arXiv:1803.05170 (xDeepFM)",
+    )

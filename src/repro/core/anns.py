@@ -1,0 +1,139 @@
+"""Approximate Nearest Neighbor Search — LOVO Algorithm 1, jit-friendly.
+
+Pipeline per query:
+  1. normalize + split q into halves; score coarse centroids per half
+  2. exact top-A cells via the multi-sequence frontier (imi.multi_sequence_top_a)
+  3. gather each cell's [start, start+max_cell_size) window (static shapes)
+  4. ADC over residual-PQ codes:  s ~= s_cell_base + q . residual
+     (LUT precomputed once per query — the paper's distance lookup-table)
+  5. top-k by approximate score
+  6. exact re-scoring of the top-k against stored bf16 vectors
+     (s_exact = sum_p q_p . x_p — Algorithm 1 line 14)
+  7. patch-id majority vote across subspace components (line 16; in the
+     row-wise dense layout each candidate is one row so the vote is exact —
+     the subspace-mixed variant is exposed as ``patch_vote`` for parity)
+
+The ADC scan (step 4) is the latency hot spot; ``use_kernel='pallas'``
+switches to the Pallas MXU kernel (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import imi as imimod
+from repro.core import pq as pqmod
+from repro.core.imi import IMIIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    top_a: int = 32            # cells probed
+    max_cell_size: int = 2048  # per-cell candidate window
+    top_k: int = 100           # candidates returned by fast search
+    exact_rerank: bool = True
+    use_kernel: str = "jnp"    # 'jnp' | 'pallas'
+
+
+def _adc(lut: jax.Array, codes: jax.Array, use_kernel: str) -> jax.Array:
+    if use_kernel == "pallas":
+        from repro.kernels import ops as kops
+        return kops.pq_scan(lut, codes)
+    return pqmod.adc_scores(lut, codes)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig
+           ) -> dict[str, jax.Array]:
+    """Single-query Algorithm 1.  q: (D',) raw query embedding.
+
+    Returns dict with ids (k,), scores (k,), approx_scores (k,), rows (k,).
+    """
+    q = pqmod.normalize(q.astype(jnp.float32))
+    h = q.shape[-1] // 2
+    s1 = index.coarse1 @ q[:h]
+    s2 = index.coarse2 @ q[h:]
+    cells = imimod.multi_sequence_top_a(s1, s2, cfg.top_a)       # (A,)
+    K = index.K
+    base = s1[cells // K] + s2[cells % K]                        # (A,)
+
+    starts = index.cell_offsets[cells]
+    counts = index.cell_offsets[cells + 1] - starts
+    counts = jnp.minimum(counts, cfg.max_cell_size)
+    window = starts[:, None] + jnp.arange(cfg.max_cell_size)[None, :]
+    valid = jnp.arange(cfg.max_cell_size)[None, :] < counts[:, None]
+    rows = jnp.clip(window, 0, index.n - 1)                      # (A, W)
+
+    cand_codes = index.codes[rows.reshape(-1)]                   # (A*W, P)
+    lut = pqmod.similarity_lut(index.pq, q)                      # (P, M)
+    resid = _adc(lut, cand_codes, cfg.use_kernel)                # (A*W,)
+    approx = resid.reshape(cells.shape[0], -1) + base[:, None]   # (A, W)
+    approx = jnp.where(valid, approx, -jnp.inf).reshape(-1)
+
+    top_approx, flat_idx = jax.lax.top_k(approx, cfg.top_k)
+    top_rows = rows.reshape(-1)[flat_idx]                        # (k,)
+
+    if cfg.exact_rerank:
+        vecs = index.vectors[top_rows].astype(jnp.float32)       # (k, D')
+        exact = vecs @ q
+        order = jnp.argsort(-exact)
+        top_rows = top_rows[order]
+        scores = exact[order]
+    else:
+        scores = top_approx
+    return {"ids": index.ids[top_rows], "scores": scores,
+            "approx_scores": top_approx, "rows": top_rows}
+
+
+def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
+                 ) -> dict[str, jax.Array]:
+    return jax.vmap(lambda q: search(index, q, cfg))(qs)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_force(index: IMIIndex, q: jax.Array, k: int = 100
+                ) -> dict[str, jax.Array]:
+    """Exact search over the stored vectors (paper's LOVO(BF) variant)."""
+    q = pqmod.normalize(q.astype(jnp.float32))
+    scores = index.vectors.astype(jnp.float32) @ q
+    vals, rows = jax.lax.top_k(scores, k)
+    return {"ids": index.ids[rows], "scores": vals, "rows": rows}
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def exhaustive_adc(index: IMIIndex, q: jax.Array, k: int = 100,
+                   use_kernel: str = "jnp") -> dict[str, jax.Array]:
+    """'w/o ANNS' ablation: full ADC scan, no cell pruning (Table IV)."""
+    q = pqmod.normalize(q.astype(jnp.float32))
+    # score = q . (coarse(cell_of) + residual)
+    K = index.K
+    h = q.shape[-1] // 2
+    s1 = index.coarse1 @ q[:h]
+    s2 = index.coarse2 @ q[h:]
+    base = s1[index.cell_of // K] + s2[index.cell_of % K]
+    lut = pqmod.similarity_lut(index.pq, q)
+    scores = base + _adc(lut, index.codes, use_kernel)
+    vals, rows = jax.lax.top_k(scores, k)
+    vecs = index.vectors[rows].astype(jnp.float32)
+    exact = vecs @ q
+    order = jnp.argsort(-exact)
+    return {"ids": index.ids[rows[order]], "scores": exact[order],
+            "rows": rows[order]}
+
+
+def patch_vote(component_ids: jax.Array) -> jax.Array:
+    """LOVO Algorithm 1 line 16: majority patch id across P subspace
+    components of a candidate (used by the subspace-mixed retrieval variant).
+
+    component_ids: (..., P) int32 -> (...,) the most frequent id.
+    """
+    def vote(row):
+        eq = row[:, None] == row[None, :]
+        freq = jnp.sum(eq, axis=-1)
+        return row[jnp.argmax(freq)]
+    flat = component_ids.reshape(-1, component_ids.shape[-1])
+    return jax.vmap(vote)(flat).reshape(component_ids.shape[:-1])

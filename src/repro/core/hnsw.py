@@ -1,0 +1,117 @@
+"""HNSW baseline (Malkov & Yashunin, arXiv:1603.09320) — LOVO Table V.
+
+Graph traversal is pointer-chasing / control-flow bound with no TPU-friendly
+formulation (DESIGN.md §3), so this baseline is a host-side numpy
+implementation used only for the ANN-variants comparison benchmark.
+Compact but real: multi-layer skip-list structure, greedy descent on upper
+layers, beam (efSearch) search on layer 0, M-neighbor pruning on insert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HNSW:
+    dim: int
+    M: int = 16
+    ef_construction: int = 64
+    ef_search: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        self._vecs: list[np.ndarray] = []
+        self._layers: list[list[dict[int, list[int]]]] = []  # adjacency per layer
+        self._graphs: list[dict[int, list[int]]] = []
+        self._entry: int = -1
+        self._max_level: int = -1
+        self._rng = np.random.default_rng(self.seed)
+        self._ml = 1.0 / np.log(self.M)
+
+    # -- internals -----------------------------------------------------------
+    def _dist(self, q: np.ndarray, idx: list[int] | np.ndarray) -> np.ndarray:
+        v = self._mat[np.asarray(idx)]
+        return 1.0 - v @ q  # cosine distance on unit-norm vectors
+
+    def _search_layer(self, q: np.ndarray, entry: int, ef: int,
+                      layer: int) -> list[tuple[float, int]]:
+        g = self._graphs[layer]
+        d0 = float(self._dist(q, [entry])[0])
+        visited = {entry}
+        cand = [(d0, entry)]              # min-heap
+        best = [(-d0, entry)]             # max-heap of current top-ef
+        while cand:
+            dc, c = heapq.heappop(cand)
+            if dc > -best[0][0]:
+                break
+            nbrs = [n for n in g.get(c, []) if n not in visited]
+            if not nbrs:
+                continue
+            visited.update(nbrs)
+            for n, dn in zip(nbrs, self._dist(q, nbrs)):
+                dn = float(dn)
+                if len(best) < ef or dn < -best[0][0]:
+                    heapq.heappush(cand, (dn, n))
+                    heapq.heappush(best, (-dn, n))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+        return sorted((-d, i) for d, i in best)
+
+    def _select(self, q: np.ndarray, cands: list[tuple[float, int]],
+                m: int) -> list[int]:
+        return [i for _, i in sorted(cands)[:m]]
+
+    # -- public --------------------------------------------------------------
+    def build(self, vectors: np.ndarray) -> "HNSW":
+        vectors = np.asarray(vectors, np.float32)
+        vectors = vectors / np.maximum(
+            np.linalg.norm(vectors, axis=-1, keepdims=True), 1e-9)
+        self._mat = vectors
+        n = len(vectors)
+        levels = (-np.log(self._rng.random(n)) * self._ml).astype(np.int32)
+        self._max_level = int(levels.max())
+        self._graphs = [dict() for _ in range(self._max_level + 1)]
+        for i in range(n):
+            self._insert(i, vectors[i], int(levels[i]))
+        return self
+
+    def _insert(self, idx: int, q: np.ndarray, level: int) -> None:
+        if self._entry < 0:
+            for l in range(level + 1):
+                self._graphs[l][idx] = []
+            self._entry, self._entry_level = idx, level
+            return
+        ep = self._entry
+        for l in range(self._entry_level, level, -1):
+            if l <= self._max_level and self._graphs[l]:
+                res = self._search_layer(q, ep, 1, l)
+                ep = res[0][1]
+        for l in range(min(level, self._entry_level), -1, -1):
+            res = self._search_layer(q, ep, self.ef_construction, l)
+            m = self.M if l > 0 else 2 * self.M
+            nbrs = self._select(q, res, m)
+            self._graphs[l][idx] = nbrs
+            for n in nbrs:
+                lst = self._graphs[l].setdefault(n, [])
+                lst.append(idx)
+                if len(lst) > m:
+                    d = self._dist(self._mat[n], lst)
+                    keep = np.argsort(d)[:m]
+                    self._graphs[l][n] = [lst[j] for j in keep]
+            ep = res[0][1]
+        if level > self._entry_level:
+            self._entry, self._entry_level = idx, level
+
+    def search(self, q: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+        q = np.asarray(q, np.float32)
+        q = q / max(float(np.linalg.norm(q)), 1e-9)
+        ep = self._entry
+        for l in range(self._entry_level, 0, -1):
+            ep = self._search_layer(q, ep, 1, l)[0][1]
+        res = self._search_layer(q, ep, max(self.ef_search, k), 0)[:k]
+        ids = np.asarray([i for _, i in res], np.int32)
+        sims = 1.0 - np.asarray([d for d, _ in res], np.float32)
+        return ids, sims

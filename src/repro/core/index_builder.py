@@ -1,0 +1,97 @@
+"""Offline index-build pipeline — LOVO Fig. 4 / §IV-D.
+
+videos -> key frames -> ViT patch class-embeddings + boxes -> IMI build.
+The vector database holds (codes, vectors, patch ids); the "relational
+database" side-table (frame id, bbox per patch id) is a host-side
+MetadataStore keyed by patch id — exactly the paper's split, minus the SQL
+engine (the layout/linking is the contribution, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imi as imimod
+from repro.data import video as videomod
+from repro.data.synthetic import Video
+from repro.models import vit as vitmod
+
+
+@dataclasses.dataclass
+class MetadataStore:
+    """patch id -> (video id, frame index, bbox).  Arrays for O(1) lookup."""
+
+    video_of: np.ndarray   # (N,) int32
+    frame_of: np.ndarray   # (N,) int32  (index into the *original* video)
+    bbox_of: np.ndarray    # (N, 4) float32 cxcywh
+
+    def lookup(self, patch_ids: np.ndarray) -> dict[str, np.ndarray]:
+        pid = np.asarray(patch_ids)
+        return {"video": self.video_of[pid], "frame": self.frame_of[pid],
+                "bbox": self.bbox_of[pid]}
+
+
+@dataclasses.dataclass
+class BuiltIndex:
+    index: imimod.IMIIndex
+    metadata: MetadataStore
+    keyframes: np.ndarray      # (F, H, W, 3) the stored key frames
+    keyframe_video: np.ndarray  # (F,) int32
+    keyframe_frame: np.ndarray  # (F,) int32
+    patches_per_frame: int
+
+
+def encode_keyframes(vit_params: Any, frames: np.ndarray,
+                     cfg: vitmod.ViTConfig, *, batch: int = 8
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """(F, H, W, 3) -> (class_embeds (F, K, D'), boxes (F, K, 4))."""
+    encode = jax.jit(lambda p, im: vitmod.vit_encode(p, im, cfg)[:2])
+    outs_c, outs_b = [], []
+    for i in range(0, len(frames), batch):
+        chunk = frames[i: i + batch]
+        pad = batch - len(chunk)
+        if pad:
+            chunk = np.concatenate([chunk, np.zeros_like(chunk[:1]).repeat(pad, 0)])
+        c, b = encode(vit_params, jnp.asarray(chunk))
+        outs_c.append(np.asarray(c)[: len(chunk) - pad if pad else None])
+        outs_b.append(np.asarray(b)[: len(chunk) - pad if pad else None])
+    return np.concatenate(outs_c), np.concatenate(outs_b)
+
+
+def build_from_videos(rng: jax.Array, videos: Sequence[Video],
+                      vit_params: Any, cfg: vitmod.ViTConfig, *,
+                      K: int = 16, P: int = 8, M: int = 64,
+                      keyframe_stride: int = 8,
+                      use_keyframes: bool = True,
+                      kmeans_iters: int = 10) -> BuiltIndex:
+    all_frames, kf_video, kf_frame = [], [], []
+    for vi, v in enumerate(videos):
+        if use_keyframes:
+            idx = videomod.extract_keyframes(v.frames, stride=keyframe_stride)
+        else:  # 'w/o Key frame' ablation: every frame is indexed
+            idx = np.arange(v.frames.shape[0], dtype=np.int32)
+        all_frames.append(v.frames[idx])
+        kf_video.extend([vi] * len(idx))
+        kf_frame.extend(idx.tolist())
+    frames = np.concatenate(all_frames)           # (F, H, W, 3)
+    kf_video = np.asarray(kf_video, np.int32)
+    kf_frame = np.asarray(kf_frame, np.int32)
+
+    cls, boxes = encode_keyframes(vit_params, frames, cfg)
+    F, Kp, Dp = cls.shape
+    flat = cls.reshape(F * Kp, Dp)
+    patch_ids = np.arange(F * Kp, dtype=np.int32)
+    index = imimod.build_imi(rng, jnp.asarray(flat), jnp.asarray(patch_ids),
+                             K=K, P=P, M=M, kmeans_iters=kmeans_iters)
+    meta = MetadataStore(
+        video_of=np.repeat(kf_video, Kp),
+        frame_of=np.repeat(kf_frame, Kp),
+        bbox_of=boxes.reshape(F * Kp, 4).astype(np.float32),
+    )
+    return BuiltIndex(index=index, metadata=meta, keyframes=frames,
+                      keyframe_video=kf_video, keyframe_frame=kf_frame,
+                      patches_per_frame=Kp)

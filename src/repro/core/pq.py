@@ -1,0 +1,158 @@
+"""Product Quantization (Jegou et al., TPAMI'11) — LOVO §V-B.
+
+The class-embedding space R^{D'} is split into P subspaces of dim m = D'/P;
+each subspace is quantized to M centroids by Lloyd's iteration (k-means++
+seeding).  A vector is stored as P uint8 codes; query similarity uses a
+per-query lookup table (LUT[p, c] = q_p . centroid_{p,c}) and the ADC scan
+``score(n) = sum_p LUT[p, code[n, p]]``.
+
+All functions are jit-friendly; the ADC scan has a Pallas TPU kernel
+(`repro.kernels.pq_scan`) with this module's ``adc_scores`` as the oracle's
+semantics (see kernels/ref.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# k-means (Lloyd) with k-means++ seeding
+# ---------------------------------------------------------------------------
+def _pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(N, m) x (M, m) -> (N, M) squared euclidean."""
+    x2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    c2 = jnp.sum(jnp.square(c), axis=-1)
+    return x2 - 2.0 * (x @ c.T) + c2[None, :]
+
+
+def kmeans_pp_init(rng: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding (Arthur & Vassilvitskii '07)."""
+    n = x.shape[0]
+    r0, rng = jax.random.split(rng)
+    first = x[jax.random.randint(r0, (), 0, n)]
+    cents = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+
+    def body(i, carry):
+        cents, rng, d2 = carry
+        # distance to the newest centroid; keep running min
+        newest = jax.lax.dynamic_index_in_dim(cents, i - 1, keepdims=False)
+        d_new = jnp.sum(jnp.square(x - newest), axis=-1)
+        d2 = jnp.minimum(d2, d_new)
+        rng, sub = jax.random.split(rng)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
+        idx = jax.random.categorical(sub, jnp.log(probs + 1e-30))
+        return cents.at[i].set(x[idx]), rng, d2
+
+    init_d2 = jnp.full((n,), jnp.inf, x.dtype)
+    cents, _, _ = jax.lax.fori_loop(1, k, body, (cents, rng, init_d2))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(rng: jax.Array, x: jax.Array, k: int, iters: int = 20
+           ) -> tuple[jax.Array, jax.Array]:
+    """Lloyd's iteration.  Returns (centroids (k, m), assignments (N,))."""
+    x = x.astype(jnp.float32)
+    cents = kmeans_pp_init(rng, x, k)
+
+    def step(cents, _):
+        d2 = _pairwise_sqdist(x, cents)
+        assign = jnp.argmin(d2, axis=-1)
+        one = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        counts = one.sum(axis=0)
+        sums = one.T @ x
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None],
+                        cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, cents, None, length=iters)
+    assign = jnp.argmin(_pairwise_sqdist(x, cents), axis=-1)
+    return cents, assign
+
+
+# ---------------------------------------------------------------------------
+# PQ codebooks
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PQ:
+    centroids: jax.Array  # (P, M, m)
+
+    @property
+    def P(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.centroids.shape[2]
+
+    def tree_flatten(self):
+        return (self.centroids,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node_class(PQ)
+
+
+def split_subspaces(x: jax.Array, P: int) -> jax.Array:
+    """(N, D') -> (P, N, m)."""
+    n, d = x.shape
+    assert d % P == 0, (d, P)
+    return x.reshape(n, P, d // P).transpose(1, 0, 2)
+
+
+def train_pq(rng: jax.Array, x: jax.Array, P: int, M: int,
+             iters: int = 20) -> PQ:
+    subs = split_subspaces(x, P)  # (P, N, m)
+    keys = jax.random.split(rng, P)
+    cents, _ = jax.vmap(lambda k, s: kmeans(k, s, M, iters))(keys, subs)
+    return PQ(centroids=cents)
+
+
+@jax.jit
+def pq_encode(pq: PQ, x: jax.Array) -> jax.Array:
+    """(N, D') -> uint8 codes (N, P)."""
+    subs = split_subspaces(x.astype(jnp.float32), pq.P)  # (P, N, m)
+    d2 = jax.vmap(_pairwise_sqdist)(subs, pq.centroids)  # (P, N, M)
+    return jnp.argmin(d2, axis=-1).T.astype(jnp.uint8)   # (N, P)
+
+
+@jax.jit
+def pq_decode(pq: PQ, codes: jax.Array) -> jax.Array:
+    """(N, P) -> reconstructed (N, D')."""
+    gathered = jax.vmap(lambda c, idx: c[idx], in_axes=(0, 1))(
+        pq.centroids, codes.astype(jnp.int32))          # (P, N, m)
+    return gathered.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+
+
+@jax.jit
+def similarity_lut(pq: PQ, q: jax.Array) -> jax.Array:
+    """Dot-product LUT: (D',) -> (P, M); LUT[p, c] = q_p . centroid_{p,c}."""
+    qs = q.reshape(pq.P, 1, pq.m).astype(jnp.float32)
+    return jnp.sum(qs * pq.centroids, axis=-1)          # (P, M)
+
+
+def adc_scores(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """ADC scan: (P, M) LUT + (N, P) codes -> (N,) scores.
+
+    Reference formulation (take_along_axis); the Pallas kernel computes the
+    same contraction as a one-hot matmul on the MXU.
+    """
+    per = jax.vmap(lambda l, c: l[c], in_axes=(0, 1))(lut, codes.astype(jnp.int32))
+    return jnp.sum(per, axis=0)                          # (N,)
+
+
+def normalize(x: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """Unit-L2 normalization — LOVO §V-A aligns dot product with cosine."""
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)

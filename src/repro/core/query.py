@@ -1,0 +1,130 @@
+"""Two-stage query strategy — LOVO Algorithm 2.
+
+Stage 1 (fast search): encode the whole query sentence into ONE embedding,
+Algorithm-1 ANN search over the IMI -> top-k candidate patches -> their key
+frames (via the metadata store).
+
+Stage 2 (cross-modality rerank): for each candidate frame, run the
+feature-enhancer + decoder over (ViT tokens, text tokens); sort frames by
+l_s and emit boxes for the top-n.
+
+``QueryEngine`` is the host-level orchestrator a service would wrap: it owns
+the device index, jitted model fns, and the metadata side-table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anns
+from repro.core.index_builder import BuiltIndex
+from repro.data.synthetic import Tokenizer
+from repro.models import rerank as rerankmod
+from repro.models import text_encoder as textmod
+from repro.models import vit as vitmod
+
+
+@dataclasses.dataclass
+class QueryResult:
+    frames: np.ndarray        # (n,) key-frame row indices into BuiltIndex
+    scores: np.ndarray        # (n,) rerank scores (or fast-search scores)
+    boxes: np.ndarray         # (n, n_q, 4) decoder boxes (rerank only)
+    fast_candidates: np.ndarray
+    timings: dict[str, float]
+
+
+class QueryEngine:
+    def __init__(self, built: BuiltIndex, *,
+                 text_params: Any, text_cfg: textmod.TextConfig,
+                 vit_params: Any, vit_cfg: vitmod.ViTConfig,
+                 rerank_params: Any, rerank_cfg: rerankmod.RerankConfig,
+                 search_cfg: anns.SearchConfig = anns.SearchConfig(),
+                 tokenizer: Tokenizer | None = None,
+                 rerank_batch: int = 8):
+        self.built = built
+        self.text_params, self.text_cfg = text_params, text_cfg
+        self.vit_params, self.vit_cfg = vit_params, vit_cfg
+        self.rerank_params, self.rerank_cfg = rerank_params, rerank_cfg
+        self.search_cfg = search_cfg
+        self.tokenizer = tokenizer or Tokenizer(vocab=text_cfg.vocab,
+                                                max_len=text_cfg.max_len)
+        self.rerank_batch = rerank_batch
+
+        self._encode_text = jax.jit(
+            lambda p, t, m: textmod.text_encode(p, t, m, self.text_cfg))
+        self._search = lambda q: anns.search(self.built.index, q,
+                                             self.search_cfg)
+        self._vit_tokens = jax.jit(
+            lambda p, im: vitmod.vit_tokens(p, im, self.vit_cfg))
+        self._rerank = jax.jit(
+            lambda p, it, tt, tm: rerankmod.rerank_frame(
+                p, it, tt, tm, self.rerank_cfg))
+
+    # -- stage 1 -------------------------------------------------------------
+    def fast_search(self, text: str) -> tuple[np.ndarray, np.ndarray, dict]:
+        t0 = time.perf_counter()
+        toks, mask = self.tokenizer.encode(text)
+        q, _ = self._encode_text(self.text_params, jnp.asarray(toks)[None],
+                                 jnp.asarray(mask)[None])
+        t_enc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = self._search(q[0])
+        ids = np.asarray(res["ids"])
+        scores = np.asarray(res["scores"])
+        t_search = time.perf_counter() - t0
+        return ids, scores, {"encode": t_enc, "fast_search": t_search}
+
+    # -- stage 2 -------------------------------------------------------------
+    def query(self, text: str, *, top_n: int = 5,
+              use_rerank: bool = True) -> QueryResult:
+        ids, scores, timings = self.fast_search(text)
+        meta = self.built.metadata.lookup(ids)
+        Kp = self.built.patches_per_frame
+        frame_rows = ids // Kp                          # key-frame row index
+        # unique candidate frames, best-score order (host-side ~= SQL join)
+        uniq, first = np.unique(frame_rows, return_index=True)
+        order = np.argsort(first)
+        cand = uniq[order][: max(top_n * 4, self.rerank_batch)]
+
+        if not use_rerank:
+            n = min(top_n, len(cand))
+            # score per unique frame = best (first-seen) fast-search score
+            frame_scores = scores[first][order]
+            return QueryResult(frames=cand[:n], scores=frame_scores[:n],
+                               boxes=np.zeros((n, 0, 4), np.float32),
+                               fast_candidates=ids, timings=timings)
+
+        t0 = time.perf_counter()
+        toks, mask = self.tokenizer.encode(text)
+        _, txt_tokens = self._encode_text(
+            self.text_params, jnp.asarray(toks)[None], jnp.asarray(mask)[None])
+        B = self.rerank_batch
+        all_scores, all_boxes = [], []
+        for i in range(0, len(cand), B):
+            chunk = cand[i: i + B]
+            pad = B - len(chunk)
+            rows = np.concatenate([chunk, np.zeros((pad,), chunk.dtype)]) \
+                if pad else chunk
+            imgs = jnp.asarray(self.built.keyframes[rows])
+            img_tokens = self._vit_tokens(self.vit_params, imgs)
+            tt = jnp.repeat(txt_tokens, B, axis=0)
+            tm = jnp.repeat(jnp.asarray(mask)[None], B, axis=0)
+            s, b = self._rerank(self.rerank_params, img_tokens, tt, tm)
+            s, b = np.asarray(s), np.asarray(b)
+            if pad:
+                s, b = s[:-pad], b[:-pad]
+            all_scores.append(s)
+            all_boxes.append(b)
+        rer_scores = np.concatenate(all_scores)
+        rer_boxes = np.concatenate(all_boxes)
+        timings["rerank"] = time.perf_counter() - t0
+
+        top = np.argsort(-rer_scores)[:top_n]
+        return QueryResult(frames=cand[top], scores=rer_scores[top],
+                           boxes=rer_boxes[top], fast_candidates=ids,
+                           timings=timings)

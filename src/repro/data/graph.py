@@ -1,0 +1,170 @@
+"""Graph data: synthetic graph generation + a REAL layer-wise neighbor
+sampler (GraphSAGE-style, required by the ``minibatch_lg`` shape).
+
+The sampler operates on a host-side CSR adjacency and emits padded,
+static-shape subgraph batches (relabelled node ids, [src, dst] edge index,
+masks) ready for ``egnn_forward``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray    # (N+1,)
+    indices: np.ndarray   # (E,)
+    feats: np.ndarray     # (N, F)
+    labels: np.ndarray    # (N,)
+    coords: np.ndarray    # (N, 3) synthetic spatial positions
+
+    @property
+    def n_nodes(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def n_edges(self) -> int:
+        return self.indices.shape[0]
+
+
+def synthetic_graph(seed: int, n_nodes: int, avg_degree: int, d_feat: int,
+                    n_classes: int = 16) -> CSRGraph:
+    """Degree-skewed random graph with class-correlated features (fast,
+    memory-light: builds CSR directly)."""
+    rng = np.random.default_rng(seed)
+    deg = np.maximum(1, rng.poisson(avg_degree, n_nodes)).astype(np.int64)
+    indptr = np.concatenate([[0], np.cumsum(deg)])
+    indices = rng.integers(0, n_nodes, indptr[-1]).astype(np.int32)
+    labels = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    class_centers = rng.normal(0, 1, (n_classes, d_feat)).astype(np.float32)
+    feats = (class_centers[labels]
+             + rng.normal(0, 0.5, (n_nodes, d_feat))).astype(np.float32)
+    coords = rng.normal(0, 1, (n_nodes, 3)).astype(np.float32)
+    return CSRGraph(indptr=indptr.astype(np.int64), indices=indices,
+                    feats=feats, labels=labels, coords=coords)
+
+
+def full_graph_batch(g: CSRGraph, *, pad_nodes: Optional[int] = None,
+                     pad_edges: Optional[int] = None) -> dict:
+    """Whole graph as one padded batch (full_graph shapes)."""
+    n, e = g.n_nodes, g.n_edges
+    pn = pad_nodes or n
+    pe = pad_edges or e
+    src = g.indices.astype(np.int32)
+    dst = np.repeat(np.arange(n, dtype=np.int32),
+                    np.diff(g.indptr).astype(np.int32))
+    edge_index = np.zeros((2, pe), np.int32)
+    edge_index[0, :e] = src
+    edge_index[1, :e] = dst
+    edge_mask = np.zeros((pe,), np.float32)
+    edge_mask[:e] = 1.0
+    node_feats = np.zeros((pn, g.feats.shape[1]), np.float32)
+    node_feats[:n] = g.feats
+    coords = np.zeros((pn, 3), np.float32)
+    coords[:n] = g.coords
+    node_mask = np.zeros((pn,), np.float32)
+    node_mask[:n] = 1.0
+    labels = np.zeros((pn,), np.int32)
+    labels[:n] = g.labels
+    return {"node_feats": node_feats, "coords": coords,
+            "edge_index": edge_index, "edge_mask": edge_mask,
+            "node_mask": node_mask, "labels": labels}
+
+
+@dataclasses.dataclass
+class SamplerSpec:
+    batch_nodes: int
+    fanouts: tuple[int, ...]          # e.g. (15, 10)
+
+    @property
+    def max_nodes(self) -> int:
+        n, tot = self.batch_nodes, self.batch_nodes
+        for f in self.fanouts:
+            n = n * f
+            tot += n
+        return tot
+
+    @property
+    def max_edges(self) -> int:
+        n, tot = self.batch_nodes, 0
+        for f in self.fanouts:
+            tot += n * f
+            n = n * f
+        return tot
+
+
+def sample_subgraph(g: CSRGraph, spec: SamplerSpec,
+                    rng: np.random.Generator) -> dict:
+    """Layer-wise uniform neighbor sampling (GraphSAGE).  Seeds get labels;
+    messages flow sampled-neighbor -> seed over `len(fanouts)` hops."""
+    seeds = rng.integers(0, g.n_nodes, spec.batch_nodes).astype(np.int64)
+    node_ids = [seeds]
+    edges_src_g, edges_dst_local = [], []
+    frontier = seeds
+    for fanout in spec.fanouts:
+        starts = g.indptr[frontier]
+        degs = g.indptr[frontier + 1] - starts
+        # uniform sample `fanout` neighbors per frontier node (with repl.)
+        r = rng.random((len(frontier), fanout))
+        pick = starts[:, None] + np.minimum(
+            (r * np.maximum(degs, 1)[:, None]).astype(np.int64),
+            np.maximum(degs, 1)[:, None] - 1)
+        nbrs = g.indices[pick].astype(np.int64)            # (F, fanout)
+        # local id of frontier nodes = position in the concatenated list
+        base = sum(len(x) for x in node_ids[:-1])
+        dst_local = np.repeat(np.arange(len(frontier), dtype=np.int64),
+                              fanout)
+        edges_dst_local.append(base + dst_local)
+        edges_src_g.append(nbrs.reshape(-1))
+        node_ids.append(nbrs.reshape(-1))
+        frontier = nbrs.reshape(-1)
+    all_nodes = np.concatenate(node_ids)
+    # relabel: src nodes are appended in order, so local src ids are just
+    # their position in all_nodes (duplicates allowed — cheaper than unique
+    # and harmless for message passing)
+    pn, pe = spec.max_nodes, spec.max_edges
+    n, e = len(all_nodes), sum(len(s) for s in edges_src_g)
+    src_local = np.arange(spec.batch_nodes, n, dtype=np.int64)
+    dst_local = np.concatenate(edges_dst_local)
+    edge_index = np.zeros((2, pe), np.int32)
+    edge_index[0, :e] = src_local[: e]
+    edge_index[1, :e] = dst_local[: e]
+    edge_mask = np.zeros((pe,), np.float32)
+    edge_mask[:e] = 1.0
+    node_feats = np.zeros((pn, g.feats.shape[1]), np.float32)
+    node_feats[:n] = g.feats[all_nodes]
+    coords = np.zeros((pn, 3), np.float32)
+    coords[:n] = g.coords[all_nodes]
+    node_mask = np.zeros((pn,), np.float32)
+    node_mask[:n] = 1.0
+    labels = np.zeros((pn,), np.int32)
+    labels[:n] = g.labels[all_nodes]
+    label_mask = np.zeros((pn,), np.float32)
+    label_mask[: spec.batch_nodes] = 1.0                 # only seeds scored
+    return {"node_feats": node_feats, "coords": coords,
+            "edge_index": edge_index, "edge_mask": edge_mask,
+            "node_mask": node_mask, "labels": labels,
+            "label_mask": label_mask}
+
+
+def molecule_batch(seed: int, batch: int, n_nodes: int = 30,
+                   n_edges: int = 64, d_feat: int = 16) -> dict:
+    """Batched small graphs (molecule shape): one big disjoint union."""
+    rng = np.random.default_rng(seed)
+    N, E = batch * n_nodes, batch * n_edges
+    gid = np.repeat(np.arange(batch, dtype=np.int32), n_nodes)
+    src = (rng.integers(0, n_nodes, E)
+           + np.repeat(np.arange(batch), n_edges) * n_nodes).astype(np.int32)
+    dst = (rng.integers(0, n_nodes, E)
+           + np.repeat(np.arange(batch), n_edges) * n_nodes).astype(np.int32)
+    feats = rng.normal(0, 1, (N, d_feat)).astype(np.float32)
+    coords = rng.normal(0, 1, (N, 3)).astype(np.float32)
+    targets = rng.normal(0, 1, (batch,)).astype(np.float32)
+    return {"node_feats": feats, "coords": coords,
+            "edge_index": np.stack([src, dst]),
+            "edge_mask": np.ones((E,), np.float32),
+            "node_mask": np.ones((N,), np.float32),
+            "graph_ids": gid, "targets": targets}

@@ -1,0 +1,185 @@
+"""Synthetic video world with controllable object semantics.
+
+No real video corpora ship offline, so the data engine renders procedurally:
+objects are (shape, color, size) triples moving across textured backgrounds;
+captions are templated natural-language descriptions ("a large red square in
+the center of the frame", "two cars side by side").  Ground truth (object
+attributes + boxes per frame) is exact, which makes AveP / IoU evaluation
+and the paper's ablation orderings measurable without labels.
+
+Everything here is host-side numpy (the data-pipeline layer); jax sees only
+the resulting batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional
+
+import numpy as np
+
+SHAPES = ("square", "circle", "triangle", "bar")
+COLORS = {
+    "red": (0.9, 0.15, 0.1), "green": (0.1, 0.8, 0.2), "blue": (0.15, 0.2, 0.9),
+    "yellow": (0.95, 0.9, 0.1), "white": (0.95, 0.95, 0.95),
+    "black": (0.05, 0.05, 0.05), "orange": (0.95, 0.55, 0.1),
+    "purple": (0.6, 0.15, 0.8),
+}
+SIZES = {"small": 0.08, "medium": 0.14, "large": 0.22}
+POSITIONS = ("left", "center", "right")
+
+
+@dataclasses.dataclass
+class ObjectSpec:
+    shape: str
+    color: str
+    size: str
+    x: float  # center, [0,1]
+    y: float
+    vx: float = 0.0
+    vy: float = 0.0
+
+    def caption(self, with_pos: bool = False) -> str:
+        s = f"a {self.size} {self.color} {self.shape}"
+        if with_pos:
+            s += f" in the {self.position} of the frame"
+        return s
+
+    @property
+    def position(self) -> str:
+        return POSITIONS[min(2, int(self.x * 3))]
+
+    def bbox(self) -> tuple[float, float, float, float]:
+        """(cx, cy, w, h) normalized."""
+        r = SIZES[self.size]
+        return (self.x, self.y, 2 * r, 2 * r)
+
+
+def _texture(rng: np.random.Generator, h: int, w: int) -> np.ndarray:
+    base = rng.uniform(0.25, 0.55)
+    noise = rng.normal(0, 0.03, (h // 8, w // 8, 3))
+    tex = np.repeat(np.repeat(noise, 8, axis=0), 8, axis=1)
+    return np.clip(base + tex[:h, :w], 0, 1).astype(np.float32)
+
+
+def render_frame(objs: list[ObjectSpec], res: int,
+                 rng: np.random.Generator) -> np.ndarray:
+    img = _texture(rng, res, res)
+    yy, xx = np.mgrid[0:res, 0:res] / res
+    for o in objs:
+        r = SIZES[o.size]
+        col = np.asarray(COLORS[o.color], np.float32)
+        dx, dy = xx - o.x, yy - o.y
+        if o.shape == "square":
+            m = (np.abs(dx) < r) & (np.abs(dy) < r)
+        elif o.shape == "circle":
+            m = dx * dx + dy * dy < r * r
+        elif o.shape == "triangle":
+            m = (dy > -r) & (dy < r) & (np.abs(dx) < (r - dy) / 2)
+        else:  # bar
+            m = (np.abs(dx) < 1.6 * r) & (np.abs(dy) < 0.5 * r)
+        img[m] = col
+    return img
+
+
+def random_object(rng: np.random.Generator) -> ObjectSpec:
+    return ObjectSpec(
+        shape=str(rng.choice(SHAPES)),
+        color=str(rng.choice(list(COLORS))),
+        size=str(rng.choice(list(SIZES))),
+        x=float(rng.uniform(0.15, 0.85)), y=float(rng.uniform(0.15, 0.85)),
+        vx=float(rng.uniform(-0.02, 0.02)), vy=float(rng.uniform(-0.02, 0.02)),
+    )
+
+
+@dataclasses.dataclass
+class Video:
+    frames: np.ndarray                 # (T, H, W, 3) float32
+    objects: list[list[ObjectSpec]]    # per-frame object lists
+
+
+def make_video(rng: np.random.Generator, n_frames: int = 32,
+               res: int = 128, max_objects: int = 3) -> Video:
+    objs = [random_object(rng) for _ in range(rng.integers(1, max_objects + 1))]
+    frames, per_frame = [], []
+    for t in range(n_frames):
+        stepped = []
+        for o in objs:
+            o = dataclasses.replace(
+                o, x=float(np.clip(o.x + o.vx * t, 0.1, 0.9)),
+                y=float(np.clip(o.y + o.vy * t, 0.1, 0.9)))
+            stepped.append(o)
+        # occasional scene change: object swap mid-video
+        if t == n_frames // 2 and rng.uniform() < 0.4:
+            objs = [random_object(rng) for _ in range(len(objs))]
+        frames.append(render_frame(stepped, res, rng))
+        per_frame.append(stepped)
+    return Video(frames=np.stack(frames), objects=per_frame)
+
+
+def make_dataset(seed: int, n_videos: int = 8, n_frames: int = 32,
+                 res: int = 128) -> list[Video]:
+    rng = np.random.default_rng(seed)
+    return [make_video(rng, n_frames, res) for _ in range(n_videos)]
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer (hash-based word-level; deterministic, no external vocab)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Tokenizer:
+    """Word-level hash tokenizer.  Uses crc32, NOT python hash() — hash() is
+    salted per process, which would bind trained text encoders to the
+    training process (found the hard way; see EXPERIMENTS.md errata)."""
+
+    vocab: int = 32_000
+    max_len: int = 64
+
+    def encode(self, text: str) -> tuple[np.ndarray, np.ndarray]:
+        import zlib
+        words = text.lower().replace(",", " ").replace(".", " ").split()
+        ids = [1 + (zlib.crc32(w.encode()) % (self.vocab - 2))
+               for w in words][: self.max_len]
+        toks = np.zeros((self.max_len,), np.int32)
+        mask = np.zeros((self.max_len,), np.int32)
+        toks[: len(ids)] = ids
+        mask[: len(ids)] = 1
+        return toks, mask
+
+    def encode_batch(self, texts: list[str]) -> tuple[np.ndarray, np.ndarray]:
+        out = [self.encode(t) for t in texts]
+        return (np.stack([o[0] for o in out]),
+                np.stack([o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# Paired (image, caption, box) batches for alignment training
+# ---------------------------------------------------------------------------
+def alignment_batches(seed: int, batch: int, res: int, tokenizer: Tokenizer,
+                      with_negatives: bool = True) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        imgs, caps, boxes = [], [], []
+        for _ in range(batch):
+            o = random_object(rng)
+            imgs.append(render_frame([o], res, rng))
+            caps.append(o.caption(with_pos=rng.uniform() < 0.5))
+            boxes.append(o.bbox())
+        toks, mask = tokenizer.encode_batch(caps)
+        yield {
+            "images": np.stack(imgs).astype(np.float32),
+            "tokens": toks, "txt_mask": mask,
+            "boxes": np.asarray(boxes, np.float32),
+        }
+
+
+def iou_cxcywh(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """IoU for (..., 4) cxcywh boxes."""
+    ax1, ay1 = a[..., 0] - a[..., 2] / 2, a[..., 1] - a[..., 3] / 2
+    ax2, ay2 = a[..., 0] + a[..., 2] / 2, a[..., 1] + a[..., 3] / 2
+    bx1, by1 = b[..., 0] - b[..., 2] / 2, b[..., 1] - b[..., 3] / 2
+    bx2, by2 = b[..., 0] + b[..., 2] / 2, b[..., 1] + b[..., 3] / 2
+    ix = np.maximum(0, np.minimum(ax2, bx2) - np.maximum(ax1, bx1))
+    iy = np.maximum(0, np.minimum(ay2, by2) - np.maximum(ay1, by1))
+    inter = ix * iy
+    union = (ax2 - ax1) * (ay2 - ay1) + (bx2 - bx1) * (by2 - by1) - inter
+    return inter / np.maximum(union, 1e-9)

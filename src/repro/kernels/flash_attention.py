@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: FlashAttention forward (blockwise online softmax).
+
+Used by the LOVO cross-modality rerank (cross-attention over 576 image x 64
+text tokens per candidate) and by LM serve paths.  O(S) memory: the (S, T)
+score matrix never exists; each (block_q, block_k) tile lives in VMEM with
+running (max, sum, acc) statistics carried across the k-block grid axis.
+
+Grid: (batch*heads, n_q_blocks, n_k_blocks), k innermost; out/acc blocks are
+revisited across the k axis (standard Pallas TPU flash pattern with
+VMEM scratch accumulators).  Supports causal and full (cross) attention and
+a gemma-style logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, softcap: float,
+            block_q: int, block_k: int, kv_len: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bQ, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bK, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bK, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    # mask: kv padding + causality (global indices)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = kpos < kv_len
+    if causal:
+        qpos = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (bQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        out_ref[0] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-30)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, S, d); k, v: (B, H, T, d) -> (B, H, S, d).
+
+    GQA callers repeat k/v heads before the call (wrapper in ops.py).
+    """
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    scale = 1.0 / math.sqrt(d)
+    bq, bk = min(block_q, S), min(block_k, T)
+    pad_q, pad_k = (-S) % bq, (-T) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Tk = S + pad_q, T + pad_k
+    qf = q.reshape(B * H, Sq, d)
+    kf = k.reshape(B * H, Tk, d)
+    vf = v.reshape(B * H, Tk, d)
+    grid = (B * H, Sq // bq, Tk // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          softcap=softcap, block_q=bq, block_k=bk, kv_len=T),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, d)[:, :, :S]

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True (this container is CPU; interpret mode runs
+the kernel bodies in Python for correctness).  On real TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1) and
+the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kmeans as _km
+from repro.kernels import pq_scan as _pq
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def pq_scan(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """Single-query ADC: lut (P, M), codes (N, P) -> (N,)."""
+    return _pq.pq_scan_batched(lut[None], codes, interpret=INTERPRET)[0]
+
+
+def pq_scan_batched(luts: jax.Array, codes: jax.Array, *,
+                    block_n: int = 1024) -> jax.Array:
+    return _pq.pq_scan_batched(luts, codes, block_n=block_n,
+                               interpret=INTERPRET)
+
+
+def kmeans_assign(x: jax.Array, cents: jax.Array):
+    return _km.kmeans_assign(x, cents, interpret=INTERPRET)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = False, softcap: float = 0.0) -> jax.Array:
+    """(B, H, S, d) x (B, KV, T, d): repeats KV heads for GQA callers."""
+    H, KV = q.shape[1], k.shape[1]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    return _fa.flash_attention(q, k, v, causal=causal, softcap=softcap,
+                               interpret=INTERPRET)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pq_scan_ref(luts: jax.Array, codes: jax.Array) -> jax.Array:
+    """luts: (Q, P, M), codes: (N, P) -> (Q, N).
+
+    scores[q, n] = sum_p luts[q, p, codes[n, p]]  (take_along_axis gather)."""
+    c = codes.astype(jnp.int32)                    # (N, P)
+
+    def one(lut):                                  # (P, M)
+        per = jax.vmap(lambda l, idx: l[idx], in_axes=(0, 1))(lut, c)  # (P, N)
+        return jnp.sum(per, axis=0)
+    return jax.vmap(one)(luts)
+
+
+def kmeans_assign_ref(x: jax.Array, cents: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Full (N, M) distance matrix, then argmin (the memory-heavy baseline
+    the fused kernel avoids)."""
+    x = x.astype(jnp.float32)
+    c = cents.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = False, softcap: float = 0.0
+                        ) -> jax.Array:
+    """Dense softmax attention.  q: (B,H,S,d); k,v: (B,H,T,d)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        S, T = s.shape[-2:]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Ambient sharding context.
+
+Model code calls ``shard(x, logical_dims)`` on key activations; when a mesh +
+rules context is active (set by the step builders / dryrun driver) this turns
+into ``with_sharding_constraint`` — otherwise it is a no-op, so the same model
+code runs in single-device tests and 512-chip lowering unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+
+_STATE = threading.local()
+
+
+def _get() -> tuple[Optional[Any], Optional[Mapping]]:
+    return getattr(_STATE, "mesh", None), getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: Mapping[str, Optional[tuple[str, ...]]]):
+    prev = _get()
+    _STATE.mesh, _STATE.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    mesh, rules = _get()
+    if mesh is None or rules is None:
+        return x
+    from repro.launch.sharding import constrain
+    return constrain(x, logical, rules, mesh)
+
+
+def active_mesh():
+    return _get()[0]

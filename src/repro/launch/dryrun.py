@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape) cell, builds the production mesh
+((16,16) single-pod / (2,16,16) multi-pod), lowers + compiles the step with
+the cell's shardings against ShapeDtypeStruct inputs (no allocation), prints
+``memory_analysis`` / ``cost_analysis``, derives the §Roofline terms, and
+writes a JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path) -> dict:
+    import jax
+    from repro.configs.base import get_arch
+    from repro.launch import roofline as RL
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    arch = get_arch(arch_name)
+    spec = next(s for s in arch.shapes if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+    chips = int(mesh.devices.size)
+
+    t0 = time.time()
+    cell = build_cell(arch, spec, mesh)
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.inputs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rl = RL.analyse(arch_name, shape_name, mesh_name, chips, compiled,
+                    cell.model_flops)
+    raw = {"flops": rl.hlo_flops, "bytes": rl.hlo_bytes,
+           "wire": rl.coll_wire_bytes}
+    # LM steps scan over layers/accum; XLA cost_analysis counts scan bodies
+    # once -> correct via small unrolled probes (launch/probes.py)
+    from repro.configs.base import LMArch
+    corrected = None
+    if isinstance(arch, LMArch):
+        from repro.launch.probes import probe_corrected_costs
+        corrected = probe_corrected_costs(arch, spec, mesh)
+        rl.hlo_flops = corrected["flops"]
+        rl.hlo_bytes = corrected["bytes"]
+        rl.coll_wire_bytes = corrected["wire"]
+        rl.coll_operand_bytes = corrected["operand"]
+    record = rl.row()
+    record["raw_scan_counted"] = raw
+    record["probe_corrected"] = bool(corrected)
+    record.update({
+        "ok": True,
+        "multi_pod": multi_pod,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")},
+        "cost_analysis": {k: float(v) for k, v in dict(cost).items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed",
+                                    "optimal_seconds")},
+        "coll_by_op": rl.by_op,
+        "coll_wire_bytes": rl.coll_wire_bytes,
+        "coll_operand_bytes": rl.coll_operand_bytes,
+        "notes": cell.notes,
+    })
+    print(f"== {arch_name} / {shape_name} / mesh {mesh_name} "
+          f"({chips} chips) ==")
+    print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    print(f"  memory_analysis: "
+          + ", ".join(f"{k}={v/1e9:.3f}GB"
+                      for k, v in record["memory_analysis"].items()
+                      if k.endswith("bytes") and v))
+    print(f"  cost_analysis: flops/dev={rl.hlo_flops:.3e} "
+          f"bytes/dev={rl.hlo_bytes:.3e}")
+    print(f"  collectives: n={rl.collective_count} "
+          f"wire_bytes/dev={rl.coll_wire_bytes:.3e} by_op={rl.by_op}")
+    print(f"  roofline: compute={RL.fmt_seconds(rl.t_compute)} "
+          f"memory={RL.fmt_seconds(rl.t_memory)} "
+          f"collective={RL.fmt_seconds(rl.t_collective)} "
+          f"-> bottleneck={rl.bottleneck}")
+    print(f"  model_flops={rl.model_flops:.3e} "
+          f"useful_ratio={rl.useful_flops_ratio:.3f} "
+          f"roofline_fraction={rl.roofline_fraction:.3f}")
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch_name}__{shape_name}__{mesh_name}.json"
+    (out_dir / tag).write_text(json.dumps(record, indent=1))
+    return record
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs.base import get_arch
+    names = ["gemma2-9b", "llama3-405b", "qwen2-0.5b",
+             "phi3.5-moe-42b-a6.6b", "kimi-k2-1t-a32b", "egnn",
+             "xdeepfm", "mind", "dlrm-rm2", "bert4rec", "lovo"]
+    cells = []
+    for n in names:
+        for s in get_arch(n).shapes:
+            cells.append((n, s.name))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a:24s} {s}")
+        return
+
+    if args.all:
+        failures = []
+        for a, s in all_cells():
+            for mp in (False, True):
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = out_dir / f"{a}__{s}__{mesh_name}.json"
+                if tag.exists() and not args.force:
+                    print(f"skip (cached) {a}/{s}/{mesh_name}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s, "--out", str(out_dir)]
+                if mp:
+                    cmd.append("--multi-pod")
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                sys.stdout.write(r.stdout)
+                if r.returncode != 0:
+                    failures.append((a, s, mesh_name))
+                    sys.stderr.write(r.stderr[-4000:])
+                    (out_dir / f"{a}__{s}__{mesh_name}.json").write_text(
+                        json.dumps({"ok": False, "arch": a, "shape": s,
+                                    "mesh": mesh_name,
+                                    "error": r.stderr[-2000:]}, indent=1))
+        print(f"\n{len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        try:
+            run_cell(args.arch, args.shape, mp, out_dir)
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

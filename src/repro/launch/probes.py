@@ -1,0 +1,98 @@
+"""Loop-aware cost extrapolation for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE,
+not x trip-count — so a 126-layer scanned model reports ~1 layer of FLOPs,
+and collectives inside the scan appear once in the HLO text.  Unrolling the
+real configs (126 layers x 512 partitions) is not compilable in reasonable
+time, so we fit a linear cost model from small UNROLLED probes:
+
+  C(L, A) = C(L1, A1)                      # probe baseline
+          + (L - L1)/s * [C(L2,A1) - C(L1,A1)]        # per-layer(-pair)
+          + (A - A1)   * per_accum(L)                  # per-microstep
+  per_accum(L) linear in L from the (L1,A2), (L2,A2) probes.
+
+Probe Ls are (2, 4) for layer-alternating archs (gemma2 local/global period
+2) and (1, 2) for uniform stacks.  Probes run with scan_layers=False,
+unrolled grad-accum, and unrolled attention chunks, on the SAME mesh and
+sharding rules, so collective counts extrapolate too.  Applies to LM cells
+only — every other family is already loop-free in its step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.configs.base import LMArch, ShapeSpec
+from repro.launch import roofline as RL
+
+METRICS = ("flops", "bytes", "wire", "operand")
+
+
+def _measure(arch: LMArch, spec: ShapeSpec, mesh) -> dict[str, float]:
+    from repro.launch.steps import build_cell
+    cell = build_cell(arch, spec, mesh)
+    with mesh:
+        compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                           donate_argnums=cell.donate).lower(
+            *cell.inputs).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    stats = RL.collective_bytes(compiled.as_text(), int(mesh.devices.size))
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire": stats.wire_bytes,
+            "operand": float(stats.operand_bytes)}
+
+
+def probe_corrected_costs(arch: LMArch, spec: ShapeSpec, mesh,
+                          verbose: bool = True) -> dict[str, float]:
+    """Returns corrected per-device {flops, bytes, wire, operand} for the
+    real (n_layers, grad_accum)."""
+    # L probes at (2, 4): one full local/global period for gemma2, and far
+    # enough from degenerate L=1 that XLA's collective strategy is stable.
+    L1, L2 = 2, 4
+    step = L2 - L1
+    Lr = arch.n_layers
+    if spec.kind == "train":
+        from repro.configs.base import merged_rules
+        from repro.launch.steps import effective_accum
+        Ar = effective_accum(spec, mesh, merged_rules(arch, spec))
+    else:
+        Ar = 1
+
+    def probe_arch(L):
+        return dataclasses.replace(arch, n_layers=L, scan_layers=False,
+                                   attn_unroll=True)
+
+    def probe_spec(A):
+        if spec.kind != "train":
+            return spec
+        return dataclasses.replace(spec, grad_accum=A)
+
+    out: dict[str, float] = {}
+    c_l1a1 = _measure(probe_arch(L1), probe_spec(1), mesh)
+    c_l2a1 = _measure(probe_arch(L2), probe_spec(1), mesh)
+    if Ar > 1:
+        c_l1a2 = _measure(probe_arch(L1), probe_spec(2), mesh)
+        c_l2a2 = _measure(probe_arch(L2), probe_spec(2), mesh)
+    for m in METRICS:
+        # negative slopes mean XLA changed strategy between probe sizes;
+        # clamp to 0 (conservative: never extrapolate downward)
+        per_layer = max((c_l2a1[m] - c_l1a1[m]) / step, 0.0)
+        c_at_l_a1 = c_l1a1[m] + (Lr - L1) * per_layer
+        if Ar > 1:
+            pa1 = c_l1a2[m] - c_l1a1[m]
+            pa2 = c_l2a2[m] - c_l2a1[m]
+            pa_slope = (pa2 - pa1) / step
+            per_accum = max(pa1 + (Lr - L1) * pa_slope, 0.0)
+            out[m] = c_at_l_a1 + (Ar - 1) * per_accum
+        else:
+            out[m] = c_at_l_a1
+        out[m] = max(out[m], c_l1a1[m])
+    if verbose:
+        print(f"  probes (L={L1},{L2}; A<=2 -> L={Lr}, A={Ar}): "
+              f"flops/dev {c_l1a1['flops']:.3e} -> {out['flops']:.3e}")
+    return out

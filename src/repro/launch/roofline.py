@@ -1,0 +1,219 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs        / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes        / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  XLA reports
+these for the *per-device* SPMD module, so we multiply by chip count to get
+global work, then divide back — i.e. per-device analysis is used directly
+against per-chip peaks.
+
+collective_bytes is not in cost_analysis: we parse the post-optimization HLO
+text and account every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Two accountings are produced:
+
+  * ``operand`` — plain sum of collective operand sizes (the spec definition);
+  * ``wire``    — ring-algorithm bytes actually serialized per device
+                  (all-reduce 2x(g-1)/g, all-gather/reduce-scatter (g-1)/g ...),
+
+and the roofline term uses ``wire`` (documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# -- TPU v5e hardware constants (per chip) ----------------------------------
+PEAK_FLOPS = 197e12     # bf16 FLOP/s
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.  %x = bf16[8,128]{1,0} all-gather(%y), ... replica_groups={{0,1},{2,3}}
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[0-9,]*\][^ ]*\)?[^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota format
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: int = 0          # spec definition: sum of operand sizes
+    wire_bytes: float = 0.0         # ring-model bytes serialized per device
+    by_op: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, op: str, nbytes: int, g: int):
+        self.count += 1
+        if op == "all-reduce":
+            operand, wire = nbytes, 2.0 * nbytes * (g - 1) / max(g, 1)
+        elif op == "all-gather":
+            # result shape is the gathered (full) tensor
+            operand, wire = nbytes // max(g, 1), nbytes * (g - 1) / max(g, 1) ** 2 * g
+        elif op == "reduce-scatter":
+            # result shape is the scattered shard; input was g x larger
+            operand, wire = nbytes * g, nbytes * (g - 1)
+        elif op == "all-to-all":
+            operand, wire = nbytes, nbytes * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            operand, wire = nbytes, float(nbytes)
+        self.operand_bytes += operand
+        self.wire_bytes += wire
+        d = self.by_op.setdefault(op, [0, 0.0])
+        d[0] += 1
+        d[1] += wire
+
+
+def collective_bytes(hlo_text: str, world: int) -> CollectiveStats:
+    """Parse post-optimization HLO; account every collective op."""
+    stats = CollectiveStats()
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        # async pairs appear as -start/-done: count the start only
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        g = _group_size(line, world)
+        stats.add(op, nbytes, g)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per-device
+    hlo_bytes: float              # per-device
+    coll_wire_bytes: float        # per-device
+    coll_operand_bytes: float
+    model_flops: float            # 6*N*D (global)
+    per_device_peak_bytes: int    # memory_analysis temp+args
+    collective_count: int = 0
+    by_op: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-roofline-bound step time that is useful
+        compute: t_useful_compute / max(terms).  1.0 == at the roofline."""
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def row(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_device": self.per_device_peak_bytes,
+            "collectives": self.collective_count,
+        }
+
+
+def analyse(arch: str, shape: str, mesh_name: str, chips: int,
+            compiled, model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    stats = collective_bytes(hlo, chips)
+    mem = compiled.memory_analysis()
+    peak = 0
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            peak += int(getattr(mem, attr, 0) or 0)
+        # arguments+outputs alias for donated params; temp is the adder
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=flops, hlo_bytes=nbytes,
+                    coll_wire_bytes=stats.wire_bytes,
+                    coll_operand_bytes=stats.operand_bytes,
+                    model_flops=model_flops,
+                    per_device_peak_bytes=peak,
+                    collective_count=stats.count,
+                    by_op=dict(stats.by_op))
+
+
+def fmt_seconds(t: float) -> str:
+    if t == 0:
+        return "0"
+    if t < 1e-3:
+        return f"{t*1e6:.1f}us"
+    if t < 1:
+        return f"{t*1e3:.2f}ms"
+    return f"{t:.3f}s"

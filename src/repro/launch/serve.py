@@ -1,0 +1,106 @@
+"""LOVO serving driver: build the index over synthetic videos, then serve
+batched text queries through the full two-stage pipeline.
+
+  PYTHONPATH=src python -m repro.launch.serve --videos 6 --queries 8
+
+Exercises the real serving substrate: index build (keyframes -> ViT -> IMI),
+MicroBatcher for query batching, HedgedExecutor for straggler mitigation,
+and the two-stage QueryEngine.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def build_engine(*, seed: int = 0, n_videos: int = 6, res: int = 96,
+                 vit_layers: int = 2, d_model: int = 64,
+                 imi_k: int = 8, pq_p: int = 8, pq_m: int = 32,
+                 rerank_layers: int = 2, trained_params: dict | None = None):
+    """Small-but-real engine (CPU-sized encoders, full pipeline)."""
+    from repro.core import anns
+    from repro.core.index_builder import build_from_videos
+    from repro.core.query import QueryEngine
+    from repro.data.synthetic import Tokenizer, make_dataset
+    from repro.models import rerank as RR
+    from repro.models import text_encoder as TE
+    from repro.models import vit as V
+
+    vcfg = V.ViTConfig(n_layers=vit_layers, d_model=d_model,
+                       n_heads=max(2, d_model // 32), d_ff=4 * d_model,
+                       patch=16, img_res=res, embed_dim=64)
+    tcfg = TE.TextConfig(n_layers=vit_layers, d_model=d_model,
+                         n_heads=max(2, d_model // 32), d_ff=4 * d_model,
+                         vocab=32_000, max_len=16, embed_dim=64)
+    rcfg = RR.RerankConfig(n_layers=rerank_layers, d_model=64,
+                           n_heads=4, d_ff=128, n_queries=4,
+                           img_dim=d_model, txt_dim=d_model,
+                           decoder_layers=1)
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3, r4 = jax.random.split(rng, 4)
+    if trained_params is not None:
+        vit_p = trained_params["vit"]
+        txt_p = trained_params["txt"]
+        rer_p = trained_params["rerank"]
+    else:
+        vit_p = V.init_vit(r1, vcfg)[0]
+        txt_p = TE.init_text(r2, tcfg)[0]
+        rer_p = RR.init_rerank(r3, rcfg)[0]
+
+    videos = make_dataset(seed, n_videos=n_videos, res=res)
+    built = build_from_videos(r4, videos, vit_p, vcfg,
+                              K=imi_k, P=pq_p, M=pq_m)
+    engine = QueryEngine(
+        built, text_params=txt_p, text_cfg=tcfg, vit_params=vit_p,
+        vit_cfg=vcfg, rerank_params=rer_p, rerank_cfg=rcfg,
+        search_cfg=anns.SearchConfig(top_a=16, max_cell_size=512, top_k=64),
+        tokenizer=Tokenizer(vocab=32_000, max_len=16))
+    return engine, videos
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--videos", type=int, default=6)
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--hedge", action="store_true")
+    args = ap.parse_args()
+
+    from repro.serving.batcher import HedgedExecutor, MicroBatcher
+
+    t0 = time.perf_counter()
+    engine, videos = build_engine(n_videos=args.videos)
+    print(f"index built: {engine.built.index.n} vectors from "
+          f"{len(engine.built.keyframes)} key frames "
+          f"({time.perf_counter()-t0:.1f}s)")
+
+    queries = ["a large red square", "a small blue circle",
+               "a medium green triangle", "a white bar in the center",
+               "a yellow circle on the left", "a black square",
+               "a purple triangle", "an orange bar"][: args.queries]
+
+    def run_one(text: str):
+        r = engine.query(text, top_n=3)
+        return r
+
+    backend = run_one
+    if args.hedge:
+        backend = HedgedExecutor([run_one, run_one])
+
+    batcher = MicroBatcher(lambda texts: [backend(t) for t in texts],
+                           batch_size=4, max_wait_ms=10)
+    futures = [batcher.submit(q) for q in queries]
+    for q, f in zip(queries, futures):
+        r = f.result()
+        print(f"  {q!r}: frames {r.frames.tolist()} "
+              f"scores {np.round(r.scores, 3).tolist()} "
+              f"timings {{{', '.join(f'{k}: {v*1e3:.0f}ms' for k, v in r.timings.items())}}}")
+    batcher.close()
+    print(f"served {len(queries)} queries; "
+          f"p50 {batcher.latency.quantile(0.5)*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Logical-axis sharding engine.
+
+Models annotate every param / activation with a tuple of *logical* axis names
+(one per array dim, None for unsharded dims).  ``logical_to_sharding`` turns
+those annotations into ``NamedSharding``s under a rules table, with
+production-grade fallbacks:
+
+  * mesh axes absent from the mesh are dropped (single-pod vs multi-pod);
+  * a dim not divisible by its mesh-axes product drops trailing axes until it
+    divides (never fails to lower because a head count is 8 on a 16-way axis);
+  * one mesh axis is never assigned twice in the same sharding.
+
+On multi-pod meshes the 'pod' axis is automatically prepended to the 'batch'
+(and index/candidates) mappings so DP crosses the DCN axis, unless a rule
+already mentions 'pod'.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axes that absorb the 'pod' axis on multi-pod meshes
+_POD_ABSORBERS = ("batch", "index_rows", "candidates", "edges", "fsdp")
+
+
+def effective_rules(rules: Mapping[str, Optional[tuple[str, ...]]],
+                    mesh: Mesh) -> dict[str, Optional[tuple[str, ...]]]:
+    out: dict[str, Optional[tuple[str, ...]]] = {}
+    has_pod = "pod" in mesh.axis_names
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+            continue
+        axes = tuple(a for a in v if a in mesh.axis_names)
+        if has_pod and k in _POD_ABSORBERS and "pod" not in axes and axes:
+            axes = ("pod",) + axes
+        out[k] = axes or None
+    return out
+
+
+def spec_for(logical: Sequence[Optional[str]],
+             rules: Mapping[str, Optional[tuple[str, ...]]],
+             mesh: Mesh,
+             shape: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec for one array given per-dim logical names."""
+    used: set[str] = set()
+    parts: list[Any] = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i, name in enumerate(logical):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.get(name)
+        if not axes:
+            parts.append(None)
+            continue
+        picked: list[str] = []
+        prod = 1
+        for a in axes:
+            if a in used:
+                continue
+            if shape is not None:
+                if shape[i] % (prod * sizes[a]) != 0:
+                    continue
+            picked.append(a)
+            prod *= sizes[a]
+        used.update(picked)
+        if not picked:
+            parts.append(None)
+        elif len(picked) == 1:
+            parts.append(picked[0])
+        else:
+            parts.append(tuple(picked))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def logical_to_sharding(logical_tree: Any,
+                        rules: Mapping[str, Optional[tuple[str, ...]]],
+                        mesh: Mesh,
+                        shape_tree: Any = None) -> Any:
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings.
+
+    ``shape_tree`` (same structure, of jax.ShapeDtypeStruct / arrays) enables
+    divisibility fallbacks.
+    """
+    eff = effective_rules(rules, mesh)
+
+    def is_leaf(x):
+        return x is None or (isinstance(x, tuple)
+                             and all(e is None or isinstance(e, str) for e in x))
+
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda lg: NamedSharding(mesh, spec_for(lg, eff, mesh) if lg else P()),
+            logical_tree, is_leaf=is_leaf)
+    return jax.tree.map(
+        lambda lg, arr: NamedSharding(
+            mesh, spec_for(lg, eff, mesh, np.shape(arr)) if lg else P()),
+        logical_tree, shape_tree, is_leaf=is_leaf)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]],
+              rules: Mapping[str, Optional[tuple[str, ...]]],
+              mesh: Optional[Mesh]) -> jax.Array:
+    """with_sharding_constraint under logical names (no-op without mesh)."""
+    if mesh is None or len(mesh.devices.ravel()) == 1:
+        return x
+    eff = effective_rules(rules, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(logical, eff, mesh, x.shape)))

@@ -1,0 +1,659 @@
+"""Cell builder: (arch x shape x mesh) -> lowerable step.
+
+For every architecture family this module provides
+  * ``input_specs(arch, spec)``  — ShapeDtypeStruct stand-ins for all inputs
+    (weak-type-correct, shardable, zero allocation),
+  * a pure step function (train / prefill / decode / serve / search ...),
+  * in_shardings derived from the logical-axis rules,
+  * an analytic MODEL_FLOPS estimate for §Roofline.
+
+``build_cell`` is what dryrun.py and benchmarks/roofline.py consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (GNNArch, LMArch, LovoArch, RecArch, ShapeSpec,
+                                merged_rules)
+from repro.launch import sharding as shardlib
+from repro.launch.context import sharding_context
+from repro.train.optimizer import AdamConfig, adam_init, state_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_name: str
+    shape_name: str
+    fn: Callable            # jit-able step
+    inputs: tuple           # ShapeDtypeStruct pytree(s), positional
+    in_shardings: tuple
+    donate: tuple           # argnums to donate
+    model_flops: float
+    rules: dict
+    notes: str = ""
+
+
+def _sharding(tree_logical, mesh, rules, shape_tree):
+    return shardlib.logical_to_sharding(tree_logical, rules, mesh, shape_tree)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+def lm_attn_flops(arch: LMArch, batch: int, seq: int, kv_len: int | None = None
+                  ) -> float:
+    """Useful attention FLOPs per forward: 2 matmuls x 2MNK, causal-halved,
+    window-aware per layer (gemma2 alternates local/global)."""
+    from repro.models.transformer import window_schedule
+    hd = arch.resolved_head_dim
+    total = 0.0
+    for w in window_schedule(arch):
+        if kv_len is None:  # self-attention over seq, causal
+            eff = min(int(w), seq) if w > 0 else seq
+            total += 2.0 * batch * arch.n_heads * seq * eff * hd
+        else:  # decode: one token vs kv_len
+            eff = min(int(w), kv_len) if w > 0 else kv_len
+            total += 4.0 * batch * arch.n_heads * eff * hd
+    return total
+
+
+def lm_model_flops(arch: LMArch, spec: ShapeSpec) -> float:
+    seq = spec.dim("seq_len")
+    B = spec.dim("global_batch")
+    if spec.kind == "train":
+        return 6.0 * arch.n_active_params() * B * seq \
+            + 3.0 * lm_attn_flops(arch, B, seq)
+    if spec.kind == "prefill":
+        return 2.0 * arch.n_active_params() * B * seq \
+            + lm_attn_flops(arch, B, seq)
+    return 2.0 * arch.n_active_params() * B \
+        + lm_attn_flops(arch, B, 1, kv_len=seq)
+
+
+def effective_accum(spec: ShapeSpec, mesh: Mesh, rules) -> int:
+    """grad-accum capped so the microbatch divides the DP width."""
+    eff = shardlib.effective_rules(rules, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    width = 1
+    for ax in (eff.get("batch") or ()):
+        width *= sizes[ax]
+    gbatch = spec.dim("global_batch")
+    A = spec.grad_accum
+    while A > 1 and (gbatch // A) % width != 0:
+        A //= 2
+    return A
+
+
+def lm_cell(arch: LMArch, spec: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.models import transformer as T
+    rules = merged_rules(arch, spec)
+    seq = spec.dim("seq_len")
+    gbatch = spec.dim("global_batch")
+
+    param_shapes = jax.eval_shape(
+        lambda: T.init_lm(jax.random.PRNGKey(0), arch)[0])
+    # logical specs come from the structural twin (cheap, concrete)
+    _, param_logical = T.init_lm(jax.random.PRNGKey(0),
+                                 T.dataclass_small(arch))
+    param_shard = _sharding(param_logical, mesh, rules, param_shapes)
+
+    if spec.kind == "train":
+        adam = AdamConfig(state_dtype=arch.opt_state_dtype)
+        opt_shapes = jax.eval_shape(
+            functools.partial(adam_init, cfg=adam), param_shapes)
+        opt_logical = state_specs(param_logical, adam)
+        opt_shard = _sharding(opt_logical, mesh, rules, opt_shapes)
+        eff = shardlib.effective_rules(rules, mesh)
+        A = effective_accum(spec, mesh, rules)
+        micro = gbatch // A
+        batch = {
+            "tokens": SDS((A, micro, seq), jnp.int32),
+            "labels": SDS((A, micro, seq), jnp.int32),
+        }
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, shardlib.spec_for((None, "batch", None), eff, mesh,
+                                        s.shape)), batch)
+        from repro.train.train_loop import make_train_step
+
+        def loss_fn(p, tokens, labels):
+            return T.lm_loss(p, tokens, labels, arch)
+
+        # attn_unroll doubles as the dry-run probe flag: probes unroll every
+        # loop so XLA cost_analysis counts all iterations
+        inner = make_train_step(loss_fn, adam, unroll_accum=arch.attn_unroll,
+                                grad_shardings=param_shard)
+
+        def step(params, opt, batch):
+            with sharding_context(mesh, rules):
+                return inner(params, opt, batch)
+
+        flops = lm_model_flops(arch, spec)
+        return Cell(arch.name, spec.name, step,
+                    (param_shapes, opt_shapes, batch),
+                    (param_shard, opt_shard, bshard),
+                    donate=(0, 1), model_flops=flops, rules=rules)
+
+    if spec.kind == "prefill":
+        tokens = SDS((gbatch, seq), jnp.int32)
+        tshard = NamedSharding(mesh, shardlib.spec_for(
+            ("batch", None), shardlib.effective_rules(rules, mesh), mesh))
+
+        def step(params, tokens):
+            with sharding_context(mesh, rules):
+                return T.prefill(params, tokens, arch)
+
+        flops = lm_model_flops(arch, spec)
+        return Cell(arch.name, spec.name, step, (param_shapes, tokens),
+                    (param_shard, tshard), donate=(),
+                    model_flops=flops, rules=rules)
+
+    if spec.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            functools.partial(T.init_cache, arch, gbatch, seq))
+        cache_logical = T.cache_specs(arch)
+        cache_shard = _sharding(cache_logical, mesh, rules, cache_shapes)
+        toks = SDS((gbatch,), jnp.int32)
+        pos = SDS((gbatch,), jnp.int32)
+        eff = shardlib.effective_rules(rules, mesh)
+        tshard = NamedSharding(mesh, shardlib.spec_for(("batch",), eff, mesh,
+                                                       (gbatch,)))
+
+        def step(params, cache, tokens, pos):
+            with sharding_context(mesh, rules):
+                return T.decode_step(params, cache, tokens, pos, arch)
+
+        flops = lm_model_flops(arch, spec)
+        return Cell(arch.name, spec.name, step,
+                    (param_shapes, cache_shapes, toks, pos),
+                    (param_shard, cache_shard, tshard, tshard),
+                    donate=(1,), model_flops=flops, rules=rules,
+                    notes=spec.notes)
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# EGNN
+# ---------------------------------------------------------------------------
+def _egnn_flops(cfg, n_edges: int, n_nodes: int, train: bool) -> float:
+    d = cfg.d_hidden
+    per_edge = 2 * ((2 * d + 1) * d + d * d) + 2 * (d * d + d)
+    per_node = 2 * (2 * d * d + d * d)
+    fwd = cfg.n_layers * (n_edges * per_edge + n_nodes * per_node) \
+        + 2 * n_nodes * cfg.d_feat * d
+    return float(fwd * (3 if train else 1))
+
+
+def egnn_cell(arch: GNNArch, spec: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.models import egnn as E
+    rules = merged_rules(arch, spec)
+    eff = shardlib.effective_rules(rules, mesh)
+    d_feat = spec.dim("d_feat")
+    adam = AdamConfig()
+
+    if spec.kind == "gnn_sampled":
+        pn, pe = spec.dim("pad_nodes"), spec.dim("pad_edges")
+        G = spec.dim("graphs_per_step")
+        cfg = E.EGNNConfig(n_layers=arch.n_layers, d_hidden=arch.d_hidden,
+                           d_feat=d_feat, n_classes=spec.dim("n_classes"))
+        batch = {
+            "node_feats": SDS((G, pn, d_feat), jnp.float32),
+            "coords": SDS((G, pn, 3), jnp.float32),
+            "edge_index": SDS((G, 2, pe), jnp.int32),
+            "edge_mask": SDS((G, pe), jnp.float32),
+            "node_mask": SDS((G, pn), jnp.float32),
+            "labels": SDS((G, pn), jnp.int32),
+            "label_mask": SDS((G, pn), jnp.float32),
+        }
+
+        def batched_loss(p, **b):
+            losses, aux = jax.vmap(
+                lambda mb: E.egnn_node_loss(p, cfg, mb))(b)
+            return jnp.mean(losses), jax.tree.map(jnp.mean, aux)
+        n_nodes, n_edges, train = pn * G, pe * G, True
+    elif spec.kind == "gnn_molecule":
+        B = spec.dim("batch")
+        n, e = spec.dim("n_nodes"), spec.dim("n_edges")
+        N, Epad = B * n, B * e
+        cfg = E.EGNNConfig(n_layers=arch.n_layers, d_hidden=arch.d_hidden,
+                           d_feat=d_feat, graph_readout=True,
+                           shard_edges=True, agg_dtype=arch.agg_dtype)
+        batch = {
+            "node_feats": SDS((N, d_feat), jnp.float32),
+            "coords": SDS((N, 3), jnp.float32),
+            "edge_index": SDS((2, Epad), jnp.int32),
+            "edge_mask": SDS((Epad,), jnp.float32),
+            "node_mask": SDS((N,), jnp.float32),
+            "graph_ids": SDS((N,), jnp.int32),
+            "targets": SDS((B,), jnp.float32),
+        }
+
+        def batched_loss(p, **b):
+            return E.egnn_graph_loss(p, cfg, b)
+        n_nodes, n_edges, train = N, Epad, True
+    else:  # gnn_train full batch
+        n, e = spec.dim("n_nodes"), spec.dim("n_edges")
+        # pad the edge list to the full mesh width so the 'edges' sharding
+        # actually applies (61,859,140 % 256 != 0 would silently replicate
+        # every edge tensor — the §Perf log documents this)
+        width = int(np.prod(mesh.devices.shape))
+        e = -(-e // width) * width
+        cfg = E.EGNNConfig(n_layers=arch.n_layers, d_hidden=arch.d_hidden,
+                           d_feat=d_feat, n_classes=spec.dim("n_classes"),
+                           shard_edges=True, agg_dtype=arch.agg_dtype)
+        batch = {
+            "node_feats": SDS((n, d_feat), jnp.float32),
+            "coords": SDS((n, 3), jnp.float32),
+            "edge_index": SDS((2, e), jnp.int32),
+            "edge_mask": SDS((e,), jnp.float32),
+            "node_mask": SDS((n,), jnp.float32),
+            "labels": SDS((n,), jnp.int32),
+        }
+
+        def batched_loss(p, **b):
+            return E.egnn_node_loss(p, cfg, b)
+        n_nodes, n_edges, train = n, e, True
+
+    param_shapes = jax.eval_shape(
+        lambda: E.init_egnn(jax.random.PRNGKey(0), cfg)[0])
+    _, plog = E.init_egnn(jax.random.PRNGKey(0),
+                          dataclasses.replace(cfg, d_feat=8, d_hidden=8))
+    pshard = _sharding(plog, mesh, rules, param_shapes)
+    opt_shapes = jax.eval_shape(functools.partial(adam_init, cfg=adam),
+                                param_shapes)
+    oshard = _sharding(state_specs(plog, adam), mesh, rules, opt_shapes)
+
+    def bspec(key, arr):
+        nd = len(arr.shape)
+        if spec.kind == "gnn_sampled":
+            lg = ("batch",) + (None,) * (nd - 1)
+        elif key in ("edge_index",):
+            lg = (None, "edges")
+        elif key in ("edge_mask",):
+            lg = ("edges",)
+        elif key in ("targets",):
+            lg = ("batch",)
+        else:
+            lg = ("nodes",) + (None,) * (nd - 1)
+        return NamedSharding(mesh, shardlib.spec_for(lg, eff, mesh, arr.shape))
+
+    bshard = {k: bspec(k, v) for k, v in batch.items()}
+
+    from repro.train.train_loop import make_train_step
+    accum_batch = jax.tree.map(lambda s: SDS((1,) + s.shape, s.dtype), batch)
+    accum_bshard = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*((None,) + tuple(s.spec)))),
+        bshard)
+    inner = make_train_step(lambda p, **mb: batched_loss(p, **mb), adam)
+
+    def step(params, opt, batch):
+        with sharding_context(mesh, rules):
+            return inner(params, opt, batch)
+
+    flops = _egnn_flops(cfg, n_edges, n_nodes, train)
+    return Cell(arch.name, spec.name, step,
+                (param_shapes, opt_shapes, accum_batch),
+                (pshard, oshard, accum_bshard),
+                donate=(0, 1), model_flops=flops, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+def _rec_fwd_flops(arch: RecArch, batch: int) -> float:
+    d = arch.embed_dim
+    if arch.family == "dlrm":
+        mlp = sum(a * b for a, b in zip((arch.n_dense,) + arch.bot_mlp[1:-1],
+                                        arch.bot_mlp[1:]))
+        n_f = arch.n_sparse + 1
+        top_in = n_f * (n_f - 1) // 2 + arch.bot_mlp[-1]
+        mlp += sum(a * b for a, b in zip((top_in,) + arch.top_mlp[:-1],
+                                         arch.top_mlp))
+        inter = n_f * n_f * d
+        return 2.0 * batch * (mlp + inter)
+    if arch.family == "xdeepfm":
+        f0 = arch.n_sparse
+        h_prev, cin = f0, 0
+        for h in arch.cin_layers:
+            cin += h_prev * f0 * d + h_prev * f0 * h * d
+            h_prev = h
+        deep_dims = (f0 * d,) + arch.mlp_layers + (1,)
+        deep = sum(a * b for a, b in zip(deep_dims[:-1], deep_dims[1:]))
+        return 2.0 * batch * (cin + deep)
+    if arch.family == "mind":
+        L = arch.seq_len
+        route = arch.capsule_iters * 2 * arch.n_interests * L * d
+        return 2.0 * batch * (L * d * d + route + 3 * d * d)
+    if arch.family == "bert4rec":
+        L, db = arch.seq_len, arch.embed_dim
+        per_block = 4 * L * db * db + 2 * L * L * db + 8 * L * db * db
+        # train uses sampled softmax (40 masked pos x 8193 candidates);
+        # serve scores no vocab (hidden state only) — see recsys.bert4rec_loss
+        sampled = min(L, 40) * (8192 + 1) * db
+        return 2.0 * batch * (arch.n_blocks * per_block + sampled)
+    raise ValueError(arch.family)
+
+
+def _rec_batch_specs(arch: RecArch, B: int) -> dict:
+    if arch.family == "dlrm":
+        return {"dense": SDS((B, arch.n_dense), jnp.float32),
+                "sparse": SDS((B, arch.n_sparse), jnp.int32),
+                "labels": SDS((B,), jnp.float32)}
+    if arch.family == "xdeepfm":
+        return {"sparse": SDS((B, arch.n_sparse), jnp.int32),
+                "labels": SDS((B,), jnp.float32)}
+    if arch.family == "mind":
+        return {"history": SDS((B, arch.seq_len), jnp.int32),
+                "hist_mask": SDS((B, arch.seq_len), jnp.float32),
+                "target": SDS((B,), jnp.int32)}
+    return {"seq": SDS((B, arch.seq_len), jnp.int32),
+            "seq_mask": SDS((B, arch.seq_len), jnp.float32),
+            "labels": SDS((B, arch.seq_len), jnp.int32),
+            "label_mask": SDS((B, arch.seq_len), jnp.float32)}
+
+
+def _rec_loss(arch: RecArch):
+    from repro.models import recsys as R
+
+    if arch.family == "dlrm":
+        def loss(p, dense, sparse, labels):
+            logit = R.dlrm_forward(p, arch, dense=dense, sparse=sparse)
+            l = jnp.mean(jnp.maximum(logit, 0) - logit * labels
+                         + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+            return l, {"bce": l}
+        return loss
+    if arch.family == "xdeepfm":
+        def loss(p, sparse, labels):
+            logit = R.xdeepfm_forward(p, arch, sparse=sparse)
+            l = jnp.mean(jnp.maximum(logit, 0) - logit * labels
+                         + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+            return l, {"bce": l}
+        return loss
+    if arch.family == "mind":
+        return lambda p, **b: R.mind_loss(p, arch, b)
+    return lambda p, **b: R.bert4rec_loss(p, arch, b)
+
+
+def _rec_init(arch: RecArch):
+    from repro.models import recsys as R
+    return {"dlrm": R.init_dlrm, "xdeepfm": R.init_xdeepfm,
+            "mind": R.init_mind, "bert4rec": R.init_bert4rec}[arch.family]
+
+
+def rec_cell(arch: RecArch, spec: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.models import recsys as R
+    rules = merged_rules(arch, spec)
+    eff = shardlib.effective_rules(rules, mesh)
+    init = _rec_init(arch)
+    param_shapes = jax.eval_shape(
+        lambda: init(jax.random.PRNGKey(0), arch)[0])
+    small = dataclasses.replace(
+        arch, vocab_sizes=tuple(min(64, v) for v in arch.vocab_sizes))
+    _, plog = init(jax.random.PRNGKey(0), small)
+    pshard = _sharding(plog, mesh, rules, param_shapes)
+
+    def bshard_of(batch):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, shardlib.spec_for(
+                ("batch",) + (None,) * (len(s.shape) - 1), eff, mesh,
+                s.shape)), batch)
+
+    if spec.kind == "rec_train":
+        adam = AdamConfig()
+        opt_shapes = jax.eval_shape(functools.partial(adam_init, cfg=adam),
+                                    param_shapes)
+        oshard = _sharding(state_specs(plog, adam), mesh, rules, opt_shapes)
+        A = spec.grad_accum
+        B = spec.dim("batch") // A
+        batch = jax.tree.map(lambda s: SDS((A,) + s.shape, s.dtype),
+                             _rec_batch_specs(arch, B))
+        inner_shard = bshard_of(_rec_batch_specs(arch, B))
+        bshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*((None,) + tuple(s.spec)))),
+            inner_shard)
+        from repro.train.train_loop import make_train_step
+        inner = make_train_step(_rec_loss(arch), adam)
+
+        def step(params, opt, batch):
+            with sharding_context(mesh, rules):
+                return inner(params, opt, batch)
+
+        flops = 3.0 * _rec_fwd_flops(arch, spec.dim("batch"))
+        return Cell(arch.name, spec.name, step,
+                    (param_shapes, opt_shapes, batch),
+                    (pshard, oshard, bshard), donate=(0, 1),
+                    model_flops=flops, rules=rules)
+
+    if spec.kind == "rec_serve":
+        B = spec.dim("batch")
+        batch = _rec_batch_specs(arch, B)
+        batch.pop("labels", None)
+        batch.pop("label_mask", None)
+        if arch.family == "mind":
+            batch.pop("target", None)
+        bshard = bshard_of(batch)
+        loss_less = {
+            "dlrm": lambda p, dense, sparse: R.dlrm_forward(
+                p, arch, dense=dense, sparse=sparse),
+            "xdeepfm": lambda p, sparse: R.xdeepfm_forward(
+                p, arch, sparse=sparse),
+            "mind": lambda p, history, hist_mask, target=None:
+                R.mind_interests(p, arch, history=history,
+                                 hist_mask=hist_mask),
+            "bert4rec": lambda p, seq, seq_mask: R.bert4rec_hidden(
+                p, arch, seq=seq, seq_mask=seq_mask)[:, -1],
+        }[arch.family]
+
+        def step(params, batch):
+            with sharding_context(mesh, rules):
+                return loss_less(params, **batch)
+
+        flops = _rec_fwd_flops(arch, B)
+        return Cell(arch.name, spec.name, step, (param_shapes, batch),
+                    (pshard, bshard), donate=(), model_flops=flops,
+                    rules=rules)
+
+    # rec_retrieval: 1 user x n_candidates
+    C = spec.dim("n_candidates")
+    cand = SDS((C,), jnp.int32)
+    cshard = NamedSharding(mesh, shardlib.spec_for(("candidates",), eff,
+                                                   mesh, (C,)))
+    if arch.family in ("mind", "bert4rec"):
+        user = {"history": SDS((1, arch.seq_len), jnp.int32),
+                "hist_mask": SDS((1, arch.seq_len), jnp.float32)} \
+            if arch.family == "mind" else \
+               {"seq": SDS((1, arch.seq_len), jnp.int32),
+                "seq_mask": SDS((1, arch.seq_len), jnp.float32)}
+        ushard = jax.tree.map(lambda s: _rep(mesh), user)
+
+        def step(params, user, cand_ids):
+            with sharding_context(mesh, rules):
+                if arch.family == "mind":
+                    uv = R.mind_interests(params, arch, **user)[0]
+                else:
+                    uv = R.bert4rec_hidden(params, arch, **user)[:, -1]
+                emb = jnp.take(params["items"], cand_ids, axis=0)
+                scores = R.retrieval_scores(uv, emb)
+                return jax.lax.top_k(scores, 100)
+
+        flops = 2.0 * C * arch.embed_dim * max(arch.n_interests, 1)
+        return Cell(arch.name, spec.name, step, (param_shapes, user, cand),
+                    (pshard, ushard, cshard), donate=(),
+                    model_flops=flops, rules=rules)
+
+    # ranking models: full forward at C with broadcast user features
+    if arch.family == "dlrm":
+        user = {"dense": SDS((1, arch.n_dense), jnp.float32),
+                "sparse": SDS((1, arch.n_sparse - 1), jnp.int32)}
+
+        def step(params, user, cand_ids):
+            with sharding_context(mesh, rules):
+                C_ = cand_ids.shape[0]
+                dense = jnp.broadcast_to(user["dense"], (C_, arch.n_dense))
+                us = jnp.broadcast_to(user["sparse"],
+                                      (C_, arch.n_sparse - 1))
+                sparse = jnp.concatenate(
+                    [us, (cand_ids % arch.vocab_sizes[-1])[:, None]], axis=1)
+                scores = R.dlrm_forward(params, arch, dense=dense,
+                                        sparse=sparse)
+                return jax.lax.top_k(scores, 100)
+    else:  # xdeepfm
+        user = {"sparse": SDS((1, arch.n_sparse - 1), jnp.int32)}
+
+        def step(params, user, cand_ids):
+            with sharding_context(mesh, rules):
+                C_ = cand_ids.shape[0]
+                us = jnp.broadcast_to(user["sparse"],
+                                      (C_, arch.n_sparse - 1))
+                sparse = jnp.concatenate(
+                    [us, (cand_ids % arch.vocab_sizes[-1])[:, None]], axis=1)
+                scores = R.xdeepfm_forward(params, arch, sparse=sparse)
+                return jax.lax.top_k(scores, 100)
+
+    ushard = jax.tree.map(lambda s: _rep(mesh), user)
+    flops = _rec_fwd_flops(arch, C)
+    return Cell(arch.name, spec.name, step, (param_shapes, user, cand),
+                (pshard, ushard, cshard), donate=(), model_flops=flops,
+                rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# LOVO (the paper's own pipeline)
+# ---------------------------------------------------------------------------
+def lovo_cell(arch: LovoArch, spec: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.core import distributed as dist
+    from repro.models import rerank as RR
+    from repro.models import vit as V
+    rules = merged_rules(arch, spec)
+    eff = shardlib.effective_rules(rules, mesh)
+    Dp = arch.embed_dim
+    n_dev = int(np.prod(mesh.devices.shape))
+
+    if spec.kind == "lovo_build":
+        F = spec.dim("frames")
+        vcfg = V.ViTConfig(n_layers=arch.vit_layers, d_model=arch.vit_d_model,
+                           n_heads=arch.vit_heads, patch=arch.vit_patch,
+                           img_res=arch.img_res, embed_dim=Dp)
+        vp = jax.eval_shape(lambda: V.init_vit(jax.random.PRNGKey(0), vcfg)[0])
+        small_v = dataclasses.replace(vcfg, d_model=16, d_ff=32, patch=8,
+                                      img_res=16, embed_dim=8)
+        _, plog = V.init_vit(jax.random.PRNGKey(0), small_v)
+        pshard = _sharding(plog, mesh, rules, vp)
+        frames = SDS((F, arch.img_res, arch.img_res, 3), jnp.float32)
+        fshard = NamedSharding(mesh, shardlib.spec_for(
+            ("index_rows", None, None, None), eff, mesh, frames.shape))
+        cents = SDS((arch.pq_subspaces, arch.pq_centroids,
+                     Dp // arch.pq_subspaces), jnp.float32)
+
+        def step(params, frames, centroids):
+            with sharding_context(mesh, rules):
+                from repro.core import pq as pqmod
+                cls, boxes, _ = V.vit_encode(params, frames, vcfg)
+                flat = cls.reshape(-1, Dp)
+                codes = pqmod.pq_encode(pqmod.PQ(centroids), flat)
+                return codes, boxes
+
+        K = vcfg.n_patches
+        vit_flops = 2.0 * F * (
+            K * (vcfg.patch ** 2 * 3 * vcfg.d_model)
+            + vcfg.n_layers * (4 * K * vcfg.d_model ** 2
+                               + 2 * K * K * vcfg.d_model
+                               + 2 * K * vcfg.d_model * vcfg.d_ff))
+        return Cell(arch.name, spec.name, step, (vp, frames, cents),
+                    (pshard, fshard, _rep(mesh)), donate=(),
+                    model_flops=vit_flops, rules=rules)
+
+    if spec.kind == "lovo_query":
+        N = spec.dim("n_rows")
+        Q = spec.dim("queries")
+        P_, M = arch.pq_subspaces, arch.pq_centroids
+        K = arch.imi_k
+        n_local = N // n_dev
+        sidx = dist.ShardedIndex(
+            codes=SDS((n_dev, n_local, P_), jnp.uint8),
+            vectors=SDS((n_dev, n_local, Dp), jnp.bfloat16),
+            ids=SDS((n_dev, n_local), jnp.int32),
+            cell_of=SDS((n_dev, n_local), jnp.int32),
+            cell_offsets=SDS((n_dev, K * K + 1), jnp.int32),
+            coarse1=SDS((K, Dp // 2), jnp.float32),
+            coarse2=SDS((K, Dp // 2), jnp.float32),
+            pq_centroids=SDS((P_, M, Dp // P_), jnp.float32),
+        )
+        ishard = dist.index_shardings(mesh)
+        qs = SDS((Q, Dp), jnp.float32)
+        search = dist.make_sharded_search(
+            mesh, top_k=100, mode="cell_probe", top_a=arch.top_a_cells,
+            max_cell_size=min(arch.max_cell_size, n_local))
+
+        def step(sidx, qs):
+            return search(sidx, qs)
+
+        flops = 2.0 * Q * (N / (K * K) * arch.top_a_cells * P_  # ADC probed
+                           + 2 * K * (Dp // 2)                  # cell scores
+                           + 100 * Dp)                          # exact rerank
+        return Cell(arch.name, spec.name, step, (sidx, qs),
+                    (ishard, _rep(mesh)), donate=(), model_flops=flops,
+                    rules=rules, notes=spec.notes)
+
+    # lovo_rerank
+    C = spec.dim("candidates")
+    rcfg = RR.RerankConfig(n_layers=arch.rerank_layers,
+                           d_model=arch.rerank_d_model,
+                           n_heads=arch.rerank_heads,
+                           img_dim=arch.vit_d_model, txt_dim=arch.txt_d_model)
+    rp = jax.eval_shape(lambda: RR.init_rerank(jax.random.PRNGKey(0), rcfg)[0])
+    _, plog = RR.init_rerank(jax.random.PRNGKey(0), rcfg)
+    pshard = _sharding(plog, mesh, rules, rp)
+    n_img = (arch.img_res // arch.vit_patch) ** 2
+    img = SDS((C, n_img, arch.vit_d_model), jnp.float32)
+    txt = SDS((C, arch.txt_seq, arch.txt_d_model), jnp.float32)
+    msk = SDS((C, arch.txt_seq), jnp.float32)
+    bsh = lambda s: NamedSharding(mesh, shardlib.spec_for(
+        ("batch",) + (None,) * (len(s.shape) - 1), eff, mesh, s.shape))
+
+    def step(params, img_tokens, txt_tokens, txt_mask):
+        with sharding_context(mesh, rules):
+            return RR.rerank_frame(params, img_tokens, txt_tokens, txt_mask,
+                                   rcfg)
+
+    d = rcfg.d_model
+    per_layer = 2 * (4 * n_img * d * d + 2 * n_img * n_img * d) \
+        + 2 * (4 * arch.txt_seq * d * d) \
+        + 4 * n_img * arch.txt_seq * d
+    flops = 2.0 * C * rcfg.n_layers * per_layer
+    return Cell(arch.name, spec.name, step, (rp, img, txt, msk),
+                (pshard, bsh(img), bsh(txt), bsh(msk)), donate=(),
+                model_flops=flops, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+def build_cell(arch: Any, spec: ShapeSpec, mesh: Mesh) -> Cell:
+    if isinstance(arch, LMArch):
+        return lm_cell(arch, spec, mesh)
+    if isinstance(arch, GNNArch):
+        return egnn_cell(arch, spec, mesh)
+    if isinstance(arch, RecArch):
+        return rec_cell(arch, spec, mesh)
+    if isinstance(arch, LovoArch):
+        return lovo_cell(arch, spec, mesh)
+    raise TypeError(type(arch))
+
+
+def input_specs(arch: Any, spec: ShapeSpec, mesh: Mesh) -> tuple:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    return build_cell(arch, spec, mesh).inputs

@@ -1,0 +1,145 @@
+"""E(n)-Equivariant GNN (Satorras et al., arXiv:2102.09844).
+
+Message passing over an explicit edge index via ``jax.ops.segment_sum`` —
+JAX has no sparse message-passing primitive, so the gather/scatter IS the
+implementation (kernel_taxonomy §GNN):
+
+  m_ij  = phi_e(h_i, h_j, ||x_i - x_j||^2)
+  x_i'  = x_i + (1/deg_i) sum_j (x_i - x_j) * phi_x(m_ij)
+  h_i'  = phi_h(h_i, sum_j m_ij)
+
+All graphs are padded to static (n_nodes, n_edges) with validity masks;
+invalid edges point at node 0 with zero weight.  Heads: node classification
+(full-graph / sampled shapes) and pooled graph regression (molecule shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNArch
+from repro.launch.context import shard
+from repro.models import layers as L
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 16
+    coord_dim: int = 3
+    graph_readout: bool = False  # molecule shape: pooled regression
+    # full-graph distributed mode: constrain edge-level tensors to the
+    # 'edges' sharding (OFF under vmap — the sampled-subgraph path)
+    shard_edges: bool = False
+    # aggregate (segment_sum -> cross-device psum) in bf16: halves the
+    # dominant collective at full-graph scale; fp32 accumulation retained
+    # inside each shard's partial sum (§Perf egnn iteration 3)
+    agg_dtype: str = "float32"
+
+
+def init_egnn(rng: jax.Array, cfg: EGNNConfig) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, "float32")
+    d = cfg.d_hidden
+    b.param("in_proj", (cfg.d_feat, d), (None, "embed"))
+    b.param("in_bias", (d,), ("embed",), init="zeros")
+    for i in range(cfg.n_layers):
+        p = f"layers_{i}"
+        L.init_mlp(b, f"{p}/phi_e", (2 * d + 1, d, d))
+        L.init_mlp(b, f"{p}/phi_x", (d, d, 1))
+        L.init_mlp(b, f"{p}/phi_h", (2 * d, d, d))
+    if cfg.graph_readout:
+        L.init_mlp(b, "head", (d, d, 1))
+    else:
+        L.init_mlp(b, "head", (d, cfg.n_classes))
+    return b.build()
+
+
+def egnn_layer(p: Params, h: jax.Array, x: jax.Array,
+               edge_index: jax.Array, edge_mask: jax.Array,
+               *, shard_edges: bool = False,
+               agg_dtype: str = "float32") -> tuple[jax.Array, jax.Array]:
+    """h: (N, d), x: (N, 3), edge_index: (2, E) [src, dst], edge_mask: (E,)."""
+    n = h.shape[0]
+    se = (lambda t: shard(t, ("edges",) + (None,) * (t.ndim - 1))) \
+        if shard_edges else (lambda t: t)
+    at = jnp.dtype(agg_dtype)
+    src, dst = edge_index[0], edge_index[1]
+    h_i, h_j = se(h[dst]), se(h[src])
+    x_i, x_j = se(x[dst]), se(x[src])
+    diff = x_i - x_j                                   # (E, 3)
+    d2 = jnp.sum(jnp.square(diff), axis=-1, keepdims=True)
+    m = L.mlp(p["phi_e"], jnp.concatenate([h_i, h_j, d2], -1),
+              act="silu", final_act=True)              # (E, d)
+    m = se(m * edge_mask[:, None])
+    # coordinate update (E(n)-equivariant): weighted relative vectors
+    w = L.mlp(p["phi_x"], m, act="silu")               # (E, 1)
+    w = jnp.tanh(w) * edge_mask[:, None]               # bounded for stability
+    deg = jax.ops.segment_sum(edge_mask, dst, num_segments=n)
+    dx = jax.ops.segment_sum((diff * w).astype(at), dst, num_segments=n)
+    x = x + (dx.astype(jnp.float32)
+             / jnp.maximum(deg, 1.0)[:, None]).astype(x.dtype)
+    # feature update
+    agg = jax.ops.segment_sum(m.astype(at), dst,
+                              num_segments=n).astype(h.dtype)  # (N, d)
+    h = h + L.mlp(p["phi_h"], jnp.concatenate([h, agg], -1), act="silu")
+    return h, x
+
+
+def egnn_forward(params: Params, cfg: EGNNConfig, *,
+                 node_feats: jax.Array, coords: jax.Array,
+                 edge_index: jax.Array, edge_mask: jax.Array,
+                 node_mask: jax.Array,
+                 graph_ids: Optional[jax.Array] = None,
+                 n_graphs: int = 1) -> jax.Array:
+    """Returns logits (N, C) for node tasks or (n_graphs, 1) for readout."""
+    h = node_feats @ params["in_proj"] + params["in_bias"]
+    h = h * node_mask[:, None]
+    x = coords
+    for i in range(cfg.n_layers):
+        h, x = egnn_layer(params[f"layers_{i}"], h, x, edge_index, edge_mask,
+                          shard_edges=cfg.shard_edges,
+                          agg_dtype=cfg.agg_dtype)
+        h = h * node_mask[:, None]
+    if cfg.graph_readout:
+        gid = graph_ids if graph_ids is not None \
+            else jnp.zeros((h.shape[0],), jnp.int32)
+        pooled = jax.ops.segment_sum(h * node_mask[:, None], gid,
+                                     num_segments=n_graphs)
+        counts = jax.ops.segment_sum(node_mask, gid, num_segments=n_graphs)
+        pooled = pooled / jnp.maximum(counts, 1.0)[:, None]
+        return L.mlp(params["head"], pooled, act="silu")
+    return L.mlp(params["head"], h, act="silu")
+
+
+def egnn_node_loss(params: Params, cfg: EGNNConfig, batch: dict
+                   ) -> tuple[jax.Array, dict]:
+    logits = egnn_forward(
+        params, cfg, node_feats=batch["node_feats"], coords=batch["coords"],
+        edge_index=batch["edge_index"], edge_mask=batch["edge_mask"],
+        node_mask=batch["node_mask"])
+    labels = batch["labels"]
+    lmask = batch.get("label_mask", batch["node_mask"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.sum((logz - gold) * lmask) / jnp.maximum(jnp.sum(lmask), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * lmask) \
+        / jnp.maximum(jnp.sum(lmask), 1.0)
+    return nll, {"acc": acc}
+
+
+def egnn_graph_loss(params: Params, cfg: EGNNConfig, batch: dict
+                    ) -> tuple[jax.Array, dict]:
+    pred = egnn_forward(
+        params, cfg, node_feats=batch["node_feats"], coords=batch["coords"],
+        edge_index=batch["edge_index"], edge_mask=batch["edge_mask"],
+        node_mask=batch["node_mask"], graph_ids=batch["graph_ids"],
+        n_graphs=batch["targets"].shape[0])
+    mse = jnp.mean(jnp.square(pred[:, 0] - batch["targets"]))
+    return mse, {"mse": mse}

@@ -1,0 +1,418 @@
+"""Shared neural-net layers (functional, no framework).
+
+Params are nested dicts of jnp arrays; every param has a parallel *logical
+axis spec* (tuple of names, one per dim) used by the sharding engine.  A
+``ParamBuilder`` accumulates both trees during init.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+Specs = Any
+
+
+class ParamBuilder:
+    """Accumulates params + logical specs under nested name paths."""
+
+    def __init__(self, rng: jax.Array, dtype: str = "float32"):
+        self._rng = rng
+        self.dtype = dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def _put(self, path: str, value, spec):
+        parts = path.split("/")
+        p, s = self.params, self.specs
+        for key in parts[:-1]:
+            p = p.setdefault(key, {})
+            s = s.setdefault(key, {})
+        p[parts[-1]] = value
+        s[parts[-1]] = spec
+
+    def param(self, path: str, shape: tuple[int, ...],
+              logical: tuple[Optional[str], ...],
+              init: str = "normal", scale: float | None = None,
+              dtype: str | None = None):
+        assert len(shape) == len(logical), (path, shape, logical)
+        dtype = dtype or self.dtype
+        if init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        else:
+            fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+            std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(self.rng(), shape, jnp.float32) * std).astype(dtype)
+        self._put(path, v, logical)
+        return v
+
+    def build(self) -> tuple[Params, Specs]:
+        return self.params, self.specs
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             scale_plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    if scale_plus_one:  # gemma convention: weight stored as (scale - 1)
+        s = s + 1.0
+    return (x * s).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full-sequence and single-token-decode paths)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    attn_softcap: float = 0.0
+    qkv_bias: bool = False
+    query_scale: float | None = None  # default 1/sqrt(hd)
+
+
+def init_attention(b: ParamBuilder, path: str, d_model: int, cfg: AttnConfig):
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    b.param(f"{path}/wq", (d_model, H, hd), ("embed", "heads", "qkv"))
+    b.param(f"{path}/wk", (d_model, KV, hd), ("embed", "kv_heads", "qkv"))
+    b.param(f"{path}/wv", (d_model, KV, hd), ("embed", "kv_heads", "qkv"))
+    b.param(f"{path}/wo", (H, hd, d_model), ("heads", "qkv", "embed"))
+    if cfg.qkv_bias:
+        b.param(f"{path}/bq", (H, hd), ("heads", "qkv"), init="zeros")
+        b.param(f"{path}/bk", (KV, hd), ("kv_heads", "qkv"), init="zeros")
+        b.param(f"{path}/bv", (KV, hd), ("kv_heads", "qkv"), init="zeros")
+
+
+def _qkv(p: Params, x: jax.Array, cfg: AttnConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _scores_to_out(scores: jax.Array, v: jax.Array, p: Params) -> jax.Array:
+    # scores: (B, H, S, T) f32; v: (B, T, KV, hd)
+    H = scores.shape[1]
+    KV = v.shape[2]
+    group = H // KV
+    B, _, S, T = scores.shape
+    sc = scores.reshape(B, KV, group, S, T)
+    out = jnp.einsum("bkgst,btkh->bsgkh", sc.astype(v.dtype), v)
+    out = out.reshape(B, S, H, v.shape[-1])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention(p: Params, x: jax.Array, cfg: AttnConfig, *,
+              positions: jax.Array, window: jax.Array | int | None = None,
+              kv_cache: tuple[jax.Array, jax.Array] | None = None,
+              cache_positions: jax.Array | None = None) -> tuple[jax.Array, tuple]:
+    """Full-sequence attention (train / prefill).
+
+    x: (B, S, d).  window: scalar (possibly traced) — attend only to keys with
+    ``0 <= i - j < window``; None/0 means full causal.  Returns (out, (k, v))
+    so prefill can persist the cache.
+    """
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    group = H // KV
+    B, S = x.shape[:2]
+    qg = q.reshape(B, S, KV, group, cfg.head_dim)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits.reshape(B, H, S, S)
+    logits = softcap(logits, cfg.attn_softcap)
+    i = positions[..., :, None]  # (B?, S, 1)
+    j = positions[..., None, :]
+    mask = j <= i
+    if window is not None:
+        w = jnp.asarray(window)
+        mask = mask & jnp.where(w > 0, (i - j) < w, True)
+    logits = jnp.where(mask[:, None] if mask.ndim == 3 else mask[None, None],
+                       logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = _scores_to_out(probs, v, p)
+    return out, (k, v)
+
+
+def encoder_attention(p: Params, x: jax.Array, cfg: AttnConfig, *,
+                      pad_mask: jax.Array | None = None,
+                      use_rope: bool = False,
+                      positions: jax.Array | None = None) -> jax.Array:
+    """Bidirectional self-attention (ViT / BERT-style encoders).
+
+    x: (B, S, d); pad_mask: (B, S) 1=valid.  No KV cache, no causality.
+    """
+    q, k, v = _qkv(p, x, cfg)
+    if use_rope:
+        B, S = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    group = H // KV
+    B, S = x.shape[:2]
+    qg = q.reshape(B, S, KV, group, cfg.head_dim)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits.reshape(B, H, S, S)
+    if pad_mask is not None:
+        logits = jnp.where(pad_mask[:, None, None, :].astype(bool), logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _scores_to_out(probs, v, p)
+
+
+def cross_attention(p: Params, xq: jax.Array, xkv: jax.Array, cfg: AttnConfig,
+                    *, kv_mask: jax.Array | None = None) -> jax.Array:
+    """Cross-attention: queries from xq (B, Sq, d), keys/values from xkv
+    (B, Sk, d).  Used by the LOVO cross-modality feature enhancer/decoder."""
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bshk,bthk->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if kv_mask is not None:
+        logits = jnp.where(kv_mask[:, None, None, :].astype(bool), logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs.astype(v.dtype), v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_chunked(p: Params, x: jax.Array, cfg: AttnConfig, *,
+                      positions: jax.Array, window: jax.Array | int | None = None,
+                      chunk: int = 512, remat_chunk: bool = False,
+                      unroll: bool = False) -> tuple[jax.Array, tuple]:
+    """Query-chunked attention: never materializes the full (S, S) score
+    matrix — live memory is (B, H, chunk, S).  With ``remat_chunk`` the chunk
+    body is checkpointed so the backward pass also peaks at one chunk's
+    probabilities (flash-attention memory behavior; the Pallas kernel is the
+    real-TPU implementation, this is its XLA-lowerable twin).  ``unroll``
+    replaces the scan with a python loop — used by the dry-run cost probes
+    because XLA's cost_analysis counts scan bodies once."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    group = H // KV
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pos_p = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    qc = qp.reshape(B, n_chunks, chunk, H, cfg.head_dim).transpose(1, 0, 2, 3, 4)
+    pc = pos_p.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    j = positions[:, None, :]  # (B, 1, S)
+
+    def body_fn(qi, pi):
+        qg = qi.reshape(B, chunk, KV, group, cfg.head_dim)
+        lg = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+        lg = lg.reshape(B, H, chunk, S)
+        lg = softcap(lg, cfg.attn_softcap)
+        i = pi[:, :, None]                    # (B, chunk, 1)
+        mask = (j <= i) & (i >= 0)
+        if window is not None:
+            w = jnp.asarray(window)
+            mask = mask & jnp.where(w > 0, (i - j) < w, True)
+        lg = jnp.where(mask[:, None], lg, -1e30)
+        probs = jax.nn.softmax(lg, axis=-1)
+        return _scores_to_out_noproj(probs, v)  # (B, chunk, H, hd)
+
+    if remat_chunk:
+        body_fn = jax.checkpoint(body_fn)
+
+    if unroll:
+        outs = jnp.stack([body_fn(qc[i], pc[i]) for i in range(n_chunks)])
+    else:
+        _, outs = jax.lax.scan(lambda _, xs: (None, body_fn(*xs)),
+                               None, (qc, pc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, H,
+                                                cfg.head_dim)[:, :S]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+def _scores_to_out_noproj(scores: jax.Array, v: jax.Array) -> jax.Array:
+    H = scores.shape[1]
+    KV = v.shape[2]
+    group = H // KV
+    B, _, S, T = scores.shape
+    sc = scores.reshape(B, KV, group, S, T)
+    out = jnp.einsum("bkgst,btkh->bsgkh", sc.astype(v.dtype), v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) absmax int8 quantization: (..., hd) ->
+    (int8 codes, f32 scale (..., 1))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attention_decode(p: Params, x: jax.Array, cfg: AttnConfig, *,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array, window: jax.Array | int | None = None,
+                     cache_scales: tuple[jax.Array, jax.Array] | None = None
+                     ) -> tuple[jax.Array, jax.Array, jax.Array, Any]:
+    """Single-token decode.  x: (B, 1, d); cache_[kv]: (B, T, KV, hd);
+    pos: (B,) current position per sequence.  With ``cache_scales`` the
+    caches are int8 (KIVI-class) and dequantized for the attention compute
+    (tile-local in VMEM under the real-TPU flash-decode kernel).
+    Returns (out, new_k, new_v, new_scales)."""
+    B, _, _ = x.shape
+    T = cache_k.shape[1]
+    q, k_new, v_new = _qkv(p, x, cfg)            # (B,1,H,hd)/(B,1,KV,hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    bidx = jnp.arange(B)
+    if cache_scales is not None:
+        sk, sv = cache_scales
+        kq, ks_new = quantize_kv(k_new[:, 0])
+        vq, vs_new = quantize_kv(v_new[:, 0])
+        cache_k = cache_k.at[bidx, pos].set(kq)
+        cache_v = cache_v.at[bidx, pos].set(vq)
+        sk = sk.at[bidx, pos].set(ks_new)
+        sv = sv.at[bidx, pos].set(vs_new)
+        cache_scales = (sk, sv)
+        k_full = dequantize_kv(cache_k, sk, k_new.dtype)
+        v_full = dequantize_kv(cache_v, sv, v_new.dtype)
+    else:
+        cache_k = cache_k.at[bidx, pos].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, pos].set(v_new[:, 0].astype(cache_v.dtype))
+        k_full, v_full = cache_k, cache_v
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    group = H // KV
+    qg = q.reshape(B, 1, KV, group, cfg.head_dim)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_full,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits.reshape(B, H, 1, T)
+    logits = softcap(logits, cfg.attn_softcap)
+    j = jnp.arange(T)[None, :]                    # (1, T)
+    mask = j <= pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        mask = mask & jnp.where(w > 0, (pos[:, None] - j) < w, True)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = _scores_to_out(probs, v_full, p)
+    return out, cache_k, cache_v, cache_scales
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+_ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu, "tanh": jnp.tanh,
+}
+
+
+def init_gated_mlp(b: ParamBuilder, path: str, d_model: int, d_ff: int):
+    b.param(f"{path}/w_gate", (d_model, d_ff), ("embed", "ff"))
+    b.param(f"{path}/w_in", (d_model, d_ff), ("embed", "ff"))
+    b.param(f"{path}/w_out", (d_ff, d_model), ("ff", "embed"))
+
+
+def gated_mlp(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = _ACTS[act](jnp.einsum("...d,df->...f", x, p["w_gate"]))
+    h = g * jnp.einsum("...d,df->...f", x, p["w_in"])
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+def init_mlp(b: ParamBuilder, path: str, dims: tuple[int, ...], *,
+             bias: bool = True, logical_in: str = "embed",
+             logical_hidden: str = "ff"):
+    for i in range(len(dims) - 1):
+        li = logical_in if i == 0 else logical_hidden
+        lo = logical_hidden
+        b.param(f"{path}/w{i}", (dims[i], dims[i + 1]), (li, lo))
+        if bias:
+            b.param(f"{path}/b{i}", (dims[i + 1],), (lo,), init="zeros")
+
+
+def mlp(p: Params, x: jax.Array, *, act: str = "relu",
+        final_act: bool = False) -> jax.Array:
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = jnp.einsum("...d,df->...f", x, p[f"w{i}"])
+        if f"b{i}" in p:
+            x = x + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = _ACTS[act](x)
+    return x

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+TPU-native design (EP-as-TP): experts are sharded over the 'model' mesh axis;
+each shard computes its local experts for the tokens routed to them (gathered
+with *static* capacity bounds so everything jits), and the scatter-add combine
+reduces over the expert axis — XLA SPMD turns that into a single psum, the
+same collective shape as a tensor-parallel MLP.  No GShard dense-dispatch
+(T x E x C one-hot) tensor is ever materialized, which is what makes 384-expert
+kimi-k2 lowerable.
+
+Dispatch mechanics (dropping, GShard-style counting but via sort):
+  1. router top-k -> (token, expert, weight) triples, T*k of them
+  2. stable argsort by expert id groups triples per expert
+  3. exclusive-cumsum of expert counts -> each expert's segment start
+  4. expert e takes its first C triples (C = capacity), rest dropped
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.models.layers import ParamBuilder, gated_mlp, init_gated_mlp, _ACTS
+
+Params = Any
+
+
+def init_moe(b: ParamBuilder, path: str, d_model: int, spec: MoESpec):
+    E, ff = spec.n_experts, spec.expert_ff
+    b.param(f"{path}/router", (d_model, E), ("embed", None), scale=d_model ** -0.5)
+    b.param(f"{path}/w_gate", (E, d_model, ff), ("experts", "embed", "expert_ff"))
+    b.param(f"{path}/w_in", (E, d_model, ff), ("experts", "embed", "expert_ff"))
+    b.param(f"{path}/w_out", (E, ff, d_model), ("experts", "expert_ff", "embed"))
+    if spec.n_shared_experts:
+        init_gated_mlp(b, f"{path}/shared", d_model,
+                       spec.n_shared_experts * ff)
+
+
+def capacity(n_tokens: int, spec: MoESpec) -> int:
+    c = int(math.ceil(n_tokens * spec.top_k / spec.n_experts
+                      * spec.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def moe_apply(p: Params, x: jax.Array, spec: MoESpec, *, act: str = "silu"
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    k = spec.top_k
+    E = spec.n_experts
+    C = capacity(T, spec)
+    xf = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    top_w, top_e = jax.lax.top_k(probs, k)                      # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)      # renormalize
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_mean)
+
+    # --- sort-based grouping -------------------------------------------------
+    flat_e = top_e.reshape(T * k)                               # (Tk,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sort_e = flat_e[order]
+    sort_t = flat_t[order]
+    sort_w = flat_w[order]
+    counts = jnp.bincount(flat_e, length=E)                     # (E,)
+    starts = jnp.cumsum(counts) - counts                        # exclusive
+
+    slot = starts[:, None] + jnp.arange(C)[None, :]             # (E, C)
+    valid = jnp.arange(C)[None, :] < counts[:, None]
+    slot = jnp.clip(slot, 0, T * k - 1)
+    tok = jnp.where(valid, sort_t[slot], 0)                     # (E, C)
+    w = jnp.where(valid, sort_w[slot], 0.0)
+    # guard: a clipped slot may alias another expert's segment
+    valid = valid & (sort_e[slot] == jnp.arange(E)[:, None])
+    w = jnp.where(valid, w, 0.0)
+
+    xe = xf[tok] * valid[..., None].astype(xf.dtype)            # (E, C, d)
+    g = _ACTS[act](jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = g * jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])              # (E, C, d)
+    ye = ye * w[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((T, d), ye.dtype).at[tok.reshape(-1)].add(
+        ye.reshape(E * C, d))
+    if spec.n_shared_experts:
+        out = out + gated_mlp(p["shared"], xf, act).astype(out.dtype)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,297 @@
+"""RecSys model zoo: DLRM-RM2, xDeepFM (CIN), MIND (multi-interest capsules),
+BERT4Rec — plus the shared sparse-embedding substrate.
+
+JAX has no native EmbeddingBag or CSR sparse; the embedding layer here IS the
+implementation (kernel_taxonomy §RecSys): one row-concatenated mega-table
+(sum(vocab) x dim), per-feature offsets, ``jnp.take`` gather, masked-sum bag
+reduce.  The mega-table shards row-wise over the 'model' mesh axis (classic
+DLRM model-parallel embeddings); XLA SPMD turns the gather into the
+all-to-all-equivalent collective.
+
+``retrieval_cand`` (1 user x 1e6 candidates) is LOVO's fast-search regime:
+``retrieval_scores`` does the batched dot; ``retrieval_scores_pq`` scores the
+same candidates through the paper's PQ-ADC path (technique transfer —
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecArch
+from repro.models import layers as L
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Sparse embedding substrate
+# ---------------------------------------------------------------------------
+def table_offsets(vocab_sizes: tuple[int, ...]) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(vocab_sizes)]).astype(np.int32)
+
+
+def init_embedding(b: L.ParamBuilder, path: str,
+                   vocab_sizes: tuple[int, ...], dim: int):
+    total = int(sum(vocab_sizes))
+    b.param(path, (total, dim), ("table_rows", None), scale=0.01)
+
+
+def embedding_lookup(table: jax.Array, offsets: jax.Array,
+                     idx: jax.Array) -> jax.Array:
+    """idx: (B, F) per-feature local ids -> (B, F, dim)."""
+    flat = idx + offsets[None, : idx.shape[1]]
+    return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag(table: jax.Array, offsets: jax.Array, idx: jax.Array,
+                  mask: jax.Array, *, combiner: str = "sum") -> jax.Array:
+    """Multi-hot bags.  idx: (B, F, nnz), mask: (B, F, nnz) -> (B, F, dim).
+
+    take + masked segment-style reduce (EmbeddingBag semantics)."""
+    B, F, Z = idx.shape
+    flat = idx + offsets[None, :F, None]
+    emb = jnp.take(table, flat, axis=0)                 # (B, F, Z, dim)
+    emb = emb * mask[..., None]
+    out = jnp.sum(emb, axis=2)
+    if combiner == "mean":
+        out = out / jnp.maximum(jnp.sum(mask, axis=2, keepdims=False),
+                                1.0)[..., None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DLRM-RM2 (arXiv:1906.00091)
+# ---------------------------------------------------------------------------
+def init_dlrm(rng: jax.Array, arch: RecArch) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, arch.param_dtype)
+    init_embedding(b, "tables", arch.vocab_sizes, arch.embed_dim)
+    L.init_mlp(b, "bot_mlp", (arch.n_dense,) + arch.bot_mlp[1:])
+    n_f = arch.n_sparse + 1
+    n_inter = n_f * (n_f - 1) // 2
+    top_in = n_inter + arch.bot_mlp[-1]
+    L.init_mlp(b, "top_mlp", (top_in,) + arch.top_mlp)
+    return b.build()
+
+
+def dlrm_forward(params: Params, arch: RecArch, *, dense: jax.Array,
+                 sparse: jax.Array) -> jax.Array:
+    """dense: (B, 13); sparse: (B, 26) ids -> logits (B,)."""
+    offs = jnp.asarray(table_offsets(arch.vocab_sizes)[:-1])
+    emb = embedding_lookup(params["tables"], offs, sparse)   # (B, 26, d)
+    bot = L.mlp(params["bot_mlp"], dense, act="relu", final_act=True)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, 27, d)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                  # (B, 351)
+    top_in = jnp.concatenate([flat, bot], axis=-1)
+    return L.mlp(params["top_mlp"], top_in, act="relu")[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM / CIN (arXiv:1803.05170)
+# ---------------------------------------------------------------------------
+def init_xdeepfm(rng: jax.Array, arch: RecArch) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, arch.param_dtype)
+    init_embedding(b, "tables", arch.vocab_sizes, arch.embed_dim)
+    b.param("linear", (int(sum(arch.vocab_sizes)),), ("table_rows",),
+            init="zeros")
+    h_prev, f0 = arch.n_sparse, arch.n_sparse
+    for i, h in enumerate(arch.cin_layers):
+        b.param(f"cin_w{i}", (h_prev * f0, h), (None, None))
+        h_prev = h
+    L.init_mlp(b, "deep", (arch.n_sparse * arch.embed_dim,) + arch.mlp_layers
+               + (1,))
+    b.param("cin_out", (int(sum(arch.cin_layers)), 1), (None, None))
+    return b.build()
+
+
+def xdeepfm_forward(params: Params, arch: RecArch, *,
+                    sparse: jax.Array) -> jax.Array:
+    """sparse: (B, 39) ids -> logits (B,)."""
+    offs = jnp.asarray(table_offsets(arch.vocab_sizes)[:-1])
+    flat_ids = sparse + offs[None]
+    emb = jnp.take(params["tables"], flat_ids, axis=0)       # (B, F, d)
+    linear = jnp.sum(jnp.take(params["linear"], flat_ids, axis=0), axis=1)
+    # CIN: x^{k+1}_h = sum over (i,j) of W[h,i,j] (x^k_i * x^0_j)  per dim d
+    x0, xk = emb, emb
+    cin_outs = []
+    for i in range(len(arch.cin_layers)):
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)              # (B, Hk, F, d)
+        B, Hk, F, D = z.shape
+        xk = jnp.einsum("bqd,qh->bhd", z.reshape(B, Hk * F, D),
+                        params[f"cin_w{i}"])                 # (B, Hk+1, d)
+        cin_outs.append(jnp.sum(xk, axis=-1))                # (B, Hk+1)
+    cin = jnp.concatenate(cin_outs, axis=-1) @ params["cin_out"]
+    deep = L.mlp(params["deep"], emb.reshape(emb.shape[0], -1), act="relu")
+    return (linear + cin[:, 0] + deep[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# MIND multi-interest (arXiv:1904.08030)
+# ---------------------------------------------------------------------------
+def init_mind(rng: jax.Array, arch: RecArch) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, arch.param_dtype)
+    init_embedding(b, "items", arch.vocab_sizes, arch.embed_dim)
+    b.param("cap_bilinear", (arch.embed_dim, arch.embed_dim), (None, None))
+    L.init_mlp(b, "interest_mlp",
+               (arch.embed_dim, 2 * arch.embed_dim, arch.embed_dim))
+    return b.build()
+
+
+def mind_interests(params: Params, arch: RecArch, *, history: jax.Array,
+                   hist_mask: jax.Array) -> jax.Array:
+    """history: (B, L) item ids -> interest capsules (B, n_interests, d).
+
+    B2I dynamic routing, `capsule_iters` iterations; routing logits are
+    detached (stop_gradient) per the paper."""
+    offs = jnp.asarray(table_offsets(arch.vocab_sizes)[:-1])
+    emb = jnp.take(params["items"], history + offs[0], axis=0)  # (B, L, d)
+    u = jnp.einsum("bld,de->ble", emb, params["cap_bilinear"])
+    B, Lh, d = u.shape
+    K = arch.n_interests
+    logits = jnp.zeros((B, K, Lh), jnp.float32)
+    caps = jnp.zeros((B, K, d), u.dtype)
+    for _ in range(arch.capsule_iters):
+        w = jax.nn.softmax(logits, axis=1)                  # over interests
+        w = w * hist_mask[:, None, :]
+        s = jnp.einsum("bkl,bld->bkd", w, u)
+        # squash
+        n2 = jnp.sum(jnp.square(s), axis=-1, keepdims=True)
+        caps = s * (n2 / (1 + n2)) / jnp.sqrt(n2 + 1e-9)
+        logits = logits + jax.lax.stop_gradient(
+            jnp.einsum("bkd,bld->bkl", caps, u))
+    caps = caps + L.mlp(params["interest_mlp"], caps, act="relu")
+    return caps
+
+
+def mind_loss(params: Params, arch: RecArch, batch: dict
+              ) -> tuple[jax.Array, dict]:
+    """Label-aware attention + sampled softmax vs in-batch negatives."""
+    caps = mind_interests(params, arch, history=batch["history"],
+                          hist_mask=batch["hist_mask"])     # (B, K, d)
+    offs = jnp.asarray(table_offsets(arch.vocab_sizes)[:-1])
+    target = jnp.take(params["items"], batch["target"] + offs[0], axis=0)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", caps, target) * 2.0, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, caps)              # (B, d)
+    logits = user @ target.T                                 # in-batch
+    labels = jnp.arange(logits.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    nll = jnp.mean(logz - jnp.take_along_axis(
+        logits, labels[:, None], axis=-1)[:, 0])
+    return nll, {"nll": nll}
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec (arXiv:1904.06690)
+# ---------------------------------------------------------------------------
+def init_bert4rec(rng: jax.Array, arch: RecArch) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, arch.param_dtype)
+    init_embedding(b, "items", arch.vocab_sizes, arch.embed_dim)
+    b.param("pos", (arch.seq_len, arch.embed_dim), (None, None), scale=0.02)
+    cfg = _bert4rec_attn(arch)
+    for i in range(arch.n_blocks):
+        p = f"blocks_{i}"
+        b.param(f"{p}/ln1_s", (arch.embed_dim,), (None,), init="ones")
+        b.param(f"{p}/ln1_b", (arch.embed_dim,), (None,), init="zeros")
+        L.init_attention(b, f"{p}/attn", arch.embed_dim, cfg)
+        b.param(f"{p}/ln2_s", (arch.embed_dim,), (None,), init="ones")
+        b.param(f"{p}/ln2_b", (arch.embed_dim,), (None,), init="zeros")
+        L.init_mlp(b, f"{p}/mlp",
+                   (arch.embed_dim, 4 * arch.embed_dim, arch.embed_dim))
+    b.param("final_ln_s", (arch.embed_dim,), (None,), init="ones")
+    b.param("final_ln_b", (arch.embed_dim,), (None,), init="zeros")
+    return b.build()
+
+
+def _bert4rec_attn(arch: RecArch) -> L.AttnConfig:
+    return L.AttnConfig(n_heads=arch.n_heads, n_kv_heads=arch.n_heads,
+                        head_dim=arch.embed_dim // arch.n_heads,
+                        qkv_bias=True)
+
+
+def bert4rec_hidden(params: Params, arch: RecArch, *, seq: jax.Array,
+                    seq_mask: jax.Array) -> jax.Array:
+    """seq: (B, L) item ids (0 = mask token) -> hidden (B, L, d)."""
+    offs = jnp.asarray(table_offsets(arch.vocab_sizes)[:-1])
+    x = jnp.take(params["items"], seq + offs[0], axis=0) + params["pos"]
+    cfg = _bert4rec_attn(arch)
+    for i in range(arch.n_blocks):
+        p = params[f"blocks_{i}"]
+        h = L.layer_norm(x, p["ln1_s"], p["ln1_b"])
+        x = x + L.encoder_attention(p["attn"], h, cfg, pad_mask=seq_mask)
+        h = L.layer_norm(x, p["ln2_s"], p["ln2_b"])
+        x = x + L.mlp(p["mlp"], h, act="gelu")
+    return L.layer_norm(x, params["final_ln_s"], params["final_ln_b"])
+
+
+def bert4rec_loss(params: Params, arch: RecArch, batch: dict, *,
+                  n_sampled: int = 8192, max_masked: int = 40
+                  ) -> tuple[jax.Array, dict]:
+    """Masked-item prediction with SAMPLED softmax.
+
+    The naive tied softmax materializes (B, L, |V|) logits — 205 GB/device
+    at the train_batch shape with a 1M-item vocab (the 40-cell baseline
+    table records exactly that).  Production recsys uses sampled softmax
+    (Jean et al. '15 / logQ two-tower practice): per step one shared set of
+    ``n_sampled`` uniform negatives + the in-batch labels, and only the
+    top-``max_masked`` masked positions per row are scored.  Uniform
+    sampling needs no logQ correction (constant shifts cancel in softmax).
+    """
+    h = bert4rec_hidden(params, arch, seq=batch["seq"],
+                        seq_mask=batch["seq_mask"])          # (B, L, d)
+    labels = batch["labels"]                                 # (B, L)
+    lmask = batch["label_mask"]                              # (B, L)
+    B, L, d = h.shape
+    V = int(sum(arch.vocab_sizes))
+
+    # gather the (static) max_masked highest-weight masked positions
+    k = min(max_masked, L)
+    mvals, midx = jax.lax.top_k(lmask, k)                    # (B, k)
+    hm = jnp.take_along_axis(h, midx[..., None], axis=1)     # (B, k, d)
+    gold_ids = jnp.take_along_axis(labels, midx, axis=1)     # (B, k)
+    wm = mvals                                               # 1 for real masks
+
+    # shared negative set: uniform over the vocab via a multiplicative-hash
+    # stream (deterministic per batch; avoids threading rng through the step)
+    seed = jnp.sum(batch["seq"][0, :2]).astype(jnp.uint32)
+    neg = (jnp.arange(n_sampled, dtype=jnp.uint32) * jnp.uint32(2654435761)
+           + seed) % jnp.uint32(V)
+    neg_emb = jnp.take(params["items"], neg.astype(jnp.int32), axis=0)
+    gold_emb = jnp.take(params["items"], gold_ids, axis=0)   # (B, k, d)
+
+    pos_logit = jnp.sum(hm * gold_emb, axis=-1)              # (B, k)
+    neg_logit = jnp.einsum("bkd,sd->bks", hm, neg_emb)       # (B, k, S)
+    # mask accidental hits (negative == gold)
+    hit = neg[None, None, :].astype(jnp.int32) == gold_ids[..., None]
+    neg_logit = jnp.where(hit, -1e30, neg_logit)
+    logz = jnp.logaddexp(
+        pos_logit, jax.nn.logsumexp(neg_logit, axis=-1))
+    nll = jnp.sum((logz - pos_logit) * wm) / jnp.maximum(jnp.sum(wm), 1.0)
+    return nll, {"nll": nll}
+
+
+# ---------------------------------------------------------------------------
+# Retrieval scoring (retrieval_cand shape) — incl. the LOVO-PQ path
+# ---------------------------------------------------------------------------
+def retrieval_scores(user_vecs: jax.Array, cand_emb: jax.Array) -> jax.Array:
+    """user_vecs: (K, d) interests (K=1 for single-vector models);
+    cand_emb: (C, d) -> (C,) max-over-interests dot scores."""
+    s = jnp.einsum("kd,cd->kc", user_vecs, cand_emb)
+    return jnp.max(s, axis=0)
+
+
+def retrieval_scores_pq(user_vecs: jax.Array, pq_centroids: jax.Array,
+                        cand_codes: jax.Array) -> jax.Array:
+    """Same scoring through LOVO's PQ-ADC scan (candidates pre-quantized):
+    the paper's technique applied to recsys retrieval (DESIGN.md §5)."""
+    from repro.core import pq as pqmod
+    pq = pqmod.PQ(pq_centroids)
+    luts = jax.vmap(lambda u: pqmod.similarity_lut(pq, u))(user_vecs)
+    scores = jax.vmap(lambda l: pqmod.adc_scores(l, cand_codes))(luts)
+    return jnp.max(scores, axis=0)

@@ -1,0 +1,133 @@
+"""Cross-modality rerank transformer — LOVO §VI-B / Fig. 5.
+
+Grounding-DINO-style (arXiv:2303.05499) but sized for the rerank budget:
+
+  FeatureEnhancer x L:  image self-attn -> img2txt cross-attn (Q=img, K/V=txt)
+                        -> txt2img cross-attn (Q=txt, K/V=img) -> FFNs
+  frame score:          l_s = max_j (X_I X_T^T)[j, eos]  (Algorithm 2 line 6)
+  CrossModalityDecoder: top-n_q enhanced image tokens as object queries ->
+                        self-attn -> cross-attn(text) -> cross-attn(image)
+                        -> box MLP (refined boxes, Algorithm 2 line 10)
+
+Inputs are the ViT patch tokens and text-encoder token features of one
+candidate frame + the query; outputs (score, boxes) drive the final rerank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RerankConfig:
+    n_layers: int = 6
+    d_model: int = 256
+    n_heads: int = 8
+    d_ff: int = 1024
+    n_queries: int = 16
+    img_dim: int = 768   # ViT token dim
+    txt_dim: int = 512   # text token dim
+    decoder_layers: int = 3
+    norm_eps: float = 1e-6
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(n_heads=self.n_heads, n_kv_heads=self.n_heads,
+                            head_dim=self.d_model // self.n_heads,
+                            qkv_bias=True)
+
+
+def _init_block(b: L.ParamBuilder, p: str, cfg: RerankConfig,
+                cross: bool = True):
+    b.param(f"{p}/ln1_s", (cfg.d_model,), ("embed",), init="ones")
+    b.param(f"{p}/ln1_b", (cfg.d_model,), ("embed",), init="zeros")
+    L.init_attention(b, f"{p}/self_attn", cfg.d_model, cfg.attn)
+    if cross:
+        b.param(f"{p}/lnx_s", (cfg.d_model,), ("embed",), init="ones")
+        b.param(f"{p}/lnx_b", (cfg.d_model,), ("embed",), init="zeros")
+        L.init_attention(b, f"{p}/cross_attn", cfg.d_model, cfg.attn)
+    b.param(f"{p}/ln2_s", (cfg.d_model,), ("embed",), init="ones")
+    b.param(f"{p}/ln2_b", (cfg.d_model,), ("embed",), init="zeros")
+    L.init_mlp(b, f"{p}/mlp", (cfg.d_model, cfg.d_ff, cfg.d_model))
+
+
+def init_rerank(rng: jax.Array, cfg: RerankConfig, dtype: str = "float32"
+                ) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, dtype)
+    b.param("img_proj", (cfg.img_dim, cfg.d_model), (None, "embed"))
+    b.param("txt_proj", (cfg.txt_dim, cfg.d_model), (None, "embed"))
+    for i in range(cfg.n_layers):
+        _init_block(b, f"enh_img_{i}", cfg)   # img self + img2txt cross
+        _init_block(b, f"enh_txt_{i}", cfg)   # txt self + txt2img cross
+    for i in range(cfg.decoder_layers):
+        _init_block(b, f"dec_{i}", cfg)                  # self + cross(txt)
+        L.init_attention(b, f"dec_{i}/cross_img", cfg.d_model, cfg.attn)
+        b.param(f"dec_{i}/lnz_s", (cfg.d_model,), ("embed",), init="ones")
+        b.param(f"dec_{i}/lnz_b", (cfg.d_model,), ("embed",), init="zeros")
+    L.init_mlp(b, "box_head", (cfg.d_model, cfg.d_model, 4))
+    b.param("score_scale", (), (), init="ones")
+    return b.build()
+
+
+def _block(p: Params, x: jax.Array, cfg: RerankConfig, *,
+           kv: jax.Array | None = None,
+           kv_mask: jax.Array | None = None,
+           self_mask: jax.Array | None = None) -> jax.Array:
+    h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps=cfg.norm_eps)
+    x = x + L.encoder_attention(p["self_attn"], h, cfg.attn,
+                                pad_mask=self_mask)
+    if kv is not None:
+        h = L.layer_norm(x, p["lnx_s"], p["lnx_b"], eps=cfg.norm_eps)
+        x = x + L.cross_attention(p["cross_attn"], h, kv, cfg.attn,
+                                  kv_mask=kv_mask)
+    h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps=cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, act="gelu")
+
+
+def feature_enhancer(params: Params, x_img: jax.Array, x_txt: jax.Array,
+                     txt_mask: jax.Array, cfg: RerankConfig
+                     ) -> tuple[jax.Array, jax.Array]:
+    """(B, N_I, D) img tokens + (B, N_T, D) txt tokens -> enhanced pair."""
+    for i in range(cfg.n_layers):
+        x_img = _block(params[f"enh_img_{i}"], x_img, cfg,
+                       kv=x_txt, kv_mask=txt_mask)
+        x_txt = _block(params[f"enh_txt_{i}"], x_txt, cfg,
+                       kv=x_img, self_mask=txt_mask)
+    return x_img, x_txt
+
+
+def rerank_frame(params: Params, img_tokens: jax.Array, txt_tokens: jax.Array,
+                 txt_mask: jax.Array, cfg: RerankConfig
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One (frame, query) pair -> (score (B,), boxes (B, n_q, 4)).
+
+    img_tokens: (B, N_I, img_dim) ViT outputs; txt_tokens: (B, N_T, txt_dim).
+    """
+    x_img = jnp.einsum("bnd,de->bne", img_tokens, params["img_proj"])
+    x_txt = jnp.einsum("bnd,de->bne", txt_tokens, params["txt_proj"])
+    x_img, x_txt = feature_enhancer(params, x_img, x_txt, txt_mask, cfg)
+
+    # Algorithm 2 line 6: l_s = max over image tokens of similarity to the
+    # pooled (last-valid) text feature.
+    last = jnp.sum(txt_mask, axis=-1).astype(jnp.int32) - 1    # (B,)
+    eos = jnp.take_along_axis(x_txt, last[:, None, None], axis=1)[:, 0]
+    sim = jnp.einsum("bnd,bd->bn", x_img, eos) * params["score_scale"]
+    score = jnp.max(sim, axis=-1) / jnp.sqrt(float(cfg.d_model))
+
+    # decoder: top-n_q image tokens as object queries
+    _, top_idx = jax.lax.top_k(sim, cfg.n_queries)              # (B, n_q)
+    z = jnp.take_along_axis(x_img, top_idx[..., None], axis=1)  # (B, n_q, D)
+    for i in range(cfg.decoder_layers):
+        p = params[f"dec_{i}"]
+        z = _block(p, z, cfg, kv=x_txt, kv_mask=txt_mask)
+        h = L.layer_norm(z, p["lnz_s"], p["lnz_b"], eps=cfg.norm_eps)
+        z = z + L.cross_attention(p["cross_img"], h, x_img, cfg.attn)
+    boxes = jax.nn.sigmoid(L.mlp(params["box_head"], z, act="gelu"))
+    return score, boxes

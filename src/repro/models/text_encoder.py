@@ -1,0 +1,87 @@
+"""BERT-style bidirectional text encoder — LOVO §VI-A.
+
+Fast-search path: the whole query sentence is encoded into ONE feature vector
+(the paper stresses this: no cross-word fine structure, optimized for rapid
+preliminary retrieval).  We mean-pool valid tokens and project into the
+shared D' embedding space (aligned with the ViT class embeddings by
+contrastive training — train/alignment.py).
+
+The token-level outputs (B, S, D) are also returned for the cross-modality
+rerank stage, which DOES use fine-grained text features.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TextConfig:
+    n_layers: int = 12
+    d_model: int = 512
+    n_heads: int = 8
+    d_ff: int = 2048
+    vocab: int = 32_000
+    max_len: int = 64
+    embed_dim: int = 512
+    norm_eps: float = 1e-6
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(n_heads=self.n_heads, n_kv_heads=self.n_heads,
+                            head_dim=self.d_model // self.n_heads,
+                            qkv_bias=True)
+
+
+def init_text(rng: jax.Array, cfg: TextConfig, dtype: str = "float32"
+              ) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, dtype)
+    b.param("tok_embed", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+            scale=0.02)
+    b.param("pos_embed", (cfg.max_len, cfg.d_model), (None, "embed"),
+            scale=0.02)
+    for i in range(cfg.n_layers):
+        p = f"layers_{i}"
+        b.param(f"{p}/ln1_s", (cfg.d_model,), ("embed",), init="ones")
+        b.param(f"{p}/ln1_b", (cfg.d_model,), ("embed",), init="zeros")
+        L.init_attention(b, f"{p}/attn", cfg.d_model, cfg.attn)
+        b.param(f"{p}/ln2_s", (cfg.d_model,), ("embed",), init="ones")
+        b.param(f"{p}/ln2_b", (cfg.d_model,), ("embed",), init="zeros")
+        L.init_mlp(b, f"{p}/mlp", (cfg.d_model, cfg.d_ff, cfg.d_model))
+    b.param("final_ln_s", (cfg.d_model,), ("embed",), init="ones")
+    b.param("final_ln_b", (cfg.d_model,), ("embed",), init="zeros")
+    b.param("out_proj", (cfg.d_model, cfg.embed_dim), ("embed", None))
+    return b.build()
+
+
+def text_tokens(params: Params, tokens: jax.Array, mask: jax.Array,
+                cfg: TextConfig) -> jax.Array:
+    """(B, S) ids + (B, S) validity -> token features (B, S, D)."""
+    S = tokens.shape[1]
+    x = params["tok_embed"][tokens] + params["pos_embed"][:S]
+    for i in range(cfg.n_layers):
+        p = params[f"layers_{i}"]
+        h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps=cfg.norm_eps)
+        x = x + L.encoder_attention(p["attn"], h, cfg.attn, pad_mask=mask)
+        h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps=cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h, act="gelu")
+    return L.layer_norm(x, params["final_ln_s"], params["final_ln_b"],
+                        eps=cfg.norm_eps)
+
+
+def text_encode(params: Params, tokens: jax.Array, mask: jax.Array,
+                cfg: TextConfig) -> tuple[jax.Array, jax.Array]:
+    """-> (query embedding (B, D') unit-norm, token features (B, S, D))."""
+    feats = text_tokens(params, tokens, mask, cfg)
+    m = mask[..., None].astype(feats.dtype)
+    pooled = jnp.sum(feats * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    q = pooled @ params["out_proj"]
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-9)
+    return q, feats

@@ -1,0 +1,386 @@
+"""Decoder-only LM family: gemma2 / llama3 / qwen2 (dense) + phi3.5-moe /
+kimi-k2 (MoE).  Scan-over-layers with per-layer window schedule; train,
+prefill, and KV-cache decode paths.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMArch
+from repro.launch.context import shard
+from repro.models import layers as L
+from repro.models import moe as M
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _attn_cfg(arch: LMArch) -> L.AttnConfig:
+    return L.AttnConfig(
+        n_heads=arch.n_heads, n_kv_heads=arch.n_kv_heads,
+        head_dim=arch.resolved_head_dim, rope_theta=arch.rope_theta,
+        attn_softcap=arch.attn_softcap, qkv_bias=arch.qkv_bias)
+
+
+def _init_layer(rng: jax.Array, arch: LMArch) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, arch.param_dtype)
+    d = arch.d_model
+    b.param("pre_attn_norm", (d,), ("embed",),
+            init="zeros" if _gemma_norm(arch) else "ones")
+    L.init_attention(b, "attn", d, _attn_cfg(arch))
+    if arch.post_norms:
+        b.param("post_attn_norm", (d,), ("embed",), init="zeros")
+        b.param("post_mlp_norm", (d,), ("embed",), init="zeros")
+    b.param("pre_mlp_norm", (d,), ("embed",),
+            init="zeros" if _gemma_norm(arch) else "ones")
+    if arch.moe is not None:
+        M.init_moe(b, "moe", d, arch.moe)
+        if arch.moe.first_k_dense:
+            L.init_gated_mlp(b, "dense_mlp", d, arch.d_ff)
+    else:
+        L.init_gated_mlp(b, "mlp", d, arch.d_ff)
+    return b.build()
+
+
+def _gemma_norm(arch: LMArch) -> bool:
+    # gemma stores RMSNorm weights as (scale - 1)
+    return arch.post_norms
+
+
+def init_lm(rng: jax.Array, arch: LMArch) -> tuple[Params, Any]:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    b = L.ParamBuilder(k_embed, arch.param_dtype)
+    b.param("embed", (arch.vocab, arch.d_model), ("vocab", "embed"),
+            scale=1.0)
+    b.param("final_norm", (arch.d_model,), ("embed",),
+            init="zeros" if _gemma_norm(arch) else "ones")
+    if not arch.tie_embeddings:
+        b.param("lm_head", (arch.d_model, arch.vocab), ("embed", "vocab"))
+    params, specs = b.build()
+
+    layer_keys = jax.random.split(k_layers, arch.n_layers)
+    # vmap stacks params along a leading 'layers' axis; logical specs are
+    # rebuilt from a tiny structural twin (specs are string tuples, which
+    # vmap cannot stack).
+    lp = jax.vmap(lambda k: _init_layer(k, arch)[0])(layer_keys)
+    _, one_spec = _layer_spec(arch)
+    lp_specs = jax.tree.map(lambda sp: ("layers",) + tuple(sp), one_spec,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    params["layers"] = lp
+    specs["layers"] = lp_specs
+    return params, specs
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_spec(arch: LMArch):
+    """Single-layer param spec tree (shapes discarded)."""
+    p, s = _init_layer(jax.random.PRNGKey(0), dataclass_small(arch))
+    return p, s
+
+
+def dataclass_small(arch: LMArch) -> LMArch:
+    """Tiny twin of ``arch`` (same param *structure*) for cheap spec builds."""
+    import dataclasses
+    moe = arch.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, n_experts=max(2, min(moe.n_experts, 2)),
+                                  top_k=1, expert_ff=8,
+                                  n_shared_experts=min(moe.n_shared_experts, 1))
+    hd = 4
+    return dataclasses.replace(
+        arch, n_layers=1, d_model=8, n_heads=2, n_kv_heads=1, head_dim=hd,
+        d_ff=16, vocab=32, moe=moe)
+
+
+# ---------------------------------------------------------------------------
+# Window schedule
+# ---------------------------------------------------------------------------
+def window_schedule(arch: LMArch) -> np.ndarray:
+    """Per-layer attention window (0 == full causal)."""
+    if arch.sliding_window and arch.local_global_pattern:
+        # gemma2: even layers local, odd layers global
+        return np.array([arch.sliding_window if (i % 2 == 0) else 0
+                         for i in range(arch.n_layers)], np.int32)
+    if arch.sliding_window:
+        return np.full((arch.n_layers,), arch.sliding_window, np.int32)
+    return np.zeros((arch.n_layers,), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _constrain_layer_params(lp: Params, arch: LMArch) -> Params:
+    """Pin each (sliced) layer weight to its logical sharding inside the
+    scan body — keeps FSDP all-gathers at per-layer lifetime instead of
+    letting the scheduler batch/hoist them (no-op outside a mesh context)."""
+    _, spec = _layer_spec(arch)
+    # lp drives the tree structure; spec tuples stay intact as leaves
+    return jax.tree.map(lambda w, lg: shard(w, tuple(lg)), lp, spec)
+
+
+def _layer_fwd(lp: Params, x: jax.Array, arch: LMArch, *, window,
+               positions) -> tuple[jax.Array, jax.Array]:
+    cfg = _attn_cfg(arch)
+    gp = _gemma_norm(arch)
+    if arch.constrain_layer_weights:
+        lp = _constrain_layer_params(lp, arch)
+    h = L.rms_norm(x, lp["pre_attn_norm"], eps=arch.norm_eps, scale_plus_one=gp)
+    S = x.shape[1]
+    if arch.attn_chunk and S > arch.attn_chunk:
+        attn_out, _ = L.attention_chunked(
+            lp["attn"], h, cfg, positions=positions, window=window,
+            chunk=arch.attn_chunk, remat_chunk=True, unroll=arch.attn_unroll)
+    else:
+        attn_out, _ = L.attention(lp["attn"], h, cfg, positions=positions,
+                                  window=window)
+    if arch.post_norms:
+        attn_out = L.rms_norm(attn_out, lp["post_attn_norm"],
+                              eps=arch.norm_eps, scale_plus_one=gp)
+    x = x + attn_out
+    h = L.rms_norm(x, lp["pre_mlp_norm"], eps=arch.norm_eps, scale_plus_one=gp)
+    aux = jnp.zeros((), jnp.float32)
+    if arch.moe is not None:
+        mlp_out, aux = M.moe_apply(lp["moe"], h, arch.moe, act=arch.act)
+    else:
+        mlp_out = L.gated_mlp(lp["mlp"], h, arch.act)
+    if arch.post_norms:
+        mlp_out = L.rms_norm(mlp_out, lp["post_mlp_norm"],
+                             eps=arch.norm_eps, scale_plus_one=gp)
+    out = shard(x + mlp_out, ("batch", "seq_act", "act_embed"))
+    return out, aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # 'full': save nothing
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params: Params, tokens: jax.Array, arch: LMArch, *,
+            positions: Optional[jax.Array] = None,
+            last_token_only: bool = False) -> tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) -> (logits, aux_loss).  Scan over layers."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = params["embed"][tokens].astype(arch.param_dtype)
+    if arch.post_norms:  # gemma scales embeddings
+        x = x * jnp.asarray(math.sqrt(arch.d_model), x.dtype)
+    x = shard(x, ("batch", "seq_act", "act_embed"))
+    windows = jnp.asarray(window_schedule(arch))
+
+    def body(carry, scanned):
+        x, aux = carry
+        lp, w = scanned
+        x, a = _layer_fwd(lp, x, arch, window=w, positions=positions)
+        return (x, aux + a), None
+
+    body = _remat(body, arch.remat_policy)
+    if arch.scan_layers:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], windows))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(arch.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux), _ = body((x, aux), (lp, windows[i]))
+    x = L.rms_norm(x, params["final_norm"], eps=arch.norm_eps,
+                   scale_plus_one=_gemma_norm(arch))
+    if last_token_only:
+        x = x[:, -1:]
+    head = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, ("batch", "seq_act", "vocab_out"))
+    logits = L.softcap(logits, arch.final_softcap)
+    return logits, aux
+
+
+def lm_loss(params: Params, tokens: jax.Array, labels: jax.Array,
+            arch: LMArch, *, aux_coef: float = 0.01) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, tokens, arch)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + aux_coef * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+def cache_dtype(arch: LMArch):
+    if arch.kv_quant:
+        return jnp.int8  # KIVI-class int8 cache + per-(token,head) scales
+    # cache precision follows param precision (bf16 prod / f32 tests)
+    return jnp.bfloat16 if arch.param_dtype == "bfloat16" else jnp.float32
+
+
+def init_cache(arch: LMArch, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or cache_dtype(arch)
+    shape = (arch.n_layers, batch, max_len, arch.n_kv_heads,
+             arch.resolved_head_dim)
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if arch.kv_quant:
+        sshape = shape[:-1] + (1,)
+        cache["k_scale"] = jnp.ones(sshape, jnp.float32)
+        cache["v_scale"] = jnp.ones(sshape, jnp.float32)
+    return cache
+
+
+def cache_specs(arch: LMArch | None = None) -> dict:
+    lg = ("layers", "batch", "seq", "act_kv_heads", "qkv")
+    out = {"k": lg, "v": lg}
+    if arch is not None and arch.kv_quant:
+        out["k_scale"] = lg
+        out["v_scale"] = lg
+    return out
+
+
+def prefill(params: Params, tokens: jax.Array, arch: LMArch
+            ) -> tuple[jax.Array, dict]:
+    """Returns (last-token logits (B, vocab), filled cache)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = params["embed"][tokens].astype(arch.param_dtype)
+    if arch.post_norms:
+        x = x * jnp.asarray(math.sqrt(arch.d_model), x.dtype)
+    windows = jnp.asarray(window_schedule(arch))
+    cfg = _attn_cfg(arch)
+    gp = _gemma_norm(arch)
+
+    use_chunk = bool(arch.attn_chunk) and S > arch.attn_chunk
+
+    def attn_fn(p, h, cfg, positions, window):
+        if use_chunk:
+            return L.attention_chunked(p, h, cfg, positions=positions,
+                                       window=window, chunk=arch.attn_chunk,
+                                       unroll=arch.attn_unroll)
+        return L.attention(p, h, cfg, positions=positions, window=window)
+
+    def body(x, scanned):
+        lp, w = scanned
+        h = L.rms_norm(x, lp["pre_attn_norm"], eps=arch.norm_eps,
+                       scale_plus_one=gp)
+        attn_out, (k, v) = attn_fn(lp["attn"], h, cfg,
+                                   positions=positions, window=w)
+        if arch.post_norms:
+            attn_out = L.rms_norm(attn_out, lp["post_attn_norm"],
+                                  eps=arch.norm_eps, scale_plus_one=gp)
+        x = x + attn_out
+        h = L.rms_norm(x, lp["pre_mlp_norm"], eps=arch.norm_eps,
+                       scale_plus_one=gp)
+        if arch.moe is not None:
+            mlp_out, _ = M.moe_apply(lp["moe"], h, arch.moe, act=arch.act)
+        else:
+            mlp_out = L.gated_mlp(lp["mlp"], h, arch.act)
+        if arch.post_norms:
+            mlp_out = L.rms_norm(mlp_out, lp["post_mlp_norm"],
+                                 eps=arch.norm_eps, scale_plus_one=gp)
+        cd = cache_dtype(arch)
+        return x + mlp_out, (k.astype(cd), v.astype(cd))
+
+    if arch.scan_layers:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows))
+    else:
+        outs = []
+        for i in range(arch.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, kv = body(x, (lp, windows[i]))
+            outs.append(kv)
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+    x = L.rms_norm(x, params["final_norm"], eps=arch.norm_eps,
+                   scale_plus_one=gp)
+    head = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return L.softcap(logits, arch.final_softcap), {"k": ks, "v": vs}
+
+
+def prepare_cache(cache: dict, arch: LMArch) -> dict:
+    """Bridge a full-precision (prefill) cache into decode's expected form:
+    under ``kv_quant`` the fp cache is quantized once here."""
+    if not arch.kv_quant or "k_scale" in cache:
+        return cache
+    kq, ks = L.quantize_kv(cache["k"])
+    vq, vs = L.quantize_kv(cache["v"])
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+
+def decode_step(params: Params, cache: dict, tokens: jax.Array,
+                pos: jax.Array, arch: LMArch) -> tuple[jax.Array, dict]:
+    """tokens: (B,) next token ids; pos: (B,) write positions.
+    Returns (logits (B, vocab), updated cache)."""
+    cache = prepare_cache(cache, arch)
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None].astype(arch.param_dtype)  # (B,1,d)
+    if arch.post_norms:
+        x = x * jnp.asarray(math.sqrt(arch.d_model), x.dtype)
+    windows = jnp.asarray(window_schedule(arch))
+    cfg = _attn_cfg(arch)
+    gp = _gemma_norm(arch)
+
+    def body(x, scanned):
+        lp, w, ck, cv, scales = scanned
+        h = L.rms_norm(x, lp["pre_attn_norm"], eps=arch.norm_eps,
+                       scale_plus_one=gp)
+        attn_out, ck, cv, scales = L.attention_decode(
+            lp["attn"], h, cfg, cache_k=ck, cache_v=cv, pos=pos, window=w,
+            cache_scales=scales)
+        if arch.post_norms:
+            attn_out = L.rms_norm(attn_out, lp["post_attn_norm"],
+                                  eps=arch.norm_eps, scale_plus_one=gp)
+        x = x + attn_out
+        h = L.rms_norm(x, lp["pre_mlp_norm"], eps=arch.norm_eps,
+                       scale_plus_one=gp)
+        if arch.moe is not None:
+            mlp_out, _ = M.moe_apply(lp["moe"], h, arch.moe, act=arch.act)
+        else:
+            mlp_out = L.gated_mlp(lp["mlp"], h, arch.act)
+        if arch.post_norms:
+            mlp_out = L.rms_norm(mlp_out, lp["post_mlp_norm"],
+                                 eps=arch.norm_eps, scale_plus_one=gp)
+        return x + mlp_out, (ck, cv, scales)
+
+    qscales = (cache["k_scale"], cache["v_scale"]) if arch.kv_quant else None
+    if arch.scan_layers:
+        xs = (params["layers"], windows, cache["k"], cache["v"], qscales)
+        x, (ks, vs, scales) = jax.lax.scan(body, x, xs)
+    else:
+        outs = []
+        for i in range(arch.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            sc = (qscales[0][i], qscales[1][i]) if qscales else None
+            x, kv = body(x, (lp, windows[i], cache["k"][i], cache["v"][i],
+                             sc))
+            outs.append(kv)
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+        scales = (jnp.stack([o[2][0] for o in outs]),
+                  jnp.stack([o[2][1] for o in outs])) if qscales else None
+    x = L.rms_norm(x, params["final_norm"], eps=arch.norm_eps,
+                   scale_plus_one=gp)
+    head = params["embed"].T if arch.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    new_cache = {"k": ks, "v": vs}
+    if arch.kv_quant:
+        new_cache["k_scale"], new_cache["v_scale"] = scales
+    return L.softcap(logits, arch.final_softcap), new_cache

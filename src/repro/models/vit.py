@@ -1,0 +1,126 @@
+"""Owl-ViT-style visual encoder — LOVO §IV-B/C.
+
+Standard ViT over S x S patches with token pooling and the final projection
+*removed*; every output patch token keeps its own embedding (spatial detail
+preserved).  Two lightweight heads attach to the tokens:
+
+  * box head:    b_hat = MLP(z) + default anchor box (cxcywh, patch-grid)
+  * class head:  c = Linear(z) -> R^{D'} (the indexed class embedding)
+
+vit_encode returns (class_embeds (B,K,D'), boxes (B,K,4), tokens (B,K,D)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    patch: int = 32
+    img_res: int = 768
+    embed_dim: int = 512   # D' class-embedding dim
+    norm_eps: float = 1e-6
+
+    @property
+    def grid(self) -> int:
+        return self.img_res // self.patch
+
+    @property
+    def n_patches(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(n_heads=self.n_heads, n_kv_heads=self.n_heads,
+                            head_dim=self.d_model // self.n_heads,
+                            qkv_bias=True)
+
+
+def default_boxes(cfg: ViTConfig) -> np.ndarray:
+    """Anchor boxes (cx, cy, w, h) on the patch grid, normalized to [0,1]."""
+    g = cfg.grid
+    xs = (np.arange(g) + 0.5) / g
+    cy, cx = np.meshgrid(xs, xs, indexing="ij")
+    wh = np.full_like(cx, 1.0 / g)
+    return np.stack([cx.ravel(), cy.ravel(), wh.ravel(), wh.ravel()],
+                    axis=-1).astype(np.float32)  # (K, 4)
+
+
+def init_vit(rng: jax.Array, cfg: ViTConfig, dtype: str = "float32"
+             ) -> tuple[Params, Any]:
+    b = L.ParamBuilder(rng, dtype)
+    pdim = cfg.patch * cfg.patch * 3
+    b.param("patch_proj", (pdim, cfg.d_model), (None, "embed"))
+    b.param("patch_bias", (cfg.d_model,), ("embed",), init="zeros")
+    b.param("pos_embed", (cfg.n_patches, cfg.d_model), (None, "embed"),
+            scale=0.02)
+    for i in range(cfg.n_layers):
+        p = f"layers_{i}"
+        b.param(f"{p}/ln1_s", (cfg.d_model,), ("embed",), init="ones")
+        b.param(f"{p}/ln1_b", (cfg.d_model,), ("embed",), init="zeros")
+        L.init_attention(b, f"{p}/attn", cfg.d_model, cfg.attn)
+        b.param(f"{p}/ln2_s", (cfg.d_model,), ("embed",), init="ones")
+        b.param(f"{p}/ln2_b", (cfg.d_model,), ("embed",), init="zeros")
+        L.init_mlp(b, f"{p}/mlp", (cfg.d_model, cfg.d_ff, cfg.d_model))
+    b.param("final_ln_s", (cfg.d_model,), ("embed",), init="ones")
+    b.param("final_ln_b", (cfg.d_model,), ("embed",), init="zeros")
+    # heads
+    L.init_mlp(b, "box_head", (cfg.d_model, cfg.d_model, 4))
+    b.param("class_proj", (cfg.d_model, cfg.embed_dim), ("embed", None))
+    b.param("class_bias", (cfg.embed_dim,), (None,), init="zeros")
+    b.param("logit_scale", (), (), init="zeros")
+    return b.build()
+
+
+def patchify(images: jax.Array, patch: int) -> jax.Array:
+    """(B, H, W, 3) -> (B, K, patch*patch*3)."""
+    B, H, W, C = images.shape
+    gh, gw = H // patch, W // patch
+    x = images.reshape(B, gh, patch, gw, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, gh * gw, patch * patch * C)
+
+
+def vit_tokens(params: Params, images: jax.Array, cfg: ViTConfig) -> jax.Array:
+    """(B, H, W, 3) float in [0,1] -> patch tokens (B, K, D)."""
+    x = patchify(images, cfg.patch)
+    x = jnp.einsum("bkp,pd->bkd", x, params["patch_proj"]) + params["patch_bias"]
+    x = x + params["pos_embed"]
+    for i in range(cfg.n_layers):
+        p = params[f"layers_{i}"]
+        h = L.layer_norm(x, p["ln1_s"], p["ln1_b"], eps=cfg.norm_eps)
+        x = x + L.encoder_attention(p["attn"], h, cfg.attn)
+        h = L.layer_norm(x, p["ln2_s"], p["ln2_b"], eps=cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h, act="gelu")
+    return L.layer_norm(x, params["final_ln_s"], params["final_ln_b"],
+                        eps=cfg.norm_eps)
+
+
+def vit_encode(params: Params, images: jax.Array, cfg: ViTConfig
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (class_embeds (B,K,D') unit-norm, boxes (B,K,4) cxcywh, tokens)."""
+    tokens = vit_tokens(params, images, cfg)
+    offsets = L.mlp(params["box_head"], tokens, act="gelu")
+    boxes = jax.nn.sigmoid(offsets + _logit(jnp.asarray(default_boxes(cfg))))
+    cls = jnp.einsum("bkd,de->bke", tokens, params["class_proj"]) \
+        + params["class_bias"]
+    cls = cls / jnp.maximum(jnp.linalg.norm(cls, axis=-1, keepdims=True), 1e-9)
+    return cls, boxes, tokens
+
+
+def _logit(p: jax.Array, eps: float = 1e-4) -> jax.Array:
+    p = jnp.clip(p, eps, 1 - eps)
+    return jnp.log(p) - jnp.log1p(-p)

@@ -1,0 +1,143 @@
+"""Request batching + straggler mitigation for the LOVO query service.
+
+Production posture pieces the paper's Milvus deployment gets for free and a
+TPU serving stack must provide itself:
+
+  * ``MicroBatcher`` — collects concurrent queries into fixed-size device
+    batches (jit shapes are static) with a max-wait deadline; pads the tail.
+  * ``HedgedExecutor`` — straggler mitigation: if a backend replica does not
+    answer within the p99-tracking hedge deadline, the SAME request is issued
+    to the next replica and the first answer wins (Dean & Barroso, "The Tail
+    at Scale").  Replicas here are callables (e.g. per-pod search fns).
+  * ``LatencyTracker`` — streaming p50/p9x estimates driving the hedge delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+
+class LatencyTracker:
+    def __init__(self, window: int = 512):
+        self.window = window
+        self._lat: list[float] = []
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._lat.append(seconds)
+            if len(self._lat) > self.window:
+                self._lat = self._lat[-self.window:]
+
+    def quantile(self, q: float, default: float = 0.05) -> float:
+        with self._lock:
+            if len(self._lat) < 8:
+                return default
+            return float(np.quantile(self._lat, q))
+
+
+@dataclasses.dataclass
+class _Pending:
+    payload: Any
+    future: Future
+    t_enqueue: float
+
+
+class MicroBatcher:
+    """Groups requests into batches of exactly ``batch_size`` (padded).
+
+    run_batch(payloads: list) -> list of results (same order/length).
+    """
+
+    def __init__(self, run_batch: Callable[[list], list], batch_size: int,
+                 max_wait_ms: float = 5.0):
+        self.run_batch = run_batch
+        self.batch_size = batch_size
+        self.max_wait = max_wait_ms / 1e3
+        self._q: "queue.Queue[_Pending]" = queue.Queue()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        self.latency = LatencyTracker()
+
+    def submit(self, payload: Any) -> Future:
+        f: Future = Future()
+        self._q.put(_Pending(payload, f, time.perf_counter()))
+        return f
+
+    def close(self) -> None:
+        self._stop.set()
+        self._worker.join(timeout=2)
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            batch: list[_Pending] = []
+            try:
+                batch.append(self._q.get(timeout=0.05))
+            except queue.Empty:
+                continue
+            deadline = time.perf_counter() + self.max_wait
+            while len(batch) < self.batch_size:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=left))
+                except queue.Empty:
+                    break
+            t0 = time.perf_counter()
+            try:
+                results = self.run_batch([p.payload for p in batch])
+                dt = time.perf_counter() - t0
+                for p, r in zip(batch, results):
+                    self.latency.record(time.perf_counter() - p.t_enqueue)
+                    p.future.set_result(r)
+            except BaseException as e:
+                for p in batch:
+                    p.future.set_exception(e)
+
+
+class HedgedExecutor:
+    """Issue to replica 0; after the hedge deadline (tracked p-quantile),
+    duplicate to the next replica; first success wins."""
+
+    def __init__(self, replicas: Sequence[Callable[[Any], Any]],
+                 hedge_quantile: float = 0.95, max_hedges: int = 1):
+        assert replicas
+        self.replicas = list(replicas)
+        self.hedge_quantile = hedge_quantile
+        self.max_hedges = min(max_hedges, len(self.replicas) - 1)
+        self.latency = LatencyTracker()
+        self.hedges_issued = 0
+        self.hedges_won = 0
+        self._pool = ThreadPoolExecutor(max_workers=2 * len(self.replicas))
+
+    def __call__(self, payload: Any) -> Any:
+        t0 = time.perf_counter()
+        futs = {self._pool.submit(self.replicas[0], payload): 0}
+        hedges = 0
+        while True:
+            delay = self.latency.quantile(self.hedge_quantile)
+            done, _ = wait(list(futs), timeout=delay,
+                           return_when=FIRST_COMPLETED)
+            winner = next((f for f in done if f.exception() is None), None)
+            if winner is not None:
+                self.latency.record(time.perf_counter() - t0)
+                if futs[winner] != 0:
+                    self.hedges_won += 1
+                for f in futs:
+                    f.cancel()
+                return winner.result()
+            if done and all(f.exception() is not None for f in futs):
+                raise next(iter(done)).exception()
+            if hedges < self.max_hedges:
+                hedges += 1
+                self.hedges_issued += 1
+                nxt = self.replicas[hedges % len(self.replicas)]
+                futs[self._pool.submit(nxt, payload)] = hedges

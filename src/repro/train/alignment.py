@@ -1,0 +1,96 @@
+"""Contrastive alignment training for the LOVO encoders (DESIGN.md §3(c)).
+
+Pre-trained ViT-B/32 + BERT weights are unavailable offline, so the decoupled
+encoders are trained in-framework on the synthetic paired data:
+
+  * CLIP-style InfoNCE between the caption embedding and the class embedding
+    of the patch whose anchor box contains the object center (Owl-ViT's
+    bipartite matching reduced to center assignment — exact here because the
+    synthetic world has one object per training image);
+  * box L1 on the matched patch's predicted box;
+  * rerank supervision: BCE on the frame score for (matched, shuffled)
+    caption pairs + box L1 through the decoder.
+
+One optimizer over all three parameter trees — a ~100M-param end-to-end
+train step used by examples/train_alignment.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rerank as RR
+from repro.models import text_encoder as TE
+from repro.models import vit as V
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignConfig:
+    vit: V.ViTConfig
+    txt: TE.TextConfig
+    rerank: RR.RerankConfig
+    temperature: float = 0.07
+    box_coef: float = 2.0
+    rerank_coef: float = 1.0
+
+
+def init_all(rng: jax.Array, cfg: AlignConfig) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {"vit": V.init_vit(r1, cfg.vit)[0],
+            "txt": TE.init_text(r2, cfg.txt)[0],
+            "rerank": RR.init_rerank(r3, cfg.rerank)[0]}
+
+
+def _match_patches(boxes_gt: jax.Array, cfg: V.ViTConfig) -> jax.Array:
+    """GT box centers -> patch index on the grid (center assignment)."""
+    g = cfg.grid
+    cx = jnp.clip((boxes_gt[:, 0] * g).astype(jnp.int32), 0, g - 1)
+    cy = jnp.clip((boxes_gt[:, 1] * g).astype(jnp.int32), 0, g - 1)
+    return cy * g + cx
+
+
+def alignment_loss(params: dict, batch: dict, cfg: AlignConfig
+                   ) -> tuple[jax.Array, dict]:
+    imgs, toks = batch["images"], batch["tokens"]
+    mask, boxes_gt = batch["txt_mask"], batch["boxes"]
+    B = imgs.shape[0]
+
+    cls, boxes, tokens = V.vit_encode(params["vit"], imgs, cfg.vit)
+    q, txt_feats = TE.text_encode(params["txt"], toks, mask, cfg.txt)
+
+    match = _match_patches(boxes_gt, cfg.vit)                 # (B,)
+    obj = jnp.take_along_axis(cls, match[:, None, None], axis=1)[:, 0]
+
+    # InfoNCE both directions
+    logits = (obj @ q.T) / cfg.temperature                    # (B, B)
+    labels = jnp.arange(B)
+    def ce(lg):
+        return jnp.mean(jax.nn.logsumexp(lg, axis=-1)
+                        - jnp.take_along_axis(lg, labels[:, None], 1)[:, 0])
+    nce = 0.5 * (ce(logits) + ce(logits.T))
+
+    # box regression on the matched patch
+    box_pred = jnp.take_along_axis(boxes, match[:, None, None], axis=1)[:, 0]
+    box_l1 = jnp.mean(jnp.abs(box_pred - boxes_gt))
+
+    # rerank: positives (aligned) vs negatives (captions rolled by 1)
+    score_pos, dec_boxes = RR.rerank_frame(
+        params["rerank"], tokens, txt_feats, mask, cfg.rerank)
+    score_neg, _ = RR.rerank_frame(
+        params["rerank"], tokens, jnp.roll(txt_feats, 1, axis=0),
+        jnp.roll(mask, 1, axis=0), cfg.rerank)
+    s = jnp.concatenate([score_pos, score_neg])
+    y = jnp.concatenate([jnp.ones((B,)), jnp.zeros((B,))])
+    bce = jnp.mean(jnp.maximum(s, 0) - s * y + jnp.log1p(jnp.exp(-jnp.abs(s))))
+    dec_l1 = jnp.mean(jnp.abs(dec_boxes[:, 0] - boxes_gt))
+
+    loss = nce + cfg.box_coef * (box_l1 + dec_l1) + cfg.rerank_coef * bce
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    rerank_aucish = jnp.mean(score_pos > score_neg)
+    return loss, {"nce": nce, "box_l1": box_l1, "bce": bce,
+                  "contrastive_acc": acc, "rerank_acc": rerank_aucish}

@@ -1,0 +1,73 @@
+"""Gradient compression for cross-DCN data parallelism.
+
+On the multi-pod mesh the 'pod' axis crosses data-center networking, which is
+an order of magnitude slower than ICI.  Standard mitigation: compress the
+pod-axis gradient all-reduce to int8 with ERROR FEEDBACK (Seide et al. 2014;
+1-bit SGD lineage) — quantization error is carried into the next step, so
+convergence is preserved (contractive-compressor guarantee).
+
+``compressed_psum`` is shard_map-friendly: quantize -> psum int32 -> dequant,
+with the residual returned to the caller to feed back.  For jit-SPMD callers,
+``EFState`` + ``compress_grads`` wraps whole gradient pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _q8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_init(grads_like: Params) -> Params:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)
+
+
+def compress_grads(grads: Params, ef: Params
+                   ) -> tuple[Params, Params, Params]:
+    """-> (quantized int8 tree, scales tree, new error-feedback tree).
+
+    caller all-reduces (q * scale) across the slow axis; the difference
+    between the true gradient and its quantized form rides in ``ef``.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _q8(corrected)
+        dq = q.astype(jnp.float32) * scale
+        return q, scale, corrected - dq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]),
+            tdef.unflatten([o[2] for o in out]))
+
+
+def decompress_grads(q: Params, scales: Params) -> Params:
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, ef: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Inside shard_map: int8-quantized psum over ``axis_name`` with error
+    feedback.  Scales are max-combined so the shared dequant is conservative.
+    """
+    corrected = x.astype(jnp.float32) + ef
+    q, scale = _q8(corrected)
+    scale = jax.lax.pmax(scale, axis_name)           # shared scale
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    dq_local = q.astype(jnp.float32) * scale
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = summed.astype(jnp.float32) * scale / n
+    return mean, corrected - dq_local

@@ -1,0 +1,11 @@
+import os
+
+# smoke tests and benches must see the REAL device count (1 CPU device);
+# only launch/dryrun.py forces 512 host devices.  Guard against leakage.
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "dryrun XLA_FLAGS leaked into the test environment"
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

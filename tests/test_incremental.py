@@ -1,0 +1,88 @@
+"""Incremental index maintenance (paper §IX future work, implemented)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anns, imi as imimod, pq as pqmod
+from repro.core.incremental import SegmentedIndex
+
+
+def _base(n=4000, d=32, seed=0):
+    cents = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, d))
+    a = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, 16)
+    x = cents[a] + 0.4 * jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                           (n, d))
+    idx = imimod.build_imi(jax.random.PRNGKey(seed), x, jnp.arange(n),
+                           K=8, P=4, M=32, kmeans_iters=5)
+    return idx, cents
+
+
+CFG = anns.SearchConfig(top_a=16, max_cell_size=512, top_k=50)
+
+
+def test_insert_then_find():
+    idx, cents = _base()
+    seg = SegmentedIndex(idx)
+    new_vec = pqmod.normalize(cents[3:4] * 1.0)
+    seg.insert(new_vec, np.array([999_999]))
+    res = seg.search(cents[3], CFG)
+    assert 999_999 in res["ids"][:5].tolist()
+    assert seg.n == idx.n + 1
+
+
+def test_delete_tombstone():
+    idx, cents = _base()
+    seg = SegmentedIndex(idx)
+    res0 = seg.search(cents[2], CFG)
+    victim = int(res0["ids"][0])
+    seg.delete([victim])
+    res1 = seg.search(cents[2], CFG)
+    assert victim not in res1["ids"].tolist()
+
+
+def test_compact_preserves_results():
+    idx, cents = _base()
+    seg = SegmentedIndex(idx, max_segments=8)
+    rng = np.random.default_rng(0)
+    extra = pqmod.normalize(jnp.asarray(
+        np.asarray(cents)[rng.integers(0, 16, 200)]
+        + 0.3 * rng.normal(0, 1, (200, 32)).astype(np.float32)))
+    seg.insert(extra, np.arange(10_000, 10_200))
+    seg.delete([10_005, 10_006])
+    seg.compact()
+    assert not seg.segments and not seg.tombstones
+    after = seg.search(cents[1], CFG)
+    # compacted base must drop tombstones
+    assert 10_005 not in after["ids"].tolist()
+    # every inserted (non-deleted) vector stays findable by self-query
+    for probe_i in (0, 50, 199):
+        res = seg.search(extra[probe_i], CFG)
+        assert 10_000 + probe_i in res["ids"][:5].tolist(), probe_i
+    # invariants of the rebuilt base
+    off = np.asarray(seg.base.cell_offsets)
+    assert off[-1] == seg.base.n and (np.diff(off) >= 0).all()
+
+
+def test_auto_compact_on_segment_overflow():
+    idx, cents = _base()
+    seg = SegmentedIndex(idx, max_segments=2, segment_capacity=8)
+    for i in range(5):
+        v = pqmod.normalize(jax.random.normal(jax.random.PRNGKey(i), (16, 32)))
+        seg.insert(v, np.arange(20_000 + 16 * i, 20_016 + 16 * i))
+    assert len(seg.segments) <= 2
+
+
+def test_drift_score_flags_distribution_shift():
+    idx, cents = _base()
+    seg = SegmentedIndex(idx)
+    # in-distribution inserts: drift ~ 1
+    v = pqmod.normalize(cents[:8] + 0.4 * jax.random.normal(
+        jax.random.PRNGKey(0), (8, 32)))
+    seg.insert(v, np.arange(30_000, 30_008))
+    in_dist = seg.drift_score()
+    # shifted inserts: much worse quantization
+    shifted = pqmod.normalize(10.0 + jax.random.normal(
+        jax.random.PRNGKey(1), (8, 32)))
+    seg2 = SegmentedIndex(idx)
+    seg2.insert(shifted, np.arange(40_000, 40_008))
+    assert seg2.drift_score() > in_dist

@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("Q,P,M,N,block", [
+    (1, 4, 16, 100, 64),
+    (4, 8, 64, 1000, 256),
+    (8, 16, 256, 2048, 512),
+    (2, 64, 256, 777, 128),   # LOVO production P/M, ragged N
+])
+def test_pq_scan_sweep(Q, P, M, N, block):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(P * M + N))
+    luts = jax.random.normal(k1, (Q, P, M), jnp.float32)
+    codes = jax.random.randint(k2, (N, P), 0, M)
+    out = ops.pq_scan_batched(luts, codes, block_n=block)
+    want = ref.pq_scan_ref(luts, codes)
+    # bf16 one-hot matmul path: tolerance scales with sum-of-P bf16 products
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2, atol=3e-2 * np.sqrt(P))
+
+
+@pytest.mark.parametrize("codes_dtype", [jnp.uint8, jnp.int32])
+def test_pq_scan_dtypes(codes_dtype):
+    luts = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64))
+    codes = jax.random.randint(jax.random.PRNGKey(1), (500, 8), 0, 64
+                               ).astype(codes_dtype)
+    out = ops.pq_scan_batched(luts, codes)
+    want = ref.pq_scan_ref(luts, codes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2, atol=1e-1)
+
+
+def test_pq_scan_single_query_wrapper():
+    lut = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    codes = jax.random.randint(jax.random.PRNGKey(1), (300, 8), 0, 64)
+    out = ops.pq_scan(lut, codes)
+    want = ref.pq_scan_ref(lut[None], codes)[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2, atol=1e-1)
+
+
+@pytest.mark.parametrize("N,M,m,block", [
+    (100, 8, 4, 64), (1000, 64, 16, 256), (513, 256, 8, 128),
+])
+def test_kmeans_assign_sweep(N, M, m, block):
+    x = jax.random.normal(jax.random.PRNGKey(N), (N, m))
+    cents = jax.random.normal(jax.random.PRNGKey(M), (M, m))
+    a, d = ops.kmeans_assign(x, cents)
+    ar, dr = ref.kmeans_assign_ref(x, cents)
+    assert bool((a == ar).all())
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,S,T,d", [
+    (1, 2, 64, 64, 16), (2, 4, 130, 257, 32), (1, 1, 576, 64, 64),
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_attention_sweep(B, H, S, T, d, causal):
+    if causal and S != T:
+        pytest.skip("causal requires square")
+    ks = jax.random.split(jax.random.PRNGKey(S + T), 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, T, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, T, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_softcap_and_gqa():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (2, 8, 96, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 2, 96, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 2, 96, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, softcap=30.0)
+    want = ref.flash_attention_ref(q, jnp.repeat(k, 4, 1),
+                                   jnp.repeat(v, 4, 1),
+                                   causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 32), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

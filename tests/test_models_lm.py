@@ -1,0 +1,184 @@
+"""LM model invariants: decode==forward consistency, chunked==full
+attention, MoE dispatch properties, window schedule."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LMArch, MoESpec
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import transformer as T
+
+TINY = LMArch(name="tiny", n_layers=3, d_model=48, n_heads=4, n_kv_heads=2,
+              head_dim=12, d_ff=96, vocab=97, param_dtype="float32",
+              attn_chunk=0)
+
+
+def test_decode_matches_forward():
+    """prefill + decode_step must reproduce full-forward logits exactly
+    (the KV-cache path is equivalent to recomputation)."""
+    arch = TINY
+    params, _ = T.init_lm(jax.random.PRNGKey(0), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, arch.vocab)
+    # full forward logits at the last position of toks[:, :8] given 9 tokens
+    full_logits, _ = T.forward(params, toks, arch)
+    _, cache = T.prefill(params, toks[:, :8], arch)
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0))), cache)
+    dec_logits, _ = T.decode_step(params, cache, toks[:, 8],
+                                  jnp.array([8, 8]), arch)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits[:, 8]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_forward_windowed_softcap():
+    arch = dataclasses.replace(TINY, sliding_window=4,
+                               local_global_pattern=True,
+                               attn_softcap=20.0, final_softcap=10.0,
+                               post_norms=True)
+    params, _ = T.init_lm(jax.random.PRNGKey(2), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 9), 0, arch.vocab)
+    full_logits, _ = T.forward(params, toks, arch)
+    _, cache = T.prefill(params, toks[:, :8], arch)
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0))), cache)
+    dec_logits, _ = T.decode_step(params, cache, toks[:, 8],
+                                  jnp.array([8, 8]), arch)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits[:, 8]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_chunked_attention_equals_full(window):
+    cfg = L.AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16)
+    b = L.ParamBuilder(jax.random.PRNGKey(0), "float32")
+    L.init_attention(b, "a", 32, cfg)
+    p = b.build()[0]["a"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 37, 32))
+    pos = jnp.broadcast_to(jnp.arange(37)[None], (2, 37))
+    full, _ = L.attention(p, x, cfg, positions=pos, window=window)
+    for unroll in (False, True):
+        chunked, _ = L.attention_chunked(p, x, cfg, positions=pos,
+                                         window=window, chunk=8,
+                                         remat_chunk=True, unroll=unroll)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_grads_match():
+    cfg = L.AttnConfig(n_heads=2, n_kv_heads=2, head_dim=8)
+    b = L.ParamBuilder(jax.random.PRNGKey(0), "float32")
+    L.init_attention(b, "a", 16, cfg)
+    p = b.build()[0]["a"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+
+    def loss_full(p):
+        return jnp.sum(L.attention(p, x, cfg, positions=pos)[0] ** 2)
+
+    def loss_chunk(p):
+        return jnp.sum(L.attention_chunked(p, x, cfg, positions=pos,
+                                           chunk=4, remat_chunk=True)[0] ** 2)
+
+    g1 = jax.grad(loss_full)(p)
+    g2 = jax.grad(loss_chunk)(p)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4), g1, g2)
+
+
+def test_window_schedule_patterns():
+    g = dataclasses.replace(TINY, n_layers=6, sliding_window=4,
+                            local_global_pattern=True)
+    ws = T.window_schedule(g)
+    assert ws.tolist() == [4, 0, 4, 0, 4, 0]
+    u = dataclasses.replace(TINY, n_layers=3, sliding_window=7)
+    assert T.window_schedule(u).tolist() == [7, 7, 7]
+    f = dataclasses.replace(TINY, n_layers=2)
+    assert T.window_schedule(f).tolist() == [0, 0]
+
+
+def test_scan_vs_unrolled_layers_identical():
+    arch = TINY
+    params, _ = T.init_lm(jax.random.PRNGKey(0), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, arch.vocab)
+    l1, _ = T.forward(params, toks, arch)
+    l2, _ = T.forward(params, toks,
+                      dataclasses.replace(arch, scan_layers=False))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch properties
+# ---------------------------------------------------------------------------
+def _moe(E=8, k=2, ff=32, shared=0, cf=8.0):
+    return MoESpec(n_experts=E, top_k=k, expert_ff=ff,
+                   n_shared_experts=shared, capacity_factor=cf)
+
+
+def test_moe_matches_dense_reference():
+    """With huge capacity (no drops), sort-based dispatch must equal the
+    dense per-token expert mixture."""
+    spec = _moe(E=4, k=2, cf=16.0)
+    b = L.ParamBuilder(jax.random.PRNGKey(0), "float32")
+    M.init_moe(b, "moe", 16, spec)
+    p = b.build()[0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 16))
+    out, aux = M.moe_apply(p, x, spec)
+
+    # dense reference: every token through every expert, weighted
+    xf = x.reshape(-1, 16)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, e = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(2):
+            ee = int(e[t, j])
+            h = jax.nn.silu(xf[t] @ p["w_gate"][ee]) * (xf[t] @ p["w_in"][ee])
+            ref = ref.at[t].add(w[t, j] * (h @ p["w_out"][ee]))
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, 16)),
+                               np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens_not_crashes():
+    spec = _moe(E=4, k=2, cf=0.25)  # tiny capacity -> heavy drops
+    b = L.ParamBuilder(jax.random.PRNGKey(0), "float32")
+    M.init_moe(b, "moe", 16, spec)
+    p = b.build()[0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16))
+    out, aux = M.moe_apply(p, x, spec)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_moe_shared_expert_always_applies():
+    spec = _moe(E=4, k=1, shared=1, cf=0.01)  # capacity ~0: routed all drop
+    b = L.ParamBuilder(jax.random.PRNGKey(0), "float32")
+    M.init_moe(b, "moe", 16, spec)
+    p = b.build()[0]["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 16))
+    out, _ = M.moe_apply(p, x, spec)
+    want = L.gated_mlp(p["shared"], x.reshape(-1, 16), "silu")
+    # capacity 8 (min) may still route a few tokens; check shared-only lower
+    # bound: outputs correlate strongly with the shared path
+    corr = np.corrcoef(np.asarray(out).ravel(), np.asarray(want).ravel())[0, 1]
+    assert corr > 0.5
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 3))
+def test_moe_capacity_bound_property(E, k):
+    k = min(k, E)
+    spec = _moe(E=E, k=k, cf=1.0)
+    T_ = 32
+    cap = M.capacity(T_, spec)
+    assert cap >= T_ * k / E
+    assert cap % 8 == 0

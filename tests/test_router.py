@@ -1,0 +1,80 @@
+"""Elastic query router: load balancing, failure demotion, recovery,
+scale-out."""
+import threading
+
+import pytest
+
+from repro.serving.router import QueryRouter, ReplicaUnavailable
+
+
+def test_routes_and_balances():
+    counts = {"a": 0, "b": 0}
+    r = QueryRouter()
+    r.add_replica("a", lambda x: counts.__setitem__("a", counts["a"] + 1) or x)
+    r.add_replica("b", lambda x: counts.__setitem__("b", counts["b"] + 1) or x)
+    for i in range(200):
+        assert r(i) == i
+    assert counts["a"] > 40 and counts["b"] > 40  # both used
+
+
+def test_failure_demotes_and_survives():
+    r = QueryRouter(unhealthy_after=2)
+    calls = {"bad": 0}
+
+    def bad(x):
+        calls["bad"] += 1
+        raise RuntimeError("replica crash")
+
+    r.add_replica("bad", bad)
+    r.add_replica("good", lambda x: ("ok", x))
+    outs = [r(i) for i in range(50)]
+    assert all(o[0] == "ok" for o in outs)
+    assert not r.stats()["bad"]["healthy"]
+    assert calls["bad"] <= 3  # demoted after threshold, not hammered
+
+
+def test_all_down_then_recovery():
+    r = QueryRouter(unhealthy_after=1, recovery_probe_s=0.0)
+    state = {"up": False}
+
+    def flaky(x):
+        if not state["up"]:
+            raise RuntimeError("down")
+        return x * 2
+
+    r.add_replica("only", flaky)
+    with pytest.raises(ReplicaUnavailable):
+        r(1)
+    # recovery: probe path retries the unhealthy replica once it's back
+    state["up"] = True
+    assert r(3) == 6
+    assert r.stats()["only"]["healthy"]
+
+
+def test_elastic_scale_out():
+    r = QueryRouter()
+    r.add_replica("r0", lambda x: "r0")
+    assert r(0) == "r0"
+    r.add_replica("r1", lambda x: "r1")
+    seen = {r(i) for i in range(50)}
+    assert seen == {"r0", "r1"}
+    r.remove_replica("r0")
+    assert all(r(i) == "r1" for i in range(5))
+
+
+def test_concurrent_routing_consistent():
+    r = QueryRouter()
+    r.add_replica("a", lambda x: x + 1)
+    r.add_replica("b", lambda x: x + 1)
+    results = []
+
+    def worker(base):
+        for i in range(50):
+            results.append(r(base + i) == base + i + 1)
+
+    ts = [threading.Thread(target=worker, args=(k * 100,)) for k in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert all(results) and len(results) == 200

@@ -1,0 +1,72 @@
+"""Serving substrate: micro-batching and hedged (straggler) execution."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.batcher import HedgedExecutor, LatencyTracker, MicroBatcher
+
+
+def test_microbatcher_batches_and_orders():
+    seen_batches = []
+
+    def run(batch):
+        seen_batches.append(len(batch))
+        return [x * 2 for x in batch]
+
+    mb = MicroBatcher(run, batch_size=4, max_wait_ms=30)
+    futs = [mb.submit(i) for i in range(10)]
+    assert [f.result(timeout=5) for f in futs] == [2 * i for i in range(10)]
+    mb.close()
+    assert sum(seen_batches) == 10
+    assert max(seen_batches) <= 4
+
+
+def test_microbatcher_propagates_errors():
+    def run(batch):
+        raise RuntimeError("backend down")
+    mb = MicroBatcher(run, batch_size=2, max_wait_ms=5)
+    f = mb.submit(1)
+    with pytest.raises(RuntimeError):
+        f.result(timeout=5)
+    mb.close()
+
+
+def test_hedged_executor_beats_straggler():
+    calls = {"a": 0, "b": 0}
+
+    def slow(x):
+        calls["a"] += 1
+        time.sleep(0.5)
+        return ("slow", x)
+
+    def fast(x):
+        calls["b"] += 1
+        return ("fast", x)
+
+    hx = HedgedExecutor([slow, fast], max_hedges=1)
+    # warm the tracker with fast latencies so hedge delay is small
+    for _ in range(10):
+        hx.latency.record(0.01)
+    out = hx(42)
+    assert out == ("fast", 42)
+    assert hx.hedges_issued >= 1 and hx.hedges_won >= 1
+
+
+def test_hedged_executor_no_hedge_when_fast():
+    def fast(x):
+        return x + 1
+    hx = HedgedExecutor([fast, fast], max_hedges=1)
+    for _ in range(10):
+        hx.latency.record(0.05)
+    assert hx(1) == 2
+    assert hx.hedges_won == 0
+
+
+def test_latency_tracker_quantiles():
+    t = LatencyTracker()
+    for v in np.linspace(0.01, 0.1, 100):
+        t.record(float(v))
+    assert 0.04 < t.quantile(0.5) < 0.07
+    assert t.quantile(0.95) > t.quantile(0.5)

@@ -1,0 +1,81 @@
+"""Sharding-rules engine: divisibility fallbacks, pod-axis absorption,
+axis-reuse guards."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import effective_rules, spec_for
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + devices.shape are all spec_for uses."""
+
+    class _Dev:
+        def __init__(self, shape):
+            self.shape = shape
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = self._Dev(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+RULES = {"batch": ("data",), "heads": ("model",), "ff": ("model",),
+         "rows": ("data", "model"), "none": None}
+
+
+def test_basic_mapping():
+    eff = effective_rules(RULES, MESH)
+    assert spec_for(("batch", "heads"), eff, MESH) == P("data", "model")
+
+
+def test_divisibility_fallback():
+    eff = effective_rules(RULES, MESH)
+    # 8 heads cannot split 16 ways -> replicated
+    assert spec_for(("batch", "heads"), eff, MESH, (32, 8)) == P("data")
+    # batch 1 cannot shard
+    assert spec_for(("batch",), eff, MESH, (1,)) == P()
+
+
+def test_multi_axis_partial_divisibility():
+    eff = effective_rules(RULES, MESH)
+    # rows=('data','model') needs /256; 64 rows only fits 'data' (16)
+    assert spec_for(("rows",), eff, MESH, (64,)) == P("data")
+    assert spec_for(("rows",), eff, MESH, (512,)) == P(("data", "model"))
+
+
+def test_axis_never_reused():
+    eff = effective_rules({"a": ("model",), "b": ("model",)}, MESH)
+    assert spec_for(("a", "b"), eff, MESH) == P("model")  # b dropped
+
+
+def test_pod_absorption():
+    eff = effective_rules(RULES, POD)
+    assert eff["batch"] == ("pod", "data")
+    assert eff["heads"] == ("model",)  # non-absorber untouched
+
+
+def test_pod_axis_dropped_on_single_pod():
+    rules = {"batch": ("pod", "data")}
+    eff = effective_rules(rules, MESH)
+    assert eff["batch"] == ("data",)
+
+
+def test_trailing_none_trimmed():
+    eff = effective_rules(RULES, MESH)
+    s = spec_for(("batch", None, None), eff, MESH)
+    assert s == P("data")
+
+
+def test_merged_rules_override_order():
+    from repro.configs.base import DEFAULT_RULES, get_arch, merged_rules
+    arch = get_arch("llama3-405b")
+    spec = next(s for s in arch.shapes if s.name == "train_4k")
+    rules = merged_rules(arch, spec)
+    assert rules["embed"] == ("data",)        # arch override
+    assert rules["seq_act"] == ("model",)     # shape override
+    assert rules["batch"] == DEFAULT_RULES["batch"]
