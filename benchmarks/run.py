@@ -87,6 +87,17 @@ def main() -> None:
         us = (time.perf_counter() - t0) / 3 * 1e6
         return us, "interpret-mode 8q x 65536rows x P64 M256"
 
+    @bench("store_persistence")
+    def store():
+        from benchmarks import store_bench
+        r = store_bench.main()
+        # headline = store OPEN latency (the number this layer exists for),
+        # not the wrapper wall time, which is dominated by the index build
+        us = r["open_s"] * 1e6
+        return us, (f"open_speedup={r['open_speedup_vs_rebuild']:.1f}x "
+                    f"replay={r['wal_replay_rows_per_s']:.0f}rows/s "
+                    f"compact8={r['compact_s_deltas8']*1e3:.0f}ms")
+
     @bench("roofline_summary")
     def roof():
         from benchmarks import roofline

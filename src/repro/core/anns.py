@@ -36,6 +36,7 @@ class SearchConfig:
     max_cell_size: int = 2048  # per-cell candidate window
     top_k: int = 100           # candidates returned by fast search
     exact_rerank: bool = True
+    rerank_overfetch: int = 4  # exact-rescore top_k * this approx candidates
     use_kernel: str = "jnp"    # 'jnp' | 'pallas'
 
 
@@ -57,7 +58,10 @@ def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig
     h = q.shape[-1] // 2
     s1 = index.coarse1 @ q[:h]
     s2 = index.coarse2 @ q[h:]
-    cells = imimod.multi_sequence_top_a(s1, s2, cfg.top_a)       # (A,)
+    # probe selection must agree with the L2 cell assignment (imi.probe_adjust)
+    cells = imimod.multi_sequence_top_a(s1 + imimod.probe_adjust(index.coarse1),
+                                        s2 + imimod.probe_adjust(index.coarse2),
+                                        cfg.top_a)               # (A,)
     K = index.K
     base = s1[cells // K] + s2[cells % K]                        # (A,)
 
@@ -74,15 +78,24 @@ def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig
     approx = resid.reshape(cells.shape[0], -1) + base[:, None]   # (A, W)
     approx = jnp.where(valid, approx, -jnp.inf).reshape(-1)
 
-    top_approx, flat_idx = jax.lax.top_k(approx, cfg.top_k)
-    top_rows = rows.reshape(-1)[flat_idx]                        # (k,)
+    # refine factor: ADC order is approximate, so the true top-k by exact
+    # score may sit below rank k in approx order — fetch a multiple, exact-
+    # rescore, THEN cut to top_k (IVF-PQ "refine" stage; Algorithm 1 line 14)
+    fetch_k = min(cfg.top_k * max(cfg.rerank_overfetch, 1), approx.shape[0]) \
+        if cfg.exact_rerank else cfg.top_k
+    top_approx, flat_idx = jax.lax.top_k(approx, fetch_k)
+    top_rows = rows.reshape(-1)[flat_idx]                        # (fetch_k,)
 
     if cfg.exact_rerank:
-        vecs = index.vectors[top_rows].astype(jnp.float32)       # (k, D')
+        vecs = index.vectors[top_rows].astype(jnp.float32)       # (fetch_k, D')
         exact = vecs @ q
-        order = jnp.argsort(-exact)
+        # padding slots (-inf approx: window overrun / clipped rows) must
+        # not re-enter via their real dot product
+        exact = jnp.where(jnp.isfinite(top_approx), exact, -jnp.inf)
+        order = jnp.argsort(-exact)[: cfg.top_k]
         top_rows = top_rows[order]
         scores = exact[order]
+        top_approx = top_approx[order]
     else:
         scores = top_approx
     return {"ids": index.ids[top_rows], "scores": scores,

@@ -32,6 +32,18 @@ from repro.core import pq as pqmod
 from repro.core.imi import IMIIndex
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions: the stable spelling (with
+    ``check_vma``) when present, else ``jax.experimental.shard_map`` (with
+    the older ``check_rep`` knob)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
 @dataclasses.dataclass
 class ShardedIndex:
     """Row-sharded index arrays + replicated codebooks.
@@ -141,8 +153,9 @@ def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
                 scores = base + pqmod.adc_scores(lut, codes)
                 rows = None
             else:  # cell_probe
-                from repro.core.imi import multi_sequence_top_a
-                cells = multi_sequence_top_a(s1, s2, top_a)
+                from repro.core.imi import multi_sequence_top_a, probe_adjust
+                cells = multi_sequence_top_a(s1 + probe_adjust(c1),
+                                             s2 + probe_adjust(c2), top_a)
                 cbase = s1[cells // K] + s2[cells % K]
                 starts = offsets[cells]
                 counts = jnp.minimum(offsets[cells + 1] - starts,
@@ -171,8 +184,8 @@ def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
     in_specs = (P(axes), P(axes), P(axes), P(axes), P(axes),
                 P(), P(), P(), P())
     out_specs = (P(), P())
-    f = jax.shard_map(local_scan, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_vma=False)
+    f = shard_map_compat(local_scan, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
 
     def search(sidx: ShardedIndex, qs: jax.Array):
         vals, ids = f(sidx.codes, sidx.vectors, sidx.ids, sidx.cell_of,

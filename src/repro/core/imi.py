@@ -23,6 +23,12 @@ import numpy as np
 from repro.core import pq as pqmod
 from repro.core.pq import PQ, kmeans
 
+# Canonical patch-id dtype, end-to-end: build, delta segments, tombstones,
+# and the on-disk store all use int32 so persisted segments round-trip
+# bit-exactly (int64 would silently downcast on device: x64 is disabled).
+# 2^31 ids per shard; beyond that the sharding layer partitions the id space.
+ID_DTYPE = np.int32
+
 
 @dataclasses.dataclass
 class IMIIndex:
@@ -102,6 +108,15 @@ def build_imi(rng: jax.Array, x: jax.Array, ids: jax.Array, *,
         cell_of=cell[order].astype(jnp.int32),
         cell_offsets=offsets,
     )
+
+
+def probe_adjust(coarse: jax.Array) -> jax.Array:
+    """Per-centroid additive term making dot-product cell ranking agree
+    with the L2 cell ASSIGNMENT: argmin ||q - c||^2 == argmax (q.c - |c|^2/2)
+    for fixed q.  Without it, a vector whose centroid has a small norm can
+    be assigned to a cell the dot-ranked probe never visits — the row then
+    becomes unreachable no matter how large top_k is."""
+    return -0.5 * jnp.sum(jnp.square(coarse), axis=-1)
 
 
 def cell_scores(index: IMIIndex, q: jax.Array) -> jax.Array:

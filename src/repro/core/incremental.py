@@ -37,19 +37,33 @@ from repro.core.imi import IMIIndex
 @dataclasses.dataclass
 class DeltaSegment:
     codes: np.ndarray     # (n, P) uint8
-    vectors: np.ndarray   # (n, D') bf16-able f32
-    ids: np.ndarray       # (n,)
-    cell_of: np.ndarray   # (n,)
-    resid_energy: float
+    vectors: np.ndarray   # (n, D') f32 (normalized)
+    ids: np.ndarray       # (n,) imimod.ID_DTYPE
+    cell_of: np.ndarray   # (n,) int32
+    resid_energy: float   # mean per-row residual energy over the n rows
 
 
 class SegmentedIndex:
+    """Base IMI + bounded delta segments; see module docstring.
+
+    ``persistence`` is an optional durability hook (duck-typed; in practice
+    :class:`repro.store.VectorStore`) with three methods:
+
+      * ``log_insert(vectors_f32, ids)`` — called BEFORE the insert is
+        applied (write-ahead order) with the raw, pre-normalization inputs
+        so a replay through :meth:`insert` reproduces bit-identical state;
+      * ``log_delete(ids)`` — same contract for deletes;
+      * ``on_compact(seg)`` — called after :meth:`compact` swaps the base.
+    """
+
     def __init__(self, base: IMIIndex, *, max_segments: int = 4,
-                 segment_capacity: int = 65_536):
+                 segment_capacity: int = 65_536,
+                 persistence: Optional[Any] = None):
         self.base = base
         self.segments: list[DeltaSegment] = []
         self.max_segments = max_segments
         self.segment_capacity = segment_capacity
+        self.persistence = persistence
         self.tombstones: set[int] = set()
         # training-time residual energy baseline for drift monitoring
         rec = pqmod.pq_decode(base.pq, base.codes)
@@ -71,7 +85,11 @@ class SegmentedIndex:
     # -- writes ---------------------------------------------------------------
     def insert(self, x: jax.Array, ids: np.ndarray) -> None:
         """Quantize new vectors against the frozen codebooks; append."""
-        x = pqmod.normalize(jnp.asarray(x, jnp.float32))
+        x_raw = np.ascontiguousarray(np.asarray(x), np.float32)
+        ids = np.ascontiguousarray(ids, imimod.ID_DTYPE).reshape(-1)
+        if self.persistence is not None:
+            self.persistence.log_insert(x_raw, ids)
+        x = pqmod.normalize(jnp.asarray(x_raw))
         cell, a1, a2 = imimod.assign_cells(self.base.coarse1,
                                            self.base.coarse2, x)
         resid = x - imimod.coarse_reconstruct(self.base.coarse1,
@@ -81,48 +99,79 @@ class SegmentedIndex:
         energy = float(jnp.mean(jnp.sum(jnp.square(rec - resid), axis=-1)))
         seg = DeltaSegment(codes=np.asarray(codes),
                            vectors=np.asarray(x),
-                           ids=np.asarray(ids, np.int64),
+                           ids=ids,
                            cell_of=np.asarray(cell, np.int32),
                            resid_energy=energy)
         if self.segments and (len(self.segments[-1].ids) + len(seg.ids)
                               <= self.segment_capacity):
             last = self.segments[-1]
+            n_last, n_new = len(last.ids), len(seg.ids)
             self.segments[-1] = DeltaSegment(
                 codes=np.concatenate([last.codes, seg.codes]),
                 vectors=np.concatenate([last.vectors, seg.vectors]),
                 ids=np.concatenate([last.ids, seg.ids]),
                 cell_of=np.concatenate([last.cell_of, seg.cell_of]),
-                resid_energy=(last.resid_energy + energy) / 2)
+                # row-weighted mean: a tiny append must not halve/shift the
+                # segment's residual-energy estimate (drift_score input)
+                resid_energy=(last.resid_energy * n_last + energy * n_new)
+                / (n_last + n_new))
         else:
             self.segments.append(seg)
         if len(self.segments) > self.max_segments:
             self.compact()
 
     def delete(self, ids) -> None:
-        self.tombstones.update(int(i) for i in np.asarray(ids).ravel())
+        ids = np.ascontiguousarray(ids, imimod.ID_DTYPE).reshape(-1)
+        if self.persistence is not None:
+            self.persistence.log_delete(ids)
+        # build first, then one C-level (atomic under the GIL) update so
+        # concurrent readers never observe a mid-iteration resize
+        self.tombstones.update({int(i) for i in ids})
 
     def drift_score(self) -> float:
         """>1 means recent inserts quantize worse than training data."""
         if not self.segments:
             return 1.0
-        recent = np.mean([s.resid_energy for s in self.segments])
+        rows = np.asarray([len(s.ids) for s in self.segments], np.float64)
+        energies = np.asarray([s.resid_energy for s in self.segments])
+        recent = float((energies * rows).sum() / max(rows.sum(), 1.0))
         return float(recent / max(self._train_resid, 1e-12))
 
     # -- reads ----------------------------------------------------------------
     def search(self, q: jax.Array, cfg: anns.SearchConfig) -> dict:
-        """Base probe search + brute scan of the (small) deltas; merged."""
-        res = anns.search(self.base, q, cfg)
+        """Base probe search + brute scan of the (small) deltas; merged.
+
+        Safe to call from reader threads concurrent with the single writer:
+        segments/tombstones are snapshotted with C-level copies (atomic
+        under the GIL), so a racing insert/delete is either fully visible
+        or not yet — never a torn view.
+        """
+        segments = list(self.segments)
+        tombstones = set(self.tombstones)
+        base_cfg = cfg
+        if tombstones:
+            # over-fetch: tombstones are filtered post-hoc, so a top_k base
+            # fetch could shrink below cfg.top_k after filtering.  Rounded up
+            # to a power of two (cfg is jit-static: each distinct top_k is a
+            # recompile) and bounded by the candidate pool the probe stage
+            # actually materializes.
+            pool = cfg.top_a * cfg.max_cell_size
+            extra = 1 << (len(tombstones) - 1).bit_length()
+            top_k = min(cfg.top_k + extra, pool)
+            if top_k != cfg.top_k:
+                base_cfg = dataclasses.replace(cfg, top_k=top_k)
+        res = anns.search(self.base, q, base_cfg)
         ids = np.asarray(res["ids"])
         scores = np.asarray(res["scores"])
         qn = np.asarray(pqmod.normalize(jnp.asarray(q, jnp.float32)))
-        for seg in self.segments:
+        for seg in segments:
             if not len(seg.ids):
                 continue
             s = seg.vectors @ qn
             ids = np.concatenate([ids, seg.ids])
             scores = np.concatenate([scores, s])
-        if self.tombstones:
-            keep = ~np.isin(ids, np.fromiter(self.tombstones, np.int64))
+        if tombstones:
+            keep = ~np.isin(ids, np.fromiter(tombstones, imimod.ID_DTYPE))
             ids, scores = ids[keep], scores[keep]
         order = np.argsort(-scores)[: cfg.top_k]
         return {"ids": ids[order], "scores": scores[order]}
@@ -139,12 +188,12 @@ class SegmentedIndex:
         vectors = np.concatenate(
             [np.asarray(base.vectors, np.float32).astype(np.float32)]
             + [s.vectors for s in self.segments])
-        ids = np.concatenate([np.asarray(base.ids, np.int64)]
+        ids = np.concatenate([np.asarray(base.ids, imimod.ID_DTYPE)]
                              + [s.ids for s in self.segments])
         cells = np.concatenate([np.asarray(base.cell_of)]
                                + [s.cell_of for s in self.segments])
         if self.tombstones:
-            keep = ~np.isin(ids, np.fromiter(self.tombstones, np.int64))
+            keep = ~np.isin(ids, np.fromiter(self.tombstones, imimod.ID_DTYPE))
             codes, vectors, ids, cells = (codes[keep], vectors[keep],
                                           ids[keep], cells[keep])
             self.tombstones.clear()
@@ -156,8 +205,10 @@ class SegmentedIndex:
             coarse1=base.coarse1, coarse2=base.coarse2, pq=base.pq,
             codes=jnp.asarray(codes[order]),
             vectors=jnp.asarray(vectors[order], jnp.bfloat16),
-            ids=jnp.asarray(ids[order], jnp.int32),
+            ids=jnp.asarray(ids[order], imimod.ID_DTYPE),
             cell_of=jnp.asarray(cells[order], jnp.int32),
             cell_offsets=jnp.asarray(offsets),
         )
         self.segments = []
+        if self.persistence is not None:
+            self.persistence.on_compact(self)

@@ -95,3 +95,20 @@ def build_from_videos(rng: jax.Array, videos: Sequence[Video],
     return BuiltIndex(index=index, metadata=meta, keyframes=frames,
                       keyframe_video=kf_video, keyframe_frame=kf_frame,
                       patches_per_frame=Kp)
+
+
+def save_built(path, built: BuiltIndex, *, meta: dict | None = None) -> None:
+    """Persist a build (index + keyframes + metadata side-table) as a
+    ``repro.store.VectorStore`` directory — the one-time-extraction artifact
+    that makes restarts and replica joins cheap (DESIGN.md §4)."""
+    from repro.store import VectorStore
+    VectorStore.create(path, built, meta=meta).close()
+
+
+def load_built(path, *, verify: bool = True) -> BuiltIndex:
+    """Reopen a persisted build without re-encoding video or re-training
+    codebooks; outstanding WAL/deltas are folded so the returned index is
+    the complete current state."""
+    from repro.store import VectorStore
+    with VectorStore.open(path, verify=verify) as store:
+        return store.to_built_index()

@@ -2,8 +2,14 @@
 batched text queries through the full two-stage pipeline.
 
   PYTHONPATH=src python -m repro.launch.serve --videos 6 --queries 8
+  PYTHONPATH=src python -m repro.launch.serve --store-dir /tmp/lovo-store
 
-Exercises the real serving substrate: index build (keyframes -> ViT -> IMI),
+With ``--store-dir``: the first launch builds (keyframes -> ViT -> k-means
+-> IMI) and persists the result as a ``repro.store.VectorStore``; every
+later launch REOPENS it — no encoding, no codebook training — and reports
+store-open time separately from (and far below) the recorded build time.
+
+Exercises the real serving substrate: index build or store reopen,
 MicroBatcher for query batching, HedgedExecutor for straggler mitigation,
 and the two-stage QueryEngine.
 """
@@ -19,8 +25,13 @@ import numpy as np
 def build_engine(*, seed: int = 0, n_videos: int = 6, res: int = 96,
                  vit_layers: int = 2, d_model: int = 64,
                  imi_k: int = 8, pq_p: int = 8, pq_m: int = 32,
-                 rerank_layers: int = 2, trained_params: dict | None = None):
-    """Small-but-real engine (CPU-sized encoders, full pipeline)."""
+                 rerank_layers: int = 2, trained_params: dict | None = None,
+                 built=None):
+    """Small-but-real engine (CPU-sized encoders, full pipeline).
+
+    ``built``: a prebuilt ``BuiltIndex`` (e.g. from ``load_built``) skips the
+    encode + k-means build entirely — the store-reopen path.
+    """
     from repro.core import anns
     from repro.core.index_builder import build_from_videos
     from repro.core.query import QueryEngine
@@ -51,8 +62,9 @@ def build_engine(*, seed: int = 0, n_videos: int = 6, res: int = 96,
         rer_p = RR.init_rerank(r3, rcfg)[0]
 
     videos = make_dataset(seed, n_videos=n_videos, res=res)
-    built = build_from_videos(r4, videos, vit_p, vcfg,
-                              K=imi_k, P=pq_p, M=pq_m)
+    if built is None:
+        built = build_from_videos(r4, videos, vit_p, vcfg,
+                                  K=imi_k, P=pq_p, M=pq_m)
     engine = QueryEngine(
         built, text_params=txt_p, text_cfg=tcfg, vit_params=vit_p,
         vit_cfg=vcfg, rerank_params=rer_p, rerank_cfg=rcfg,
@@ -66,15 +78,47 @@ def main() -> None:
     ap.add_argument("--videos", type=int, default=6)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--hedge", action="store_true")
+    ap.add_argument("--store-dir", default=None,
+                    help="persist/reopen the index as a VectorStore here; "
+                         "a second launch skips the build entirely")
     args = ap.parse_args()
 
     from repro.serving.batcher import HedgedExecutor, MicroBatcher
 
+    built = None
+    open_s = None
+    if args.store_dir:
+        from repro.store import manifest as storemanifest
+        if storemanifest.exists(args.store_dir):
+            from repro.core.index_builder import load_built
+            t0 = time.perf_counter()
+            built = load_built(args.store_dir)
+            open_s = time.perf_counter() - t0
+
     t0 = time.perf_counter()
-    engine, videos = build_engine(n_videos=args.videos)
-    print(f"index built: {engine.built.index.n} vectors from "
-          f"{len(engine.built.keyframes)} key frames "
-          f"({time.perf_counter()-t0:.1f}s)")
+    engine, videos = build_engine(n_videos=args.videos, built=built)
+    wall = time.perf_counter() - t0
+
+    if built is not None:
+        from repro.store import manifest as storemanifest
+        meta = storemanifest.read_manifest(args.store_dir).get("meta", {})
+        first_build = meta.get("build_seconds")
+        vs = f" (first launch built in {first_build:.1f}s)" if first_build \
+            else ""
+        print(f"store reopened: {engine.built.index.n} vectors from "
+              f"{len(engine.built.keyframes)} key frames — "
+              f"open {open_s:.2f}s{vs}, no re-encode / no k-means")
+    else:
+        print(f"index built: {engine.built.index.n} vectors from "
+              f"{len(engine.built.keyframes)} key frames "
+              f"({wall:.1f}s)")
+        if args.store_dir:
+            from repro.core.index_builder import save_built
+            t0 = time.perf_counter()
+            save_built(args.store_dir, engine.built,
+                       meta={"build_seconds": wall})
+            print(f"store created at {args.store_dir} "
+                  f"({time.perf_counter()-t0:.2f}s); next launch reopens it")
 
     queries = ["a large red square", "a small blue circle",
                "a medium green triangle", "a white bar in the center",

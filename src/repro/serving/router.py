@@ -9,12 +9,14 @@ shard once and can answer any query; the router
   * retires replicas on failure and restores them on recovery (health
     callbacks), rejecting only when NO replica is healthy,
   * hedges stragglers through serving.batcher.HedgedExecutor,
-  * supports elastic scale-out: `add_replica()` at runtime (new pods join
-    by restoring the sharded index from the checkpoint store).
+  * supports elastic scale-out: `add_replica()` at runtime, and
+    `add_replica_from_store()` — a new pod joins by reopening a persisted
+    `repro.store.VectorStore` (mmap segments + WAL replay, no rebuild).
 
 Replicas are callables (in production: per-pod jitted search fns behind an
-RPC stub; in tests: functions).  Pure host-side logic — deliberately free of
-jax so it can front any backend.
+RPC stub; in tests: functions).  Pure host-side logic — the module imports
+no jax; `add_replica_from_store` pulls the store in lazily so the router
+can still front any backend.
 """
 from __future__ import annotations
 
@@ -57,6 +59,24 @@ class QueryRouter:
     def add_replica(self, name: str, fn: Callable[[Any], Any]) -> None:
         with self._lock:
             self._replicas[name] = Replica(name=name, fn=fn)
+
+    def add_replica_from_store(self, name: str, store_dir: str, *,
+                               search_cfg: Any = None,
+                               verify: bool = False) -> Any:
+        """Elastic join: restore a replica's search fn from a persisted
+        ``VectorStore`` (open = mmap + WAL replay; no encode, no k-means).
+
+        Returns the opened store so the caller can keep feeding it inserts.
+        ``verify=False`` by default — joining pods favor open latency and
+        trust the medium; pass True to checksum every segment first.
+        """
+        from repro.core import anns
+        from repro.store import VectorStore
+
+        store = VectorStore.open(store_dir, verify=verify)
+        cfg = search_cfg or anns.SearchConfig()
+        self.add_replica(name, lambda q: store.search(q, cfg))
+        return store
 
     def remove_replica(self, name: str) -> None:
         with self._lock:

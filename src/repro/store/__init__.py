@@ -1,0 +1,11 @@
+"""repro.store — persistent segment-based vector store backing the LOVO index.
+
+The durability layer the paper assumes ("embeddings organized in an inverted
+multi-index structure within a vector database"): immutable mmap-able
+segments + an append-only WAL + an atomic manifest, composed by the
+``VectorStore`` facade.  See DESIGN.md §4 for the on-disk format and §5 for
+the crash-consistency guarantees.
+"""
+from repro.store.store import VectorStore, StoreError
+
+__all__ = ["VectorStore", "StoreError"]

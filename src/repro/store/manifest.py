@@ -1,0 +1,72 @@
+"""Atomic store manifest — the single source of truth for what is live.
+
+``MANIFEST.json`` names the live base segment, the ordered delta segments,
+the codebook blob, the tombstone set, and ``last_seq`` (the highest WAL
+sequence number already folded into the named segments).  It is replaced
+atomically (write tmp, fsync, ``os.replace``, fsync dir), so a reader —
+including a crash-recovering writer — always observes either the old or the
+new store state, never a mix.  Everything not reachable from the manifest
+is garbage and may be pruned.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any
+
+MANIFEST = "MANIFEST.json"
+VERSION = 1
+
+
+class ManifestError(RuntimeError):
+    pass
+
+
+def new_manifest(*, base: str, codebooks: str, meta: dict[str, Any]) -> dict:
+    return {
+        "version": VERSION,
+        "base": base,              # segment dir name under segments/
+        "deltas": [],              # ordered delta segment dir names
+        "codebooks": codebooks,    # npz file name under the store root
+        "tombstones": [],          # flushed deleted ids (int)
+        "last_seq": 0,             # WAL records with seq <= this are folded
+        "next_segment_id": 2,      # monotone counter for segment names
+        "meta": meta,              # sidecar/meta: patches_per_frame, ...
+    }
+
+
+def read_manifest(root: str | pathlib.Path) -> dict:
+    path = pathlib.Path(root) / MANIFEST
+    if not path.exists():
+        raise ManifestError(f"no {MANIFEST} under {root}")
+    m = json.loads(path.read_text())
+    if m.get("version") != VERSION:
+        raise ManifestError(f"manifest version {m.get('version')} != {VERSION}")
+    return m
+
+
+def exists(root: str | pathlib.Path) -> bool:
+    return (pathlib.Path(root) / MANIFEST).exists()
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_manifest(root: str | pathlib.Path, m: dict) -> None:
+    root = pathlib.Path(root)
+    tmp = root / (MANIFEST + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(m, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, root / MANIFEST)
+    _fsync_dir(root)

@@ -1,0 +1,117 @@
+"""Immutable on-disk segments — the store's leaf data unit.
+
+A segment is a directory of raw ``.npy`` files (one per named array) plus a
+``footer.json`` recording, per array, the logical dtype, storage dtype,
+shape, and a CRC-32 of the data bytes.  Segments are written once and never
+modified; readers open them with ``np.load(..., mmap_mode="r")`` so the OS
+page cache — not the Python heap — owns the bytes (zero-copy until a row is
+actually touched).
+
+bfloat16 has no stable ``.npy`` representation across numpy versions, so
+bf16 arrays are stored as their uint16 bit pattern with logical dtype
+``"bfloat16"`` in the footer; ``open_segment`` views them back — a metadata
+reinterpretation, not a copy, so round-trips are bit-exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import zlib
+from typing import Any, Mapping
+
+import ml_dtypes
+import numpy as np
+
+FOOTER = "footer.json"
+_CRC_CHUNK = 1 << 22  # rows per crc chunk (bounded memory on mmap reads)
+
+
+class SegmentCorrupt(RuntimeError):
+    """Checksum / footer mismatch — the segment must not be served."""
+
+
+def _crc32(a: np.ndarray) -> int:
+    flat = a.reshape(-1)
+    crc = 0
+    for i in range(0, flat.size, _CRC_CHUNK):
+        crc = zlib.crc32(flat[i: i + _CRC_CHUNK].tobytes(), crc)
+    return crc
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # platform without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_segment(seg_dir: str | pathlib.Path,
+                  arrays: Mapping[str, np.ndarray],
+                  extra: dict[str, Any] | None = None) -> None:
+    """Write ``arrays`` + footer to ``seg_dir`` (created; must not exist).
+
+    Files are fsynced before the footer is written, and the footer before
+    the directory entry is fsynced — a segment with a readable footer is
+    guaranteed complete.
+    """
+    seg_dir = pathlib.Path(seg_dir)
+    seg_dir.mkdir(parents=True, exist_ok=False)
+    footer: dict[str, Any] = {"version": 1, "arrays": {}, "extra": extra or {}}
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        logical = str(arr.dtype)
+        if arr.dtype == ml_dtypes.bfloat16:
+            arr = arr.view(np.uint16)
+        path = seg_dir / f"{name}.npy"
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        footer["arrays"][name] = {
+            "dtype": logical, "storage_dtype": str(arr.dtype),
+            "shape": list(arr.shape), "crc32": _crc32(arr),
+        }
+    fpath = seg_dir / FOOTER
+    with open(fpath, "w") as f:
+        json.dump(footer, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(seg_dir)
+
+
+def open_segment(seg_dir: str | pathlib.Path, *, mmap: bool = True,
+                 verify: bool = True
+                 ) -> tuple[dict[str, np.ndarray], dict[str, Any]]:
+    """Open a segment -> ({name: array}, extra).  Arrays are read-only
+    memmaps (``mmap=True``) with logical dtypes restored by view.
+
+    ``verify=True`` recomputes each array's CRC-32 against the footer and
+    raises :class:`SegmentCorrupt` on mismatch (this touches every page —
+    pass ``verify=False`` for latency-critical reopen paths that trust the
+    medium).
+    """
+    seg_dir = pathlib.Path(seg_dir)
+    fpath = seg_dir / FOOTER
+    if not fpath.exists():
+        raise SegmentCorrupt(f"segment {seg_dir} has no footer (incomplete?)")
+    footer = json.loads(fpath.read_text())
+    out: dict[str, np.ndarray] = {}
+    for name, meta in footer["arrays"].items():
+        arr = np.load(seg_dir / f"{name}.npy",
+                      mmap_mode="r" if mmap else None)
+        if str(arr.dtype) != meta["storage_dtype"] \
+                or list(arr.shape) != meta["shape"]:
+            raise SegmentCorrupt(
+                f"{seg_dir}/{name}: footer says {meta['storage_dtype']}"
+                f"{meta['shape']}, file has {arr.dtype}{list(arr.shape)}")
+        if verify and _crc32(arr) != meta["crc32"]:
+            raise SegmentCorrupt(f"{seg_dir}/{name}: CRC-32 mismatch")
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        out[name] = arr
+    return out, footer.get("extra", {})

@@ -1,0 +1,359 @@
+"""``VectorStore`` — the single-writer persistence facade for the LOVO index.
+
+Composition (LSM-flavored, DESIGN.md §4):
+
+    MANIFEST.json      atomic root: names everything live (manifest.py)
+    codebooks.npz      frozen coarse + PQ codebooks (trained once)
+    segments/seg-*/    immutable mmap segments: one base + ordered deltas
+    sidecar segment    keyframes + metadata side-table (BuiltIndex extras)
+    wal.log            fsync-on-commit WAL of raw inserts/deletes (wal.py)
+
+The in-memory view is ``repro.core.incremental.SegmentedIndex``; the store
+registers itself as that view's persistence hook, so EVERY mutation —
+including auto-compaction triggered deep inside ``insert`` — is durably
+logged (WAL-first) or persisted (segment swap) without callers having to
+know the store exists.  ``to_segmented_index`` / ``to_built_index`` hand
+jax arrays back to the unchanged search path.
+
+Write path:  insert/delete -> WAL append+fsync -> apply to view
+             (WAL rows >= flush_rows) -> flush(): rewrite delta segments,
+             swap manifest, reset WAL
+             compact() -> view folds deltas -> rewrite base, swap manifest
+Open path:   manifest -> codebooks -> base (mmap) -> deltas (mmap)
+             -> WAL replay of records with seq > manifest.last_seq
+Crash safety: see DESIGN.md §5 — the manifest swap is the commit point;
+WAL replay is idempotent via per-record sequence numbers.
+"""
+from __future__ import annotations
+
+import pathlib
+import shutil
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imi as imimod
+from repro.core.imi import IMIIndex
+from repro.core.incremental import DeltaSegment, SegmentedIndex
+from repro.core.pq import PQ
+from repro.store import manifest as manifestmod
+from repro.store import segment as segmentmod
+from repro.store import wal as walmod
+
+CODEBOOKS = "codebooks.npz"
+WAL_FILE = "wal.log"
+SEGMENTS_DIR = "segments"
+SIDECAR = "sidecar"
+
+
+class StoreError(RuntimeError):
+    pass
+
+
+def _base_arrays(index: IMIIndex) -> dict[str, np.ndarray]:
+    return {
+        "codes": np.asarray(index.codes),
+        "vectors": np.asarray(index.vectors),        # bf16 -> uint16 bits
+        "ids": np.asarray(index.ids, imimod.ID_DTYPE),
+        "cells": np.asarray(index.cell_of, np.int32),
+        "offsets": np.asarray(index.cell_offsets, np.int32),
+    }
+
+
+class VectorStore:
+    """Single-writer persistent vector store.  Use :meth:`create` /
+    :meth:`open`, not the constructor."""
+
+    def __init__(self, root: str | pathlib.Path, *, fsync: bool = True,
+                 flush_rows: int = 4096):
+        self.root = pathlib.Path(root)
+        self.fsync = fsync
+        self.flush_rows = flush_rows
+        self.seg: SegmentedIndex = None  # type: ignore[assignment]
+        self.manifest: dict = {}
+        self.wal: walmod.WriteAheadLog = None  # type: ignore[assignment]
+        self._sidecar: Optional[dict[str, np.ndarray]] = None
+        self._sidecar_extra: dict[str, Any] = {}
+        self._seq = 0
+        self._wal_rows = 0
+        self._replaying = False
+        self._needs_base_rewrite = False
+        # (name, rows) of each on-disk delta, position-aligned with
+        # seg.segments: deltas are append-only and only the last one grows,
+        # so same index + same rowcount == unchanged == reusable on flush
+        self._delta_names: list[tuple[str, int]] = []
+
+    # -- lifecycle ------------------------------------------------------------
+    @classmethod
+    def create(cls, root: str | pathlib.Path, built: Any, *,
+               max_segments: int = 4, segment_capacity: int = 65_536,
+               flush_rows: int = 4096, fsync: bool = True,
+               meta: Optional[dict] = None) -> "VectorStore":
+        """Persist ``built`` (a ``BuiltIndex`` or bare ``IMIIndex``) into a
+        fresh store directory and return the open store."""
+        from repro.core.index_builder import BuiltIndex  # avoid import cycle
+
+        root = pathlib.Path(root)
+        if manifestmod.exists(root):
+            raise StoreError(f"store already exists at {root}")
+        # no manifest == nothing here is live; clear leftovers from a crash
+        # mid-create so retries don't trip over half-written segment dirs
+        for leftover in (root / SEGMENTS_DIR, root / SIDECAR):
+            shutil.rmtree(leftover, ignore_errors=True)
+        (root / WAL_FILE).unlink(missing_ok=True)
+        (root / SEGMENTS_DIR).mkdir(parents=True, exist_ok=True)
+
+        index = built.index if isinstance(built, BuiltIndex) else built
+        if not isinstance(index, IMIIndex):
+            raise StoreError(f"cannot create a store from {type(built)}")
+
+        np.savez(root / CODEBOOKS,
+                 coarse1=np.asarray(index.coarse1, np.float32),
+                 coarse2=np.asarray(index.coarse2, np.float32),
+                 pq=np.asarray(index.pq.centroids, np.float32))
+        base_name = "seg-000001"
+        segmentmod.write_segment(root / SEGMENTS_DIR / base_name,
+                                 _base_arrays(index), {"kind": "base"})
+
+        m = manifestmod.new_manifest(base=base_name, codebooks=CODEBOOKS,
+                                     meta=dict(meta or {}))
+        m["meta"].update({"max_segments": max_segments,
+                          "segment_capacity": segment_capacity,
+                          "id_dtype": np.dtype(imimod.ID_DTYPE).name,
+                          "has_sidecar": isinstance(built, BuiltIndex)})
+        store = cls(root, fsync=fsync, flush_rows=flush_rows)
+        if isinstance(built, BuiltIndex):
+            m["meta"]["patches_per_frame"] = int(built.patches_per_frame)
+            segmentmod.write_segment(root / SIDECAR, {
+                "keyframes": np.asarray(built.keyframes),
+                "video_of": np.asarray(built.metadata.video_of, np.int32),
+                "frame_of": np.asarray(built.metadata.frame_of, np.int32),
+                "bbox_of": np.asarray(built.metadata.bbox_of, np.float32),
+                "kf_video": np.asarray(built.keyframe_video, np.int32),
+                "kf_frame": np.asarray(built.keyframe_frame, np.int32),
+            }, {"kind": "sidecar",
+                "patches_per_frame": int(built.patches_per_frame)})
+        manifestmod.write_manifest(root, m)
+        store.manifest = m
+        store.wal = walmod.WriteAheadLog.open(root / WAL_FILE, fsync=fsync)
+        store.seg = SegmentedIndex(index, max_segments=max_segments,
+                                   segment_capacity=segment_capacity,
+                                   persistence=store)
+        return store
+
+    @classmethod
+    def open(cls, root: str | pathlib.Path, *, verify: bool = True,
+             fsync: bool = True, flush_rows: int = 4096) -> "VectorStore":
+        """Crash-consistent open: manifest -> segments (mmap) -> WAL replay."""
+        root = pathlib.Path(root)
+        m = manifestmod.read_manifest(root)
+        store = cls(root, fsync=fsync, flush_rows=flush_rows)
+        store.manifest = m
+
+        cb = np.load(root / m["codebooks"])
+        base_arrays, _ = segmentmod.open_segment(
+            root / SEGMENTS_DIR / m["base"], verify=verify)
+        base = IMIIndex(
+            coarse1=jnp.asarray(cb["coarse1"]),
+            coarse2=jnp.asarray(cb["coarse2"]),
+            pq=PQ(centroids=jnp.asarray(cb["pq"])),
+            codes=jnp.asarray(base_arrays["codes"]),
+            vectors=jnp.asarray(base_arrays["vectors"]),
+            ids=jnp.asarray(base_arrays["ids"]),
+            cell_of=jnp.asarray(base_arrays["cells"]),
+            cell_offsets=jnp.asarray(base_arrays["offsets"]),
+        )
+        meta = m.get("meta", {})
+        store.seg = SegmentedIndex(
+            base, max_segments=int(meta.get("max_segments", 4)),
+            segment_capacity=int(meta.get("segment_capacity", 65_536)),
+            persistence=store)
+        for name in m["deltas"]:
+            arrays, extra = segmentmod.open_segment(
+                root / SEGMENTS_DIR / name, verify=verify)
+            store.seg.segments.append(DeltaSegment(
+                codes=arrays["codes"], vectors=arrays["vectors"],
+                ids=arrays["ids"], cell_of=arrays["cells"],
+                resid_energy=float(extra.get("resid_energy", 0.0))))
+            store._delta_names.append((name, len(arrays["ids"])))
+        store.seg.tombstones = set(int(i) for i in m["tombstones"])
+
+        scan = walmod.scan(root / WAL_FILE)
+        store.wal = walmod.WriteAheadLog.open(
+            root / WAL_FILE, fsync=fsync,
+            truncate_at=scan.good_end if scan.damaged_tail else None)
+        store._seq = int(m["last_seq"])
+        store._replaying = True
+        try:
+            for rec in scan.records:
+                if rec.seq <= int(m["last_seq"]):
+                    continue  # already folded into the segments we loaded
+                if rec.kind == walmod.KIND_INSERT:
+                    store.seg.insert(rec.vectors, rec.ids)
+                    store._wal_rows += len(rec.ids)
+                else:
+                    store.seg.delete(rec.ids)
+                    store._wal_rows += len(rec.ids)
+                store._seq = max(store._seq, rec.seq)
+        finally:
+            store._replaying = False
+        if store._sidecar is None and meta.get("has_sidecar"):
+            store._sidecar, store._sidecar_extra = segmentmod.open_segment(
+                root / SIDECAR, verify=verify)
+        return store
+
+    def close(self) -> None:
+        if self.wal is not None:
+            self.wal.close()
+
+    def __enter__(self) -> "VectorStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- persistence hook (called by SegmentedIndex) --------------------------
+    def log_insert(self, vectors: np.ndarray, ids: np.ndarray) -> None:
+        if self._replaying:
+            return
+        self._seq += 1
+        self.wal.append_insert(self._seq, vectors, ids)
+        self._wal_rows += len(ids)
+
+    def log_delete(self, ids: np.ndarray) -> None:
+        if self._replaying:
+            return
+        self._seq += 1
+        self.wal.append_delete(self._seq, ids)
+        self._wal_rows += len(ids)
+
+    def on_compact(self, seg: SegmentedIndex) -> None:
+        if self._replaying:
+            # compaction during WAL replay must not touch disk: the tail of
+            # the WAL is still unapplied and resetting it would lose records.
+            self._needs_base_rewrite = True
+            self._delta_names = []  # the on-disk deltas were folded away
+            return
+        self._checkpoint(rewrite_base=True)
+
+    # -- writes ---------------------------------------------------------------
+    def insert(self, x, ids) -> None:
+        self.seg.insert(x, ids)
+        if self._wal_rows >= self.flush_rows:
+            self.flush()
+
+    def delete(self, ids) -> None:
+        self.seg.delete(ids)
+        if self._wal_rows >= self.flush_rows:
+            self.flush()
+
+    def compact(self) -> None:
+        self.seg.compact()          # fires on_compact -> _checkpoint
+        if self._needs_base_rewrite:  # compact() no-oped after replay-compact
+            self._checkpoint(rewrite_base=True)
+
+    def flush(self) -> None:
+        """Fold the WAL into on-disk segments and reset it.  Rewrites the
+        base too if a compaction happened during replay and is still
+        un-persisted."""
+        self._checkpoint(rewrite_base=self._needs_base_rewrite)
+
+    def _checkpoint(self, *, rewrite_base: bool) -> None:
+        """Make the manifest-reachable state equal the in-memory state:
+        (optionally) a fresh base segment, ALL current delta segments
+        (unchanged ones keep their on-disk name — deltas are append-only,
+        so same position + same rowcount means same bytes), tombstones,
+        and last_seq; then reset the WAL and prune dead segment dirs."""
+        m = dict(self.manifest)
+        if rewrite_base:
+            name = f"seg-{m['next_segment_id']:06d}"
+            m["next_segment_id"] += 1
+            segmentmod.write_segment(self.root / SEGMENTS_DIR / name,
+                                     _base_arrays(self.seg.base),
+                                     {"kind": "base"})
+            m["base"] = name
+        names = []
+        for i, delta in enumerate(self.seg.segments):
+            if i < len(self._delta_names) \
+                    and self._delta_names[i][1] == len(delta.ids):
+                names.append(self._delta_names[i][0])
+                continue
+            name = f"seg-{m['next_segment_id']:06d}"
+            m["next_segment_id"] += 1
+            segmentmod.write_segment(
+                self.root / SEGMENTS_DIR / name,
+                {"codes": np.ascontiguousarray(delta.codes),
+                 "vectors": np.ascontiguousarray(delta.vectors, np.float32),
+                 "ids": np.ascontiguousarray(delta.ids, imimod.ID_DTYPE),
+                 "cells": np.ascontiguousarray(delta.cell_of, np.int32)},
+                {"kind": "delta", "resid_energy": float(delta.resid_energy)})
+            names.append(name)
+        m["deltas"] = names
+        m["tombstones"] = sorted(self.seg.tombstones)
+        m["last_seq"] = self._seq
+        manifestmod.write_manifest(self.root, m)   # <- commit point
+        self.manifest = m
+        self._delta_names = [(n, len(s.ids))
+                             for n, s in zip(names, self.seg.segments)]
+        self.wal.reset()
+        self._wal_rows = 0
+        self._needs_base_rewrite = False
+        self._prune_segments()
+
+    def _prune_segments(self) -> None:
+        live = {self.manifest["base"], *self.manifest["deltas"]}
+        seg_root = self.root / SEGMENTS_DIR
+        for p in seg_root.iterdir():
+            if p.is_dir() and p.name not in live:
+                shutil.rmtree(p, ignore_errors=True)
+
+    # -- reads / bridges ------------------------------------------------------
+    def search(self, q, cfg) -> dict:
+        return self.seg.search(q, cfg)
+
+    @property
+    def n(self) -> int:
+        return self.seg.n
+
+    def to_segmented_index(self) -> SegmentedIndex:
+        """The live in-memory view (base + deltas), persistence attached."""
+        return self.seg
+
+    def to_built_index(self):
+        """Reassemble a ``BuiltIndex`` (index + keyframes + metadata).
+
+        Outstanding deltas/tombstones are folded (and persisted) first so
+        the returned index is the complete current state.
+        """
+        from repro.core.index_builder import BuiltIndex, MetadataStore
+
+        if self._sidecar is None:
+            raise StoreError(
+                "store has no sidecar (created from a bare IMIIndex); "
+                "use to_segmented_index() instead")
+        if self.seg.segments or self.seg.tombstones:
+            self.compact()
+        sc = self._sidecar
+        ids = np.asarray(self.seg.base.ids)
+        if ids.size and int(ids.max()) >= len(sc["video_of"]):
+            # inserted rows carry ids with no sidecar row; a BuiltIndex
+            # lookup would index past the metadata arrays (or silently
+            # mis-attribute) — fail loudly instead
+            raise StoreError(
+                "index contains inserted ids beyond the sidecar metadata; "
+                "use to_segmented_index() (metadata-free search) or extend "
+                "the sidecar before exporting a BuiltIndex")
+        kp = int(self._sidecar_extra.get(
+            "patches_per_frame",
+            self.manifest.get("meta", {}).get("patches_per_frame", 1)))
+        return BuiltIndex(
+            index=self.seg.base,
+            metadata=MetadataStore(video_of=sc["video_of"],
+                                   frame_of=sc["frame_of"],
+                                   bbox_of=sc["bbox_of"]),
+            keyframes=sc["keyframes"],
+            keyframe_video=sc["kf_video"],
+            keyframe_frame=sc["kf_frame"],
+            patches_per_frame=kp,
+        )

@@ -1,0 +1,186 @@
+"""Append-only write-ahead log for streaming inserts/deletes.
+
+Framing (little-endian, see DESIGN.md §4.2)::
+
+    file   := magic "LVWL" | u32 version | record*
+    record := u32 body_len | u32 crc32(body) | body
+    body   := u64 seq | u8 kind | payload
+    INSERT (kind=1) payload := u32 n | u32 d | ids int32[n] | vectors f32[n,d]
+    DELETE (kind=2) payload := u32 n | ids int32[n]
+
+``seq`` increases monotonically across the store's lifetime; the manifest
+records the highest seq already folded into on-disk segments, so replay
+after a crash between segment-flush and WAL-truncate is idempotent.
+
+Durability: ``append_*`` writes then ``flush + fsync`` before returning
+("fsync on commit").  ``scan`` tolerates a truncated tail — a crash mid-
+append loses at most the record being written, never earlier ones — and
+reports the byte offset of the last good record so the caller can trim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+import struct
+import zlib
+from typing import Iterator, Optional
+
+import numpy as np
+
+MAGIC = b"LVWL"
+VERSION = 1
+_HDR = struct.Struct("<II")      # body_len, crc32
+_BODY = struct.Struct("<QB")     # seq, kind
+KIND_INSERT, KIND_DELETE = 1, 2
+ID_DTYPE = np.int32              # matches repro.core.imi.ID_DTYPE
+
+
+@dataclasses.dataclass
+class WalRecord:
+    seq: int
+    kind: int
+    ids: np.ndarray                       # (n,) int32
+    vectors: Optional[np.ndarray] = None  # (n, d) f32 for INSERT
+
+
+@dataclasses.dataclass
+class ScanResult:
+    records: list[WalRecord]
+    good_end: int        # byte offset just past the last intact record
+    damaged_tail: bool   # True if trailing bytes failed length/CRC checks
+
+
+def _encode_insert(seq: int, vectors: np.ndarray, ids: np.ndarray) -> bytes:
+    vectors = np.ascontiguousarray(vectors, np.float32)
+    ids = np.ascontiguousarray(ids, ID_DTYPE)
+    n, d = vectors.shape
+    return (_BODY.pack(seq, KIND_INSERT) + struct.pack("<II", n, d)
+            + ids.tobytes() + vectors.tobytes())
+
+
+def _encode_delete(seq: int, ids: np.ndarray) -> bytes:
+    ids = np.ascontiguousarray(ids, ID_DTYPE).reshape(-1)
+    return (_BODY.pack(seq, KIND_DELETE) + struct.pack("<I", ids.size)
+            + ids.tobytes())
+
+
+def _decode(body: bytes) -> WalRecord:
+    seq, kind = _BODY.unpack_from(body, 0)
+    off = _BODY.size
+    if kind == KIND_INSERT:
+        n, d = struct.unpack_from("<II", body, off)
+        off += 8
+        ids = np.frombuffer(body, ID_DTYPE, count=n, offset=off).copy()
+        off += n * 4
+        vecs = np.frombuffer(body, np.float32, count=n * d,
+                             offset=off).reshape(n, d).copy()
+        return WalRecord(seq=seq, kind=kind, ids=ids, vectors=vecs)
+    if kind == KIND_DELETE:
+        (n,) = struct.unpack_from("<I", body, off)
+        ids = np.frombuffer(body, ID_DTYPE, count=n, offset=off + 4).copy()
+        return WalRecord(seq=seq, kind=kind, ids=ids)
+    raise ValueError(f"unknown WAL record kind {kind}")
+
+
+def scan(path: str | pathlib.Path) -> ScanResult:
+    """Read every intact record; stop (without raising) at a damaged tail."""
+    path = pathlib.Path(path)
+    records: list[WalRecord] = []
+    data = path.read_bytes() if path.exists() else b""
+    head = len(MAGIC) + 4
+    if len(data) < head or data[:4] != MAGIC:
+        return ScanResult(records=[], good_end=0,
+                          damaged_tail=bool(data))
+    off = head
+    while True:
+        if off + _HDR.size > len(data):
+            break
+        body_len, crc = _HDR.unpack_from(data, off)
+        body = data[off + _HDR.size: off + _HDR.size + body_len]
+        if len(body) < body_len or zlib.crc32(body) != crc:
+            break
+        try:
+            records.append(_decode(body))
+        except (ValueError, struct.error):
+            break
+        off += _HDR.size + body_len
+    return ScanResult(records=records, good_end=off,
+                      damaged_tail=off < len(data))
+
+
+class WriteAheadLog:
+    """Single-writer append handle.  Create/open with :meth:`open`."""
+
+    def __init__(self, path: str | pathlib.Path, *, fsync: bool = True):
+        self.path = pathlib.Path(path)
+        self.fsync = fsync
+        self._f = None  # type: ignore[assignment]
+
+    @classmethod
+    def open(cls, path: str | pathlib.Path, *, fsync: bool = True,
+             truncate_at: Optional[int] = None) -> "WriteAheadLog":
+        """Open for append, creating (with header) if absent.  If
+        ``truncate_at`` is given, trim a damaged tail first.
+
+        An existing file whose header is unreadable (crash between create
+        and header write, or truncation to < 8 bytes) holds no replayable
+        records, so it is rewritten fresh — appending after a broken header
+        would make every future record unreplayable."""
+        wal = cls(path, fsync=fsync)
+        head = len(MAGIC) + 4
+        exists = wal.path.exists()
+        header_ok = False
+        if exists:
+            with open(wal.path, "rb") as f:
+                header_ok = f.read(head)[:4] == MAGIC
+        if not exists or not header_ok \
+                or (truncate_at is not None and truncate_at < head):
+            with open(wal.path, "wb") as f:
+                f.write(MAGIC + struct.pack("<I", VERSION))
+                f.flush()
+                os.fsync(f.fileno())
+        elif truncate_at is not None:
+            with open(wal.path, "r+b") as f:
+                f.truncate(truncate_at)
+                f.flush()
+                os.fsync(f.fileno())
+        wal._f = open(wal.path, "ab")
+        return wal
+
+    def _commit(self, blob: bytes) -> None:
+        assert self._f is not None, "WAL is closed"
+        self._f.write(blob)
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def append_insert(self, seq: int, vectors: np.ndarray,
+                      ids: np.ndarray) -> None:
+        body = _encode_insert(seq, vectors, ids)
+        self._commit(_HDR.pack(len(body), zlib.crc32(body)) + body)
+
+    def append_delete(self, seq: int, ids: np.ndarray) -> None:
+        body = _encode_delete(seq, ids)
+        self._commit(_HDR.pack(len(body), zlib.crc32(body)) + body)
+
+    def reset(self) -> None:
+        """Drop all records (after they were folded into segments)."""
+        assert self._f is not None, "WAL is closed"
+        self._f.close()
+        with open(self.path, "wb") as f:
+            f.write(MAGIC + struct.pack("<I", VERSION))
+            f.flush()
+            os.fsync(f.fileno())
+        self._f = open(self.path, "ab")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "WriteAheadLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,4 +1,5 @@
 import os
+import pathlib
 
 # smoke tests and benches must see the REAL device count (1 CPU device);
 # only launch/dryrun.py forces 512 host devices.  Guard against leakage.
@@ -6,6 +7,102 @@ assert "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", ""), \
     "dryrun XLA_FLAGS leaked into the test environment"
 
+# pyproject's pythonpath=["src"] only patches sys.path of THIS process;
+# subprocess-based tests (test_distributed) need the env var too so plain
+# `pytest` works without an explicit PYTHONPATH=src.
+_SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if _SRC not in os.environ.get("PYTHONPATH", "").split(os.pathsep):
+    os.environ["PYTHONPATH"] = _SRC + (
+        os.pathsep + os.environ["PYTHONPATH"]
+        if os.environ.get("PYTHONPATH") else "")
+
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fallback: the property tests only use a tiny slice of the API
+# (given / settings / st.integers / st.floats / st.lists / st.data).  When
+# the real package is unavailable (hermetic container), install a minimal
+# deterministic stand-in so the property tests still run instead of erroring
+# at collection.  With hypothesis installed this block is a no-op.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import random
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo, hi, **kw):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _lists(elem, *, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem._draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _sampled_from(xs):
+        xs = list(xs)
+        return _Strategy(lambda rng: xs[rng.randrange(len(xs))])
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy._draw(self._rng)
+
+    _DATA = _Strategy(None)  # sentinel; materialized per-example in given()
+
+    def _data():
+        return _DATA
+
+    def _given(*strategies):
+        def deco(fn):
+            def run():
+                examples = getattr(run, "_max_examples", 10)
+                for ex in range(examples):
+                    rng = random.Random(0xC0FFEE + 7919 * ex)
+                    drawn = [(_Data(rng) if s is _DATA else s._draw(rng))
+                             for s in strategies]
+                    fn(*drawn)
+            # do NOT functools.wraps: pytest would introspect the wrapped
+            # signature and demand fixtures for the property arguments
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            return run
+        return deco
+
+    def _settings(max_examples=10, **kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    stub = types.ModuleType("hypothesis")
+    stub.given = _given
+    stub.settings = _settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = _integers
+    st_mod.floats = _floats
+    st_mod.lists = _lists
+    st_mod.sampled_from = _sampled_from
+    st_mod.booleans = _booleans
+    st_mod.data = _data
+    stub.strategies = st_mod
+    sys.modules["hypothesis"] = stub
+    sys.modules["hypothesis.strategies"] = st_mod

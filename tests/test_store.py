@@ -1,0 +1,327 @@
+"""repro.store: round-trip exactness, WAL crash recovery, compaction
+equivalence, corruption rejection, and the serve/router wiring."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anns, imi as imimod
+from repro.core.incremental import SegmentedIndex
+from repro.store import VectorStore, StoreError
+from repro.store import manifest as manifestmod
+from repro.store import segment as segmentmod
+from repro.store import wal as walmod
+
+CFG = anns.SearchConfig(top_a=16, max_cell_size=512, top_k=50)
+
+
+def _base(n=3000, d=32, seed=0):
+    cents = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, d))
+    a = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, 16)
+    x = cents[a] + 0.4 * jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                           (n, d))
+    idx = imimod.build_imi(jax.random.PRNGKey(seed), x, jnp.arange(n),
+                           K=8, P=4, M=32, kmeans_iters=5)
+    return idx, np.asarray(cents)
+
+
+@pytest.fixture(scope="module")
+def built():
+    return _base()
+
+
+def _same(r0, r1):
+    return (np.array_equal(np.asarray(r0["ids"]), np.asarray(r1["ids"]))
+            and np.array_equal(np.asarray(r0["scores"], np.float32),
+                               np.asarray(r1["scores"], np.float32)))
+
+
+def _mutate(target, cents, rng):
+    x = (cents[rng.integers(0, 16, 60)]
+         + 0.3 * rng.normal(0, 1, (60, 32))).astype(np.float32)
+    target.insert(x, np.arange(10_000, 10_060))
+    target.delete([10_005, 3])
+    return x
+
+
+# -- round-trip ---------------------------------------------------------------
+def test_create_open_bit_exact(built, tmp_path):
+    idx, cents = built
+    mem = SegmentedIndex(idx)
+    store = VectorStore.create(tmp_path / "s", idx)
+    try:
+        for qi in range(4):
+            assert _same(mem.search(cents[qi], CFG),
+                         store.search(cents[qi], CFG))
+    finally:
+        store.close()
+    with VectorStore.open(tmp_path / "s") as reopened:
+        for qi in range(4):
+            assert _same(mem.search(cents[qi], CFG),
+                         reopened.search(cents[qi], CFG))
+        # ids round-trip with the canonical dtype, exactly
+        assert np.asarray(reopened.seg.base.ids).dtype == imimod.ID_DTYPE
+        assert np.array_equal(np.asarray(reopened.seg.base.ids),
+                              np.asarray(idx.ids))
+
+
+def test_wal_replay_matches_memory(built, tmp_path):
+    idx, cents = built
+    mem = SegmentedIndex(idx)
+    rng = np.random.default_rng(0)
+    store = VectorStore.create(tmp_path / "s", idx)
+    _mutate(mem, cents, np.random.default_rng(0))
+    _mutate(store, cents, rng)
+    store.close()
+    # reopen WITHOUT flush/compact: state comes purely from WAL replay
+    with VectorStore.open(tmp_path / "s") as re:
+        assert re.seg.segments and re.seg.tombstones
+        for qi in range(4):
+            assert _same(mem.search(cents[qi], CFG),
+                         re.search(cents[qi], CFG))
+        assert re.n == mem.n
+
+
+def test_flush_then_reopen(built, tmp_path):
+    idx, cents = built
+    mem = SegmentedIndex(idx)
+    rng = np.random.default_rng(0)
+    store = VectorStore.create(tmp_path / "s", idx, flush_rows=16)
+    _mutate(mem, cents, np.random.default_rng(0))
+    _mutate(store, cents, rng)  # crosses flush_rows -> delta segment on disk
+    m = manifestmod.read_manifest(tmp_path / "s")
+    assert m["deltas"], "flush should have persisted a delta segment"
+    assert m["last_seq"] >= 1
+    store.close()
+    with VectorStore.open(tmp_path / "s") as re:
+        for qi in range(4):
+            assert _same(mem.search(cents[qi], CFG),
+                         re.search(cents[qi], CFG))
+
+
+def test_replay_is_idempotent_after_flush_crash(built, tmp_path):
+    """Crash BETWEEN manifest swap and WAL reset: records <= last_seq must
+    be skipped on replay, not applied twice."""
+    idx, cents = built
+    store = VectorStore.create(tmp_path / "s", idx, flush_rows=10 ** 9)
+    x = (cents[:8] + 0.1).astype(np.float32)
+    store.insert(x, np.arange(50_000, 50_008))
+    store.flush()
+    # simulate the crash: un-reset the WAL by re-appending the same record
+    store.wal.append_insert(1, x, np.arange(50_000, 50_008, dtype=np.int64))
+    n_before = store.n
+    store.close()
+    with VectorStore.open(tmp_path / "s") as re:
+        assert re.n == n_before  # seq 1 <= last_seq -> skipped
+
+
+# -- crash recovery -----------------------------------------------------------
+def test_wal_truncated_tail(built, tmp_path):
+    idx, cents = built
+    store = VectorStore.create(tmp_path / "s", idx, flush_rows=10 ** 9)
+    a = (cents[:8] + 0.1).astype(np.float32)
+    b = (cents[:8] + 0.2).astype(np.float32)
+    store.insert(a, np.arange(30_000, 30_008))
+    store.insert(b, np.arange(30_100, 30_108))
+    store.close()
+    wal_path = tmp_path / "s" / "wal.log"
+    blob = wal_path.read_bytes()
+    wal_path.write_bytes(blob[:-7])  # chop mid-record: torn final append
+    with VectorStore.open(tmp_path / "s") as re:
+        got = np.concatenate([np.asarray(s.ids) for s in re.seg.segments])
+        assert set(range(30_000, 30_008)) <= set(got.tolist())
+        assert not set(range(30_100, 30_108)) & set(got.tolist())
+        # the damaged tail was trimmed; appends go after the good prefix
+        re.insert(b, np.arange(30_200, 30_208))
+    with VectorStore.open(tmp_path / "s") as re2:
+        got = np.concatenate([np.asarray(s.ids) for s in re2.seg.segments])
+        assert set(range(30_200, 30_208)) <= set(got.tolist())
+
+
+def test_wal_scan_empty_and_garbage(tmp_path):
+    assert walmod.scan(tmp_path / "missing.log").records == []
+    p = tmp_path / "garbage.log"
+    p.write_bytes(b"not a wal at all")
+    res = walmod.scan(p)
+    assert res.records == [] and res.damaged_tail
+
+
+def test_wal_headerless_file_repaired(tmp_path):
+    """Crash between file create and header write: appends must not land
+    after a broken header (they would be unreplayable forever)."""
+    for blob in (b"", b"garbage"):
+        p = tmp_path / f"wal_{len(blob)}.log"
+        p.write_bytes(blob)
+        wal = walmod.WriteAheadLog.open(p)
+        wal.append_insert(1, np.zeros((2, 4), np.float32), np.arange(2))
+        wal.close()
+        res = walmod.scan(p)
+        assert len(res.records) == 1 and not res.damaged_tail
+
+
+def test_create_recovers_from_crashed_create(built, tmp_path):
+    """Leftover segment dirs without a manifest (crash mid-create) must not
+    brick the directory for the next create."""
+    idx, _ = built
+    (tmp_path / "s" / "segments" / "seg-000001").mkdir(parents=True)
+    VectorStore.create(tmp_path / "s", idx).close()
+    VectorStore.open(tmp_path / "s").close()
+
+
+# -- compaction ---------------------------------------------------------------
+def test_compaction_equivalence(built, tmp_path):
+    idx, cents = built
+    mem = SegmentedIndex(idx)
+    store = VectorStore.create(tmp_path / "s", idx)
+    _mutate(mem, cents, np.random.default_rng(0))
+    _mutate(store, cents, np.random.default_rng(0))
+    mem.compact()
+    store.compact()
+    m = manifestmod.read_manifest(tmp_path / "s")
+    assert not m["deltas"] and not m["tombstones"]
+    store.close()
+    with VectorStore.open(tmp_path / "s") as re:
+        assert not re.seg.segments and not re.seg.tombstones
+        for qi in range(4):
+            assert _same(mem.search(cents[qi], CFG),
+                         re.search(cents[qi], CFG))
+    # compaction pruned dead segment dirs
+    seg_dirs = {p.name for p in (tmp_path / "s" / "segments").iterdir()}
+    assert seg_dirs == {m["base"]}
+
+
+def test_replay_compaction_then_flush_keeps_new_rows(built, tmp_path):
+    """Crash after WAL-append but before apply, where replaying that record
+    triggers auto-compaction: the deferred base rewrite must not drop rows
+    inserted (into fresh delta segments) after the reopen."""
+    idx, cents = built
+    store = VectorStore.create(tmp_path / "s", idx, max_segments=1,
+                               segment_capacity=8, flush_rows=10 ** 9)
+    a = (cents[:16] + 0.1).astype(np.float32)
+    store.insert(a, np.arange(70_000, 70_016))  # one 16-row delta, no compact
+    seq = store._seq
+    store.close()
+    # crash-after-log: the record hit the WAL but was never applied; its
+    # replay appends a 2nd segment -> exceeds max_segments -> replay-compact
+    wal = walmod.WriteAheadLog.open(tmp_path / "s" / "wal.log")
+    wal.append_insert(seq + 1, (cents[:16] + 0.2).astype(np.float32),
+                      np.arange(70_100, 70_116))
+    wal.close()
+    with VectorStore.open(tmp_path / "s") as re:
+        assert re._needs_base_rewrite and not re.seg.segments
+        re.insert((cents[:8] + 0.3).astype(np.float32),
+                  np.arange(70_200, 70_208))
+        n = re.n
+        re.flush()  # must persist base AND the new delta, not base alone
+    with VectorStore.open(tmp_path / "s") as re2:
+        assert re2.n == n
+        got = np.concatenate([np.asarray(s.ids) for s in re2.seg.segments]) \
+            if re2.seg.segments else np.asarray([])
+        assert set(range(70_200, 70_208)) <= \
+            set(np.asarray(re2.seg.base.ids).tolist()) | set(got.tolist())
+
+
+def test_flush_reuses_unchanged_delta_segments(built, tmp_path):
+    idx, cents = built
+    store = VectorStore.create(tmp_path / "s", idx, max_segments=8,
+                               segment_capacity=8, flush_rows=10 ** 9)
+    store.insert((cents[:8] + 0.1).astype(np.float32),
+                 np.arange(80_000, 80_008))  # fills segment 0 exactly
+    store.flush()
+    first = manifestmod.read_manifest(tmp_path / "s")["deltas"]
+    store.insert((cents[:8] + 0.2).astype(np.float32),
+                 np.arange(80_100, 80_108))  # can't merge -> new segment
+    store.flush()
+    second = manifestmod.read_manifest(tmp_path / "s")["deltas"]
+    assert second[0] == first[0], "sealed delta must keep its on-disk name"
+    assert len(second) == 2
+    store.close()
+
+
+def test_auto_compact_persists(built, tmp_path):
+    idx, cents = built
+    store = VectorStore.create(tmp_path / "s", idx, max_segments=1,
+                               segment_capacity=8)
+    for i in range(3):  # overflows max_segments -> auto-compact inside insert
+        x = (cents[:16] + 0.01 * i).astype(np.float32)
+        store.insert(x, np.arange(60_000 + 16 * i, 60_016 + 16 * i))
+    n = store.n
+    store.close()
+    with VectorStore.open(tmp_path / "s") as re:
+        assert re.n == n
+
+
+# -- corruption ---------------------------------------------------------------
+def test_corrupted_checksum_rejected(built, tmp_path):
+    idx, _ = built
+    VectorStore.create(tmp_path / "s", idx).close()
+    m = manifestmod.read_manifest(tmp_path / "s")
+    victim = tmp_path / "s" / "segments" / m["base"] / "vectors.npy"
+    blob = bytearray(victim.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    victim.write_bytes(bytes(blob))
+    with pytest.raises(segmentmod.SegmentCorrupt):
+        VectorStore.open(tmp_path / "s")
+    # verify=False trusts the medium and opens anyway
+    VectorStore.open(tmp_path / "s", verify=False).close()
+
+
+def test_missing_footer_rejected(built, tmp_path):
+    idx, _ = built
+    VectorStore.create(tmp_path / "s", idx).close()
+    m = manifestmod.read_manifest(tmp_path / "s")
+    (tmp_path / "s" / "segments" / m["base"] / "footer.json").unlink()
+    with pytest.raises(segmentmod.SegmentCorrupt):
+        VectorStore.open(tmp_path / "s")
+
+
+def test_create_refuses_existing(built, tmp_path):
+    idx, _ = built
+    VectorStore.create(tmp_path / "s", idx).close()
+    with pytest.raises(StoreError):
+        VectorStore.create(tmp_path / "s", idx)
+
+
+# -- wiring -------------------------------------------------------------------
+def test_router_add_replica_from_store(built, tmp_path):
+    idx, cents = built
+    VectorStore.create(tmp_path / "s", idx).close()
+    from repro.serving.router import QueryRouter
+    router = QueryRouter(hedge=False)
+    store = router.add_replica_from_store("pod0", str(tmp_path / "s"),
+                                          search_cfg=CFG)
+    try:
+        mem = SegmentedIndex(idx)
+        out = router(cents[1])
+        assert _same(mem.search(cents[1], CFG), out)
+    finally:
+        store.close()
+
+
+def test_built_index_sidecar_roundtrip(tmp_path):
+    from repro.core.index_builder import load_built, save_built
+    from repro.launch.serve import build_engine
+    engine, _ = build_engine(n_videos=2)
+    save_built(tmp_path / "s", engine.built)
+    re = load_built(tmp_path / "s")
+    b = engine.built
+    assert np.array_equal(np.asarray(re.index.ids), np.asarray(b.index.ids))
+    assert np.array_equal(np.asarray(re.index.vectors, np.float32),
+                          np.asarray(b.index.vectors, np.float32))
+    assert np.array_equal(re.keyframes, b.keyframes)
+    assert np.array_equal(re.metadata.bbox_of, b.metadata.bbox_of)
+    assert re.patches_per_frame == b.patches_per_frame
+    # a rebuilt engine over the reopened index answers queries
+    engine2, _ = build_engine(n_videos=2, built=re)
+    r = engine2.query("a large red square", top_n=2)
+    assert len(r.frames) > 0
+
+
+def test_store_without_sidecar_refuses_built_index(built, tmp_path):
+    idx, _ = built
+    store = VectorStore.create(tmp_path / "s", idx)
+    with pytest.raises(StoreError):
+        store.to_built_index()
+    store.close()

@@ -180,11 +180,12 @@ def test_compressed_psum_shard_map():
     mesh = jax.make_mesh((1,), ("data",))
     x = jnp.arange(8, dtype=jnp.float32)
     ef = jnp.zeros((8,))
-    f = jax.shard_map(
+    from repro.core.distributed import shard_map_compat
+    f = shard_map_compat(
         lambda x, e: compressed_psum(x, "data", e), mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
         out_specs=(jax.sharding.PartitionSpec(),
-                   jax.sharding.PartitionSpec()))
+                   jax.sharding.PartitionSpec()), check=True)
     mean, resid = f(x, ef)
     np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=0.05)
 
