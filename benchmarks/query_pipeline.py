@@ -1,0 +1,105 @@
+"""Batched end-to-end query pipeline: p50/p99 latency and QPS vs batch size.
+
+  PYTHONPATH=src python -m benchmarks.query_pipeline [--smoke] [--rerank]
+
+The PR-2 headline number: the two-stage pipeline carries a static batch
+dimension end-to-end (batched tokenize/encode, ONE batched Algorithm-1
+search, union-of-frames rerank), so a batch of Q queries costs one jitted
+dispatch chain instead of Q — QPS should grow far faster than linearly in
+dispatch count.  For each batch size B this harness times repeated
+``fast_search_batch`` (optionally ``query_batch --rerank``) calls over
+DISTINCT texts (no embedding-cache hits), reporting per-batch p50/p99
+latency and steady-state QPS.
+
+``--smoke`` runs a seconds-scale config (CI: keeps the benchmark from
+rotting); the default config is the one the README quotes.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import time
+
+import numpy as np
+
+
+def _query_texts(n: int, tag: str = "") -> list[str]:
+    """n distinct natural-language queries over the synthetic vocabulary.
+
+    ``tag`` salts the texts so runs at different batch sizes never share
+    embedding-cache entries (a cache hit would let the warmup batch skip
+    the encoder and leave its compile inside the timed region).
+    """
+    from repro.data.synthetic import COLORS, SHAPES, SIZES
+    combos = itertools.cycle(
+        f"a {size} {color} {shape}"
+        for size, color, shape in itertools.product(SIZES, COLORS, SHAPES))
+    out, seen = [], 0
+    for base in combos:
+        out.append(f"{base} {tag} number {seen}")  # distinct cache keys
+        seen += 1
+        if seen == n:
+            return out
+    return out
+
+
+def bench_batch_size(engine, B: int, *, reps: int, use_rerank: bool,
+                     top_n: int = 3) -> dict:
+    """Time ``reps`` batches of size B; returns latency/QPS stats."""
+    engine.query_batch_size = B
+    texts = _query_texts((reps + 1) * B, tag=f"b{B}")
+    # warmup batch compiles the jit executables for this B
+    if use_rerank:
+        engine.query_batch(texts[:B], top_n=top_n)
+    else:
+        engine.fast_search_batch(texts[:B])
+    lats = []
+    for r in range(1, reps + 1):
+        chunk = texts[r * B: (r + 1) * B]
+        t0 = time.perf_counter()
+        if use_rerank:
+            engine.query_batch(chunk, top_n=top_n)
+        else:
+            engine.fast_search_batch(chunk)
+        lats.append(time.perf_counter() - t0)
+    lats = np.asarray(lats)
+    return {
+        "batch": B,
+        "p50_ms": float(np.quantile(lats, 0.5) * 1e3),
+        "p99_ms": float(np.quantile(lats, 0.99) * 1e3),
+        "qps": B * len(lats) / float(np.sum(lats)),
+    }
+
+
+def main(*, smoke: bool = False, use_rerank: bool = False,
+         batch_sizes: tuple[int, ...] = (1, 4, 16, 64),
+         reps: int | None = None) -> dict:
+    from repro.launch.serve import build_engine
+    if smoke:
+        batch_sizes = tuple(b for b in batch_sizes if b <= 16)
+        n_videos, reps = 2, (reps or 6)
+    else:
+        n_videos, reps = 6, (reps or 20)
+    engine, _ = build_engine(seed=0, n_videos=n_videos, res=96)
+
+    rows = [bench_batch_size(engine, B, reps=reps, use_rerank=use_rerank)
+            for B in batch_sizes]
+    by_batch = {r["batch"]: r for r in rows}
+    base_qps = by_batch[batch_sizes[0]]["qps"]
+    print("batch,p50_ms,p99_ms,qps,qps_speedup_vs_b1")
+    for r in rows:
+        print(f"{r['batch']},{r['p50_ms']:.2f},{r['p99_ms']:.2f},"
+              f"{r['qps']:.1f},{r['qps'] / base_qps:.2f}x")
+    return {"rows": rows, "by_batch": by_batch,
+            "index_rows": engine.built.index.n, "use_rerank": use_rerank}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale config for CI")
+    ap.add_argument("--rerank", action="store_true",
+                    help="time the full two-stage query_batch instead of "
+                         "the fast-search pipeline")
+    args = ap.parse_args()
+    main(smoke=args.smoke, use_rerank=args.rerank)

@@ -87,6 +87,19 @@ def main() -> None:
         us = (time.perf_counter() - t0) / 3 * 1e6
         return us, "interpret-mode 8q x 65536rows x P64 M256"
 
+    @bench("query_pipeline")
+    def qpipe():
+        from benchmarks import query_pipeline
+        t0 = time.perf_counter()
+        out = query_pipeline.main(smoke=args.quick)
+        us = (time.perf_counter() - t0) * 1e6
+        bb = out["by_batch"]
+        q1 = bb[1]["qps"]
+        row = bb[16] if 16 in bb else bb[max(bb)]
+        return us, (f"qps_b1={q1:.1f} qps_b{row['batch']}={row['qps']:.1f} "
+                    f"speedup={row['qps'] / q1:.2f}x "
+                    f"p99_b{row['batch']}={row['p99_ms']:.1f}ms")
+
     @bench("store_persistence")
     def store():
         from benchmarks import store_bench

@@ -14,7 +14,15 @@ Pipeline per query:
      the subspace-mixed variant is exposed as ``patch_vote`` for parity)
 
 The ADC scan (step 4) is the latency hot spot; ``use_kernel='pallas'``
-switches to the Pallas MXU kernel (interpret mode on CPU).
+switches to the Pallas MXU kernel (compiled on TPU, interpret elsewhere —
+see ``repro.kernels.ops.INTERPRET``).
+
+``search_batch`` is the batched formulation of the same algorithm: the
+probe, window gather, ADC scan (one ``pq_scan_paired`` launch sharing
+LUT/code VMEM residency), and refine all carry a static leading Q dimension
+instead of issuing Q separate searches.  Per-row results match ``search``
+(same ids, scores equal up to f32 reduction-order noise); DESIGN.md §8
+records the static-shape/padding contract.
 """
 from __future__ import annotations
 
@@ -47,64 +55,103 @@ def _adc(lut: jax.Array, codes: jax.Array, use_kernel: str) -> jax.Array:
     return pqmod.adc_scores(lut, codes)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+def _adc_paired(luts: jax.Array, codes: jax.Array, use_kernel: str
+                ) -> jax.Array:
+    """luts (Q, P, M), codes (Q, N, P) -> (Q, N): query q scans codes[q]."""
+    if use_kernel == "pallas":
+        from repro.kernels import ops as kops
+        return kops.pq_scan_paired(luts, codes)
+    return jax.vmap(pqmod.adc_scores)(luts, codes)
+
+
+def _adc_shared(luts: jax.Array, codes: jax.Array, use_kernel: str
+                ) -> jax.Array:
+    """luts (Q, P, M), codes (N, P) -> (Q, N): every query scans all rows."""
+    if use_kernel == "pallas":
+        from repro.kernels import ops as kops
+        return kops.pq_scan_batched(luts, codes)
+    return jax.vmap(lambda l: pqmod.adc_scores(l, codes))(luts)
+
+
 def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig
            ) -> dict[str, jax.Array]:
     """Single-query Algorithm 1.  q: (D',) raw query embedding.
 
+    A batch of one: delegates to ``search_batch`` so the single and batched
+    views cannot drift (parity is structural, not just test-enforced).
     Returns dict with ids (k,), scores (k,), approx_scores (k,), rows (k,).
     """
-    q = pqmod.normalize(q.astype(jnp.float32))
-    h = q.shape[-1] // 2
-    s1 = index.coarse1 @ q[:h]
-    s2 = index.coarse2 @ q[h:]
-    # probe selection must agree with the L2 cell assignment (imi.probe_adjust)
-    cells = imimod.multi_sequence_top_a(s1 + imimod.probe_adjust(index.coarse1),
-                                        s2 + imimod.probe_adjust(index.coarse2),
-                                        cfg.top_a)               # (A,)
-    K = index.K
-    base = s1[cells // K] + s2[cells % K]                        # (A,)
+    return {k: v[0] for k, v in search_batch(index, q[None], cfg).items()}
 
-    starts = index.cell_offsets[cells]
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
+                 ) -> dict[str, jax.Array]:
+    """Batched Algorithm 1.  qs: (Q, D') raw query embeddings.
+
+    One probe, one gather, one ADC launch, one refine — every stage carries
+    the static Q dimension (jit caches one executable per Q; callers pad to
+    a fixed batch size, see ``QueryEngine.fast_search_batch``).  Returns the
+    same dict as ``search`` with every array gaining a leading Q axis.
+    """
+    qs = pqmod.normalize(qs.astype(jnp.float32))                 # (Q, D')
+    Q = qs.shape[0]
+    h = qs.shape[-1] // 2
+    s1 = qs[:, :h] @ index.coarse1.T                             # (Q, K)
+    s2 = qs[:, h:] @ index.coarse2.T
+    # probe selection must agree with the L2 cell assignment (imi.probe_adjust)
+    adj1 = imimod.probe_adjust(index.coarse1)
+    adj2 = imimod.probe_adjust(index.coarse2)
+    cells = jax.vmap(
+        lambda a, b: imimod.multi_sequence_top_a(a, b, cfg.top_a)
+    )(s1 + adj1[None, :], s2 + adj2[None, :])                    # (Q, A)
+    K = index.K
+    base = jnp.take_along_axis(s1, cells // K, axis=1) \
+        + jnp.take_along_axis(s2, cells % K, axis=1)             # (Q, A)
+
+    starts = index.cell_offsets[cells]                           # (Q, A)
     counts = index.cell_offsets[cells + 1] - starts
     counts = jnp.minimum(counts, cfg.max_cell_size)
-    window = starts[:, None] + jnp.arange(cfg.max_cell_size)[None, :]
-    valid = jnp.arange(cfg.max_cell_size)[None, :] < counts[:, None]
-    rows = jnp.clip(window, 0, index.n - 1)                      # (A, W)
+    W = cfg.max_cell_size
+    window = starts[..., None] + jnp.arange(W)[None, None, :]    # (Q, A, W)
+    valid = jnp.arange(W)[None, None, :] < counts[..., None]
+    rows = jnp.clip(window, 0, index.n - 1).reshape(Q, -1)       # (Q, A*W)
 
-    cand_codes = index.codes[rows.reshape(-1)]                   # (A*W, P)
-    lut = pqmod.similarity_lut(index.pq, q)                      # (P, M)
-    resid = _adc(lut, cand_codes, cfg.use_kernel)                # (A*W,)
-    approx = resid.reshape(cells.shape[0], -1) + base[:, None]   # (A, W)
-    approx = jnp.where(valid, approx, -jnp.inf).reshape(-1)
+    luts = jax.vmap(lambda q: pqmod.similarity_lut(index.pq, q))(qs)
+    if cfg.top_a * cfg.max_cell_size >= index.n:
+        # windows cover the whole index: one shared-codes scan (Q, n) —
+        # the codes stay resident across the whole query batch — then
+        # gather scores by row (identical per-row values, less work)
+        all_scores = _adc_shared(luts, index.codes, cfg.use_kernel)
+        resid = jnp.take_along_axis(all_scores, rows, axis=1)    # (Q, A*W)
+    else:
+        cand_codes = index.codes[rows]                           # (Q, A*W, P)
+        resid = _adc_paired(luts, cand_codes, cfg.use_kernel)    # (Q, A*W)
+    approx = resid.reshape(Q, cfg.top_a, W) + base[..., None]
+    approx = jnp.where(valid, approx, -jnp.inf).reshape(Q, -1)
 
     # refine factor: ADC order is approximate, so the true top-k by exact
     # score may sit below rank k in approx order — fetch a multiple, exact-
     # rescore, THEN cut to top_k (IVF-PQ "refine" stage; Algorithm 1 line 14)
-    fetch_k = min(cfg.top_k * max(cfg.rerank_overfetch, 1), approx.shape[0]) \
+    fetch_k = min(cfg.top_k * max(cfg.rerank_overfetch, 1), approx.shape[1]) \
         if cfg.exact_rerank else cfg.top_k
-    top_approx, flat_idx = jax.lax.top_k(approx, fetch_k)
-    top_rows = rows.reshape(-1)[flat_idx]                        # (fetch_k,)
+    top_approx, flat_idx = jax.lax.top_k(approx, fetch_k)        # (Q, fetch_k)
+    top_rows = jnp.take_along_axis(rows, flat_idx, axis=1)
 
     if cfg.exact_rerank:
-        vecs = index.vectors[top_rows].astype(jnp.float32)       # (fetch_k, D')
-        exact = vecs @ q
+        vecs = index.vectors[top_rows].astype(jnp.float32)       # (Q, fk, D')
+        exact = jnp.einsum("qkd,qd->qk", vecs, qs)
         # padding slots (-inf approx: window overrun / clipped rows) must
         # not re-enter via their real dot product
         exact = jnp.where(jnp.isfinite(top_approx), exact, -jnp.inf)
-        order = jnp.argsort(-exact)[: cfg.top_k]
-        top_rows = top_rows[order]
-        scores = exact[order]
-        top_approx = top_approx[order]
+        order = jnp.argsort(-exact, axis=1)[:, : cfg.top_k]
+        top_rows = jnp.take_along_axis(top_rows, order, axis=1)
+        scores = jnp.take_along_axis(exact, order, axis=1)
+        top_approx = jnp.take_along_axis(top_approx, order, axis=1)
     else:
         scores = top_approx
     return {"ids": index.ids[top_rows], "scores": scores,
             "approx_scores": top_approx, "rows": top_rows}
-
-
-def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
-                 ) -> dict[str, jax.Array]:
-    return jax.vmap(lambda q: search(index, q, cfg))(qs)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

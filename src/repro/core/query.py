@@ -1,6 +1,6 @@
-"""Two-stage query strategy — LOVO Algorithm 2.
+"""Two-stage query strategy — LOVO Algorithm 2, batch-native.
 
-Stage 1 (fast search): encode the whole query sentence into ONE embedding,
+Stage 1 (fast search): encode each query sentence into ONE embedding,
 Algorithm-1 ANN search over the IMI -> top-k candidate patches -> their key
 frames (via the metadata store).
 
@@ -9,13 +9,22 @@ feature-enhancer + decoder over (ViT tokens, text tokens); sort frames by
 l_s and emit boxes for the top-n.
 
 ``QueryEngine`` is the host-level orchestrator a service would wrap: it owns
-the device index, jitted model fns, and the metadata side-table.
+the device index, jitted model fns, the metadata side-table, and a small
+query-embedding LRU cache.  The batch dimension is first-class end-to-end:
+``fast_search_batch`` / ``query_batch`` tokenize, encode, and ANN-search Q
+queries through single jitted calls with a static padded batch shape
+(``query_batch``), and the rerank stage encodes the UNION of candidate
+frames once before scoring per-(query, frame) pairs.  ``fast_search`` /
+``query`` are the single-query views of the same path (a batch of one).
+DESIGN.md §8 documents the static-shape/padding contract.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
-from typing import Any, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +47,55 @@ class QueryResult:
     timings: dict[str, float]
 
 
+class EmbedCache:
+    """Tiny LRU keyed by query text -> (q_embed, txt_tokens, mask).
+
+    Serving traffic repeats query texts (the paper's interactive-exploration
+    workload); a hit skips tokenize + text-encoder entirely — the ANN search
+    still runs, so results always reflect the CURRENT index.
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._d: "collections.OrderedDict[str, tuple]" = \
+            collections.OrderedDict()
+        # the engine is shared across threads (hedge replicas, router
+        # shards), so get/put must be atomic
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, text: str):
+        with self._lock:
+            v = self._d.get(text)
+            if v is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(text)
+            self.hits += 1
+            return v
+
+    def put(self, text: str, value: tuple) -> None:
+        with self._lock:
+            self._d[text] = value
+            self._d.move_to_end(text)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+
+def _pad_rows(arr: np.ndarray, size: int) -> np.ndarray:
+    """Pad axis 0 up to ``size`` with zero rows (static-shape contract:
+    jit compiles one executable per batch size; DESIGN.md §8.2)."""
+    pad = size - len(arr)
+    if pad <= 0:
+        return arr
+    return np.concatenate([arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+
+
 class QueryEngine:
     def __init__(self, built: BuiltIndex, *,
                  text_params: Any, text_cfg: textmod.TextConfig,
@@ -45,7 +103,9 @@ class QueryEngine:
                  rerank_params: Any, rerank_cfg: rerankmod.RerankConfig,
                  search_cfg: anns.SearchConfig = anns.SearchConfig(),
                  tokenizer: Tokenizer | None = None,
-                 rerank_batch: int = 8):
+                 rerank_batch: int = 8,
+                 query_batch: int = 8,
+                 embed_cache_size: int = 256):
         self.built = built
         self.text_params, self.text_cfg = text_params, text_cfg
         self.vit_params, self.vit_cfg = vit_params, vit_cfg
@@ -54,77 +114,179 @@ class QueryEngine:
         self.tokenizer = tokenizer or Tokenizer(vocab=text_cfg.vocab,
                                                 max_len=text_cfg.max_len)
         self.rerank_batch = rerank_batch
+        # static device batch for tokenize/encode/search — incoming batches
+        # are padded up to a multiple of this, so jit compiles once per size
+        self.query_batch_size = max(1, query_batch)
+        self.embed_cache = EmbedCache(embed_cache_size)
 
         self._encode_text = jax.jit(
             lambda p, t, m: textmod.text_encode(p, t, m, self.text_cfg))
-        self._search = lambda q: anns.search(self.built.index, q,
-                                             self.search_cfg)
+        self._search_batch = lambda qs: anns.search_batch(
+            self.built.index, qs, self.search_cfg)
         self._vit_tokens = jax.jit(
             lambda p, im: vitmod.vit_tokens(p, im, self.vit_cfg))
         self._rerank = jax.jit(
             lambda p, it, tt, tm: rerankmod.rerank_frame(
                 p, it, tt, tm, self.rerank_cfg))
 
+    # -- text encoding (batched, LRU-cached) ----------------------------------
+    def _encode_texts(self, texts: Sequence[str]
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """texts -> (q (Q, D'), txt_tokens (Q, L, D), masks (Q, L)) host
+        arrays; cache misses are encoded in static ``query_batch`` chunks."""
+        Q = len(texts)
+        slots: list[Optional[tuple]] = [self.embed_cache.get(t)
+                                        for t in texts]
+        miss_idx = [i for i, s in enumerate(slots) if s is None]
+        if miss_idx:
+            toks, masks = self.tokenizer.encode_batch(
+                [texts[i] for i in miss_idx])
+            B = self.query_batch_size
+            for lo in range(0, len(miss_idx), B):
+                chunk = slice(lo, min(lo + B, len(miss_idx)))
+                ct = _pad_rows(toks[chunk], B)
+                cm = _pad_rows(masks[chunk], B)
+                q, tt = self._encode_text(self.text_params, jnp.asarray(ct),
+                                          jnp.asarray(cm))
+                q, tt = np.asarray(q), np.asarray(tt)
+                for j, gi in enumerate(miss_idx[chunk]):
+                    entry = (q[j], tt[j], masks[lo + j])
+                    slots[gi] = entry
+                    self.embed_cache.put(texts[gi], entry)
+        qs = np.stack([s[0] for s in slots])
+        tts = np.stack([s[1] for s in slots])
+        ms = np.stack([s[2] for s in slots])
+        return qs, tts, ms
+
     # -- stage 1 -------------------------------------------------------------
-    def fast_search(self, text: str) -> tuple[np.ndarray, np.ndarray, dict]:
+    def fast_search_batch(self, texts: Sequence[str]
+                          ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Batched fast search: Q texts -> (ids (Q, k), scores (Q, k)).
+
+        The whole batch is encoded and searched through single jitted calls
+        (padded to a multiple of ``query_batch_size``); results for the padded
+        tail are computed and discarded.
+        """
         t0 = time.perf_counter()
-        toks, mask = self.tokenizer.encode(text)
-        q, _ = self._encode_text(self.text_params, jnp.asarray(toks)[None],
-                                 jnp.asarray(mask)[None])
+        qs, _, _ = self._encode_texts(texts)
         t_enc = time.perf_counter() - t0
         t0 = time.perf_counter()
-        res = self._search(q[0])
-        ids = np.asarray(res["ids"])
-        scores = np.asarray(res["scores"])
+        ids, scores = self._search_embeds(qs)
         t_search = time.perf_counter() - t0
         return ids, scores, {"encode": t_enc, "fast_search": t_search}
 
-    # -- stage 2 -------------------------------------------------------------
-    def query(self, text: str, *, top_n: int = 5,
-              use_rerank: bool = True) -> QueryResult:
-        ids, scores, timings = self.fast_search(text)
-        meta = self.built.metadata.lookup(ids)
+    def _search_embeds(self, qs: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """(Q, D') embeddings -> (ids (Q, k), scores (Q, k)) via batched
+        Algorithm 1, padded per static ``query_batch_size`` chunk."""
+        B = self.query_batch_size
+        ids_out, scores_out = [], []
+        for lo in range(0, len(qs), B):
+            n = min(B, len(qs) - lo)
+            chunk = _pad_rows(qs[lo: lo + B], B)
+            res = self._search_batch(jnp.asarray(chunk))
+            ids_out.append(np.asarray(res["ids"])[:n])
+            scores_out.append(np.asarray(res["scores"])[:n])
+        return np.concatenate(ids_out), np.concatenate(scores_out)
+
+    def fast_search(self, text: str) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Single-query view of ``fast_search_batch`` (a batch of one)."""
+        ids, scores, timings = self.fast_search_batch([text])
+        return ids[0], scores[0], timings
+
+    # -- candidate frames (host-side ~= SQL join) ------------------------------
+    def _candidate_frames(self, ids: np.ndarray, scores: np.ndarray,
+                          top_n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Patch ids (k,) -> unique key-frame rows in best-score-first order
+        (score per frame = its best patch's fast-search score)."""
         Kp = self.built.patches_per_frame
-        frame_rows = ids // Kp                          # key-frame row index
-        # unique candidate frames, best-score order (host-side ~= SQL join)
+        frame_rows = ids // Kp
         uniq, first = np.unique(frame_rows, return_index=True)
         order = np.argsort(first)
         cand = uniq[order][: max(top_n * 4, self.rerank_batch)]
+        frame_scores = scores[first][order][: len(cand)]
+        return cand, frame_scores
+
+    # -- stage 2 -------------------------------------------------------------
+    def query_batch(self, texts: Sequence[str], *, top_n: int = 5,
+                    use_rerank: bool = True) -> list[QueryResult]:
+        """Batched Algorithm 2 over Q texts -> one ``QueryResult`` each.
+
+        Rerank encodes the UNION of candidate frames across the batch once
+        (shared ViT work for overlapping candidates), then scores
+        (query, frame) pairs in ``rerank_batch`` chunks and gathers back
+        per query.
+        """
+        t0 = time.perf_counter()
+        qs, txt_tokens, masks = self._encode_texts(texts)
+        t_enc = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ids, scores = self._search_embeds(qs)
+        timings = {"encode": t_enc,
+                   "fast_search": time.perf_counter() - t0}
+        Q = len(texts)
+        cands = [self._candidate_frames(ids[i], scores[i], top_n)
+                 for i in range(Q)]
 
         if not use_rerank:
-            n = min(top_n, len(cand))
-            # score per unique frame = best (first-seen) fast-search score
-            frame_scores = scores[first][order]
-            return QueryResult(frames=cand[:n], scores=frame_scores[:n],
-                               boxes=np.zeros((n, 0, 4), np.float32),
-                               fast_candidates=ids, timings=timings)
+            out = []
+            for i, (cand, frame_scores) in enumerate(cands):
+                n = min(top_n, len(cand))
+                out.append(QueryResult(
+                    frames=cand[:n], scores=frame_scores[:n],
+                    boxes=np.zeros((n, 0, 4), np.float32),
+                    fast_candidates=ids[i], timings=dict(timings)))
+            return out
 
         t0 = time.perf_counter()
-        toks, mask = self.tokenizer.encode(text)
-        _, txt_tokens = self._encode_text(
-            self.text_params, jnp.asarray(toks)[None], jnp.asarray(mask)[None])
+        # union of candidate frames across the batch -> encode each ONCE
+        union = np.unique(np.concatenate([c for c, _ in cands]))
+        pos_in_union = {int(f): u for u, f in enumerate(union)}
         B = self.rerank_batch
-        all_scores, all_boxes = [], []
-        for i in range(0, len(cand), B):
-            chunk = cand[i: i + B]
+        union_tokens = []
+        for lo in range(0, len(union), B):
+            n = min(B, len(union) - lo)
+            rows = _pad_rows(union[lo: lo + B], B)  # pad reuses frame row 0
+            it = self._vit_tokens(self.vit_params,
+                                  jnp.asarray(self.built.keyframes[rows]))
+            union_tokens.append(np.asarray(it)[:n])
+        union_tokens = np.concatenate(union_tokens)       # (U, N_I, D)
+
+        # score every (query, candidate-frame) pair, rerank_batch at a time
+        pairs = [(qi, pos_in_union[int(f)])
+                 for qi, (cand, _) in enumerate(cands) for f in cand]
+        pair_scores = np.zeros((len(pairs),), np.float32)
+        pair_boxes = None
+        for lo in range(0, len(pairs), B):
+            chunk = pairs[lo: lo + B]
             pad = B - len(chunk)
-            rows = np.concatenate([chunk, np.zeros((pad,), chunk.dtype)]) \
-                if pad else chunk
-            imgs = jnp.asarray(self.built.keyframes[rows])
-            img_tokens = self._vit_tokens(self.vit_params, imgs)
-            tt = jnp.repeat(txt_tokens, B, axis=0)
-            tm = jnp.repeat(jnp.asarray(mask)[None], B, axis=0)
-            s, b = self._rerank(self.rerank_params, img_tokens, tt, tm)
+            qi = np.array([p[0] for p in chunk] + [0] * pad)
+            ui = np.array([p[1] for p in chunk] + [0] * pad)
+            s, b = self._rerank(self.rerank_params,
+                                jnp.asarray(union_tokens[ui]),
+                                jnp.asarray(txt_tokens[qi]),
+                                jnp.asarray(masks[qi]))
             s, b = np.asarray(s), np.asarray(b)
-            if pad:
-                s, b = s[:-pad], b[:-pad]
-            all_scores.append(s)
-            all_boxes.append(b)
-        rer_scores = np.concatenate(all_scores)
-        rer_boxes = np.concatenate(all_boxes)
+            if pair_boxes is None:
+                pair_boxes = np.zeros((len(pairs),) + b.shape[1:], b.dtype)
+            n = B - pad
+            pair_scores[lo: lo + n] = s[:n]
+            pair_boxes[lo: lo + n] = b[:n]
         timings["rerank"] = time.perf_counter() - t0
 
-        top = np.argsort(-rer_scores)[:top_n]
-        return QueryResult(frames=cand[top], scores=rer_scores[top],
-                           boxes=rer_boxes[top], fast_candidates=ids,
-                           timings=timings)
+        out, cursor = [], 0
+        for i, (cand, _) in enumerate(cands):
+            s = pair_scores[cursor: cursor + len(cand)]
+            b = pair_boxes[cursor: cursor + len(cand)]
+            cursor += len(cand)
+            top = np.argsort(-s)[:top_n]
+            out.append(QueryResult(frames=cand[top], scores=s[top],
+                                   boxes=b[top], fast_candidates=ids[i],
+                                   timings=dict(timings)))
+        return out
+
+    def query(self, text: str, *, top_n: int = 5,
+              use_rerank: bool = True) -> QueryResult:
+        """Single-query view of ``query_batch`` (a batch of one)."""
+        return self.query_batch([text], top_n=top_n,
+                                use_rerank=use_rerank)[0]

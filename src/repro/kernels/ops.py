@@ -1,9 +1,10 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``INTERPRET`` defaults to True (this container is CPU; interpret mode runs
-the kernel bodies in Python for correctness).  On real TPU set
-``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1) and
-the same call sites compile to Mosaic.
+``INTERPRET`` defaults to ``None`` = auto: compiled Mosaic when the jax
+backend is TPU, interpret mode (kernel bodies run in Python/jax ops for
+correctness) on CPU/GPU containers like this one.  Override globally by
+setting ``repro.kernels.ops.INTERPRET`` to an explicit bool, or with the
+env var ``REPRO_PALLAS_COMPILE=1`` (forces compiled mode everywhere).
 """
 from __future__ import annotations
 
@@ -16,22 +17,36 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import kmeans as _km
 from repro.kernels import pq_scan as _pq
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+# None = auto (TPU -> compile, else interpret); see pq_scan.resolve_interpret.
+INTERPRET: bool | None = \
+    False if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1" else None
+
+
+def _interpret() -> bool:
+    return _pq.resolve_interpret(INTERPRET)
 
 
 def pq_scan(lut: jax.Array, codes: jax.Array) -> jax.Array:
     """Single-query ADC: lut (P, M), codes (N, P) -> (N,)."""
-    return _pq.pq_scan_batched(lut[None], codes, interpret=INTERPRET)[0]
+    return _pq.pq_scan_batched(lut[None], codes, interpret=_interpret())[0]
 
 
 def pq_scan_batched(luts: jax.Array, codes: jax.Array, *,
                     block_n: int = 1024) -> jax.Array:
+    """Shared-codes ADC: luts (Q, P, M), codes (N, P) -> (Q, N)."""
     return _pq.pq_scan_batched(luts, codes, block_n=block_n,
-                               interpret=INTERPRET)
+                               interpret=_interpret())
+
+
+def pq_scan_paired(luts: jax.Array, codes: jax.Array, *,
+                   block_n: int = 1024) -> jax.Array:
+    """Per-query-candidates ADC: luts (Q, P, M), codes (Q, N, P) -> (Q, N)."""
+    return _pq.pq_scan_paired(luts, codes, block_n=block_n,
+                              interpret=_interpret())
 
 
 def kmeans_assign(x: jax.Array, cents: jax.Array):
-    return _km.kmeans_assign(x, cents, interpret=INTERPRET)
+    return _km.kmeans_assign(x, cents, interpret=_interpret())
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -43,4 +58,4 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
     return _fa.flash_attention(q, k, v, causal=causal, softcap=softcap,
-                               interpret=INTERPRET)
+                               interpret=_interpret())

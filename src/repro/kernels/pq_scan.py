@@ -1,7 +1,16 @@
 """Pallas TPU kernel: PQ ADC scan (the LOVO fast-search hot loop).
 
-Computes scores[q, n] = sum_p LUT[q, p, codes[n, p]] for a batch of Q query
-LUTs against N code rows.
+Two entry points, both one ``pallas_call``:
+
+  * ``pq_scan_batched`` — scores[q, n] = sum_p LUT[q, p, codes[n, p]] for Q
+    query LUTs against ONE shared code matrix (N, P).  Used when every query
+    scans the same rows (exhaustive ADC, benchmarks).
+  * ``pq_scan_paired``  — scores[q, n] = sum_p LUT[q, p, codes[q, n, p]]:
+    each query scans its OWN candidate rows (Q, N, P).  This is the batched
+    Algorithm-1 shape: after the IMI probe every query has gathered its own
+    (top_a * max_cell_size) candidate window, and the whole batch is scanned
+    in a single kernel launch instead of Q separate scans — the LUT block
+    stays VMEM-resident across that query's code blocks.
 
 TPU adaptation (DESIGN.md §3): the GPU/CPU formulation is a random gather
 from an L1-resident LUT — TPUs hate scattered gathers, so the contraction is
@@ -14,15 +23,30 @@ each block a dense 8-bit-friendly matmul; LUTs (Q*P*M*4 B) and the code block
 live in VMEM, codes stream HBM->VMEM once — the scan is HBM-bandwidth-bound
 exactly like the CPU version is memory-bound, but at 819 GB/s.
 
-Grid: (N / block_n,); block shapes MXU-aligned (block_n mult of 128, M=2^k).
+Grid: (N / block_n,) (batched) or (Q, N / block_n) (paired); block shapes
+MXU-aligned (block_n mult of 128, M=2^k).
+
+``interpret=None`` (the default) auto-resolves: compiled Mosaic on a TPU
+backend, interpret mode (kernel bodies run as jax ops) everywhere else.
+Override with the env var ``REPRO_PALLAS_COMPILE=1`` or an explicit bool.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> False (compile) on TPU / REPRO_PALLAS_COMPILE=1, else True."""
+    if interpret is not None:
+        return interpret
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
@@ -45,7 +69,8 @@ def _kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def pq_scan_batched(luts: jax.Array, codes: jax.Array, *,
-                    block_n: int = 1024, interpret: bool = True) -> jax.Array:
+                    block_n: int = 1024,
+                    interpret: bool | None = None) -> jax.Array:
     """luts: (Q, P, M) f32; codes: (N, P) integer -> scores (Q, N) f32."""
     Q, P, M = luts.shape
     N = codes.shape[0]
@@ -63,6 +88,54 @@ def pq_scan_batched(luts: jax.Array, codes: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bn, Q), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(((N + pad), Q), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(luts.astype(jnp.float32), codes)
     return out[:N].T                                   # (Q, N)
+
+
+def _paired_kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
+    codes = codes_ref[0].astype(jnp.int32)            # (bN, P)
+    bn = codes.shape[0]
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
+
+    def body(p, acc):
+        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.bfloat16)
+        lut_p = lut_ref[0, p, :].astype(jnp.bfloat16)  # (M,)
+        return acc + jax.lax.dot_general(
+            onehot, lut_p[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bN, 1)
+
+    acc = jax.lax.fori_loop(0, P, body,
+                            jnp.zeros((bn, 1), jnp.float32))
+    out_ref[...] = acc[:, 0][None, :]                  # (1, bN)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_scan_paired(luts: jax.Array, codes: jax.Array, *,
+                   block_n: int = 1024,
+                   interpret: bool | None = None) -> jax.Array:
+    """Per-query candidate scan: luts (Q, P, M) f32, codes (Q, N, P) integer
+    -> scores (Q, N) f32 with scores[q] = ADC(luts[q], codes[q]).
+
+    Grid is (Q, N/block_n), q-major: each query's LUT block is fetched once
+    and reused across all of that query's code blocks.
+    """
+    Q, P, M = luts.shape
+    N = codes.shape[1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+    grid = (Q, (N + pad) // bn)
+    out = pl.pallas_call(
+        functools.partial(_paired_kernel, P=P, M=M),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, P, M), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, bn, P), lambda q, i: (q, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((Q, N + pad), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(luts.astype(jnp.float32), codes)
+    return out[:, :N]                                  # (Q, N)

@@ -3,6 +3,13 @@ batched text queries through the full two-stage pipeline.
 
   PYTHONPATH=src python -m repro.launch.serve --videos 6 --queries 8
   PYTHONPATH=src python -m repro.launch.serve --store-dir /tmp/lovo-store
+  PYTHONPATH=src python -m repro.launch.serve --batch-size 8 --max-wait-ms 5
+
+The ``MicroBatcher`` is the front door: concurrent submissions are grouped
+into batches of up to ``--batch-size`` (or whatever arrived within
+``--max-wait-ms``) and each batch runs as ONE device batch through
+``QueryEngine.query_batch`` — batched tokenize/encode, one batched ANN
+search, union-of-frames rerank (DESIGN.md §8).
 
 With ``--store-dir``: the first launch builds (keyframes -> ViT -> k-means
 -> IMI) and persists the result as a ``repro.store.VectorStore``; every
@@ -11,7 +18,7 @@ store-open time separately from (and far below) the recorded build time.
 
 Exercises the real serving substrate: index build or store reopen,
 MicroBatcher for query batching, HedgedExecutor for straggler mitigation,
-and the two-stage QueryEngine.
+and the two-stage batch-native QueryEngine.
 """
 from __future__ import annotations
 
@@ -78,6 +85,12 @@ def main() -> None:
     ap.add_argument("--videos", type=int, default=6)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--hedge", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=4,
+                    help="micro-batch size: queries grouped into one device "
+                         "batch through QueryEngine.query_batch")
+    ap.add_argument("--max-wait-ms", type=float, default=10.0,
+                    help="max time the oldest queued query waits for the "
+                         "batch to fill before dispatch")
     ap.add_argument("--store-dir", default=None,
                     help="persist/reopen the index as a VectorStore here; "
                          "a second launch skips the build entirely")
@@ -125,25 +138,29 @@ def main() -> None:
                "a yellow circle on the left", "a black square",
                "a purple triangle", "an orange bar"][: args.queries]
 
-    def run_one(text: str):
-        r = engine.query(text, top_n=3)
-        return r
+    # batch-native backend: the whole micro-batch is ONE device batch
+    def run_texts(texts: list[str]):
+        return engine.query_batch(texts, top_n=3)
 
-    backend = run_one
+    backend = run_texts
     if args.hedge:
-        backend = HedgedExecutor([run_one, run_one])
+        backend = HedgedExecutor([run_texts, run_texts])
 
-    batcher = MicroBatcher(lambda texts: [backend(t) for t in texts],
-                           batch_size=4, max_wait_ms=10)
+    batcher = MicroBatcher(backend, batch_size=args.batch_size,
+                           max_wait_ms=args.max_wait_ms)
+    t0 = time.perf_counter()
     futures = [batcher.submit(q) for q in queries]
     for q, f in zip(queries, futures):
         r = f.result()
         print(f"  {q!r}: frames {r.frames.tolist()} "
               f"scores {np.round(r.scores, 3).tolist()} "
               f"timings {{{', '.join(f'{k}: {v*1e3:.0f}ms' for k, v in r.timings.items())}}}")
+    wall = time.perf_counter() - t0
     batcher.close()
-    print(f"served {len(queries)} queries; "
-          f"p50 {batcher.latency.quantile(0.5)*1e3:.0f}ms")
+    print(f"served {len(queries)} queries (batch_size={args.batch_size}, "
+          f"max_wait={args.max_wait_ms:.0f}ms); "
+          f"p50 {batcher.latency.quantile(0.5)*1e3:.0f}ms, "
+          f"{len(queries)/wall:.1f} QPS")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,11 @@
 Production posture pieces the paper's Milvus deployment gets for free and a
 TPU serving stack must provide itself:
 
-  * ``MicroBatcher`` — collects concurrent queries into fixed-size device
-    batches (jit shapes are static) with a max-wait deadline; pads the tail.
+  * ``MicroBatcher`` — collects concurrent queries into batches of up to
+    ``batch_size`` with a max-wait deadline and hands the whole list to a
+    batch-native backend (e.g. ``QueryEngine.query_batch``, which pads the
+    tail up to its static jit shape — DESIGN.md §8).  Results come back in
+    submit order via per-request futures.
   * ``HedgedExecutor`` — straggler mitigation: if a backend replica does not
     answer within the p99-tracking hedge deadline, the SAME request is issued
     to the next replica and the first answer wins (Dean & Barroso, "The Tail
@@ -50,9 +53,13 @@ class _Pending:
 
 
 class MicroBatcher:
-    """Groups requests into batches of exactly ``batch_size`` (padded).
+    """Groups requests into batches of UP TO ``batch_size``.
 
-    run_batch(payloads: list) -> list of results (same order/length).
+    ``run_batch(payloads: list) -> list`` of results (same order/length);
+    the backend owns any padding to a static device shape (the engine's
+    ``query_batch``/``fast_search_batch`` pad to ``query_batch_size``).
+    A batch is dispatched when full or when the oldest request has waited
+    ``max_wait_ms`` — the latency/throughput knob of the serving front door.
     """
 
     def __init__(self, run_batch: Callable[[list], list], batch_size: int,
@@ -91,10 +98,13 @@ class MicroBatcher:
                     batch.append(self._q.get(timeout=left))
                 except queue.Empty:
                     break
-            t0 = time.perf_counter()
             try:
                 results = self.run_batch([p.payload for p in batch])
-                dt = time.perf_counter() - t0
+                if len(results) != len(batch):
+                    # a silent zip would strand the tail futures forever
+                    raise RuntimeError(
+                        f"run_batch returned {len(results)} results for "
+                        f"{len(batch)} payloads")
                 for p, r in zip(batch, results):
                     self.latency.record(time.perf_counter() - p.t_enqueue)
                     p.future.set_result(r)
@@ -121,12 +131,27 @@ class HedgedExecutor:
     def __call__(self, payload: Any) -> Any:
         t0 = time.perf_counter()
         futs = {self._pool.submit(self.replicas[0], payload): 0}
+        unresolved = set(futs)         # issued, not yet seen completed
         hedges = 0
+        first_exc: Optional[BaseException] = None
         while True:
             delay = self.latency.quantile(self.hedge_quantile)
-            done, _ = wait(list(futs), timeout=delay,
+            done, _ = wait(list(unresolved), timeout=delay,
                            return_when=FIRST_COMPLETED)
-            winner = next((f for f in done if f.exception() is None), None)
+            # inspect COMPLETED futures only — Future.exception() on a
+            # pending future blocks indefinitely; failed ones leave the
+            # wait set so a straggler doesn't turn this into a spin loop
+            winner = None
+            for f in done:
+                unresolved.discard(f)
+                if f.cancelled():
+                    continue
+                exc = f.exception()
+                if exc is None:
+                    winner = f
+                    break
+                if first_exc is None:
+                    first_exc = exc
             if winner is not None:
                 self.latency.record(time.perf_counter() - t0)
                 if futs[winner] != 0:
@@ -134,10 +159,14 @@ class HedgedExecutor:
                 for f in futs:
                     f.cancel()
                 return winner.result()
-            if done and all(f.exception() is not None for f in futs):
-                raise next(iter(done)).exception()
+            if not unresolved and hedges >= self.max_hedges:
+                # every issued attempt completed and failed; no hedges left
+                raise first_exc if first_exc is not None else \
+                    RuntimeError("all replicas failed without an exception")
             if hedges < self.max_hedges:
                 hedges += 1
                 self.hedges_issued += 1
                 nxt = self.replicas[hedges % len(self.replicas)]
-                futs[self._pool.submit(nxt, payload)] = hedges
+                nf = self._pool.submit(nxt, payload)
+                futs[nf] = hedges
+                unresolved.add(nf)

@@ -6,6 +6,10 @@ shard once and can answer any query; the router
 
   * load-balances queries across healthy replica groups (power-of-two
     choices on outstanding load),
+  * scatter/gathers BATCHES across replicas (`call_batch`): a query batch
+    is split into contiguous shards, each shard goes to a least-loaded
+    replica's batch-native fn concurrently, and results are gathered back
+    in submit order (failed shards fall back to per-item routing),
   * retires replicas on failure and restores them on recovery (health
     callbacks), rejecting only when NO replica is healthy,
   * hedges stragglers through serving.batcher.HedgedExecutor,
@@ -24,7 +28,8 @@ import dataclasses
 import random
 import threading
 import time
-from typing import Any, Callable, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Optional, Sequence
 
 from repro.serving.batcher import HedgedExecutor, LatencyTracker
 
@@ -33,6 +38,7 @@ from repro.serving.batcher import HedgedExecutor, LatencyTracker
 class Replica:
     name: str
     fn: Callable[[Any], Any]
+    batch_fn: Optional[Callable[[list], list]] = None
     healthy: bool = True
     outstanding: int = 0
     failures: int = 0
@@ -54,11 +60,19 @@ class QueryRouter:
         self.latency = LatencyTracker()
         self._rng = random.Random(0)
         self._last_probe: dict[str, float] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
 
     # -- membership -----------------------------------------------------------
-    def add_replica(self, name: str, fn: Callable[[Any], Any]) -> None:
+    def add_replica(self, name: str, fn: Callable[[Any], Any], *,
+                    batch_fn: Optional[Callable[[list], list]] = None
+                    ) -> None:
+        """``fn`` answers one payload; optional ``batch_fn`` answers a LIST
+        of payloads in order (e.g. ``engine.query_batch``) and is what
+        ``call_batch`` scatters shards to.  Without it, a shard is served
+        by mapping ``fn`` inside the shard's worker thread."""
         with self._lock:
-            self._replicas[name] = Replica(name=name, fn=fn)
+            self._replicas[name] = Replica(name=name, fn=fn,
+                                           batch_fn=batch_fn)
 
     def add_replica_from_store(self, name: str, store_dir: str, *,
                                search_cfg: Any = None,
@@ -136,6 +150,93 @@ class QueryRouter:
                 with self._lock:
                     r.outstanding -= 1
         raise ReplicaUnavailable(f"all replicas failing; last: {last_exc!r}")
+
+    # -- batched scatter/gather -------------------------------------------------
+    def call_batch(self, payloads: Sequence[Any]) -> list:
+        """Scatter a batch across healthy replicas, gather in submit order.
+
+        The batch is split into up to ``len(healthy)`` contiguous shards
+        assigned least-loaded-first; shards run concurrently.  A shard whose
+        replica faults is demoted exactly like ``__call__`` and its items
+        are re-routed individually (so one bad pod degrades, not fails, the
+        batch).  Raises ``ReplicaUnavailable`` only when no replica works.
+        """
+        payloads = list(payloads)
+        if not payloads:
+            return []
+        healthy = self.healthy_replicas()
+        if len(healthy) <= 1:
+            # single (or no) healthy replica: per-item path handles
+            # probing/recovery; batch_fn still amortizes if present
+            r = healthy[0] if healthy else None
+            if r is not None and r.batch_fn is not None:
+                try:
+                    return self._run_shard(r, payloads)
+                except Exception:
+                    pass                      # demoted; re-route per item
+            return [self(p) for p in payloads]
+
+        n_shards = min(len(healthy), len(payloads))
+        base, rem = divmod(len(payloads), n_shards)
+        shards: list[tuple[int, list]] = []
+        lo = 0
+        for i in range(n_shards):
+            size = base + (1 if i < rem else 0)
+            shards.append((lo, payloads[lo: lo + size]))
+            lo += size
+        targets = sorted(healthy, key=lambda r: r.outstanding)
+
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(max_workers=32)
+        results: list[Any] = [None] * len(payloads)
+        futs = [self._pool.submit(self._run_shard, targets[i], items)
+                for i, (_, items) in enumerate(shards)]
+        for (off, items), f in zip(shards, futs):
+            try:
+                out = f.result()
+            except ReplicaUnavailable:
+                raise
+            except Exception:
+                out = [self(p) for p in items]   # per-item re-route
+            results[off: off + len(items)] = out
+        return results
+
+    def _run_shard(self, r: Replica, items: list) -> list:
+        t0 = time.perf_counter()
+        with self._lock:
+            r.outstanding += len(items)
+        try:
+            if r.batch_fn is not None:
+                out = list(r.batch_fn(items))
+            else:
+                out = [r.fn(p) for p in items]
+            if len(out) != len(items):
+                raise RuntimeError(
+                    f"replica {r.name!r} batch_fn returned {len(out)} "
+                    f"results for {len(items)} payloads")
+            self.latency.record(time.perf_counter() - t0)
+            with self._lock:
+                r.failures = 0
+                r.healthy = True
+            return out
+        except Exception as e:
+            with self._lock:
+                r.failures += 1
+                r.last_error = repr(e)
+                if r.failures >= self.unhealthy_after:
+                    r.healthy = False
+            raise
+        finally:
+            with self._lock:
+                r.outstanding -= len(items)
+
+    def close(self) -> None:
+        """Release the scatter/gather worker pool (idempotent)."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     def stats(self) -> dict:
         with self._lock:

@@ -1,0 +1,132 @@
+"""Batched query pipeline: search_batch/query_batch parity with the
+per-query path, static-shape tail padding, and embedding-cache semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anns, imi
+from repro.core.query import EmbedCache
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (3000, 64))
+    ids = jnp.arange(3000, dtype=jnp.int32)
+    return imi.build_imi(jax.random.PRNGKey(1), x, ids,
+                         K=8, P=8, M=32, kmeans_iters=5)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    from repro.launch.serve import build_engine
+    eng, _ = build_engine(seed=0, n_videos=2, res=96)
+    return eng
+
+
+QS = jax.random.normal(jax.random.PRNGKey(7), (5, 64))
+
+
+@pytest.mark.parametrize("cfg", [
+    # windows cover the index -> shared scan-all-rows ADC path
+    anns.SearchConfig(top_a=8, max_cell_size=1024, top_k=32),
+    # windows smaller than the index -> per-query windowed gather path
+    anns.SearchConfig(top_a=4, max_cell_size=128, top_k=32),
+    # no exact refine: approx scores returned directly
+    anns.SearchConfig(top_a=8, max_cell_size=512, top_k=32,
+                      exact_rerank=False),
+], ids=["scan_all", "windowed", "no_refine"])
+def test_search_batch_matches_sequential(index, cfg):
+    batched = anns.search_batch(index, QS, cfg)
+    for i in range(QS.shape[0]):
+        single = anns.search(index, QS[i], cfg)
+        np.testing.assert_array_equal(np.asarray(single["ids"]),
+                                      np.asarray(batched["ids"][i]))
+        np.testing.assert_array_equal(np.asarray(single["rows"]),
+                                      np.asarray(batched["rows"][i]))
+        np.testing.assert_allclose(np.asarray(single["scores"]),
+                                   np.asarray(batched["scores"][i]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_search_batch_pallas_kernel_matches_jnp(index):
+    cfg_j = anns.SearchConfig(top_a=8, max_cell_size=512, top_k=32)
+    cfg_p = anns.SearchConfig(top_a=8, max_cell_size=512, top_k=32,
+                              use_kernel="pallas")
+    rj = anns.search_batch(index, QS, cfg_j)
+    rp = anns.search_batch(index, QS, cfg_p)
+    # exact refine re-scores against stored vectors, so ids survive the
+    # kernel's bf16 LUT quantization
+    np.testing.assert_array_equal(np.asarray(rj["ids"]),
+                                  np.asarray(rp["ids"]))
+    np.testing.assert_allclose(np.asarray(rj["scores"]),
+                               np.asarray(rp["scores"]), rtol=1e-3, atol=1e-3)
+
+
+def test_pq_scan_paired_matches_oracle():
+    from repro.core import pq as pqmod
+    from repro.kernels import ops
+    luts = jax.random.normal(jax.random.PRNGKey(3), (3, 8, 32))
+    codes = jax.random.randint(jax.random.PRNGKey(4), (3, 700, 8),
+                               0, 32).astype(jnp.uint8)
+    want = jax.vmap(pqmod.adc_scores)(luts, codes)
+    got = ops.pq_scan_paired(luts, codes, block_n=256)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-2 * np.sqrt(8))
+
+
+# -- engine level -------------------------------------------------------------
+def test_fast_search_batch_matches_single_incl_padded_tail(engine):
+    texts = [f"a large red square number {i}" for i in range(5)]
+    engine.query_batch_size = 4          # Q=5 -> one full chunk + padded tail
+    ids_b, scores_b, _ = engine.fast_search_batch(texts)
+    assert ids_b.shape[0] == 5
+    for i, t in enumerate(texts):
+        ids_s, scores_s, _ = engine.fast_search(t)
+        np.testing.assert_array_equal(ids_s, ids_b[i])
+        np.testing.assert_allclose(scores_s, scores_b[i],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_query_batch_matches_single_query(engine):
+    texts = ["a large red square", "a small blue circle"]
+    batched = engine.query_batch(texts, top_n=3)
+    for t, rb in zip(texts, batched):
+        rs = engine.query(t, top_n=3)
+        np.testing.assert_array_equal(rs.frames, rb.frames)
+        np.testing.assert_allclose(rs.scores, rb.scores,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(rs.boxes, rb.boxes, rtol=1e-4, atol=1e-4)
+
+
+def test_query_batch_no_rerank(engine):
+    rs = engine.query_batch(["a green triangle", "a black bar"],
+                            top_n=2, use_rerank=False)
+    assert len(rs) == 2
+    for r in rs:
+        assert "rerank" not in r.timings
+        assert len(r.frames) <= 2
+
+
+def test_embed_cache_hit_semantics(engine):
+    text = "a purple triangle cache probe"    # unique to this test
+    m0 = engine.embed_cache.misses
+    r1 = engine.query(text, top_n=2, use_rerank=False)
+    assert engine.embed_cache.misses > m0
+    h1 = engine.embed_cache.hits
+    r2 = engine.query(text, top_n=2, use_rerank=False)
+    assert engine.embed_cache.hits > h1          # second call hits
+    np.testing.assert_array_equal(r1.frames, r2.frames)
+    np.testing.assert_allclose(r1.scores, r2.scores)
+
+
+def test_embed_cache_lru_eviction():
+    c = EmbedCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                        # refresh 'a'
+    c.put("c", 3)                                 # evicts 'b' (LRU)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert len(c) == 2

@@ -64,6 +64,106 @@ def test_hedged_executor_no_hedge_when_fast():
     assert hx.hedges_won == 0
 
 
+def test_microbatcher_concurrent_submit_ordering():
+    """Results must map back to their own payloads regardless of how
+    concurrent submitters interleave and how batches are cut (tail
+    batches included)."""
+    def run(batch):
+        return [x * 10 + 1 for x in batch]
+
+    mb = MicroBatcher(run, batch_size=8, max_wait_ms=5)
+    results = {}
+    lock = threading.Lock()
+
+    def client(lo, hi):
+        futs = [(i, mb.submit(i)) for i in range(lo, hi)]
+        for i, f in futs:
+            r = f.result(timeout=10)
+            with lock:
+                results[i] = r
+
+    threads = [threading.Thread(target=client, args=(k * 25, (k + 1) * 25))
+               for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mb.close()
+    assert results == {i: i * 10 + 1 for i in range(100)}
+
+
+def test_hedged_executor_all_fail_raises_real_exception():
+    """All-replicas-fail must surface the first real exception — not
+    TypeError from raising None, and without blocking on pending futures."""
+    class ReplicaDown(RuntimeError):
+        pass
+
+    def fail_fast(x):
+        raise ReplicaDown("replica 0 down")
+
+    def fail_slow(x):
+        time.sleep(0.2)
+        raise ReplicaDown("replica 1 down")
+
+    hx = HedgedExecutor([fail_fast, fail_slow], max_hedges=1)
+    for _ in range(10):
+        hx.latency.record(0.01)
+    t0 = time.perf_counter()
+    with pytest.raises(ReplicaDown, match="replica 0 down"):
+        hx(42)
+    assert time.perf_counter() - t0 < 5
+
+
+def test_hedged_executor_primary_fails_hedge_wins():
+    def fail(x):
+        raise RuntimeError("down")
+
+    def ok(x):
+        return ("ok", x)
+
+    hx = HedgedExecutor([fail, ok], max_hedges=1)
+    for _ in range(10):
+        hx.latency.record(0.01)
+    assert hx(7) == ("ok", 7)
+
+
+def test_router_call_batch_scatter_gather_order():
+    from repro.serving.router import QueryRouter
+    seen = {"a": [], "b": []}
+
+    def mk(name):
+        def batch_fn(items):
+            seen[name].append(list(items))
+            return [(name, x) for x in items]
+        return batch_fn
+
+    router = QueryRouter(hedge=False)
+    router.add_replica("a", lambda x: ("a", x), batch_fn=mk("a"))
+    router.add_replica("b", lambda x: ("b", x), batch_fn=mk("b"))
+    out = router.call_batch(list(range(10)))
+    assert [x for _, x in out] == list(range(10))   # gather preserves order
+    served = [x for batches in seen.values() for b in batches for x in b]
+    assert sorted(served) == list(range(10))
+    assert all(len(b) > 0 for bs in seen.values() for b in bs)
+
+
+def test_router_call_batch_survives_bad_replica():
+    from repro.serving.router import QueryRouter
+
+    def bad_batch(items):
+        raise RuntimeError("pod lost")
+
+    router = QueryRouter(hedge=False, unhealthy_after=1)
+    router.add_replica("bad", lambda x: (_ for _ in ()).throw(
+        RuntimeError("pod lost")), batch_fn=bad_batch)
+    router.add_replica("good", lambda x: x + 1,
+                       batch_fn=lambda items: [x + 1 for x in items])
+    out = router.call_batch(list(range(8)))
+    assert out == [x + 1 for x in range(8)]
+    # the faulting shard must have demoted its replica (unhealthy_after=1)
+    assert not router.stats()["bad"]["healthy"]
+
+
 def test_latency_tracker_quantiles():
     t = LatencyTracker()
     for v in np.linspace(0.01, 0.1, 100):

@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Doc link checker (CI docs job): every internal reference must resolve.
+
+Checks, for the given markdown files (default README.md DESIGN.md):
+  * markdown links `[text](target)` whose target is a relative path —
+    the file must exist (external http(s) links and bare #anchors are
+    skipped; a `path#anchor` checks only the path);
+  * backticked repo paths like `src/repro/core/anns.py` or
+    `benchmarks/run.py` — the file or directory must exist (glob-ish
+    references containing `*` are skipped).
+
+Exit code 1 with one line per broken reference.  Stdlib only.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+TICK_PATH = re.compile(
+    r"`((?:src|tests|benchmarks|examples|tools)/[A-Za-z0-9_./*-]+)`")
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (md.parent / path).exists() and not (root / path).exists():
+            errors.append(f"{md.name}: broken link -> {target}")
+    for m in TICK_PATH.finditer(text):
+        ref = m.group(1)
+        if "*" in ref:
+            continue
+        if not (root / ref).exists():
+            errors.append(f"{md.name}: missing path -> {ref}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(__file__).resolve().parents[1]
+    files = [root / a for a in argv] if argv else \
+        [root / "README.md", root / "DESIGN.md"]
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"missing doc file: {f.name}")
+            continue
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
