@@ -1,0 +1,110 @@
+"""Index-construction benchmark: build throughput + retrieval recall,
+monolithic vs streaming (DESIGN.md §9).
+
+  PYTHONPATH=src python -m benchmarks.index_build [--smoke]
+
+Measures the two build paths over the same clustered corpus:
+
+  * ``build_imi``            — monolithic: full corpus in host memory.
+  * ``build_imi_streaming``  — reservoir codebook training + chunked encode
+    spilled to store segments; working set = reservoir + one chunk + the
+    final index arrays (never the raw f32 corpus, never an (N, M) distance
+    matrix — the fused Pallas assignment kernel owns that contract).
+
+and reports vectors/s for each plus recall@50 (exact top-10 inside the
+searched top-50, LOVO retrieval protocol with exact rerank) on the
+streaming-built index — the accuracy floor the quantization overhaul is
+accountable for.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_corpus(seed: int, n: int, d: int, k: int = 40, noise: float = 0.25):
+    cents = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    a = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, k)
+    x = cents[a] + noise * jax.random.normal(
+        jax.random.PRNGKey(seed + 2), (n, d))
+    return np.asarray(x, np.float32), np.asarray(cents, np.float32)
+
+
+def recall_at_50(index, x, cents, n_queries: int = 20) -> float:
+    from repro.core import anns
+
+    hits = 0
+    for qi in range(n_queries):
+        q = jnp.asarray(cents[qi % len(cents)]) + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(1000 + qi), (x.shape[1],))
+        bf = anns.brute_force(index, q, k=10)
+        res = anns.search(index, q, anns.SearchConfig(
+            top_a=32, max_cell_size=2048, top_k=50, rerank_overfetch=32))
+        got = set(np.asarray(res["ids"]).tolist())
+        hits += sum(1 for w in np.asarray(bf["ids"]).tolist() if w in got)
+    return hits / (10 * n_queries)
+
+
+def main(smoke: bool = False) -> dict:
+    from repro.core import imi as imimod
+    from repro.core.index_builder import (StreamingBuildConfig,
+                                          build_imi_streaming)
+
+    n = 8_000 if smoke else 60_000
+    d = 64
+    K, P, M = 16, 8, 64
+    iters = 4 if smoke else 8
+    chunk = 4_096
+    x, cents = make_corpus(0, n, d)
+    ids = np.arange(n, dtype=np.int32)
+
+    t0 = time.perf_counter()
+    mono = imimod.build_imi(jax.random.PRNGKey(0), jnp.asarray(x),
+                            jnp.asarray(ids), K=K, P=P, M=M,
+                            kmeans_iters=iters)
+    jax.block_until_ready(mono.codes)
+    mono_s = time.perf_counter() - t0
+
+    def chunks():
+        for lo in range(0, n, chunk):
+            yield x[lo: lo + chunk], ids[lo: lo + chunk]
+
+    cfg = StreamingBuildConfig(K=K, P=P, M=M, kmeans_iters=iters,
+                               sample_size=min(n, 16_384), chunk_rows=chunk)
+    with tempfile.TemporaryDirectory(prefix="lovo-bench-") as spill:
+        t0 = time.perf_counter()
+        stream = build_imi_streaming(jax.random.PRNGKey(0),
+                                     lambda: chunks(), cfg, spill_dir=spill)
+        jax.block_until_ready(stream.codes)
+        stream_s = time.perf_counter() - t0
+
+    rec = recall_at_50(stream, x, cents, n_queries=8 if smoke else 20)
+    out = {
+        "n": n,
+        "mono_s": mono_s,
+        "stream_s": stream_s,
+        "mono_vps": n / mono_s,
+        "stream_vps": n / stream_s,
+        "recall_at_50": rec,
+        "train_rows_streaming": min(n, cfg.sample_size),
+    }
+    print(f"index_build: n={n} mono {out['mono_vps']:.0f} v/s "
+          f"({mono_s:.1f}s), streaming {out['stream_vps']:.0f} v/s "
+          f"({stream_s:.1f}s, reservoir {out['train_rows_streaming']}), "
+          f"recall@50={rec:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (8k vectors, fewer Lloyd iters)")
+    args = ap.parse_args()
+    out = main(smoke=args.smoke)
+    if out["recall_at_50"] < 0.9:
+        raise SystemExit(f"recall@50 regression: {out['recall_at_50']:.3f}")

@@ -100,6 +100,16 @@ def main() -> None:
                     f"speedup={row['qps'] / q1:.2f}x "
                     f"p99_b{row['batch']}={row['p99_ms']:.1f}ms")
 
+    @bench("index_build")
+    def ibuild():
+        from benchmarks import index_build
+        t0 = time.perf_counter()
+        out = index_build.main(smoke=args.quick)
+        us = (time.perf_counter() - t0) * 1e6
+        return us, (f"mono={out['mono_vps']:.0f}v/s "
+                    f"stream={out['stream_vps']:.0f}v/s "
+                    f"recall@50={out['recall_at_50']:.3f}")
+
     @bench("store_persistence")
     def store():
         from benchmarks import store_bench

@@ -5,7 +5,11 @@ Pipeline per query:
   2. exact top-A cells via the multi-sequence frontier (imi.multi_sequence_top_a)
   3. gather each cell's [start, start+max_cell_size) window (static shapes)
   4. ADC over residual-PQ codes:  s ~= s_cell_base + q . residual
-     (LUT precomputed once per query — the paper's distance lookup-table)
+     (LUT precomputed once per query — the paper's distance lookup-table.
+     The LUT internalizes the quantizer's two-level per-cell offset and
+     the optional OPQ rotation, DESIGN.md §9 — s_cell_base here is the
+     IMI coarse-cell term, which stays outside because it varies per
+     probed cell, not per code entry)
   5. top-k by approximate score
   6. exact re-scoring of the top-k against stored bf16 vectors
      (s_exact = sum_p q_p . x_p — Algorithm 1 line 14)
@@ -164,10 +168,18 @@ def brute_force(index: IMIIndex, q: jax.Array, k: int = 100
     return {"ids": index.ids[rows], "scores": vals, "rows": rows}
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel",
+                                             "rerank_overfetch"))
 def exhaustive_adc(index: IMIIndex, q: jax.Array, k: int = 100,
-                   use_kernel: str = "jnp") -> dict[str, jax.Array]:
-    """'w/o ANNS' ablation: full ADC scan, no cell pruning (Table IV)."""
+                   use_kernel: str = "jnp",
+                   rerank_overfetch: int = 4) -> dict[str, jax.Array]:
+    """'w/o ANNS' ablation: full ADC scan, no cell pruning (Table IV).
+
+    Uses the same overfetch + exact-rescore refine protocol as ``search``
+    (fetch ``k * rerank_overfetch`` by approximate score, exact-rescore,
+    cut to k) so the ablation differs from cell-probe search only in the
+    pruning, not in the refine rule.
+    """
     q = pqmod.normalize(q.astype(jnp.float32))
     # score = q . (coarse(cell_of) + residual)
     K = index.K
@@ -177,10 +189,11 @@ def exhaustive_adc(index: IMIIndex, q: jax.Array, k: int = 100,
     base = s1[index.cell_of // K] + s2[index.cell_of % K]
     lut = pqmod.similarity_lut(index.pq, q)
     scores = base + _adc(lut, index.codes, use_kernel)
-    vals, rows = jax.lax.top_k(scores, k)
+    fetch_k = min(k * max(rerank_overfetch, 1), scores.shape[0])
+    _, rows = jax.lax.top_k(scores, fetch_k)
     vecs = index.vectors[rows].astype(jnp.float32)
     exact = vecs @ q
-    order = jnp.argsort(-exact)
+    order = jnp.argsort(-exact)[:k]
     return {"ids": index.ids[rows[order]], "scores": exact[order],
             "rows": rows[order]}
 

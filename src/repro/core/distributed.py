@@ -60,11 +60,13 @@ class ShardedIndex:
     coarse1: jax.Array       # (K, D'/2) replicated
     coarse2: jax.Array
     pq_centroids: jax.Array  # (P, M, m) replicated
+    pq_rotation: jax.Array   # (D', D') replicated (identity when no OPQ —
+    #                          static shape keeps shard_map specs uniform)
 
     def tree_flatten(self):
         return ((self.codes, self.vectors, self.ids, self.cell_of,
                  self.cell_offsets, self.coarse1, self.coarse2,
-                 self.pq_centroids), None)
+                 self.pq_centroids, self.pq_rotation), None)
 
     @classmethod
     def tree_unflatten(cls, aux, kids):
@@ -114,6 +116,8 @@ def shard_index(index: IMIIndex, n_shards: int) -> ShardedIndex:
         cell_offsets=jnp.asarray(np.stack(s_off)),
         coarse1=index.coarse1, coarse2=index.coarse2,
         pq_centroids=index.pq.centroids,
+        pq_rotation=(index.pq.rotation if index.pq.rotation is not None
+                     else jnp.eye(index.vectors.shape[-1], dtype=jnp.float32)),
     )
 
 
@@ -123,7 +127,7 @@ def index_shardings(mesh: Mesh) -> Any:
     rep = NamedSharding(mesh, P())
     return ShardedIndex(codes=row, vectors=row, ids=row, cell_of=row,
                         cell_offsets=row, coarse1=rep, coarse2=rep,
-                        pq_centroids=rep)
+                        pq_centroids=rep, pq_rotation=rep)
 
 
 def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
@@ -134,11 +138,12 @@ def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
     dict(ids (Q, k), scores (Q, k))."""
     axes = tuple(mesh.axis_names)
 
-    def local_scan(codes, vectors, ids, cell_of, offsets, c1, c2, cents, qs):
+    def local_scan(codes, vectors, ids, cell_of, offsets, c1, c2, cents,
+                   rot, qs):
         # shapes inside shard_map: codes (1, n_local, P) etc.; qs replicated
         codes, vectors, ids = codes[0], vectors[0], ids[0]
         cell_of, offsets = cell_of[0], offsets[0]
-        pq = pqmod.PQ(cents)
+        pq = pqmod.PQ(cents, rotation=rot)
         K = c1.shape[0]
 
         def one(q):
@@ -167,12 +172,16 @@ def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
                 sc = pqmod.adc_scores(lut, cand).reshape(rows.shape)
                 scores_w = jnp.where(valid, sc + cbase[:, None], -jnp.inf)
                 scores, rows = scores_w.reshape(-1), rows.reshape(-1)
-            vals, idx = jax.lax.top_k(scores, top_k)
+            # same overfetch + exact-refine protocol as anns.search /
+            # exhaustive_adc: ADC order is approximate, so fetch a multiple
+            # of top_k, exact-rescore, THEN cut
+            fetch_k = min(top_k * 4, scores.shape[0])
+            vals, idx = jax.lax.top_k(scores, fetch_k)
             sel = idx if rows is None else rows[idx]
-            # exact re-scoring of local winners
             exact = vectors[sel].astype(jnp.float32) @ q
             exact = jnp.where(jnp.isfinite(vals), exact, -jnp.inf)
-            return exact, ids[sel]
+            order = jnp.argsort(-exact)[:top_k]
+            return exact[order], ids[sel[order]]
 
         ex, gid = jax.vmap(one)(qs)                       # (Q, k) each
         # global merge: ship only k ids+scores per device
@@ -182,7 +191,7 @@ def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
         return vals, jnp.take_along_axis(all_id, idx, axis=1)
 
     in_specs = (P(axes), P(axes), P(axes), P(axes), P(axes),
-                P(), P(), P(), P())
+                P(), P(), P(), P(), P())
     out_specs = (P(), P())
     f = shard_map_compat(local_scan, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs)
@@ -190,7 +199,7 @@ def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
     def search(sidx: ShardedIndex, qs: jax.Array):
         vals, ids = f(sidx.codes, sidx.vectors, sidx.ids, sidx.cell_of,
                       sidx.cell_offsets, sidx.coarse1, sidx.coarse2,
-                      sidx.pq_centroids, qs)
+                      sidx.pq_centroids, sidx.pq_rotation, qs)
         return {"scores": vals, "ids": ids}
 
     return search

@@ -66,12 +66,18 @@ jax.tree_util.register_pytree_node_class(IMIIndex)
 
 def assign_cells(coarse1: jax.Array, coarse2: jax.Array, x: jax.Array
                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Nearest coarse centroid per half -> (cell_id, a1, a2)."""
+    """Nearest coarse centroid per half -> (cell_id, a1, a2).
+
+    Runs through the fused Pallas assignment kernel: no (N, K) distance
+    matrix in HBM, same memory contract as the codebook training loops.
+    """
+    from repro.kernels import ops as kops
+
     K = coarse1.shape[0]
     h = x.shape[-1] // 2
     x1, x2 = x[..., :h], x[..., h:]
-    a1 = jnp.argmin(pqmod._pairwise_sqdist(x1, coarse1), axis=-1)
-    a2 = jnp.argmin(pqmod._pairwise_sqdist(x2, coarse2), axis=-1)
+    a1, _ = kops.kmeans_assign(x1, coarse1)
+    a2, _ = kops.kmeans_assign(x2, coarse2)
     return a1 * K + a2, a1, a2
 
 
@@ -80,20 +86,49 @@ def coarse_reconstruct(coarse1: jax.Array, coarse2: jax.Array,
     return jnp.concatenate([coarse1[a1], coarse2[a2]], axis=-1)
 
 
-def build_imi(rng: jax.Array, x: jax.Array, ids: jax.Array, *,
-              K: int, P: int, M: int, kmeans_iters: int = 15) -> IMIIndex:
-    """Train coarse + residual-PQ codebooks and build the sorted layout.
+def train_imi_codebooks(rng: jax.Array, x: jax.Array, *,
+                        K: int, P: int, M: int, kmeans_iters: int = 15,
+                        opq_iters: int = 0, coarse_cells: int | None = None
+                        ) -> tuple[jax.Array, jax.Array, PQ, jax.Array,
+                                   jax.Array]:
+    """The one codebook-training protocol (monolithic AND streaming builds
+    call this — parity between them is structural, not hand-synchronized).
 
-    x: (N, D') raw class embeddings (normalized inside); ids: (N,) patch ids.
+    x: (N, D') already normalized.  Returns (coarse1, coarse2, pq, cell,
+    residual) for the training rows.
     """
-    x = pqmod.normalize(x.astype(jnp.float32))
     h = x.shape[-1] // 2
     r1, r2, r3 = jax.random.split(rng, 3)
     coarse1, _ = kmeans(r1, x[:, :h], K, kmeans_iters)
     coarse2, _ = kmeans(r2, x[:, h:], K, kmeans_iters)
     cell, a1, a2 = assign_cells(coarse1, coarse2, x)
     residual = x - coarse_reconstruct(coarse1, coarse2, a1, a2)
-    pq = pqmod.train_pq(r3, residual, P, M, kmeans_iters)
+    if opq_iters > 0:
+        pq = pqmod.train_opq(r3, residual, P, M, kmeans_iters,
+                             opq_iters=opq_iters, coarse_cells=coarse_cells)
+    else:
+        pq = pqmod.train_pq(r3, residual, P, M, kmeans_iters,
+                            coarse_cells=coarse_cells)
+    return coarse1, coarse2, pq, cell, residual
+
+
+def build_imi(rng: jax.Array, x: jax.Array, ids: jax.Array, *,
+              K: int, P: int, M: int, kmeans_iters: int = 15,
+              opq_iters: int = 0, coarse_cells: int | None = None
+              ) -> IMIIndex:
+    """Train coarse + residual-PQ codebooks and build the sorted layout.
+
+    x: (N, D') raw class embeddings (normalized inside); ids: (N,) patch ids.
+    ``opq_iters > 0`` learns an OPQ rotation for the residual quantizer
+    (alternating Procrustes + Lloyd); the rotation rides inside the ``PQ``
+    pytree so search stays score-correct with no extra plumbing.
+    ``coarse_cells`` sizes the per-subspace coarse stage of the two-level
+    residual codebook (None = auto).
+    """
+    x = pqmod.normalize(x.astype(jnp.float32))
+    coarse1, coarse2, pq, cell, residual = train_imi_codebooks(
+        rng, x, K=K, P=P, M=M, kmeans_iters=kmeans_iters,
+        opq_iters=opq_iters, coarse_cells=coarse_cells)
     codes = pqmod.pq_encode(pq, residual)
 
     order = jnp.argsort(cell, stable=True)

@@ -65,17 +65,25 @@ class SegmentedIndex:
         self.segment_capacity = segment_capacity
         self.persistence = persistence
         self.tombstones: set[int] = set()
-        # training-time residual energy baseline for drift monitoring
-        rec = pqmod.pq_decode(base.pq, base.codes)
+        # training-time residual energy baseline for drift monitoring,
+        # estimated on a strided row sample: decoding the WHOLE base would
+        # materialize an (N, D') f32 copy — unacceptable for streaming-built
+        # indexes sized near host memory
+        n = base.n
+        rows = jnp.arange(0, n, max(1, n // self._RESID_SAMPLE))
+        rec = pqmod.pq_decode(base.pq, base.codes[rows])
         self._train_resid = float(jnp.mean(jnp.sum(jnp.square(
-            rec - self._base_residuals()), axis=-1)))
+            rec - self._base_residuals(rows)), axis=-1)))
 
-    def _base_residuals(self) -> jax.Array:
+    _RESID_SAMPLE = 4096  # rows used for the drift baseline estimate
+
+    def _base_residuals(self, rows: jax.Array) -> jax.Array:
         K = self.base.K
-        c1 = self.base.coarse1[self.base.cell_of // K]
-        c2 = self.base.coarse2[self.base.cell_of % K]
+        cell = self.base.cell_of[rows]
+        c1 = self.base.coarse1[cell // K]
+        c2 = self.base.coarse2[cell % K]
         coarse = jnp.concatenate([c1, c2], axis=-1)
-        return self.base.vectors.astype(jnp.float32) - coarse
+        return self.base.vectors[rows].astype(jnp.float32) - coarse
 
     @property
     def n(self) -> int:

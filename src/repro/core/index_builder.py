@@ -5,17 +5,32 @@ The vector database holds (codes, vectors, patch ids); the "relational
 database" side-table (frame id, bbox per patch id) is a host-side
 MetadataStore keyed by patch id — exactly the paper's split, minus the SQL
 engine (the layout/linking is the contribution, see DESIGN.md §3).
+
+Two build paths share the same codebook training:
+
+  * ``build_from_videos`` — monolithic: every embedding in host memory.
+  * ``StreamingIndexBuilder`` / ``build_imi_streaming`` — bounded memory
+    (DESIGN.md §9): codebooks are trained on a reservoir sample, then the
+    corpus is encoded in fixed-size chunks that spill straight into
+    ``repro.store`` segment files; the final cell-sorted base is assembled
+    by gathering rows from the mmap'd spill segments.  Peak host memory is
+    the final index arrays (uint8 codes + bf16 vectors) plus ONE raw f32
+    chunk — never the full f32 corpus, and (via the fused Pallas assignment
+    kernel) never an (N, M) distance matrix.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+import pathlib
+import shutil
+from typing import Any, Callable, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import imi as imimod
+from repro.core import pq as pqmod
 from repro.data import video as videomod
 from repro.data.synthetic import Video
 from repro.models import vit as vitmod
@@ -95,6 +110,320 @@ def build_from_videos(rng: jax.Array, videos: Sequence[Video],
     return BuiltIndex(index=index, metadata=meta, keyframes=frames,
                       keyframe_video=kf_video, keyframe_frame=kf_frame,
                       patches_per_frame=Kp)
+
+
+# ---------------------------------------------------------------------------
+# Streaming / sharded build (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StreamingBuildConfig:
+    """Knobs for the bounded-memory build.
+
+    ``sample_size`` bounds the codebook-training working set (reservoir);
+    ``chunk_rows`` bounds the encode working set.  With ``sample_size >=
+    corpus size`` the reservoir degenerates to the full corpus in original
+    order and the streaming build is bit-identical to ``build_imi`` (tested
+    in tests/test_quantization.py).
+    """
+
+    K: int = 16
+    P: int = 8
+    M: int = 64
+    kmeans_iters: int = 10
+    opq_iters: int = 0
+    coarse_cells: Optional[int] = None
+    sample_size: int = 32_768
+    chunk_rows: int = 8_192
+    reservoir_seed: int = 0
+
+
+class StreamingIndexBuilder:
+    """Two-phase, bounded-memory IMI build against ``repro.store`` spill
+    segments.
+
+    Phase 1: ``observe(x)`` every chunk (reservoir sampling, Vitter's
+    algorithm R, vectorized).  ``train()`` then fits coarse halves +
+    residual (O)PQ codebooks on the <= ``sample_size`` reservoir — the only
+    rows codebook training ever sees.
+
+    Phase 2: ``add(x, ids)`` encodes each chunk against the frozen
+    codebooks (fused Pallas assignment; codes are row-independent, so
+    chunked encoding is bit-equal to monolithic).  With ``spill_dir`` set,
+    each encoded chunk is flushed to an immutable CRC'd store segment and
+    the raw chunk is dropped; ``finish()`` assembles the cell-sorted base
+    by gathering rows from the mmap'd spill segments into the final arrays.
+    """
+
+    def __init__(self, rng: jax.Array, cfg: StreamingBuildConfig, *,
+                 spill_dir: Optional[str | pathlib.Path] = None):
+        self.rng = rng
+        self.cfg = cfg
+        self.spill_dir = pathlib.Path(spill_dir) if spill_dir else None
+        self._made_spill_dir = False
+        if self.spill_dir is not None:
+            self._made_spill_dir = not self.spill_dir.exists()
+            self.spill_dir.mkdir(parents=True, exist_ok=True)
+        self._np_rng = np.random.default_rng(cfg.reservoir_seed)
+        self._reservoir: Optional[np.ndarray] = None
+        self._filled = 0
+        self._seen = 0
+        self._chunks: list[Any] = []   # spill segment names or array dicts
+        self._n_rows = 0
+        self._dim: Optional[int] = None
+        self.coarse1 = self.coarse2 = self.pq = None
+
+    def _resliced(self, x: np.ndarray):
+        """Enforce the ``chunk_rows`` working-set bound regardless of how
+        the caller sized its chunks (the §9.3 memory contract must not
+        depend on caller discipline)."""
+        for lo in range(0, len(x), self.cfg.chunk_rows):
+            yield x[lo: lo + self.cfg.chunk_rows]
+
+    # -- phase 1: reservoir -------------------------------------------------
+    def observe(self, x: np.ndarray) -> None:
+        """Feed a raw (n, D') chunk into the training reservoir; oversized
+        chunks are processed in ``chunk_rows`` slices."""
+        if self.pq is not None:
+            raise RuntimeError("observe() after train()")
+        x = np.asarray(x)
+        if len(x) > self.cfg.chunk_rows:
+            for part in self._resliced(x):
+                self.observe(part)
+            return
+        x = np.ascontiguousarray(x, np.float32)
+        if self._dim is None:
+            self._dim = x.shape[1]
+            self._reservoir = np.empty((self.cfg.sample_size, self._dim),
+                                       np.float32)
+        take = min(self.cfg.sample_size - self._filled, len(x))
+        if take > 0:
+            self._reservoir[self._filled: self._filled + take] = x[:take]
+            self._filled += take
+            self._seen += take
+            x = x[take:]
+        if len(x):
+            # vectorized algorithm R: row with global 0-based index t keeps a
+            # slot with prob S/(t+1); duplicate slot draws resolve in row
+            # order (numpy fancy assignment), matching sequential semantics
+            t = self._seen + np.arange(len(x))
+            slots = self._np_rng.integers(0, t + 1)
+            keep = slots < self.cfg.sample_size
+            self._reservoir[slots[keep]] = x[keep]
+            self._seen += len(x)
+
+    def train(self) -> None:
+        """Fit coarse + residual-PQ codebooks on the reservoir sample
+        (``imi.train_imi_codebooks`` — the same protocol as ``build_imi``,
+        so streaming == monolithic parity is structural)."""
+        if self._filled == 0:
+            raise RuntimeError("train() before observe()")
+        cfg = self.cfg
+        sample = pqmod.normalize(jnp.asarray(self._reservoir[: self._filled]))
+        self.coarse1, self.coarse2, self.pq, _, _ = \
+            imimod.train_imi_codebooks(
+                self.rng, sample, K=cfg.K, P=cfg.P, M=cfg.M,
+                kmeans_iters=cfg.kmeans_iters, opq_iters=cfg.opq_iters,
+                coarse_cells=cfg.coarse_cells)
+        self._reservoir = None  # training working set released
+
+    # -- phase 2: chunked encode -------------------------------------------
+    def add(self, x: np.ndarray, ids: np.ndarray) -> None:
+        """Encode one chunk against the frozen codebooks and flush it.
+        Oversized chunks are encoded in ``chunk_rows`` slices (encoding is
+        row-independent, so slicing cannot change the codes)."""
+        if self.pq is None:
+            raise RuntimeError("add() before train()")
+        x = np.asarray(x)
+        ids = np.ascontiguousarray(ids, imimod.ID_DTYPE).reshape(-1)
+        if len(ids) != len(x):
+            raise ValueError(f"add(): {len(x)} vectors but {len(ids)} ids")
+        if len(x) > self.cfg.chunk_rows:
+            for part, idp in zip(self._resliced(x), self._resliced(ids)):
+                self.add(part, idp)
+            return
+        xn = pqmod.normalize(jnp.asarray(x, jnp.float32))
+        cell, a1, a2 = imimod.assign_cells(self.coarse1, self.coarse2, xn)
+        residual = xn - imimod.coarse_reconstruct(
+            self.coarse1, self.coarse2, a1, a2)
+        codes = pqmod.pq_encode(self.pq, residual)
+        arrays = {
+            "codes": np.asarray(codes),
+            "vectors": np.asarray(xn.astype(jnp.bfloat16)),
+            "ids": ids,
+            "cells": np.asarray(cell, np.int32),
+        }
+        if self.spill_dir is not None:
+            from repro.store import segment as segmentmod
+            name = f"chunk-{len(self._chunks):06d}"
+            segmentmod.write_segment(self.spill_dir / name, arrays,
+                                     {"kind": "build-chunk"})
+            self._chunks.append(name)
+        else:
+            self._chunks.append(arrays)
+        self._n_rows += len(arrays["ids"])
+
+    def _open_chunk(self, chunk) -> dict[str, np.ndarray]:
+        if isinstance(chunk, dict):
+            return chunk
+        from repro.store import segment as segmentmod
+        arrays, _ = segmentmod.open_segment(self.spill_dir / chunk,
+                                            verify=False)
+        return arrays
+
+    def finish(self, *, cleanup: bool = True) -> imimod.IMIIndex:
+        """Assemble the cell-sorted base from the spilled chunks.
+
+        Peak memory: the final index arrays plus the permutation vector —
+        chunk rows are gathered straight from mmap'd spill segments into
+        their sorted positions; the raw f32 corpus never exists in host
+        memory.
+        """
+        if self.pq is None:
+            raise RuntimeError("finish() before train()")
+        n, d = self._n_rows, self._dim
+        cfg = self.cfg
+        cells = np.empty((n,), np.int32)
+        pos = 0
+        for chunk in self._chunks:
+            c = self._open_chunk(chunk)["cells"]
+            cells[pos: pos + len(c)] = c
+            pos += len(c)
+        order = np.argsort(cells, kind="stable")
+        inv = np.empty((n,), np.int64)
+        inv[order] = np.arange(n)
+        counts = np.bincount(cells, minlength=cfg.K * cfg.K)
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+
+        import ml_dtypes
+        out_codes = np.empty((n, cfg.P), np.uint8)
+        out_vecs = np.empty((n, d), ml_dtypes.bfloat16)
+        out_ids = np.empty((n,), imimod.ID_DTYPE)
+        pos = 0
+        for chunk in self._chunks:
+            arrays = self._open_chunk(chunk)
+            rows = len(arrays["ids"])
+            dest = inv[pos: pos + rows]
+            out_codes[dest] = arrays["codes"]
+            out_vecs[dest] = arrays["vectors"]
+            out_ids[dest] = arrays["ids"]
+            pos += rows
+        if cleanup and self.spill_dir is not None:
+            # delete only what this builder wrote — the caller may have
+            # pointed spill_dir at a directory that holds other data
+            for chunk in self._chunks:
+                if not isinstance(chunk, dict):
+                    shutil.rmtree(self.spill_dir / chunk, ignore_errors=True)
+            if self._made_spill_dir:
+                try:
+                    self.spill_dir.rmdir()   # only if now empty
+                except OSError:
+                    pass
+        return imimod.IMIIndex(
+            coarse1=self.coarse1, coarse2=self.coarse2, pq=self.pq,
+            codes=jnp.asarray(out_codes),
+            vectors=jnp.asarray(out_vecs),
+            ids=jnp.asarray(out_ids),
+            cell_of=jnp.asarray(cells[order]),
+            cell_offsets=jnp.asarray(offsets),
+        )
+
+
+def build_imi_streaming(rng: jax.Array,
+                        chunks: Callable[[], Iterable[tuple[np.ndarray,
+                                                            np.ndarray]]],
+                        cfg: StreamingBuildConfig, *,
+                        spill_dir: Optional[str | pathlib.Path] = None
+                        ) -> imimod.IMIIndex:
+    """Two-pass streaming build: ``chunks()`` must yield the same
+    (vectors, ids) sequence on both calls (pass 1 trains on a reservoir,
+    pass 2 encodes)."""
+    builder = StreamingIndexBuilder(rng, cfg, spill_dir=spill_dir)
+    for x, _ in chunks():
+        builder.observe(x)
+    builder.train()
+    for x, ids in chunks():
+        builder.add(x, ids)
+    return builder.finish()
+
+
+def build_from_videos_streaming(rng: jax.Array, videos: Sequence[Video],
+                                vit_params: Any, cfg: vitmod.ViTConfig, *,
+                                K: int = 16, P: int = 8, M: int = 64,
+                                keyframe_stride: int = 8,
+                                kmeans_iters: int = 10,
+                                opq_iters: int = 0,
+                                chunk_frames: int = 32,
+                                sample_size: int = 32_768,
+                                spill_dir: Optional[str] = None
+                                ) -> BuiltIndex:
+    """Streaming twin of ``build_from_videos``: key frames are ViT-encoded
+    once, in chunks, with embeddings spilled to store segments; codebook
+    training sees only the reservoir sample.  (Key frames themselves are
+    still collected for the BuiltIndex sidecar — the paper keeps them for
+    rerank — so frame storage, not embeddings, is the memory floor here.)
+    """
+    import tempfile
+
+    all_frames, kf_video, kf_frame = [], [], []
+    for vi, v in enumerate(videos):
+        idx = videomod.extract_keyframes(v.frames, stride=keyframe_stride)
+        all_frames.append(v.frames[idx])
+        kf_video.extend([vi] * len(idx))
+        kf_frame.extend(idx.tolist())
+    frames = np.concatenate(all_frames)
+    kf_video = np.asarray(kf_video, np.int32)
+    kf_frame = np.asarray(kf_frame, np.int32)
+
+    own_spill = spill_dir is None
+    spill = pathlib.Path(spill_dir or tempfile.mkdtemp(prefix="lovo-build-"))
+    emb_dir = spill / "embeddings"
+    from repro.store import segment as segmentmod
+
+    try:
+        # single ViT pass: encode each frame chunk once, spill embeddings
+        emb_names, boxes_all, kp = [], [], None
+        emb_dir.mkdir(parents=True, exist_ok=True)
+        for ci, lo in enumerate(range(0, len(frames), chunk_frames)):
+            cls, boxes = encode_keyframes(
+                vit_params, frames[lo: lo + chunk_frames], cfg)
+            f, kp, dp = cls.shape
+            name = f"emb-{ci:06d}"
+            segmentmod.write_segment(emb_dir / name,
+                                     {"cls": cls.reshape(f * kp, dp)},
+                                     {"kind": "build-emb"})
+            emb_names.append(name)
+            boxes_all.append(boxes.reshape(f * kp, 4).astype(np.float32))
+
+        def chunks():
+            pos = 0
+            for name in emb_names:
+                arrays, _ = segmentmod.open_segment(emb_dir / name,
+                                                    verify=False)
+                flat = arrays["cls"]
+                ids = np.arange(pos, pos + len(flat), dtype=imimod.ID_DTYPE)
+                pos += len(flat)
+                yield np.asarray(flat), ids
+
+        bcfg = StreamingBuildConfig(K=K, P=P, M=M, kmeans_iters=kmeans_iters,
+                                    opq_iters=opq_iters,
+                                    sample_size=sample_size)
+        index = build_imi_streaming(rng, chunks, bcfg,
+                                    spill_dir=spill / "chunks")
+        meta = MetadataStore(
+            video_of=np.repeat(kf_video, kp),
+            frame_of=np.repeat(kf_frame, kp),
+            bbox_of=np.concatenate(boxes_all),
+        )
+    finally:
+        # a failed build must not leak the spilled corpus to disk — that is
+        # the very resource the streaming path exists to bound
+        if own_spill:
+            shutil.rmtree(spill, ignore_errors=True)
+        else:
+            shutil.rmtree(emb_dir, ignore_errors=True)
+    return BuiltIndex(index=index, metadata=meta, keyframes=frames,
+                      keyframe_video=kf_video, keyframe_frame=kf_frame,
+                      patches_per_frame=kp)
 
 
 def save_built(path, built: BuiltIndex, *, meta: dict | None = None) -> None:

@@ -1,12 +1,29 @@
 """Product Quantization (Jegou et al., TPAMI'11) — LOVO §V-B.
 
 The class-embedding space R^{D'} is split into P subspaces of dim m = D'/P;
-each subspace is quantized to M centroids by Lloyd's iteration (k-means++
-seeding).  A vector is stored as P uint8 codes; query similarity uses a
-per-query lookup table (LUT[p, c] = q_p . centroid_{p,c}) and the ADC scan
-``score(n) = sum_p LUT[p, code[n, p]]``.
+each subspace is quantized by a two-level **coarse + residual** codebook
+(DESIGN.md §9): a small coarse stage of G cells per subspace, and M residual
+centroids around each cell, expanded into a single (P, G*M, m) table
 
-All functions are jit-friendly; the ADC scan has a Pallas TPU kernel
+    centroids[p, g*M + c] = coarse[p, g] + resid[p, c]
+
+so a vector is still stored as P uint8 codes and the per-cell offset term
+(q_p . coarse[p, g]) is folded into the similarity LUT by construction —
+every ADC consumer (``adc_scores``, the ``pq_scan`` Pallas kernels, the
+recsys transfer path) stays score-correct with zero plumbing.  The expanded
+table is then polished by fused Lloyd iterations, which revives unused
+product combinations via empty-cluster re-seeding.  At the same 8-bit/
+subspace storage this roughly halves reconstruction MSE vs the seed's flat
+M-entry Lloyd (the root cause of the seed recall failure).
+
+An optional OPQ-style learned rotation (``train_opq``: alternating
+Procrustes + Lloyd, Ge et al. CVPR'13) is carried inside the ``PQ`` pytree;
+``pq_encode`` / ``pq_decode`` / ``similarity_lut`` apply it internally, so
+rotated codebooks are drop-in everywhere a plain ``PQ`` is.
+
+All functions are jit-friendly; Lloyd's assignment step runs through the
+fused Pallas kernel (`repro.kernels.kmeans`) and never materializes the
+(N, M) distance matrix in HBM; the ADC scan has a Pallas TPU kernel
 (`repro.kernels.pq_scan`) with this module's ``adc_scores`` as the oracle's
 semantics (see kernels/ref.py).
 """
@@ -14,24 +31,30 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 
 # ---------------------------------------------------------------------------
-# k-means (Lloyd) with k-means++ seeding
+# k-means (fused-assignment Lloyd) with k-means++ seeding
 # ---------------------------------------------------------------------------
 def _pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
-    """(N, m) x (M, m) -> (N, M) squared euclidean."""
+    """(N, m) x (M, m) -> (N, M) squared euclidean, clamped to >= 0.
+
+    The expanded form ``|x|^2 - 2 x.c + |c|^2`` cancels catastrophically for
+    near-duplicate points: tiny negative outputs would poison k-means++
+    sampling probabilities and ``drift_score`` downstream.
+    """
     x2 = jnp.sum(jnp.square(x), axis=-1, keepdims=True)
     c2 = jnp.sum(jnp.square(c), axis=-1)
-    return x2 - 2.0 * (x @ c.T) + c2[None, :]
+    return jnp.maximum(x2 - 2.0 * (x @ c.T) + c2[None, :], 0.0)
 
 
 def kmeans_pp_init(rng: jax.Array, x: jax.Array, k: int) -> jax.Array:
-    """k-means++ seeding (Arthur & Vassilvitskii '07)."""
+    """k-means++ seeding (Arthur & Vassilvitskii '07).  O(N) memory: keeps a
+    running min-distance vector, never an (N, k) matrix."""
     n = x.shape[0]
     r0, rng = jax.random.split(rng)
     first = x[jax.random.randint(r0, (), 0, n)]
@@ -53,25 +76,71 @@ def kmeans_pp_init(rng: jax.Array, x: jax.Array, k: int) -> jax.Array:
     return cents
 
 
+def _lloyd_update(x: jax.Array, cents: jax.Array, assign: jax.Array,
+                  dist: jax.Array) -> jax.Array:
+    """One centroid update given fused-kernel assignments.
+
+    Empty clusters are re-seeded to the points farthest from their assigned
+    centroid (rather than staying frozen at a stale position forever — the
+    seed bug): the e-th empty cluster takes the e-th farthest point, so
+    simultaneous empties land on distinct points.
+    """
+    k, n = cents.shape[0], x.shape[0]
+    sums = jax.ops.segment_sum(x, assign, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign,
+                                 num_segments=k)
+    new = jnp.where(counts[:, None] > 0,
+                    sums / jnp.maximum(counts, 1.0)[:, None], cents)
+    empty = counts == 0
+    far = jnp.argsort(-dist)
+    rank = jnp.clip(jnp.cumsum(empty) - 1, 0, n - 1)
+    return jnp.where(empty[:, None], x[far[rank]], new)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "iters"))
 def kmeans(rng: jax.Array, x: jax.Array, k: int, iters: int = 20
            ) -> tuple[jax.Array, jax.Array]:
-    """Lloyd's iteration.  Returns (centroids (k, m), assignments (N,))."""
+    """Lloyd's iteration.  Returns (centroids (k, m), assignments (N,)).
+
+    The assignment step runs through the fused Pallas kernel
+    (``kernels.kmeans.kmeans_assign``): each (block_n, k) distance tile
+    lives only in VMEM — O(N * m) memory end to end.
+    """
+    from repro.kernels import ops as kops
+
     x = x.astype(jnp.float32)
     cents = kmeans_pp_init(rng, x, k)
 
-    def step(cents, _):
-        d2 = _pairwise_sqdist(x, cents)
-        assign = jnp.argmin(d2, axis=-1)
-        one = jax.nn.one_hot(assign, k, dtype=jnp.float32)
-        counts = one.sum(axis=0)
-        sums = one.T @ x
-        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None],
-                        cents)
-        return new, None
+    def step(_, cents):
+        assign, dist = kops.kmeans_assign(x, cents)
+        return _lloyd_update(x, cents, assign, dist)
 
-    cents, _ = jax.lax.scan(step, cents, None, length=iters)
-    assign = jnp.argmin(_pairwise_sqdist(x, cents), axis=-1)
+    cents = jax.lax.fori_loop(0, iters, step, cents)
+    assign, _ = kops.kmeans_assign(x, cents)
+    return cents, assign
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_batched(rng: jax.Array, xs: jax.Array, k: int, iters: int = 20
+                   ) -> tuple[jax.Array, jax.Array]:
+    """B independent Lloyd problems (one per PQ subspace) in lockstep.
+
+    xs: (B, N, m) -> (centroids (B, k, m), assignments (B, N)).  Assignment
+    is ONE ``kmeans_assign_batched`` launch per iteration (grid (B, N/bn));
+    the update/re-seed step is vmapped (segment-sum scatter, no (N, k)).
+    """
+    from repro.kernels import ops as kops
+
+    xs = xs.astype(jnp.float32)
+    keys = jax.random.split(rng, xs.shape[0])
+    cents = jax.vmap(lambda r, x: kmeans_pp_init(r, x, k))(keys, xs)
+
+    def step(_, cents):
+        assign, dist = kops.kmeans_assign_batched(xs, cents)
+        return jax.vmap(_lloyd_update)(xs, cents, assign, dist)
+
+    cents = jax.lax.fori_loop(0, iters, step, cents)
+    assign, _ = kops.kmeans_assign_batched(xs, cents)
     return cents, assign
 
 
@@ -80,7 +149,16 @@ def kmeans(rng: jax.Array, x: jax.Array, k: int, iters: int = 20
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class PQ:
-    centroids: jax.Array  # (P, M, m)
+    """Expanded per-subspace codebooks + optional OPQ rotation.
+
+    ``centroids``: (P, M_total, m) where M_total = G * M for a two-level
+    (coarse + residual) codebook, or M for a flat one.  ``rotation``: an
+    orthogonal (D', D') matrix or None; encode/decode/LUT apply it
+    internally (encode-space y = x @ R.T, decode x_hat = y_hat @ R).
+    """
+
+    centroids: jax.Array  # (P, M_total, m)
+    rotation: Optional[jax.Array] = None  # (D', D') orthogonal, or None
 
     @property
     def P(self) -> int:
@@ -88,6 +166,7 @@ class PQ:
 
     @property
     def M(self) -> int:
+        """Total entries per subspace (G * M for two-level codebooks)."""
         return self.centroids.shape[1]
 
     @property
@@ -95,7 +174,7 @@ class PQ:
         return self.centroids.shape[2]
 
     def tree_flatten(self):
-        return (self.centroids,), None
+        return (self.centroids, self.rotation), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -112,35 +191,130 @@ def split_subspaces(x: jax.Array, P: int) -> jax.Array:
     return x.reshape(n, P, d // P).transpose(1, 0, 2)
 
 
-def train_pq(rng: jax.Array, x: jax.Array, P: int, M: int,
-             iters: int = 20) -> PQ:
-    subs = split_subspaces(x, P)  # (P, N, m)
-    keys = jax.random.split(rng, P)
-    cents, _ = jax.vmap(lambda k, s: kmeans(k, s, M, iters))(keys, subs)
-    return PQ(centroids=cents)
+def _rotate(x: jax.Array, rotation: Optional[jax.Array]) -> jax.Array:
+    return x if rotation is None else x @ rotation.T
+
+
+def _auto_coarse_cells(M: int) -> int:
+    """Default coarse stage: 2 cells per subspace when the expanded table
+    still fits uint8 codes.  G=4 shaves MSE further but doubles the ADC
+    LUT/scan work again; G=2 is the balanced default (callers pass
+    ``coarse_cells`` explicitly for accuracy-critical builds)."""
+    return 2 if 2 * M <= 256 else 1
+
+
+@functools.partial(jax.jit, static_argnames=("P", "M", "iters", "G"))
+def _train_subspace_codebooks(rng: jax.Array, x: jax.Array, P: int, M: int,
+                              iters: int, G: int) -> jax.Array:
+    """Two-level product training in encode space -> (P, G*M, m).
+
+    coarse (G cells/subspace) -> residual Lloyd (M centroids) -> expand to
+    the G*M product table -> joint Lloyd polish (the product is an init;
+    polishing revives unused combinations via empty-cluster re-seeding).
+    """
+    from repro.kernels import ops as kops
+
+    subs = split_subspaces(x.astype(jnp.float32), P)        # (P, N, m)
+    k1, k2 = jax.random.split(rng)
+    if G > 1:
+        coarse, a = kmeans_batched(k1, subs, G, iters)      # (P, G, m), (P, N)
+        resid = subs - jnp.take_along_axis(
+            coarse, a[..., None].astype(jnp.int32), axis=1)
+    else:
+        coarse = jnp.zeros((P, 1, subs.shape[-1]), jnp.float32)
+        resid = subs
+    rc, _ = kmeans_batched(k2, resid, M, iters)             # (P, M, m)
+    expanded = (coarse[:, :, None, :] + rc[:, None, :, :]
+                ).reshape(P, G * M, subs.shape[-1])
+
+    def polish(_, cents):
+        assign, dist = kops.kmeans_assign_batched(subs, cents)
+        return jax.vmap(_lloyd_update)(subs, cents, assign, dist)
+
+    return jax.lax.fori_loop(0, iters, polish, expanded)
+
+
+def train_pq(rng: jax.Array, x: jax.Array, P: int, M: int, iters: int = 20,
+             *, coarse_cells: Optional[int] = None,
+             rotation: Optional[jax.Array] = None) -> PQ:
+    """Train the two-level residual product quantizer.
+
+    ``M`` is the residual codebook size per subspace; the stored table has
+    G * M entries (G = ``coarse_cells``, default `_auto_coarse_cells`).
+    ``rotation``: optional orthogonal (D', D') carried into the PQ (see
+    ``train_opq``)."""
+    G = _auto_coarse_cells(M) if coarse_cells is None else coarse_cells
+    if G * M > 256:
+        raise ValueError(f"expanded codebook {G}*{M} overflows uint8 codes")
+    cents = _train_subspace_codebooks(
+        rng, _rotate(x.astype(jnp.float32), rotation), P, M, iters, G)
+    return PQ(centroids=cents, rotation=rotation)
+
+
+def _procrustes(x: jax.Array, yhat: jax.Array) -> jax.Array:
+    """Orthogonal R minimizing ||x @ R.T - yhat||_F (Ge et al. OPQ-NP)."""
+    u, _, vt = jnp.linalg.svd(x.T @ yhat, full_matrices=False)
+    return (u @ vt).T
+
+
+def train_opq(rng: jax.Array, x: jax.Array, P: int, M: int, iters: int = 20,
+              *, opq_iters: int = 3,
+              coarse_cells: Optional[int] = None) -> PQ:
+    """OPQ: alternate codebook training (Lloyd) with a Procrustes rotation
+    update, then train the final codebooks at full iteration count in the
+    learned rotation.  Returns a ``PQ`` with ``rotation`` set — drop-in for
+    every consumer (encode/decode/LUT rotate internally)."""
+    x = x.astype(jnp.float32)
+    G = _auto_coarse_cells(M) if coarse_cells is None else coarse_cells
+    if G * M > 256:
+        raise ValueError(f"expanded codebook {G}*{M} overflows uint8 codes")
+    rot = jnp.eye(x.shape[-1], dtype=jnp.float32)
+    alt_iters = max(2, iters // 2)
+    for i in range(opq_iters):
+        sub = jax.random.fold_in(rng, i)
+        y = x @ rot.T
+        cents = _train_subspace_codebooks(sub, y, P, M, alt_iters, G)
+        pq_i = PQ(centroids=cents)
+        yhat = pq_decode(pq_i, pq_encode(pq_i, y))
+        rot = _procrustes(x, yhat)
+    cents = _train_subspace_codebooks(
+        jax.random.fold_in(rng, opq_iters), x @ rot.T, P, M, iters, G)
+    return PQ(centroids=cents, rotation=rot)
 
 
 @jax.jit
 def pq_encode(pq: PQ, x: jax.Array) -> jax.Array:
-    """(N, D') -> uint8 codes (N, P)."""
-    subs = split_subspaces(x.astype(jnp.float32), pq.P)  # (P, N, m)
-    d2 = jax.vmap(_pairwise_sqdist)(subs, pq.centroids)  # (P, N, M)
-    return jnp.argmin(d2, axis=-1).T.astype(jnp.uint8)   # (N, P)
+    """(N, D') -> uint8 codes (N, P).  Assignment runs through the fused
+    Pallas kernel — no (N, M_total) distance matrix in HBM."""
+    from repro.kernels import ops as kops
+
+    subs = split_subspaces(
+        _rotate(x.astype(jnp.float32), pq.rotation), pq.P)  # (P, N, m)
+    assign, _ = kops.kmeans_assign_batched(subs, pq.centroids)
+    return assign.T.astype(jnp.uint8)                       # (N, P)
 
 
 @jax.jit
 def pq_decode(pq: PQ, codes: jax.Array) -> jax.Array:
-    """(N, P) -> reconstructed (N, D')."""
+    """(N, P) -> reconstructed (N, D') (back-rotated to the original space)."""
     gathered = jax.vmap(lambda c, idx: c[idx], in_axes=(0, 1))(
         pq.centroids, codes.astype(jnp.int32))          # (P, N, m)
-    return gathered.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+    out = gathered.transpose(1, 0, 2).reshape(codes.shape[0], -1)
+    return out if pq.rotation is None else out @ pq.rotation
 
 
 @jax.jit
 def similarity_lut(pq: PQ, q: jax.Array) -> jax.Array:
-    """Dot-product LUT: (D',) -> (P, M); LUT[p, c] = q_p . centroid_{p,c}."""
-    qs = q.reshape(pq.P, 1, pq.m).astype(jnp.float32)
-    return jnp.sum(qs * pq.centroids, axis=-1)          # (P, M)
+    """Dot-product LUT: (D',) -> (P, M_total).
+
+    LUT[p, e] = (R q)_p . centroids[p, e].  With the two-level expanded
+    table, entry e = g*M + c is coarse[p, g] + resid[p, c], so the per-cell
+    offset term (q_p . coarse cell) is folded into the LUT by construction
+    and ``adc_scores``/the Pallas scan kernels need no extra term.
+    """
+    q = _rotate(q.astype(jnp.float32), pq.rotation)
+    qs = q.reshape(pq.P, 1, pq.m)
+    return jnp.sum(qs * pq.centroids, axis=-1)          # (P, M_total)
 
 
 def adc_scores(lut: jax.Array, codes: jax.Array) -> jax.Array:

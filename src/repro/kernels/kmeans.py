@@ -1,13 +1,27 @@
-"""Pallas TPU kernel: fused k-means assignment (distance + argmin).
+"""Pallas TPU kernels: fused k-means assignment (distance + argmin).
 
 Index-build hot loop (LOVO one-time extraction economics): for N points and
 M centroids, computes argmin_m ||x_n - c_m||^2 *without materializing the
 (N, M) distance matrix in HBM* — each (block_n, M) distance tile lives only
-in VMEM, is reduced to (block_n,) argmin + min, and discarded.
+in VMEM, is reduced to (block_n,) argmin + min, and discarded.  This is the
+assignment step of every Lloyd iteration in ``repro.core.pq`` (coarse
+quantizer, per-subspace residual codebooks, and the expanded-codebook
+polish), so the whole index build runs in O(N * m) memory.
 
 ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2; the x.c term is an MXU matmul
 (block_n x m) @ (m x M).  ||x||^2 is constant per row for the argmin so it
-is skipped entirely — beyond-textbook micro-opt, validated vs ref.py.
+is skipped entirely — beyond-textbook micro-opt, validated vs ref.py.  The
+returned distance is clamped to >= 0: the cancellation form can go slightly
+negative in f32, which would poison k-means++ sampling probabilities and
+``SegmentedIndex.drift_score`` downstream.
+
+Two entry points:
+
+  * ``kmeans_assign``          — (N, m) points vs (M, m) centroids.
+  * ``kmeans_assign_batched``  — (B, N, m) vs (B, M, m): B independent
+    problems (one per PQ subspace) in ONE launch, grid (B, N/block_n).
+    This is the shape ``repro.core.pq`` trains all P subspace codebooks
+    simultaneously with — no vmap-over-pallas_call required.
 """
 from __future__ import annotations
 
@@ -29,7 +43,8 @@ def _kernel(x_ref, cents_ref, c2_ref, assign_ref, dist_ref):
     dmin = jnp.min(partial, axis=-1)
     x2 = jnp.sum(x * x, axis=-1)
     assign_ref[...] = assign
-    dist_ref[...] = dmin + x2                          # true squared dist
+    # true squared distance, clamped: f32 cancellation can dip below zero
+    dist_ref[...] = jnp.maximum(dmin + x2, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -63,3 +78,55 @@ def kmeans_assign(x: jax.Array, cents: jax.Array, *, block_n: int = 1024,
         interpret=interpret,
     )(x, cents, c2)
     return assign[:N], dist[:N]
+
+
+def _batched_kernel(x_ref, cents_ref, c2_ref, assign_ref, dist_ref):
+    x = x_ref[0].astype(jnp.float32)                   # (bN, m)
+    c = cents_ref[0].astype(jnp.float32)               # (M, m)
+    c2 = c2_ref[...]                                   # (1, M)
+    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    partial = c2 - 2.0 * dots                          # (bN, M)
+    assign = jnp.argmin(partial, axis=-1).astype(jnp.int32)
+    dmin = jnp.min(partial, axis=-1)
+    x2 = jnp.sum(x * x, axis=-1)
+    assign_ref[...] = assign[None, :]
+    dist_ref[...] = jnp.maximum(dmin + x2, 0.0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_batched(x: jax.Array, cents: jax.Array, *,
+                          block_n: int = 1024, interpret: bool = True
+                          ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, N, m), cents: (B, M, m) -> ((B, N) int32, (B, N) f32).
+
+    Grid is (B, N/block_n), batch-major: problem b's centroid block is
+    fetched once and stays VMEM-resident across all of its point blocks.
+    """
+    B, N, m = x.shape
+    M = cents.shape[1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    c2 = jnp.sum(jnp.square(cents.astype(jnp.float32)), axis=-1)  # (B, M)
+    grid = (B, (N + pad) // bn)
+    assign, dist = pl.pallas_call(
+        _batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, m), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, M, m), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, M), lambda b, i: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+            pl.BlockSpec((1, bn), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N + pad), jnp.int32),
+            jax.ShapeDtypeStruct((B, N + pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, cents, c2)
+    return assign[:, :N], dist[:, :N]

@@ -49,6 +49,11 @@ def kmeans_assign(x: jax.Array, cents: jax.Array):
     return _km.kmeans_assign(x, cents, interpret=_interpret())
 
 
+def kmeans_assign_batched(x: jax.Array, cents: jax.Array):
+    """B independent assignment problems: (B, N, m) x (B, M, m)."""
+    return _km.kmeans_assign_batched(x, cents, interpret=_interpret())
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = False, softcap: float = 0.0) -> jax.Array:
     """(B, H, S, d) x (B, KV, T, d): repeats KV heads for GQA callers."""

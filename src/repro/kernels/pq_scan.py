@@ -19,9 +19,12 @@ re-expressed as P one-hot matmuls on the MXU:
     onehot(codes[:, p]) (bN x M)  @  LUT[:, p, :]^T (M x Q)  -> (bN x Q)
 
 The one-hot inflates nominal FLOPs by M, but MXU throughput at M=256 makes
-each block a dense 8-bit-friendly matmul; LUTs (Q*P*M*4 B) and the code block
-live in VMEM, codes stream HBM->VMEM once — the scan is HBM-bandwidth-bound
-exactly like the CPU version is memory-bound, but at 819 GB/s.
+each block a dense matmul (f32: the LUT carries the two-level quantizer's
+per-cell offset term, and bf16 LUT rounding would move candidates across
+the overfetch boundary relative to the jnp oracle); LUTs (Q*P*M*4 B) and
+the code block live in VMEM, codes stream HBM->VMEM once — the scan is
+HBM-bandwidth-bound exactly like the CPU version is memory-bound, but at
+819 GB/s.
 
 Grid: (N / block_n,) (batched) or (Q, N / block_n) (paired); block shapes
 MXU-aligned (block_n mult of 128, M=2^k).
@@ -56,8 +59,12 @@ def _kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
     iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
 
     def body(p, acc):
-        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.bfloat16)
-        lut_p = lut_ref[:, p, :].astype(jnp.bfloat16)  # (Q, M)
+        # f32 contraction: with two-level codebooks the LUT carries the
+        # per-cell offset term, and bf16 LUT rounding (~1e-3 abs) exceeds
+        # the approx-score spacing at the overfetch boundary — candidate
+        # sets would diverge from the jnp oracle's
+        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
+        lut_p = lut_ref[:, p, :]                       # (Q, M) f32
         return acc + jax.lax.dot_general(
             onehot, lut_p, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)        # (bN, Q)
@@ -99,8 +106,8 @@ def _paired_kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
     iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
 
     def body(p, acc):
-        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.bfloat16)
-        lut_p = lut_ref[0, p, :].astype(jnp.bfloat16)  # (M,)
+        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
+        lut_p = lut_ref[0, p, :]                       # (M,) f32
         return acc + jax.lax.dot_general(
             onehot, lut_p[:, None], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)        # (bN, 1)

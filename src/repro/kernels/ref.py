@@ -20,13 +20,20 @@ def pq_scan_ref(luts: jax.Array, codes: jax.Array) -> jax.Array:
 def kmeans_assign_ref(x: jax.Array, cents: jax.Array
                       ) -> tuple[jax.Array, jax.Array]:
     """Full (N, M) distance matrix, then argmin (the memory-heavy baseline
-    the fused kernel avoids)."""
+    the fused kernel avoids).  Distances clamped to >= 0 like the kernel."""
     x = x.astype(jnp.float32)
     c = cents.astype(jnp.float32)
     x2 = jnp.sum(x * x, axis=-1, keepdims=True)
     c2 = jnp.sum(c * c, axis=-1)
     d2 = x2 - 2.0 * (x @ c.T) + c2[None, :]
-    return jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1)
+    return (jnp.argmin(d2, axis=-1).astype(jnp.int32),
+            jnp.maximum(jnp.min(d2, axis=-1), 0.0))
+
+
+def kmeans_assign_batched_ref(x: jax.Array, cents: jax.Array
+                              ) -> tuple[jax.Array, jax.Array]:
+    """(B, N, m) x (B, M, m) -> ((B, N), (B, N)): vmapped single-problem ref."""
+    return jax.vmap(kmeans_assign_ref)(x, cents)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -33,14 +33,19 @@ def build_engine(*, seed: int = 0, n_videos: int = 6, res: int = 96,
                  vit_layers: int = 2, d_model: int = 64,
                  imi_k: int = 8, pq_p: int = 8, pq_m: int = 32,
                  rerank_layers: int = 2, trained_params: dict | None = None,
-                 built=None):
+                 built=None, streaming: bool = False,
+                 build_chunk_frames: int = 32):
     """Small-but-real engine (CPU-sized encoders, full pipeline).
 
     ``built``: a prebuilt ``BuiltIndex`` (e.g. from ``load_built``) skips the
     encode + k-means build entirely — the store-reopen path.
+    ``streaming``: build via the bounded-memory chunked path (reservoir
+    codebook training + spill-segment encode, DESIGN.md §9) instead of the
+    monolithic in-memory build.
     """
     from repro.core import anns
-    from repro.core.index_builder import build_from_videos
+    from repro.core.index_builder import (build_from_videos,
+                                          build_from_videos_streaming)
     from repro.core.query import QueryEngine
     from repro.data.synthetic import Tokenizer, make_dataset
     from repro.models import rerank as RR
@@ -70,8 +75,13 @@ def build_engine(*, seed: int = 0, n_videos: int = 6, res: int = 96,
 
     videos = make_dataset(seed, n_videos=n_videos, res=res)
     if built is None:
-        built = build_from_videos(r4, videos, vit_p, vcfg,
-                                  K=imi_k, P=pq_p, M=pq_m)
+        if streaming:
+            built = build_from_videos_streaming(
+                r4, videos, vit_p, vcfg, K=imi_k, P=pq_p, M=pq_m,
+                chunk_frames=build_chunk_frames)
+        else:
+            built = build_from_videos(r4, videos, vit_p, vcfg,
+                                      K=imi_k, P=pq_p, M=pq_m)
     engine = QueryEngine(
         built, text_params=txt_p, text_cfg=tcfg, vit_params=vit_p,
         vit_cfg=vcfg, rerank_params=rer_p, rerank_cfg=rcfg,
@@ -94,6 +104,13 @@ def main() -> None:
     ap.add_argument("--store-dir", default=None,
                     help="persist/reopen the index as a VectorStore here; "
                          "a second launch skips the build entirely")
+    ap.add_argument("--streaming-build", action="store_true",
+                    help="bounded-memory build: reservoir codebook training "
+                         "+ chunked encode spilled to store segments "
+                         "(DESIGN.md §9); identical codes, flat memory")
+    ap.add_argument("--build-chunk", type=int, default=32,
+                    help="key frames ViT-encoded per streaming-build chunk "
+                         "(the encode-phase memory high-water mark)")
     args = ap.parse_args()
 
     from repro.serving.batcher import HedgedExecutor, MicroBatcher
@@ -109,7 +126,9 @@ def main() -> None:
             open_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    engine, videos = build_engine(n_videos=args.videos, built=built)
+    engine, videos = build_engine(n_videos=args.videos, built=built,
+                                  streaming=args.streaming_build,
+                                  build_chunk_frames=args.build_chunk)
     wall = time.perf_counter() - t0
 
     if built is not None:

@@ -591,6 +591,7 @@ def lovo_cell(arch: LovoArch, spec: ShapeSpec, mesh: Mesh) -> Cell:
             coarse1=SDS((K, Dp // 2), jnp.float32),
             coarse2=SDS((K, Dp // 2), jnp.float32),
             pq_centroids=SDS((P_, M, Dp // P_), jnp.float32),
+            pq_rotation=SDS((Dp, Dp), jnp.float32),
         )
         ishard = dist.index_shardings(mesh)
         qs = SDS((Q, Dp), jnp.float32)

@@ -286,12 +286,19 @@ def retrieval_scores(user_vecs: jax.Array, cand_emb: jax.Array) -> jax.Array:
     return jnp.max(s, axis=0)
 
 
-def retrieval_scores_pq(user_vecs: jax.Array, pq_centroids: jax.Array,
+def retrieval_scores_pq(user_vecs: jax.Array, pq_centroids,
                         cand_codes: jax.Array) -> jax.Array:
     """Same scoring through LOVO's PQ-ADC scan (candidates pre-quantized):
-    the paper's technique applied to recsys retrieval (DESIGN.md §5)."""
+    the paper's technique applied to recsys retrieval (DESIGN.md §5).
+
+    ``pq_centroids``: either a raw (P, M, m) codebook array — implies no
+    OPQ rotation — or a full ``repro.core.pq.PQ``.  Codes from an
+    OPQ-trained quantizer live in the rotated space, so the PQ object
+    (which carries the rotation) MUST be passed for them.
+    """
     from repro.core import pq as pqmod
-    pq = pqmod.PQ(pq_centroids)
+    pq = (pq_centroids if isinstance(pq_centroids, pqmod.PQ)
+          else pqmod.PQ(pq_centroids))
     luts = jax.vmap(lambda u: pqmod.similarity_lut(pq, u))(user_vecs)
     scores = jax.vmap(lambda l: pqmod.adc_scores(l, cand_codes))(luts)
     return jnp.max(scores, axis=0)

@@ -108,10 +108,12 @@ class VectorStore:
         if not isinstance(index, IMIIndex):
             raise StoreError(f"cannot create a store from {type(built)}")
 
-        np.savez(root / CODEBOOKS,
-                 coarse1=np.asarray(index.coarse1, np.float32),
-                 coarse2=np.asarray(index.coarse2, np.float32),
-                 pq=np.asarray(index.pq.centroids, np.float32))
+        cb_arrays = dict(coarse1=np.asarray(index.coarse1, np.float32),
+                         coarse2=np.asarray(index.coarse2, np.float32),
+                         pq=np.asarray(index.pq.centroids, np.float32))
+        if index.pq.rotation is not None:   # OPQ rotation rides along
+            cb_arrays["rotation"] = np.asarray(index.pq.rotation, np.float32)
+        np.savez(root / CODEBOOKS, **cb_arrays)
         base_name = "seg-000001"
         segmentmod.write_segment(root / SEGMENTS_DIR / base_name,
                                  _base_arrays(index), {"kind": "base"})
@@ -157,7 +159,9 @@ class VectorStore:
         base = IMIIndex(
             coarse1=jnp.asarray(cb["coarse1"]),
             coarse2=jnp.asarray(cb["coarse2"]),
-            pq=PQ(centroids=jnp.asarray(cb["pq"])),
+            pq=PQ(centroids=jnp.asarray(cb["pq"]),
+                  rotation=(jnp.asarray(cb["rotation"])
+                            if "rotation" in cb.files else None)),
             codes=jnp.asarray(base_arrays["codes"]),
             vectors=jnp.asarray(base_arrays["vectors"]),
             ids=jnp.asarray(base_arrays["ids"]),

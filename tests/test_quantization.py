@@ -1,0 +1,265 @@
+"""Quantization-accuracy coverage for the two-level residual PQ + OPQ +
+streaming build (ISSUE 3 satellites; DESIGN.md §9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import imi as imimod, pq as pqmod
+from repro.core.index_builder import (StreamingBuildConfig,
+                                      StreamingIndexBuilder,
+                                      build_imi_streaming)
+
+
+def clustered(seed, n, d, k=20, noise=0.3, shift=0.0):
+    """Gaussian mixture; ``shift`` displaces every point (a 'shifted'
+    distribution relative to a zero-centered prior)."""
+    cents = jax.random.normal(jax.random.PRNGKey(seed), (k, d))
+    a = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, k)
+    x = cents[a] + noise * jax.random.normal(jax.random.PRNGKey(seed + 2),
+                                             (n, d))
+    return x + shift, cents + shift
+
+
+def anisotropic(seed, n, d, decay=0.75):
+    """Correlated data whose principal axes are misaligned with the
+    contiguous subspace split — the regime OPQ's rotation exists for."""
+    z = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    scales = decay ** jnp.arange(d)
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                           (d, d)))
+    return (z * scales) @ q.T
+
+
+def recall_at(exact, approx, k_true=10, k_ret=50):
+    top_true = set(np.argsort(-np.asarray(exact))[:k_true].tolist())
+    top_ret = np.argsort(-np.asarray(approx))[:k_ret].tolist()
+    return len(top_true & set(top_ret)) / k_true
+
+
+# ---------------------------------------------------------------------------
+# recall@k vs exact scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shift", [0.0, 2.0])
+def test_pq_recall_clustered_and_shifted(shift):
+    """LOVO retrieval protocol (ADC overfetch -> exact rescore -> top-k)
+    through the expanded residual codebook preserves the exact top-k on
+    clustered (and mean-shifted) data.  Clusters produce hundreds of
+    near-tied scores, so raw ADC order alone cannot rank within a cluster —
+    the refine stage is part of the contract being tested."""
+    n, d = 8000, 32
+    x, cents = clustered(11, n, d, k=12, noise=0.25, shift=shift)
+    x = pqmod.normalize(x)
+    pq = pqmod.train_pq(jax.random.PRNGKey(3), x, P=8, M=32, iters=8)
+    codes = pqmod.pq_encode(pq, x)
+    for qi in range(3):
+        q = pqmod.normalize(cents[qi] + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(40 + qi), (d,)))
+        exact = np.asarray(x @ q)
+        approx = np.asarray(pqmod.adc_scores(pqmod.similarity_lut(pq, q),
+                                             codes))
+        fetch = np.argsort(-approx)[:2048]          # candidate multiplier
+        refined = fetch[np.argsort(-exact[fetch])]  # exact rescore
+        top_true = set(np.argsort(-exact)[:10].tolist())
+        rec = len(top_true & set(refined[:50].tolist())) / 10
+        assert rec >= 0.9, (qi, rec)
+
+
+def test_expanded_codebook_beats_flat_at_same_bits():
+    """The point of the two-level codebook: at the same uint8/subspace
+    storage, coarse+residual reconstruction error < the seed's flat-M
+    Lloyd (G=1)."""
+    x = pqmod.normalize(clustered(5, 6000, 32, k=15)[0])
+    mses = []
+    for cells in (1, 2):
+        pq = pqmod.train_pq(jax.random.PRNGKey(0), x, P=8, M=32, iters=8,
+                            coarse_cells=cells)
+        rec = pqmod.pq_decode(pq, pqmod.pq_encode(pq, x))
+        mses.append(float(jnp.mean(jnp.sum(jnp.square(rec - x), -1))))
+    assert mses[1] < mses[0], mses
+
+
+# ---------------------------------------------------------------------------
+# OPQ rotation
+# ---------------------------------------------------------------------------
+def test_opq_reduces_reconstruction_error_vs_no_opq():
+    x = anisotropic(7, 5000, 32)
+    plain = pqmod.train_pq(jax.random.PRNGKey(1), x, P=8, M=16, iters=8)
+    opq = pqmod.train_opq(jax.random.PRNGKey(1), x, P=8, M=16, iters=8,
+                          opq_iters=3)
+    def mse(pq):
+        rec = pqmod.pq_decode(pq, pqmod.pq_encode(pq, x))
+        return float(jnp.mean(jnp.sum(jnp.square(rec - x), -1)))
+    assert mse(opq) < mse(plain), (mse(opq), mse(plain))
+
+
+def test_opq_rotation_is_orthogonal_and_score_correct():
+    x = anisotropic(9, 2000, 16)
+    opq = pqmod.train_opq(jax.random.PRNGKey(2), x, P=4, M=16, iters=5,
+                          opq_iters=2)
+    r = np.asarray(opq.rotation)
+    np.testing.assert_allclose(r @ r.T, np.eye(16), atol=1e-5)
+    # ADC through the rotated LUT == q . decode(codes): score correctness
+    # of every ADC consumer falls out of this identity
+    codes = pqmod.pq_encode(opq, x)
+    q = pqmod.normalize(jax.random.normal(jax.random.PRNGKey(3), (16,)))
+    s1 = pqmod.adc_scores(pqmod.similarity_lut(opq, q), codes)
+    s2 = pqmod.pq_decode(opq, codes) @ q
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Lloyd internals
+# ---------------------------------------------------------------------------
+def test_kmeans_reseeds_empty_clusters():
+    """k = n on distinct points: k-means++ seeds duplicates, so empties are
+    guaranteed mid-run; with farthest-point re-seeding every point ends up
+    its own centroid (distortion -> 0).  The seed bug froze empties at
+    stale positions, leaving distortion > 0 forever."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (48, 8))
+    cents, assign = pqmod.kmeans(jax.random.PRNGKey(1), x, k=48, iters=25)
+    dist = float(jnp.sum(jnp.square(x - cents[assign])))
+    assert dist < 1e-6, dist
+
+
+def test_pairwise_sqdist_non_negative_on_near_duplicates():
+    base = jax.random.normal(jax.random.PRNGKey(4), (1, 16)) * 100.0
+    x = jnp.repeat(base, 64, axis=0) + 1e-6 * jax.random.normal(
+        jax.random.PRNGKey(5), (64, 16))
+    d2 = pqmod._pairwise_sqdist(x, x[:8])
+    assert float(jnp.min(d2)) >= 0.0
+
+
+def test_kmeans_assign_batched_matches_ref():
+    from repro.kernels import ops, ref
+    xs = jax.random.normal(jax.random.PRNGKey(6), (5, 300, 8))
+    cents = jax.random.normal(jax.random.PRNGKey(7), (5, 17, 8))
+    a, d = ops.kmeans_assign_batched(xs, cents)
+    ar, dr = ref.kmeans_assign_batched_ref(xs, cents)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# streaming build
+# ---------------------------------------------------------------------------
+def test_streaming_build_bit_equals_monolithic(tmp_path):
+    """Full-reservoir streaming build == build_imi, bit for bit: codes,
+    ids, cells, CSR offsets, bf16 vectors."""
+    n, d = 4000, 32
+    x, _ = clustered(3, n, d)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    mono = imimod.build_imi(jax.random.PRNGKey(0), x, ids,
+                            K=8, P=8, M=32, kmeans_iters=5)
+
+    xs = np.asarray(x, np.float32)
+    def chunks(sz=1000):
+        def it():
+            for lo in range(0, n, sz):
+                yield (xs[lo: lo + sz],
+                       np.arange(lo, min(lo + sz, n), dtype=np.int32))
+        return it
+    cfg = StreamingBuildConfig(K=8, P=8, M=32, kmeans_iters=5,
+                               sample_size=n, chunk_rows=1000)
+    stream = build_imi_streaming(jax.random.PRNGKey(0), chunks(), cfg,
+                                 spill_dir=tmp_path / "spill")
+    np.testing.assert_array_equal(np.asarray(mono.codes),
+                                  np.asarray(stream.codes))
+    np.testing.assert_array_equal(np.asarray(mono.ids),
+                                  np.asarray(stream.ids))
+    np.testing.assert_array_equal(np.asarray(mono.cell_of),
+                                  np.asarray(stream.cell_of))
+    np.testing.assert_array_equal(np.asarray(mono.cell_offsets),
+                                  np.asarray(stream.cell_offsets))
+    np.testing.assert_array_equal(
+        np.asarray(mono.vectors).view(np.uint16),
+        np.asarray(stream.vectors).view(np.uint16))
+    assert not (tmp_path / "spill").exists()  # spill cleaned up
+
+
+def test_streaming_reservoir_subsample_still_searches(tmp_path):
+    """Sub-corpus reservoir (the actual streaming regime): codebooks from a
+    sample, whole corpus encoded; self-retrieval via the standard search
+    path still works."""
+    from repro.core import anns
+    n, d = 6000, 32
+    x, _ = clustered(8, n, d, k=10)
+    xs = np.asarray(x, np.float32)
+    def it():
+        for lo in range(0, n, 1500):
+            yield (xs[lo: lo + 1500],
+                   np.arange(lo, min(lo + 1500, n), dtype=np.int32))
+    cfg = StreamingBuildConfig(K=8, P=8, M=32, kmeans_iters=5,
+                               sample_size=2048, chunk_rows=1500)
+    index = build_imi_streaming(jax.random.PRNGKey(1), lambda: it(), cfg,
+                                spill_dir=tmp_path / "spill")
+    assert index.n == n
+    hits = 0
+    for qi in range(20):
+        # clusters put ~600 rows within the ADC noise floor of each other:
+        # the overfetch must span the tie set for exact rerank to resolve it
+        res = anns.search(index, x[qi], anns.SearchConfig(
+            top_a=16, max_cell_size=1024, top_k=10, rerank_overfetch=64))
+        hits += int(qi in set(np.asarray(res["ids"]).tolist()))
+    assert hits >= 18, hits
+
+
+def test_streaming_builder_phase_order_enforced():
+    cfg = StreamingBuildConfig(K=4, P=4, M=8)
+    b = StreamingIndexBuilder(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(RuntimeError):
+        b.train()
+    with pytest.raises(RuntimeError):
+        b.add(np.zeros((4, 16), np.float32), np.arange(4, dtype=np.int32))
+
+
+def test_streaming_builder_enforces_chunk_rows():
+    """chunk_rows is a hard working-set bound, not caller discipline: one
+    oversized add() is resliced and produces the same index as pre-sliced
+    feeding."""
+    n, d = 2000, 32
+    x = np.asarray(clustered(2, n, d)[0], np.float32)
+    ids = np.arange(n, dtype=np.int32)
+
+    def build(feed_whole):
+        cfg = StreamingBuildConfig(K=4, P=8, M=16, kmeans_iters=3,
+                                   sample_size=n, chunk_rows=512)
+        b = StreamingIndexBuilder(jax.random.PRNGKey(0), cfg)
+        if feed_whole:
+            b.observe(x)            # 2000 rows > chunk_rows=512
+        else:
+            for lo in range(0, n, 512):
+                b.observe(x[lo: lo + 512])
+        b.train()
+        if feed_whole:
+            b.add(x, ids)
+        else:
+            for lo in range(0, n, 512):
+                b.add(x[lo: lo + 512], ids[lo: lo + 512])
+        return b.finish()
+
+    a, bb = build(True), build(False)
+    np.testing.assert_array_equal(np.asarray(a.codes), np.asarray(bb.codes))
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(bb.ids))
+
+
+def test_streaming_builder_spill_cleanup_is_scoped(tmp_path):
+    """finish() removes only its own chunk segments — a caller-provided
+    spill_dir with unrelated contents survives."""
+    spill = tmp_path / "scratch"
+    spill.mkdir()
+    keep = spill / "unrelated.txt"
+    keep.write_text("precious")
+    n, d = 600, 16
+    x = np.asarray(clustered(4, n, d, k=4)[0], np.float32)
+    cfg = StreamingBuildConfig(K=4, P=4, M=8, kmeans_iters=3,
+                               sample_size=n, chunk_rows=256)
+    b = StreamingIndexBuilder(jax.random.PRNGKey(0), cfg, spill_dir=spill)
+    b.observe(x)
+    b.train()
+    b.add(x, np.arange(n, dtype=np.int32))
+    b.finish()
+    assert keep.read_text() == "precious"
+    assert not list(spill.glob("chunk-*"))
