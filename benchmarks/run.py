@@ -100,6 +100,17 @@ def main() -> None:
                     f"speedup={row['qps'] / q1:.2f}x "
                     f"p99_b{row['batch']}={row['p99_ms']:.1f}ms")
 
+    @bench("query_plan")
+    def qplan():
+        from benchmarks import query_plan
+        t0 = time.perf_counter()
+        out = query_plan.main(smoke=args.quick)
+        us = (time.perf_counter() - t0) * 1e6
+        r1 = out["by_sel"][0.01]
+        return us, (f"1pct_masked={r1['masked_ms']:.1f}ms "
+                    f"speedup_vs_posthoc={r1['speedup_vs_posthoc']:.2f}x "
+                    f"oracle_match={r1['ids_match_oracle']:.3f}")
+
     @bench("index_build")
     def ibuild():
         from benchmarks import index_build

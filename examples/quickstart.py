@@ -5,12 +5,15 @@
 Walks the whole paper pipeline in one script:
   videos -> key frames -> ViT patch class-embeddings -> PQ + inverted
   multi-index -> (text query) -> fast ANN search -> cross-modality rerank
-  -> frames + boxes.
+  -> frames + boxes, and ends with a COMPOUND query (conjunction + time
+  window + best-moment grouping) answered index-only through the planner
+  (DESIGN.md §10).
 """
 import time
 
 import numpy as np
 
+from repro.core.plan import And, GroupTopK, Text, TimeRange
 from repro.launch.serve import build_engine
 
 
@@ -33,6 +36,22 @@ def main():
                   f"box[0] {np.round(b[0], 2).tolist()}")
         print(f"  timings: " + ", ".join(f"{k}={v*1e3:.0f}ms"
                                          for k, v in r.timings.items()))
+
+    # compound query: conjunction + temporal window, best moment per video —
+    # answered from the index alone (no frame is re-encoded, no rerank)
+    plan = GroupTopK(
+        And(Text("a large red square"), Text("a small blue circle"),
+            TimeRange(0, 32)),
+        per="video", mode="moment")
+    t0 = time.perf_counter()
+    res = engine.query_plan(plan)
+    print(f"\n[plan] red square AND blue circle, frames [0, 32), "
+          f"best moment per video ({(time.perf_counter()-t0)*1e3:.0f}ms, "
+          f"index-only)")
+    for i in range(len(res.moments["video"])):
+        m = {k: v[i] for k, v in res.moments.items()}
+        print(f"  video {m['video']}: frames [{m['start']}, {m['end']}] "
+              f"({m['n_frames']} key frames, score {m['score']:.3f})")
 
 
 if __name__ == "__main__":

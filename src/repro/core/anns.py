@@ -59,37 +59,54 @@ def _adc(lut: jax.Array, codes: jax.Array, use_kernel: str) -> jax.Array:
     return pqmod.adc_scores(lut, codes)
 
 
-def _adc_paired(luts: jax.Array, codes: jax.Array, use_kernel: str
-                ) -> jax.Array:
-    """luts (Q, P, M), codes (Q, N, P) -> (Q, N): query q scans codes[q]."""
+def _adc_paired(luts: jax.Array, codes: jax.Array, use_kernel: str,
+                mask: Optional[jax.Array] = None) -> jax.Array:
+    """luts (Q, P, M), codes (Q, N, P) -> (Q, N): query q scans codes[q].
+
+    ``mask`` (Q, N) nonzero=valid: filtered rows come back exactly -inf —
+    the sentinel is fused into the Pallas scan (filter pushdown)."""
     if use_kernel == "pallas":
         from repro.kernels import ops as kops
+        if mask is not None:
+            return kops.pq_scan_paired_masked(luts, codes, mask)
         return kops.pq_scan_paired(luts, codes)
-    return jax.vmap(pqmod.adc_scores)(luts, codes)
+    out = jax.vmap(pqmod.adc_scores)(luts, codes)
+    return out if mask is None else jnp.where(mask != 0, out, -jnp.inf)
 
 
-def _adc_shared(luts: jax.Array, codes: jax.Array, use_kernel: str
-                ) -> jax.Array:
-    """luts (Q, P, M), codes (N, P) -> (Q, N): every query scans all rows."""
+def _adc_shared(luts: jax.Array, codes: jax.Array, use_kernel: str,
+                mask: Optional[jax.Array] = None) -> jax.Array:
+    """luts (Q, P, M), codes (N, P) -> (Q, N): every query scans all rows.
+
+    ``mask`` (Q, N) nonzero=valid, same sentinel contract as above."""
     if use_kernel == "pallas":
         from repro.kernels import ops as kops
+        if mask is not None:
+            return kops.pq_scan_batched_masked(luts, codes, mask)
         return kops.pq_scan_batched(luts, codes)
-    return jax.vmap(lambda l: pqmod.adc_scores(l, codes))(luts)
+    out = jax.vmap(lambda l: pqmod.adc_scores(l, codes))(luts)
+    return out if mask is None else jnp.where(mask != 0, out, -jnp.inf)
 
 
-def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig
-           ) -> dict[str, jax.Array]:
+def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig,
+           row_mask: Optional[jax.Array] = None) -> dict[str, jax.Array]:
     """Single-query Algorithm 1.  q: (D',) raw query embedding.
 
     A batch of one: delegates to ``search_batch`` so the single and batched
     views cannot drift (parity is structural, not just test-enforced).
+    ``row_mask``: optional (N,) validity bitmap over index rows (nonzero =
+    searchable) — metadata filter pushdown, see ``search_batch``.
     Returns dict with ids (k,), scores (k,), approx_scores (k,), rows (k,).
     """
-    return {k: v[0] for k, v in search_batch(index, q[None], cfg).items()}
+    if row_mask is not None and row_mask.ndim == 1:
+        row_mask = row_mask[None]
+    return {k: v[0]
+            for k, v in search_batch(index, q[None], cfg, row_mask).items()}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
+def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig,
+                 row_mask: Optional[jax.Array] = None
                  ) -> dict[str, jax.Array]:
     """Batched Algorithm 1.  qs: (Q, D') raw query embeddings.
 
@@ -97,9 +114,23 @@ def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
     the static Q dimension (jit caches one executable per Q; callers pad to
     a fixed batch size, see ``QueryEngine.fast_search_batch``).  Returns the
     same dict as ``search`` with every array gaining a leading Q axis.
+
+    ``row_mask``: optional (N,) or (Q, N) validity bitmap over index rows
+    (nonzero = searchable).  Metadata predicates — time windows, video-id
+    sets, tombstones — are pushed INTO the ADC scan as this bitmap: filtered
+    rows score exactly -inf inside the kernel, so the returned top-k is the
+    best k rows *among the valid ones* (a post-hoc filter would instead
+    silently shrink the result below k; DESIGN.md §10).
+
+    Exactly-k padding contract: result slots with no valid candidate (score
+    -inf) carry ``ids == -1`` and ``rows == -1`` — never a garbage id from a
+    clipped gather.  An all-False mask therefore returns k ``-1`` slots.
     """
     qs = pqmod.normalize(qs.astype(jnp.float32))                 # (Q, D')
     Q = qs.shape[0]
+    if row_mask is not None:
+        row_mask = jnp.broadcast_to(
+            jnp.asarray(row_mask), (Q, index.n)).astype(jnp.uint8)
     h = qs.shape[-1] // 2
     s1 = qs[:, :h] @ index.coarse1.T                             # (Q, K)
     s2 = qs[:, h:] @ index.coarse2.T
@@ -126,11 +157,17 @@ def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
         # windows cover the whole index: one shared-codes scan (Q, n) —
         # the codes stay resident across the whole query batch — then
         # gather scores by row (identical per-row values, less work)
-        all_scores = _adc_shared(luts, index.codes, cfg.use_kernel)
+        all_scores = _adc_shared(luts, index.codes, cfg.use_kernel,
+                                 row_mask)
         resid = jnp.take_along_axis(all_scores, rows, axis=1)    # (Q, A*W)
     else:
         cand_codes = index.codes[rows]                           # (Q, A*W, P)
-        resid = _adc_paired(luts, cand_codes, cfg.use_kernel)    # (Q, A*W)
+        # the bitmap travels with the gathered windows: a clipped/overrun
+        # row may gather a True slot, but window validity masks it below
+        wmask = None if row_mask is None \
+            else jnp.take_along_axis(row_mask, rows, axis=1)     # (Q, A*W)
+        resid = _adc_paired(luts, cand_codes, cfg.use_kernel,
+                            wmask)                               # (Q, A*W)
     approx = resid.reshape(Q, cfg.top_a, W) + base[..., None]
     approx = jnp.where(valid, approx, -jnp.inf).reshape(Q, -1)
 
@@ -154,8 +191,13 @@ def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig
         top_approx = jnp.take_along_axis(top_approx, order, axis=1)
     else:
         scores = top_approx
-    return {"ids": index.ids[top_rows], "scores": scores,
-            "approx_scores": top_approx, "rows": top_rows}
+    # exactly-k padding: a slot whose score is -inf has no valid candidate
+    # behind it (window overrun, or every row filtered by the mask) — its
+    # id/row must read as -1, not whatever the clipped gather landed on
+    live = jnp.isfinite(scores)
+    return {"ids": jnp.where(live, index.ids[top_rows], -1),
+            "scores": scores, "approx_scores": top_approx,
+            "rows": jnp.where(live, top_rows, -1)}
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

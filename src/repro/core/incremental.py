@@ -14,7 +14,9 @@ insertions".  This module provides exactly that:
     pass (the "segmented rebuild": only the merge is periodic work, and it
     reuses stored codes — no re-encoding of video, preserving the paper's
     one-time-extraction economics).
-  * deletes via a tombstone id-set applied at merge time.
+  * deletes via a tombstone id-set: pushed into every base scan as a row
+    validity bitmap (filter pushdown, DESIGN.md §10.2) and physically
+    dropped at the next ``compact()``.
 
 Codebook drift: inserts reuse the trained coarse/PQ codebooks; quantization
 error grows if the data distribution shifts.  ``drift_score()`` monitors
@@ -65,6 +67,10 @@ class SegmentedIndex:
         self.segment_capacity = segment_capacity
         self.persistence = persistence
         self.tombstones: set[int] = set()
+        # (n_tombstones, host bool (N,), device copy) — rebuilt only when
+        # deletes/compaction change it, so masked search costs no per-query
+        # O(N) host pass or host->device upload
+        self._alive_cache: Optional[tuple] = None
         # training-time residual energy baseline for drift monitoring,
         # estimated on a strided row sample: decoding the WHOLE base would
         # materialize an (N, D') f32 copy — unacceptable for streaming-built
@@ -129,12 +135,27 @@ class SegmentedIndex:
             self.compact()
 
     def delete(self, ids) -> None:
+        """Tombstone the given patch ids: immediately invisible to
+        ``search`` (mask pushdown), physically removed at ``compact``."""
         ids = np.ascontiguousarray(ids, imimod.ID_DTYPE).reshape(-1)
         if self.persistence is not None:
             self.persistence.log_delete(ids)
         # build first, then one C-level (atomic under the GIL) update so
         # concurrent readers never observe a mid-iteration resize
         self.tombstones.update({int(i) for i in ids})
+        self._alive_cache = None
+
+    def _alive_base_mask(self, tombstones: set
+                         ) -> tuple[np.ndarray, jax.Array]:
+        """(host, device) validity bitmap over base rows for the given
+        tombstone snapshot; cached until deletes/compaction invalidate it."""
+        cache = self._alive_cache
+        if cache is None or cache[0] != len(tombstones):
+            host = ~np.isin(np.asarray(self.base.ids),
+                            np.fromiter(tombstones, imimod.ID_DTYPE))
+            cache = (len(tombstones), host, jnp.asarray(host))
+            self._alive_cache = cache
+        return cache[1], cache[2]
 
     def drift_score(self) -> float:
         """>1 means recent inserts quantize worse than training data."""
@@ -146,8 +167,20 @@ class SegmentedIndex:
         return float(recent / max(self._train_resid, 1e-12))
 
     # -- reads ----------------------------------------------------------------
-    def search(self, q: jax.Array, cfg: anns.SearchConfig) -> dict:
+    def search(self, q: jax.Array, cfg: anns.SearchConfig,
+               row_mask: Optional[np.ndarray] = None) -> dict:
         """Base probe search + brute scan of the (small) deltas; merged.
+
+        Tombstones are pushed INTO the base scan as a row validity bitmap
+        (``anns.search row_mask``): deleted rows score -inf inside the
+        kernel, so the base still yields a full ``top_k`` valid candidates
+        — no dynamic over-fetch, no per-tombstone-count jit recompiles
+        (the former workaround for the shrink-below-k bug class,
+        DESIGN.md §10.2).  ``row_mask`` lets callers (the query planner)
+        stack their own BASE-row filters on top; it is positional over
+        base rows, so it cannot describe rows still sitting in delta
+        segments — passing one while deltas are pending raises instead of
+        silently leaking unfiltered delta rows (``compact()`` first).
 
         Safe to call from reader threads concurrent with the single writer:
         segments/tombstones are snapshotted with C-level copies (atomic
@@ -156,31 +189,34 @@ class SegmentedIndex:
         """
         segments = list(self.segments)
         tombstones = set(self.tombstones)
-        base_cfg = cfg
+        mask = None if row_mask is None \
+            else np.ascontiguousarray(row_mask, bool)
+        if mask is not None and any(len(s.ids) for s in segments):
+            raise ValueError(
+                "row_mask is positional over base rows and cannot filter "
+                "pending delta segments — compact() before masked search")
+        tomb = None
+        dev_mask = None if mask is None else jnp.asarray(mask)
         if tombstones:
-            # over-fetch: tombstones are filtered post-hoc, so a top_k base
-            # fetch could shrink below cfg.top_k after filtering.  Rounded up
-            # to a power of two (cfg is jit-static: each distinct top_k is a
-            # recompile) and bounded by the candidate pool the probe stage
-            # actually materializes.
-            pool = cfg.top_a * cfg.max_cell_size
-            extra = 1 << (len(tombstones) - 1).bit_length()
-            top_k = min(cfg.top_k + extra, pool)
-            if top_k != cfg.top_k:
-                base_cfg = dataclasses.replace(cfg, top_k=top_k)
-        res = anns.search(self.base, q, base_cfg)
+            tomb = np.fromiter(tombstones, imimod.ID_DTYPE)
+            alive_host, alive_dev = self._alive_base_mask(tombstones)
+            dev_mask = alive_dev if mask is None \
+                else jnp.asarray(mask & alive_host)
+        res = anns.search(self.base, q, cfg, dev_mask)
         ids = np.asarray(res["ids"])
         scores = np.asarray(res["scores"])
+        # drop exactly-k padding slots (id -1 / -inf score) before merging
+        live = np.isfinite(scores)
+        ids, scores = ids[live], scores[live]
         qn = np.asarray(pqmod.normalize(jnp.asarray(q, jnp.float32)))
         for seg in segments:
             if not len(seg.ids):
                 continue
-            s = seg.vectors @ qn
-            ids = np.concatenate([ids, seg.ids])
-            scores = np.concatenate([scores, s])
-        if tombstones:
-            keep = ~np.isin(ids, np.fromiter(tombstones, imimod.ID_DTYPE))
-            ids, scores = ids[keep], scores[keep]
+            keep = np.ones(len(seg.ids), bool)
+            if tomb is not None:
+                keep &= ~np.isin(seg.ids, tomb)
+            ids = np.concatenate([ids, seg.ids[keep]])
+            scores = np.concatenate([scores, (seg.vectors @ qn)[keep]])
         order = np.argsort(-scores)[: cfg.top_k]
         return {"ids": ids[order], "scores": scores[order]}
 
@@ -218,5 +254,6 @@ class SegmentedIndex:
             cell_offsets=jnp.asarray(offsets),
         )
         self.segments = []
+        self._alive_cache = None   # base rows changed; tombstones folded
         if self.persistence is not None:
             self.persistence.on_compact(self)

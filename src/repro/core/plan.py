@@ -1,0 +1,606 @@
+"""Complex-query planner — boolean/temporal predicates over the LOVO index.
+
+LOVO's title promises *complex* object queries; this module is the layer
+that makes compound workloads ("a red truck AND a pedestrian, between
+minute 3 and 7, best moment per camera") answerable **index-only** — no
+frame is ever re-touched.  A query is a small plan tree:
+
+  * ``Text(query)``                 — one Algorithm-1 ANN leaf
+  * ``And(*) / Or(*) / Not(child)`` — boolean composition (frame-level)
+  * ``TimeRange(lo, hi) / VideoIn`` — metadata predicates
+  * ``GroupTopK(child, ...)``       — per-video top-k frames, or the best
+                                      contiguous key-frame run ("moment")
+
+Execution (DESIGN.md §10) is two phases:
+
+1. **One device batch for all leaves.**  Every ``Text`` leaf in the tree is
+   collected and searched through a single batched Algorithm-1 call.  Each
+   leaf carries the conjunction of the metadata predicates in scope on its
+   path (predicates distribute over And/Or/Not), compiled to a per-row
+   validity bitmap and pushed INTO the PQ scan (``anns.search_batch
+   row_mask``): filtered rows score -inf inside the kernel and the leaf's
+   top-k is the best k valid rows — a post-hoc filter would instead return
+   fewer than k survivors (the over-fetch bug class).
+2. **Vectorized host merge.**  Leaf posting lists (patch ids) collapse to
+   frame posting lists (best patch per frame), then merge up the tree:
+   sorted-array intersection with min-score fusion for ``And``, union with
+   max for ``Or``, anti-join against the key-frame universe for ``Not``,
+   and a sort-plus-segment-boundary pass (no segment tree) for the grouped
+   windowed argmax of ``GroupTopK``.
+
+``merge_grouped`` re-merges per-shard ``PlanResult``s so a sharded router
+(`QueryRouter.call_sharded`) returns the same grouped answer as one index.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Plan nodes
+# ---------------------------------------------------------------------------
+class Node:
+    """Base class of plan-tree nodes (structural marker only)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Text(Node):
+    """ANN leaf: one free-text query, scored by Algorithm-1 fast search.
+
+    ``weight`` scales the leaf's frame scores before fusion (a cheap way to
+    bias an ``And``/``Or`` toward its most important term)."""
+
+    query: str
+    weight: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class And(Node):
+    """Conjunction: frames present in EVERY child.
+
+    Score fusion is min over the scored children (weakest evidence rules —
+    a frame is only as good as its least-supported term); filter-only
+    children (``TimeRange``/``VideoIn``/``Not``) restrict membership but
+    contribute no score."""
+
+    children: tuple
+
+    def __init__(self, *children: Node):
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Or(Node):
+    """Disjunction: frames present in ANY child; score fusion is max."""
+
+    children: tuple
+
+    def __init__(self, *children: Node):
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Node):
+    """Complement against the key-frame universe (anti-join).  Score-free:
+    membership only — meaningful inside an ``And`` (``And(a, Not(b))`` =
+    frames matching ``a`` that do not match ``b``)."""
+
+    child: Node
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeRange(Node):
+    """Frames with source-frame index in the half-open window [lo, hi);
+    ``video`` restricts the window to one video (None = every video)."""
+
+    lo: int
+    hi: int
+    video: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class VideoIn(Node):
+    """Frames belonging to one of the given video ids."""
+
+    videos: tuple
+
+    def __init__(self, videos: Sequence[int]):
+        object.__setattr__(self, "videos", tuple(sorted(int(v)
+                                                        for v in videos)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupTopK(Node):
+    """Grouped reduction of the child's frame set.
+
+    ``per="video"`` groups by source video.  ``mode="frames"`` keeps the
+    ``k`` best-scoring frames per group; ``mode="moment"`` performs
+    temporal-moment localization — the best contiguous key-frame run per
+    group (consecutive key-frame rows, gaps of up to ``max_gap`` rows
+    bridged), scored by the run's summed frame scores."""
+
+    child: Node
+    per: str = "video"
+    k: int = 1
+    mode: str = "frames"
+    max_gap: int = 1
+
+
+_PREDICATES = (TimeRange, VideoIn)
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip (the `serve.py --plan` wire syntax)
+# ---------------------------------------------------------------------------
+def from_json(obj: Any) -> Node:
+    """Parse the serving JSON syntax into a plan tree.
+
+    ``{"text": "a red square"}`` · ``{"and": [...]}`` · ``{"or": [...]}`` ·
+    ``{"not": {...}}`` · ``{"time_range": [lo, hi]}`` (or ``{"lo":, "hi":,
+    "video":}``) · ``{"videos": [0, 2]}`` · ``{"group_top_k": {"child":
+    {...}, "per": "video", "k": 1, "mode": "frames"|"moment"}}``.
+    """
+    if isinstance(obj, str):
+        obj = json.loads(obj)
+    if isinstance(obj, Node):
+        return obj
+    if not isinstance(obj, dict) or len(obj) != 1:
+        raise ValueError(f"plan node must be a single-key dict, got {obj!r}")
+    (key, val), = obj.items()
+    if key == "text":
+        if isinstance(val, dict):
+            return Text(val["query"], float(val.get("weight", 1.0)))
+        return Text(str(val))
+    if key == "and":
+        return And(*[from_json(c) for c in val])
+    if key == "or":
+        return Or(*[from_json(c) for c in val])
+    if key == "not":
+        return Not(from_json(val))
+    if key == "time_range":
+        if isinstance(val, dict):
+            return TimeRange(int(val["lo"]), int(val["hi"]),
+                             val.get("video"))
+        lo, hi = val
+        return TimeRange(int(lo), int(hi))
+    if key == "videos":
+        return VideoIn(val)
+    if key == "group_top_k":
+        return GroupTopK(from_json(val["child"]),
+                         per=val.get("per", "video"),
+                         k=int(val.get("k", 1)),
+                         mode=val.get("mode", "frames"),
+                         max_gap=int(val.get("max_gap", 1)))
+    raise ValueError(f"unknown plan node kind {key!r}")
+
+
+def to_json(node: Node) -> dict:
+    """Inverse of :func:`from_json` (round-trips every node)."""
+    if isinstance(node, Text):
+        return {"text": {"query": node.query, "weight": node.weight}}
+    if isinstance(node, And):
+        return {"and": [to_json(c) for c in node.children]}
+    if isinstance(node, Or):
+        return {"or": [to_json(c) for c in node.children]}
+    if isinstance(node, Not):
+        return {"not": to_json(node.child)}
+    if isinstance(node, TimeRange):
+        return {"time_range": {"lo": node.lo, "hi": node.hi,
+                               "video": node.video}}
+    if isinstance(node, VideoIn):
+        return {"videos": list(node.videos)}
+    if isinstance(node, GroupTopK):
+        return {"group_top_k": {"child": to_json(node.child), "per": node.per,
+                                "k": node.k, "mode": node.mode,
+                                "max_gap": node.max_gap}}
+    raise ValueError(f"unknown plan node {node!r}")
+
+
+# ---------------------------------------------------------------------------
+# Metadata view (mask compilation inputs)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanMeta:
+    """Row- and frame-level metadata the planner filters on.
+
+    ``row_*`` arrays are aligned with the index's cell-sorted rows (what
+    masks are built over); ``frame_*`` with key-frame rows (what merges
+    group by).  Built once per index via :func:`plan_meta_from_built`.
+    """
+
+    row_video: np.ndarray         # (N,) int32 video id per index row
+    row_time: np.ndarray          # (N,) int32 source-frame index per row
+    frame_video: np.ndarray       # (F,) int32 video id per key frame
+    frame_time: np.ndarray        # (F,) int32 source-frame index per key frame
+    patches_per_frame: int
+
+
+def plan_meta_from_built(built: Any) -> PlanMeta:
+    """Derive the planner's metadata view from a ``BuiltIndex`` (works for
+    freshly built AND store-reopened indexes — the store sidecar persists
+    ``video_of``/``frame_of``, so filters survive a restart)."""
+    ids = np.asarray(built.index.ids)
+    return PlanMeta(
+        row_video=np.asarray(built.metadata.video_of)[ids],
+        row_time=np.asarray(built.metadata.frame_of)[ids],
+        frame_video=np.asarray(built.keyframe_video),
+        frame_time=np.asarray(built.keyframe_frame),
+        patches_per_frame=int(built.patches_per_frame),
+    )
+
+
+def predicate_row_mask(pred: Node, meta: PlanMeta) -> np.ndarray:
+    """Compile one metadata predicate to a (N,) row validity bitmap."""
+    if isinstance(pred, TimeRange):
+        m = (meta.row_time >= pred.lo) & (meta.row_time < pred.hi)
+        if pred.video is not None:
+            m &= meta.row_video == pred.video
+        return m
+    if isinstance(pred, VideoIn):
+        return np.isin(meta.row_video, np.asarray(pred.videos))
+    raise ValueError(f"not a metadata predicate: {pred!r}")
+
+
+def _predicate_frames(pred: Node, meta: PlanMeta) -> np.ndarray:
+    """Frame-level membership of a predicate (sorted key-frame rows)."""
+    if isinstance(pred, TimeRange):
+        m = (meta.frame_time >= pred.lo) & (meta.frame_time < pred.hi)
+        if pred.video is not None:
+            m &= meta.frame_video == pred.video
+        return np.flatnonzero(m)
+    if isinstance(pred, VideoIn):
+        return np.flatnonzero(np.isin(meta.frame_video,
+                                      np.asarray(pred.videos)))
+    raise ValueError(f"not a metadata predicate: {pred!r}")
+
+
+# ---------------------------------------------------------------------------
+# Leaf collection (pushdown compilation)
+# ---------------------------------------------------------------------------
+def collect_leaves(plan: Node) -> list[tuple[Text, tuple[Node, ...]]]:
+    """Depth-first list of (Text leaf, metadata predicates pushed onto it).
+
+    A predicate that is a DIRECT child of an ``And`` scopes every leaf under
+    that ``And`` — including leaves below nested ``Or``/``Not``: pushing a
+    conjunctive mask M into a leaf X is sound anywhere the result is later
+    intersected with M, since (X∩M)∪(Y∩M) = (X∪Y)∩M and M∖(X∩M) = M∖X.
+    The predicates are ALSO evaluated at merge time (frame-level), so
+    pushdown is purely a recall/latency optimization, never a semantics
+    change.
+    """
+    leaves: list[tuple[Text, tuple[Node, ...]]] = []
+
+    def walk(node: Node, pushed: tuple[Node, ...]) -> None:
+        if isinstance(node, Text):
+            leaves.append((node, pushed))
+        elif isinstance(node, And):
+            scoped = pushed + tuple(c for c in node.children
+                                    if isinstance(c, _PREDICATES))
+            for c in node.children:
+                walk(c, scoped)
+        elif isinstance(node, Or):
+            for c in node.children:
+                walk(c, pushed)
+        elif isinstance(node, Not):
+            walk(node.child, pushed)
+        elif isinstance(node, GroupTopK):
+            walk(node.child, pushed)
+        elif isinstance(node, _PREDICATES):
+            pass
+        else:
+            raise ValueError(f"unknown plan node {node!r}")
+
+    walk(plan, ())
+    return leaves
+
+
+def compile_masks(leaves: Sequence[tuple[Text, tuple[Node, ...]]],
+                  meta: PlanMeta) -> Optional[np.ndarray]:
+    """Stack per-leaf row bitmaps into the (Q, N) batch mask for
+    ``anns.search_batch`` — or None when no leaf carries a predicate (the
+    unmasked fast path)."""
+    if all(not preds for _, preds in leaves):
+        return None
+    n = len(meta.row_video)
+    masks = np.ones((len(leaves), n), bool)
+    for i, (_, preds) in enumerate(leaves):
+        for p in preds:
+            masks[i] &= predicate_row_mask(p, meta)
+    return masks
+
+
+# ---------------------------------------------------------------------------
+# Frame sets and vectorized merges
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _FrameSet:
+    """Sorted frame posting list: ``frames`` strictly increasing,
+    ``scores`` aligned; ``scored`` False for filter-only sets (predicates,
+    Not) whose scores are all zero."""
+
+    frames: np.ndarray
+    scores: np.ndarray
+    scored: bool
+
+    @classmethod
+    def empty(cls) -> "_FrameSet":
+        return cls(np.empty((0,), np.int64), np.empty((0,), np.float32),
+                   False)
+
+
+def _leaf_frame_set(ids: np.ndarray, scores: np.ndarray, weight: float,
+                    meta: PlanMeta) -> _FrameSet:
+    """Patch posting list -> frame posting list (best patch per frame).
+
+    Padding slots (id −1 / −inf score: the exactly-k contract of the masked
+    scan) are dropped here — they are how "fewer than k valid rows" is
+    represented, not real candidates."""
+    live = ids >= 0
+    ids, scores = ids[live], scores[live]
+    frames = ids // meta.patches_per_frame
+    order = np.lexsort((-scores, frames))
+    f, s = frames[order], scores[order]
+    first = np.r_[True, f[1:] != f[:-1]] if len(f) else np.empty((0,), bool)
+    return _FrameSet(f[first].astype(np.int64),
+                     (s[first] * weight).astype(np.float32), True)
+
+
+def _intersect(a: _FrameSet, b: _FrameSet) -> _FrameSet:
+    frames, ia, ib = np.intersect1d(a.frames, b.frames,
+                                    assume_unique=True, return_indices=True)
+    if a.scored and b.scored:
+        scores = np.minimum(a.scores[ia], b.scores[ib])
+    elif a.scored:
+        scores = a.scores[ia]
+    elif b.scored:
+        scores = b.scores[ib]
+    else:
+        scores = np.zeros(len(frames), np.float32)
+    return _FrameSet(frames, scores, a.scored or b.scored)
+
+
+def _union(a: _FrameSet, b: _FrameSet) -> _FrameSet:
+    frames = np.union1d(a.frames, b.frames)
+    scores = np.full(len(frames), -np.inf, np.float32)
+    pa = np.searchsorted(frames, a.frames)
+    pb = np.searchsorted(frames, b.frames)
+    scores[pa] = a.scores
+    scores[pb] = np.maximum(scores[pb], b.scores)
+    return _FrameSet(frames, scores, a.scored or b.scored)
+
+
+def _complement(x: _FrameSet, n_frames: int) -> _FrameSet:
+    frames = np.setdiff1d(np.arange(n_frames, dtype=np.int64), x.frames,
+                          assume_unique=True)
+    return _FrameSet(frames, np.zeros(len(frames), np.float32), False)
+
+
+def _group_key(node: GroupTopK, frames: np.ndarray, meta: PlanMeta
+               ) -> np.ndarray:
+    if node.per != "video":
+        raise ValueError(f"unsupported grouping {node.per!r}")
+    return meta.frame_video[frames].astype(np.int64)
+
+
+def _group_topk_frames(node: GroupTopK, x: _FrameSet, meta: PlanMeta
+                       ) -> _FrameSet:
+    """Per-group windowed argmax without a segment tree: one lexsort puts
+    rows in (group, score desc) order, group starts fall out of a
+    neighbour-difference, and the within-group rank is ``arange − start``."""
+    if not len(x.frames):
+        return x
+    g = _group_key(node, x.frames, meta)
+    order = np.lexsort((x.frames, -x.scores, g))
+    gs, fs, ss = g[order], x.frames[order], x.scores[order]
+    new_group = np.r_[True, gs[1:] != gs[:-1]]
+    starts = np.flatnonzero(new_group)
+    rank = np.arange(len(gs)) - np.repeat(starts, np.diff(
+        np.r_[starts, len(gs)]))
+    keep = rank < node.k
+    frames, scores = fs[keep], ss[keep]
+    order = np.argsort(frames)
+    return _FrameSet(frames[order], scores[order], x.scored)
+
+
+def _group_moments(node: GroupTopK, x: _FrameSet, meta: PlanMeta
+                   ) -> tuple[_FrameSet, dict[str, np.ndarray]]:
+    """Temporal-moment localization: best contiguous key-frame run per
+    group.  Key-frame rows of one video are globally contiguous (the
+    builder appends videos in order), so runs are maximal stretches of the
+    SORTED frame array where the row gap ≤ ``max_gap`` and the group is
+    unchanged — found with one diff, scored with one bincount."""
+    if not len(x.frames):
+        empty = {k: np.empty((0,), np.int64) for k in
+                 ("video", "start", "end", "n_frames")}
+        empty["score"] = np.empty((0,), np.float32)
+        return x, empty
+    g = _group_key(node, x.frames, meta)
+    order = np.argsort(x.frames)
+    f, s, gv = x.frames[order], x.scores[order], g[order]
+    new_run = np.r_[True, (np.diff(f) > node.max_gap) | (gv[1:] != gv[:-1])]
+    run = np.cumsum(new_run) - 1
+    run_score = np.bincount(run, weights=s).astype(np.float32)
+    run_len = np.bincount(run)
+    run_video = gv[new_run]
+    run_start = f[new_run]
+    run_end = f[np.r_[new_run[1:], True]]
+    # best run per group: sort (group, score desc) and take group firsts
+    o = np.lexsort((run_start, -run_score, run_video))
+    firsts = o[np.r_[True, run_video[o][1:] != run_video[o][:-1]]]
+    firsts = firsts[np.argsort(run_video[firsts])]
+    moments = {
+        "video": run_video[firsts],
+        "start": meta.frame_time[run_start[firsts]].astype(np.int64),
+        "end": meta.frame_time[run_end[firsts]].astype(np.int64),
+        "n_frames": run_len[firsts].astype(np.int64),
+        "score": run_score[firsts],
+    }
+    # representative frame per kept run = its best-scoring key frame
+    keep = np.isin(run, firsts)
+    rf, rs, rr = f[keep], s[keep], run[keep]
+    o = np.lexsort((rf, -rs, rr))
+    best = o[np.r_[True, rr[o][1:] != rr[o][:-1]]]
+    frames, scores = rf[best], rs[best]
+    o = np.argsort(frames)
+    return _FrameSet(frames[o], scores[o], x.scored), moments
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanResult:
+    """Index-only answer to a plan query.
+
+    ``frames`` are key-frame rows (into ``BuiltIndex.keyframes``), ordered
+    by descending score; ``videos``/``times`` are their source video id and
+    source-frame index.  ``moments`` is set by ``GroupTopK(mode="moment")``:
+    parallel arrays (video, start, end, n_frames, score), one row per
+    group's best contiguous key-frame run.
+    """
+
+    frames: np.ndarray
+    scores: np.ndarray
+    videos: np.ndarray
+    times: np.ndarray
+    moments: Optional[dict[str, np.ndarray]] = None
+
+
+SearchTextsFn = Callable[[list[str], Optional[np.ndarray]],
+                         tuple[np.ndarray, np.ndarray]]
+
+
+def execute(plan: Node, meta: PlanMeta, search_texts: SearchTextsFn
+            ) -> PlanResult:
+    """Run a plan tree: one batched leaf search, then the vectorized merge.
+
+    ``search_texts(texts, masks)`` answers Q texts with an optional (Q, N)
+    row bitmap — ``QueryEngine.query_plan`` binds it to the engine's
+    batched encode + masked ``anns.search_batch``; tests bind numpy fakes.
+    """
+    leaves = collect_leaves(plan)
+    leaf_sets: dict[int, _FrameSet] = {}
+    if leaves:
+        masks = compile_masks(leaves, meta)
+        ids, scores = search_texts([leaf.query for leaf, _ in leaves], masks)
+        for i, (leaf, _) in enumerate(leaves):
+            leaf_sets[i] = _leaf_frame_set(np.asarray(ids[i]),
+                                           np.asarray(scores[i]),
+                                           leaf.weight, meta)
+    n_frames = len(meta.frame_video)
+    counter = {"i": 0}
+
+    def ev(node: Node) -> tuple[_FrameSet, Optional[dict]]:
+        if isinstance(node, Text):
+            out = leaf_sets[counter["i"]]
+            counter["i"] += 1
+            return out, None
+        if isinstance(node, _PREDICATES):
+            frames = _predicate_frames(node, meta).astype(np.int64)
+            return _FrameSet(frames, np.zeros(len(frames), np.float32),
+                             False), None
+        if isinstance(node, Not):
+            inner, _ = ev(node.child)
+            return _complement(inner, n_frames), None
+        if isinstance(node, And):
+            sets = [ev(c)[0] for c in node.children]
+            out = sets[0]
+            for s in sets[1:]:
+                out = _intersect(out, s)
+            return out, None
+        if isinstance(node, Or):
+            sets = [ev(c)[0] for c in node.children]
+            out = sets[0]
+            for s in sets[1:]:
+                out = _union(out, s)
+            return out, None
+        if isinstance(node, GroupTopK):
+            inner, _ = ev(node.child)
+            if node.mode == "moment":
+                return _group_moments(node, inner, meta)
+            if node.mode != "frames":
+                raise ValueError(f"unknown GroupTopK mode {node.mode!r}")
+            return _group_topk_frames(node, inner, meta), None
+        raise ValueError(f"unknown plan node {node!r}")
+
+    out, moments = ev(plan)
+    order = np.argsort(-out.scores, kind="stable")
+    frames = out.frames[order]
+    return PlanResult(
+        frames=frames, scores=out.scores[order],
+        videos=meta.frame_video[frames].astype(np.int64),
+        times=meta.frame_time[frames].astype(np.int64),
+        moments=moments,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard merge (router integration)
+# ---------------------------------------------------------------------------
+def _contains_not(node: Node) -> bool:
+    if isinstance(node, Not):
+        return True
+    if isinstance(node, (And, Or)):
+        return any(_contains_not(c) for c in node.children)
+    if isinstance(node, GroupTopK):
+        return _contains_not(node.child)
+    return False
+
+
+def shard_plan(plan: Node) -> Node:
+    """The plan each index shard should execute: the root ``GroupTopK`` is
+    stripped (shards return ungrouped frame sets) so the grouped reduction
+    runs ONCE, on the merged set, in :func:`merge_grouped` — a best moment
+    can span frames held by different shards, so per-shard grouping would
+    reduce over incomplete runs.
+
+    Shard-decomposition contract (DESIGN.md §10.3): shards must partition
+    FRAMES — every patch of a key frame lives on one shard, as when each
+    shard is its own store / video subset.  ``And`` intersects per shard,
+    so a frame whose leaf matches were split across shards would be
+    dropped under arbitrary ROW sharding.  ``Not`` does not decompose at
+    all (a per-shard complement is taken against the GLOBAL frame
+    universe, so the union of complements is wrong for any shard count >
+    1) — plans containing ``Not`` must run unsharded, and this function
+    refuses them."""
+    if _contains_not(plan):
+        raise ValueError(
+            "Not() does not decompose across shards (per-shard complement "
+            "is against the global universe) — run this plan unsharded")
+    return plan.child if isinstance(plan, GroupTopK) else plan
+
+
+def merge_grouped(results: Sequence[PlanResult], plan: Node,
+                  meta: PlanMeta) -> PlanResult:
+    """Merge per-shard results of ``shard_plan(plan)`` into the
+    single-index answer to ``plan``.
+
+    Shards partition index ROWS; a frame seen by several shards keeps its
+    best score (max — the same fusion a single index's per-frame best-patch
+    reduction applies).  If ``plan``'s root is a ``GroupTopK``, the grouped
+    reduction (per-group top-k / best moment) is applied to the merged set
+    — so shard count never changes the answer as long as each shard's leaf
+    ``top_k`` covered its matching rows (DESIGN.md §10.3).
+    """
+    frames = np.concatenate([r.frames for r in results]).astype(np.int64)
+    scores = np.concatenate([r.scores for r in results]).astype(np.float32)
+    order = np.lexsort((-scores, frames))
+    f, s = frames[order], scores[order]
+    first = np.r_[True, f[1:] != f[:-1]] if len(f) else np.empty((0,), bool)
+    merged = _FrameSet(f[first], s[first], True)
+    moments = None
+    if isinstance(plan, GroupTopK):
+        if plan.mode == "moment":
+            merged, moments = _group_moments(plan, merged, meta)
+        else:
+            merged = _group_topk_frames(plan, merged, meta)
+    order = np.argsort(-merged.scores, kind="stable")
+    frames = merged.frames[order]
+    return PlanResult(frames=frames, scores=merged.scores[order],
+                      videos=meta.frame_video[frames].astype(np.int64),
+                      times=meta.frame_time[frames].astype(np.int64),
+                      moments=moments)

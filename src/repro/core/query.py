@@ -17,6 +17,11 @@ queries through single jitted calls with a static padded batch shape
 frames once before scoring per-(query, frame) pairs.  ``fast_search`` /
 ``query`` are the single-query views of the same path (a batch of one).
 DESIGN.md §8 documents the static-shape/padding contract.
+
+``query_plan`` answers COMPOUND queries (boolean/temporal plan trees from
+``repro.core.plan``) index-only: all text leaves ride one batched search
+with metadata filters pushed into the PQ scan, then the posting lists are
+merged on the host (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -121,8 +126,9 @@ class QueryEngine:
 
         self._encode_text = jax.jit(
             lambda p, t, m: textmod.text_encode(p, t, m, self.text_cfg))
-        self._search_batch = lambda qs: anns.search_batch(
-            self.built.index, qs, self.search_cfg)
+        self._search_batch = lambda qs, row_mask=None: anns.search_batch(
+            self.built.index, qs, self.search_cfg, row_mask)
+        self._plan_meta = None  # built lazily by query_plan
         self._vit_tokens = jax.jit(
             lambda p, im: vitmod.vit_tokens(p, im, self.vit_cfg))
         self._rerank = jax.jit(
@@ -175,16 +181,25 @@ class QueryEngine:
         t_search = time.perf_counter() - t0
         return ids, scores, {"encode": t_enc, "fast_search": t_search}
 
-    def _search_embeds(self, qs: np.ndarray
+    def _search_embeds(self, qs: np.ndarray,
+                       row_masks: Optional[np.ndarray] = None
                        ) -> tuple[np.ndarray, np.ndarray]:
         """(Q, D') embeddings -> (ids (Q, k), scores (Q, k)) via batched
-        Algorithm 1, padded per static ``query_batch_size`` chunk."""
+        Algorithm 1, padded per static ``query_batch_size`` chunk.
+
+        ``row_masks``: optional (Q, N) validity bitmap, one row per query
+        (plan filter pushdown) — padded tail queries get all-False rows
+        (their results are discarded anyway)."""
         B = self.query_batch_size
         ids_out, scores_out = [], []
         for lo in range(0, len(qs), B):
             n = min(B, len(qs) - lo)
             chunk = _pad_rows(qs[lo: lo + B], B)
-            res = self._search_batch(jnp.asarray(chunk))
+            mask = None
+            if row_masks is not None:
+                mask = jnp.asarray(_pad_rows(
+                    np.ascontiguousarray(row_masks[lo: lo + B], np.uint8), B))
+            res = self._search_batch(jnp.asarray(chunk), mask)
             ids_out.append(np.asarray(res["ids"])[:n])
             scores_out.append(np.asarray(res["scores"])[:n])
         return np.concatenate(ids_out), np.concatenate(scores_out)
@@ -199,6 +214,8 @@ class QueryEngine:
                           top_n: int) -> tuple[np.ndarray, np.ndarray]:
         """Patch ids (k,) -> unique key-frame rows in best-score-first order
         (score per frame = its best patch's fast-search score)."""
+        live = ids >= 0   # drop exactly-k padding slots (id -1, -inf score)
+        ids, scores = ids[live], scores[live]
         Kp = self.built.patches_per_frame
         frame_rows = ids // Kp
         uniq, first = np.unique(frame_rows, return_index=True)
@@ -290,3 +307,40 @@ class QueryEngine:
         """Single-query view of ``query_batch`` (a batch of one)."""
         return self.query_batch([text], top_n=top_n,
                                 use_rerank=use_rerank)[0]
+
+    # -- complex queries (plan trees, DESIGN.md §10) ---------------------------
+    def plan_meta(self):
+        """The planner's metadata view of this engine's index (row/frame
+        video ids + timestamps), built once and cached."""
+        from repro.core import plan as planmod
+        if self._plan_meta is None:
+            self._plan_meta = planmod.plan_meta_from_built(self.built)
+        return self._plan_meta
+
+    def query_plan(self, plan, *, top_n: Optional[int] = None):
+        """Answer a compound query plan (``repro.core.plan`` tree, dict, or
+        JSON string) index-only: every ``Text`` leaf is searched in ONE
+        batched Algorithm-1 call with its metadata predicates pushed into
+        the PQ scan as a row bitmap, then the posting lists merge on the
+        host (boolean fusion, grouping, moment localization).
+
+        No frame is re-encoded and no rerank runs — complex queries stay at
+        fast-search latency.  Returns a ``plan.PlanResult``; ``top_n``
+        truncates the (score-ordered) frame list.
+        """
+        from repro.core import plan as planmod
+        node = plan if isinstance(plan, planmod.Node) else \
+            planmod.from_json(plan)
+        meta = self.plan_meta()
+
+        def search_texts(texts, masks):
+            qs, _, _ = self._encode_texts(texts)
+            return self._search_embeds(qs, row_masks=masks)
+
+        res = planmod.execute(node, meta, search_texts)
+        if top_n is not None:
+            res = planmod.PlanResult(
+                frames=res.frames[:top_n], scores=res.scores[:top_n],
+                videos=res.videos[:top_n], times=res.times[:top_n],
+                moments=res.moments)
+        return res

@@ -45,6 +45,24 @@ def pq_scan_paired(luts: jax.Array, codes: jax.Array, *,
                               interpret=_interpret())
 
 
+def pq_scan_batched_masked(luts: jax.Array, codes: jax.Array,
+                           mask: jax.Array, *,
+                           block_n: int = 1024) -> jax.Array:
+    """Masked shared-codes ADC: mask (Q, N) nonzero=valid; filtered rows
+    return exactly -inf (sentinel applied inside the kernel)."""
+    return _pq.pq_scan_batched_masked(luts, codes, mask, block_n=block_n,
+                                      interpret=_interpret())
+
+
+def pq_scan_paired_masked(luts: jax.Array, codes: jax.Array,
+                          mask: jax.Array, *,
+                          block_n: int = 1024) -> jax.Array:
+    """Masked per-query-candidates ADC: mask (Q, N) nonzero=valid; filtered
+    rows return exactly -inf (sentinel applied inside the kernel)."""
+    return _pq.pq_scan_paired_masked(luts, codes, mask, block_n=block_n,
+                                     interpret=_interpret())
+
+
 def kmeans_assign(x: jax.Array, cents: jax.Array):
     return _km.kmeans_assign(x, cents, interpret=_interpret())
 

@@ -1,6 +1,6 @@
 """Pallas TPU kernel: PQ ADC scan (the LOVO fast-search hot loop).
 
-Two entry points, both one ``pallas_call``:
+Four entry points, each one ``pallas_call``:
 
   * ``pq_scan_batched`` — scores[q, n] = sum_p LUT[q, p, codes[n, p]] for Q
     query LUTs against ONE shared code matrix (N, P).  Used when every query
@@ -11,6 +11,15 @@ Two entry points, both one ``pallas_call``:
     (top_a * max_cell_size) candidate window, and the whole batch is scanned
     in a single kernel launch instead of Q separate scans — the LUT block
     stays VMEM-resident across that query's code blocks.
+  * ``pq_scan_batched_masked`` / ``pq_scan_paired_masked`` — the same scans
+    with a per-(query, row) validity mask applied INSIDE the kernel: invalid
+    rows come back as exactly ``-inf`` (the similarity sentinel), so they
+    can never survive a downstream top-k.  This is the filter-pushdown
+    contract of the complex-query planner (DESIGN.md §10): metadata
+    predicates (time range, video-id set, tombstones) become a row bitmap
+    that rides the scan, instead of a post-hoc filter that silently shrinks
+    the result set below k.  The sentinel write is fused into the scan's
+    single pass — no second (Q, N) traversal of the score matrix in HBM.
 
 TPU adaptation (DESIGN.md §3): the GPU/CPU formulation is a random gather
 from an L1-resident LUT — TPUs hate scattered gathers, so the contraction is
@@ -100,6 +109,58 @@ def pq_scan_batched(luts: jax.Array, codes: jax.Array, *,
     return out[:N].T                                   # (Q, N)
 
 
+def _masked_kernel(lut_ref, codes_ref, mask_ref, out_ref, *, P: int, M: int):
+    """Shared-codes scan with the validity sentinel fused into the pass:
+    out[n, q] = mask[q, n] ? sum_p LUT[q, p, codes[n, p]] : -inf."""
+    codes = codes_ref[...].astype(jnp.int32)          # (bN, P)
+    bn = codes.shape[0]
+    Q = lut_ref.shape[0]
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
+
+    def body(p, acc):
+        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
+        lut_p = lut_ref[:, p, :]                       # (Q, M) f32
+        return acc + jax.lax.dot_general(
+            onehot, lut_p, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bN, Q)
+
+    acc = jax.lax.fori_loop(0, P, body,
+                            jnp.zeros((bn, Q), jnp.float32))
+    valid = mask_ref[...].astype(jnp.int32).T != 0     # (bN, Q)
+    out_ref[...] = jnp.where(valid, acc, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_scan_batched_masked(luts: jax.Array, codes: jax.Array,
+                           mask: jax.Array, *, block_n: int = 1024,
+                           interpret: bool | None = None) -> jax.Array:
+    """Masked shared-codes ADC: luts (Q, P, M) f32, codes (N, P) integer,
+    mask (Q, N) — nonzero = valid — -> scores (Q, N) f32 with exactly
+    ``-inf`` wherever mask is zero (rows a metadata predicate filtered out;
+    see module docstring)."""
+    Q, P, M = luts.shape
+    N = codes.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    grid = ((N + pad) // bn,)
+    out = pl.pallas_call(
+        functools.partial(_masked_kernel, P=P, M=M),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q, P, M), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bn, P), lambda i: (i, 0)),
+            pl.BlockSpec((Q, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bn, Q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(((N + pad), Q), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(luts.astype(jnp.float32), codes, mask.astype(jnp.uint8))
+    return out[:N].T                                   # (Q, N)
+
+
 def _paired_kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
     codes = codes_ref[0].astype(jnp.int32)            # (bN, P)
     bn = codes.shape[0]
@@ -145,4 +206,57 @@ def pq_scan_paired(luts: jax.Array, codes: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((Q, N + pad), jnp.float32),
         interpret=resolve_interpret(interpret),
     )(luts.astype(jnp.float32), codes)
+    return out[:, :N]                                  # (Q, N)
+
+
+def _paired_masked_kernel(lut_ref, codes_ref, mask_ref, out_ref, *,
+                          P: int, M: int):
+    """Per-query candidate scan with the validity sentinel fused in:
+    out[q, n] = mask[q, n] ? sum_p LUT[q, p, codes[q, n, p]] : -inf."""
+    codes = codes_ref[0].astype(jnp.int32)            # (bN, P)
+    bn = codes.shape[0]
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
+
+    def body(p, acc):
+        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
+        lut_p = lut_ref[0, p, :]                       # (M,) f32
+        return acc + jax.lax.dot_general(
+            onehot, lut_p[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bN, 1)
+
+    acc = jax.lax.fori_loop(0, P, body,
+                            jnp.zeros((bn, 1), jnp.float32))
+    valid = mask_ref[...].astype(jnp.int32) != 0       # (1, bN)
+    out_ref[...] = jnp.where(valid, acc[:, 0][None, :], -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_scan_paired_masked(luts: jax.Array, codes: jax.Array,
+                          mask: jax.Array, *, block_n: int = 1024,
+                          interpret: bool | None = None) -> jax.Array:
+    """Masked per-query candidate scan: luts (Q, P, M) f32, codes (Q, N, P)
+    integer, mask (Q, N) — nonzero = valid — -> scores (Q, N) f32 with
+    exactly ``-inf`` wherever mask is zero.  Same grid/residency contract
+    as ``pq_scan_paired``; the sentinel is applied inside the kernel so
+    filtered rows never reach the top-k (DESIGN.md §10)."""
+    Q, P, M = luts.shape
+    N = codes.shape[1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    grid = (Q, (N + pad) // bn)
+    out = pl.pallas_call(
+        functools.partial(_paired_masked_kernel, P=P, M=M),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, P, M), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, bn, P), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, bn), lambda q, i: (q, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda q, i: (q, i)),
+        out_shape=jax.ShapeDtypeStruct((Q, N + pad), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(luts.astype(jnp.float32), codes, mask.astype(jnp.uint8))
     return out[:, :N]                                  # (Q, N)

@@ -17,6 +17,16 @@ def pq_scan_ref(luts: jax.Array, codes: jax.Array) -> jax.Array:
     return jax.vmap(one)(luts)
 
 
+def pq_scan_masked_ref(luts: jax.Array, codes: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """luts: (Q, P, M), codes: (N, P), mask: (Q, N) nonzero=valid -> (Q, N).
+
+    Same contraction as ``pq_scan_ref`` with the planner's filter-pushdown
+    sentinel: masked-out rows are exactly ``-inf`` so they cannot survive a
+    downstream top-k (all-filtered rows stay -inf, never NaN)."""
+    return jnp.where(mask != 0, pq_scan_ref(luts, codes), -jnp.inf)
+
+
 def kmeans_assign_ref(x: jax.Array, cents: jax.Array
                       ) -> tuple[jax.Array, jax.Array]:
     """Full (N, M) distance matrix, then argmin (the memory-heavy baseline

@@ -4,6 +4,12 @@ batched text queries through the full two-stage pipeline.
   PYTHONPATH=src python -m repro.launch.serve --videos 6 --queries 8
   PYTHONPATH=src python -m repro.launch.serve --store-dir /tmp/lovo-store
   PYTHONPATH=src python -m repro.launch.serve --batch-size 8 --max-wait-ms 5
+  PYTHONPATH=src python -m repro.launch.serve \
+      --plan '{"and": [{"text": "a red square"}, {"time_range": [0, 32]}]}'
+
+``--plan`` switches to the complex-query path: the JSON plan tree
+(conjunction/negation, time windows, per-video grouping — DESIGN.md §10)
+is answered index-only through ``QueryEngine.query_plan``.
 
 The ``MicroBatcher`` is the front door: concurrent submissions are grouped
 into batches of up to ``--batch-size`` (or whatever arrived within
@@ -111,6 +117,12 @@ def main() -> None:
     ap.add_argument("--build-chunk", type=int, default=32,
                     help="key frames ViT-encoded per streaming-build chunk "
                          "(the encode-phase memory high-water mark)")
+    ap.add_argument("--plan", action="append", default=None,
+                    metavar="JSON",
+                    help="answer a compound query plan (repeatable) instead "
+                         "of the text-query demo; JSON plan-tree syntax, "
+                         'e.g. \'{"and": [{"text": "a red square"}, '
+                         '{"time_range": [0, 32]}]}\' — see DESIGN.md §10')
     args = ap.parse_args()
 
     from repro.serving.batcher import HedgedExecutor, MicroBatcher
@@ -151,6 +163,27 @@ def main() -> None:
                        meta={"build_seconds": wall})
             print(f"store created at {args.store_dir} "
                   f"({time.perf_counter()-t0:.2f}s); next launch reopens it")
+
+    if args.plan:
+        # complex-query path: plans are answered index-only (one batched
+        # leaf search with filter pushdown + host merge, DESIGN.md §10)
+        for spec in args.plan:
+            t0 = time.perf_counter()
+            res = engine.query_plan(spec, top_n=5)
+            ms = (time.perf_counter() - t0) * 1e3
+            print(f"plan {spec}")
+            for f, s, v, t in zip(res.frames, res.scores, res.videos,
+                                  res.times):
+                print(f"  video {v} frame {t} (kf row {f}): score {s:.3f}")
+            if res.moments is not None:
+                for i in range(len(res.moments["video"])):
+                    print(f"  moment: video {res.moments['video'][i]} "
+                          f"frames [{res.moments['start'][i]}, "
+                          f"{res.moments['end'][i]}] "
+                          f"({res.moments['n_frames'][i]} key frames, "
+                          f"score {res.moments['score'][i]:.3f})")
+            print(f"  answered index-only in {ms:.0f}ms")
+        return
 
     queries = ["a large red square", "a small blue circle",
                "a medium green triangle", "a white bar in the center",

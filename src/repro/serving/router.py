@@ -10,6 +10,10 @@ shard once and can answer any query; the router
     is split into contiguous shards, each shard goes to a least-loaded
     replica's batch-native fn concurrently, and results are gathered back
     in submit order (failed shards fall back to per-item routing),
+  * broadcasts one payload to EVERY replica and merges (`call_sharded`):
+    the partitioned-index path, where each replica owns a row shard and a
+    complex-query plan must be answered by all of them, with the grouped
+    results merged once (`repro.core.plan.merge_grouped`),
   * retires replicas on failure and restores them on recovery (health
     callbacks), rejecting only when NO replica is healthy,
   * hedges stragglers through serving.batcher.HedgedExecutor,
@@ -201,6 +205,42 @@ class QueryRouter:
                 out = [self(p) for p in items]   # per-item re-route
             results[off: off + len(items)] = out
         return results
+
+    def call_sharded(self, payload: Any, merge: Callable[[list], Any],
+                     *, replicas: Optional[Sequence[str]] = None) -> Any:
+        """Broadcast ONE payload to every healthy replica and merge.
+
+        The partitioned-index path: when each replica holds a SHARD of the
+        index (rows partitioned, e.g. one ``add_replica_from_store`` per
+        shard store), a query — in particular a complex-query plan — must
+        run on every shard and the per-shard results must be combined
+        (``plan.merge_grouped`` for grouped plan results: send
+        ``plan.shard_plan(p)`` as the payload so grouped reductions run
+        once, over the merged set).  ``replicas`` restricts the broadcast
+        to a named subset (one replica per shard when extra pure replicas
+        are registered).
+
+        Unlike ``call_batch``, a faulting OR already-demoted replica here
+        means a MISSING SHARD — the merged answer would be silently
+        incomplete — so the broadcast refuses to run without every shard
+        and a mid-call fault is demoted and re-raised, never degraded.
+        """
+        with self._lock:
+            targets = [r for r in self._replicas.values()
+                       if replicas is None or r.name in replicas]
+            if not targets:
+                raise ReplicaUnavailable("no shard replicas registered")
+            dead = [r.name for r in targets if not r.healthy]
+            if dead:
+                raise ReplicaUnavailable(
+                    f"shard replicas unhealthy (merge would be "
+                    f"incomplete): {dead}")
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(max_workers=32)
+        futs = [self._pool.submit(self._run_shard, r, [payload])
+                for r in targets]
+        outs = [f.result()[0] for f in futs]   # _run_shard demotes on fault
+        return merge(outs)
 
     def _run_shard(self, r: Replica, items: list) -> list:
         t0 = time.perf_counter()

@@ -72,6 +72,36 @@ def test_auto_compact_on_segment_overflow():
     assert len(seg.segments) <= 2
 
 
+def test_row_mask_with_pending_deltas_refused():
+    """row_mask is positional over BASE rows; silently skipping it for
+    delta rows would leak filtered-out results (DESIGN.md §10.2)."""
+    import pytest
+    idx, cents = _base()
+    seg = SegmentedIndex(idx)
+    mask = np.ones(idx.n, bool)
+    seg.search(cents[0], CFG, row_mask=mask)       # no deltas: fine
+    seg.insert(pqmod.normalize(cents[3:4]), np.array([999_999]))
+    with pytest.raises(ValueError, match="delta"):
+        seg.search(cents[0], CFG, row_mask=mask)
+    seg.compact()
+    # folded: fine again (mask re-sized to the grown base)
+    res = seg.search(cents[0], CFG, row_mask=np.ones(seg.base.n, bool))
+    assert len(res["ids"]) == CFG.top_k
+
+
+def test_tombstone_mask_returns_full_top_k():
+    """Pushdown keeps the result at exactly top_k valid ids even when many
+    of the approx top-k are tombstoned (the old post-filter shrank)."""
+    idx, cents = _base()
+    seg = SegmentedIndex(idx)
+    res0 = seg.search(cents[2], CFG)
+    victims = res0["ids"][:20].tolist()
+    seg.delete(victims)
+    res1 = seg.search(cents[2], CFG)
+    assert len(res1["ids"]) == CFG.top_k
+    assert not set(res1["ids"].tolist()) & set(victims)
+
+
 def test_drift_score_flags_distribution_shift():
     idx, cents = _base()
     seg = SegmentedIndex(idx)

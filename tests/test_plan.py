@@ -1,0 +1,375 @@
+"""Complex-query planner: masked-scan parity vs numpy oracles, boolean
+algebra on posting lists, grouped top-k stability across shard counts, and
+the engine-level compound-query path (DESIGN.md §10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anns, imi, pq as pqmod
+from repro.core import plan as P
+
+
+# ---------------------------------------------------------------------------
+# masked PQ scan: kernel parity vs the numpy/jnp oracle
+# ---------------------------------------------------------------------------
+def test_masked_scan_matches_oracle_incl_all_filtered_rows():
+    from repro.kernels import ops, ref
+    luts = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 32))
+    codes = jax.random.randint(jax.random.PRNGKey(1), (700, 8),
+                               0, 32).astype(jnp.uint8)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(2), 0.3, (3, 700))
+    mask = mask.at[1].set(False)          # one query filters EVERY row
+    got = ops.pq_scan_batched_masked(luts, codes, mask, block_n=256)
+    want = ref.pq_scan_masked_ref(luts, codes, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isneginf(np.asarray(got)[1]).all()     # sentinel, never NaN
+
+    codes_p = jax.random.randint(jax.random.PRNGKey(3), (3, 700, 8),
+                                 0, 32).astype(jnp.uint8)
+    got_p = ops.pq_scan_paired_masked(luts, codes_p, mask, block_n=256)
+    want_p = jnp.where(mask != 0,
+                       jax.vmap(pqmod.adc_scores)(luts, codes_p), -jnp.inf)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# masked Algorithm 1: filtered search vs brute-force-over-valid-rows oracle
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def index():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3000, 64))
+    ids = jnp.arange(3000, dtype=jnp.int32)
+    return imi.build_imi(jax.random.PRNGKey(1), x, ids,
+                         K=8, P=8, M=32, kmeans_iters=5)
+
+
+QS = jax.random.normal(jax.random.PRNGKey(7), (4, 64))
+# full coverage + covering overfetch: the masked pipeline must equal exact
+# brute force over the valid rows at EVERY selectivity
+FULL_CFG = anns.SearchConfig(top_a=64, max_cell_size=1024, top_k=32,
+                             rerank_overfetch=16)
+
+
+def _oracle_ids(index, valid_rows, k):
+    qn = np.asarray(pqmod.normalize(QS.astype(jnp.float32)))
+    vecs = np.asarray(index.vectors, np.float32)
+    out = []
+    for i in range(qn.shape[0]):
+        s = vecs @ qn[i]
+        s[~valid_rows] = -np.inf
+        out.append(np.asarray(index.ids)[np.argsort(-s)[:k]])
+    return np.stack(out)
+
+
+@pytest.mark.parametrize("selectivity", [0.01, 0.1, 0.5])
+@pytest.mark.parametrize("use_kernel", ["jnp", "pallas"])
+def test_masked_search_matches_numpy_oracle(index, selectivity, use_kernel):
+    valid = np.asarray(index.ids) < int(3000 * selectivity)
+    k = min(32, valid.sum())
+    cfg = anns.SearchConfig(top_a=64, max_cell_size=1024, top_k=32,
+                            rerank_overfetch=16, use_kernel=use_kernel)
+    res = anns.search_batch(index, QS, cfg, jnp.asarray(valid))
+    got = np.asarray(res["ids"])
+    want = _oracle_ids(index, valid, k)
+    np.testing.assert_array_equal(got[:, :k], want)
+    # beyond the valid population: exactly-k padding, not garbage ids
+    assert (got[:, k:] == -1).all()
+    assert np.isneginf(np.asarray(res["scores"])[:, k:]).all()
+
+
+def test_all_rows_filtered_returns_exactly_k_padding(index):
+    res = anns.search_batch(index, QS, FULL_CFG,
+                            jnp.zeros((index.n,), jnp.uint8))
+    assert res["ids"].shape == (4, 32)
+    assert (np.asarray(res["ids"]) == -1).all()
+    assert (np.asarray(res["rows"]) == -1).all()
+    assert np.isneginf(np.asarray(res["scores"])).all()
+
+
+def test_windowed_path_mask_parity_single_vs_batch(index):
+    cfg = anns.SearchConfig(top_a=4, max_cell_size=128, top_k=32)
+    mask = jnp.asarray(np.asarray(index.ids) % 3 == 0)
+    b = anns.search_batch(index, QS, cfg, mask)
+    for i in range(QS.shape[0]):
+        s = anns.search(index, QS[i], cfg, mask)
+        np.testing.assert_array_equal(np.asarray(s["ids"]),
+                                      np.asarray(b["ids"][i]))
+    got = np.asarray(b["ids"])
+    assert ((got % 3 == 0) | (got == -1)).all()
+
+
+# ---------------------------------------------------------------------------
+# plan algebra on synthetic posting lists (no encoders needed)
+# ---------------------------------------------------------------------------
+F, KP = 30, 4   # 3 videos x 10 key frames, 4 patches per frame
+
+
+@pytest.fixture()
+def meta():
+    return P.PlanMeta(
+        row_video=np.repeat(np.arange(3), 10 * KP).astype(np.int32),
+        row_time=np.tile(np.repeat(np.arange(10), KP), 3).astype(np.int32),
+        frame_video=np.repeat(np.arange(3), 10).astype(np.int32),
+        frame_time=np.tile(np.arange(10), 3).astype(np.int32),
+        patches_per_frame=KP)
+
+
+def fake_search(texts, masks, k=20):
+    """Deterministic per-text posting lists over patch ids 0..F*KP-1; row i
+    of the index is patch id i, so masks apply directly."""
+    ids = np.zeros((len(texts), k), np.int32)
+    scores = np.zeros((len(texts), k), np.float32)
+    for i, t in enumerate(texts):
+        r = np.random.default_rng(sum(t.encode()) % 2**32)
+        pid = r.choice(F * KP, size=k, replace=False).astype(np.int32)
+        sc = (1.0 + r.random(k)).astype(np.float32)
+        if masks is not None:
+            ok = masks[i][pid]
+            pid = np.where(ok, pid, -1)
+            sc = np.where(ok, sc, -np.inf)
+        o = np.argsort(-sc)
+        ids[i], scores[i] = pid[o], sc[o]
+    return ids, scores
+
+
+def test_de_morgan_on_ids(meta):
+    a, b = P.Text("red truck"), P.Text("pedestrian")
+    lhs = P.execute(P.Not(P.Or(a, b)), meta, fake_search)
+    rhs = P.execute(P.And(P.Not(a), P.Not(b)), meta, fake_search)
+    np.testing.assert_array_equal(np.sort(lhs.frames), np.sort(rhs.frames))
+    # and the second law
+    lhs2 = P.execute(P.Not(P.And(a, b)), meta, fake_search)
+    rhs2 = P.execute(P.Or(P.Not(a), P.Not(b)), meta, fake_search)
+    np.testing.assert_array_equal(np.sort(lhs2.frames),
+                                  np.sort(rhs2.frames))
+
+
+def test_and_or_fusion_semantics(meta):
+    a, b = P.Text("red truck"), P.Text("pedestrian")
+    ra = P.execute(a, meta, fake_search)
+    rb = P.execute(b, meta, fake_search)
+    rand = P.execute(P.And(a, b), meta, fake_search)
+    ror = P.execute(P.Or(a, b), meta, fake_search)
+    np.testing.assert_array_equal(np.sort(rand.frames),
+                                  np.intersect1d(ra.frames, rb.frames))
+    np.testing.assert_array_equal(np.sort(ror.frames),
+                                  np.union1d(ra.frames, rb.frames))
+    sa = dict(zip(ra.frames.tolist(), ra.scores.tolist()))
+    sb = dict(zip(rb.frames.tolist(), rb.scores.tolist()))
+    for f, s in zip(rand.frames, rand.scores):   # And = min (weakest link)
+        assert s == pytest.approx(min(sa[f], sb[f]))
+    for f, s in zip(ror.frames, ror.scores):     # Or = max
+        assert s == pytest.approx(max(sa.get(f, -np.inf),
+                                      sb.get(f, -np.inf)))
+
+
+def test_predicates_restrict_and_push_masks(meta):
+    a = P.Text("red truck")
+    res = P.execute(P.And(a, P.TimeRange(3, 7), P.VideoIn([0, 2])),
+                    meta, fake_search)
+    assert ((res.times >= 3) & (res.times < 7)).all()
+    assert np.isin(res.videos, [0, 2]).all()
+    # the compiled masks really are the conjunction of both predicates
+    leaves = P.collect_leaves(P.And(a, P.TimeRange(3, 7), P.VideoIn([0, 2])))
+    masks = P.compile_masks(leaves, meta)
+    want = ((meta.row_time >= 3) & (meta.row_time < 7)
+            & np.isin(meta.row_video, [0, 2]))
+    np.testing.assert_array_equal(masks[0], want)
+
+
+def test_empty_video_set_yields_empty_not_garbage(meta):
+    res = P.execute(P.And(P.Text("red truck"), P.VideoIn([])),
+                    meta, fake_search)
+    assert len(res.frames) == 0
+
+
+def test_group_topk_and_moments(meta):
+    q = P.Or(P.Text("red truck"), P.Text("pedestrian"))
+    g = P.execute(P.GroupTopK(q, per="video", k=2), meta, fake_search)
+    for v in np.unique(g.videos):
+        assert (g.videos == v).sum() <= 2
+    m = P.execute(P.GroupTopK(q, per="video", mode="moment"),
+                  meta, fake_search)
+    mm = m.moments
+    assert mm is not None and len(mm["video"]) == len(np.unique(mm["video"]))
+    assert (mm["end"] >= mm["start"]).all()
+    assert (mm["n_frames"] >= 1).all()
+    # a moment's score is the summed frame scores of a contiguous run, so
+    # it is >= the best single frame of its video in the child set
+    child = P.execute(q, meta, fake_search)
+    for i, v in enumerate(mm["video"]):
+        best = child.scores[child.videos == v].max()
+        assert mm["score"][i] >= best - 1e-6
+
+
+def test_json_round_trip():
+    node = P.GroupTopK(
+        P.And(P.Text("x", weight=2.0), P.TimeRange(0, 5, video=1),
+              P.Not(P.Or(P.Text("y"), P.VideoIn([1, 2])))),
+        per="video", k=3, mode="moment", max_gap=2)
+    assert P.from_json(P.to_json(node)) == node
+    assert P.from_json('{"text": "a red square"}') == P.Text("a red square")
+
+
+# ---------------------------------------------------------------------------
+# grouped top-k stability across shard counts
+# ---------------------------------------------------------------------------
+def _frame_aligned_bounds(n_shards: int) -> np.ndarray:
+    """Shard boundaries on whole-frame multiples: the decomposition
+    contract (DESIGN.md §10.3) — every patch of a frame on ONE shard."""
+    bounds = np.linspace(0, F, n_shards + 1).astype(int) * KP
+    assert (bounds % KP == 0).all()
+    return bounds
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 5])
+@pytest.mark.parametrize("mode", ["frames", "moment"])
+@pytest.mark.parametrize("root", ["or", "and"])
+def test_grouped_results_stable_across_shard_counts(meta, n_shards, mode,
+                                                    root):
+    child = P.Or(P.Text("red truck"), P.Text("pedestrian")) \
+        if root == "or" else \
+        P.And(P.Text("red truck"), P.Text("pedestrian"))
+    node = P.GroupTopK(child, per="video", k=2, mode=mode)
+    full = P.execute(node, meta, fake_search)
+    bounds = _frame_aligned_bounds(n_shards)
+    shard_results = []
+    for s in range(n_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+
+        def shard_search(texts, masks, lo=lo, hi=hi):
+            ids, sc = fake_search(texts, masks)
+            ok = (ids >= lo) & (ids < hi)
+            return np.where(ok, ids, -1), np.where(ok, sc, -np.inf)
+
+        shard_results.append(P.execute(P.shard_plan(node), meta,
+                                       shard_search))
+    merged = P.merge_grouped(shard_results, node, meta)
+    np.testing.assert_array_equal(merged.frames, full.frames)
+    np.testing.assert_allclose(merged.scores, full.scores)
+    if mode == "moment":
+        for key in ("video", "start", "end", "n_frames"):
+            np.testing.assert_array_equal(merged.moments[key],
+                                          full.moments[key])
+        np.testing.assert_allclose(merged.moments["score"],
+                                   full.moments["score"], rtol=1e-6)
+
+
+def test_shard_plan_refuses_not():
+    """Per-shard complement is against the GLOBAL universe — Not-bearing
+    plans must run unsharded (DESIGN.md §10.3)."""
+    with pytest.raises(ValueError, match="unsharded"):
+        P.shard_plan(P.GroupTopK(P.And(P.Text("a"), P.Not(P.Text("b"))),
+                                 per="video"))
+
+
+def test_call_sharded_raises_on_demoted_shard(meta):
+    from repro.serving.router import QueryRouter, ReplicaUnavailable
+    router = QueryRouter()
+    router.add_replica("s0", lambda p: P.execute(p, meta, fake_search))
+    router.add_replica("s1", lambda p: (_ for _ in ()).throw(
+        RuntimeError("shard down")))
+    node = P.Or(P.Text("red truck"), P.Text("pedestrian"))
+    # the mid-call fault is re-raised, never merged around
+    with pytest.raises(RuntimeError, match="shard down"):
+        router.call_sharded(node, lambda outs: outs)
+    for _ in range(3):   # demote s1 fully
+        try:
+            router.call_sharded(node, lambda outs: outs)
+        except RuntimeError:
+            pass
+    # an already-demoted shard refuses the broadcast up front
+    with pytest.raises(ReplicaUnavailable, match="s1"):
+        router.call_sharded(node, lambda outs: outs)
+    router.close()
+
+
+def test_router_call_sharded_merges_plan_results(meta):
+    from repro.serving.router import QueryRouter
+    node = P.GroupTopK(P.Or(P.Text("red truck"), P.Text("pedestrian")),
+                       per="video", k=2)
+    full = P.execute(node, meta, fake_search)
+    bounds = np.linspace(0, F * KP, 3).astype(int)
+    router = QueryRouter()
+    for s in range(2):
+        lo, hi = bounds[s], bounds[s + 1]
+
+        def shard_fn(payload, lo=lo, hi=hi):
+            def shard_search(texts, masks):
+                ids, sc = fake_search(texts, masks)
+                ok = (ids >= lo) & (ids < hi)
+                return np.where(ok, ids, -1), np.where(ok, sc, -np.inf)
+            return P.execute(payload, meta, shard_search)
+
+        router.add_replica(f"shard-{s}", shard_fn)
+    merged = router.call_sharded(
+        P.shard_plan(node), lambda outs: P.merge_grouped(outs, node, meta))
+    np.testing.assert_array_equal(merged.frames, full.frames)
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# engine integration: compound query end to end (index-only)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    from repro.launch.serve import build_engine
+    eng, _ = build_engine(seed=0, n_videos=2, res=96)
+    return eng
+
+
+def test_engine_query_plan_end_to_end(engine):
+    res = engine.query_plan(
+        P.And(P.Text("a large red square"), P.TimeRange(0, 16)), top_n=5)
+    assert len(res.frames) <= 5
+    assert (res.times < 16).all()
+    # JSON syntax answers identically
+    res_j = engine.query_plan(
+        '{"and": [{"text": "a large red square"}, '
+        '{"time_range": [0, 16]}]}', top_n=5)
+    np.testing.assert_array_equal(res.frames, res_j.frames)
+    np.testing.assert_allclose(res.scores, res_j.scores)
+
+
+def test_engine_plan_filter_beats_posthoc_on_recall(engine):
+    """The over-fetch bug class the pushdown exists for: restrict to one
+    video; the masked search must still fill its quota from that video,
+    while post-hoc filtering of the unmasked top-k may keep fewer."""
+    text = "a small blue circle"
+    masked = engine.query_plan(P.And(P.Text(text), P.VideoIn([1])))
+    ids, _, _ = engine.fast_search(text)
+    kp = engine.built.patches_per_frame
+    posthoc = np.unique(ids[ids >= 0] // kp)
+    posthoc = posthoc[engine.built.keyframe_video[posthoc] == 1]
+    assert (masked.videos == 1).all()
+    assert len(masked.frames) >= len(posthoc)
+
+
+def test_engine_moment_query(engine):
+    res = engine.query_plan(P.GroupTopK(
+        P.Or(P.Text("a large red square"), P.Text("a small blue circle")),
+        per="video", mode="moment"))
+    assert res.moments is not None
+    assert (res.moments["end"] >= res.moments["start"]).all()
+
+
+def test_plan_metadata_survives_store_round_trip(engine, tmp_path):
+    """Filters must work on REOPENED indexes: the sidecar carries the
+    video/frame metadata the planner compiles masks from."""
+    from repro.core.index_builder import load_built, save_built
+    save_built(tmp_path / "store", engine.built)
+    reopened = load_built(tmp_path / "store")
+    m0 = P.plan_meta_from_built(engine.built)
+    m1 = P.plan_meta_from_built(reopened)
+    np.testing.assert_array_equal(m0.row_video, m1.row_video)
+    np.testing.assert_array_equal(m0.row_time, m1.row_time)
+    np.testing.assert_array_equal(m0.frame_video, m1.frame_video)
+    np.testing.assert_array_equal(m0.frame_time, m1.frame_time)
+    assert m0.patches_per_frame == m1.patches_per_frame
+    # and a predicate mask compiled on the reopened view is identical
+    leaves = [(P.Text("x"), (P.TimeRange(0, 16), P.VideoIn([0])))]
+    np.testing.assert_array_equal(P.compile_masks(leaves, m0),
+                                  P.compile_masks(leaves, m1))

@@ -1,15 +1,22 @@
 #!/usr/bin/env python3
 """Doc link checker (CI docs job): every internal reference must resolve.
 
-Checks, for the given markdown files (default README.md DESIGN.md):
+Checks, for the given markdown files (default README.md DESIGN.md
+docs/API.md):
   * markdown links `[text](target)` whose target is a relative path —
     the file must exist (external http(s) links and bare #anchors are
     skipped; a `path#anchor` checks only the path);
   * backticked repo paths like `src/repro/core/anns.py` or
     `benchmarks/run.py` — the file or directory must exist (glob-ish
-    references containing `*` are skipped).
+    references containing `*` are skipped);
+  * import lines inside ```python fenced blocks are EXECUTED (with
+    ``src/`` on the path), so a code example naming a renamed or deleted
+    symbol — `from repro.core.plan import Txet` — fails the docs job
+    instead of rotting silently.  Only `import x` / `from x import y`
+    lines run (optionally `>>> `-prefixed); example bodies are not.
 
-Exit code 1 with one line per broken reference.  Stdlib only.
+Exit code 1 with one line per broken reference.  Stdlib only (the import
+execution obviously needs the package's own deps available, as in CI).
 """
 from __future__ import annotations
 
@@ -20,6 +27,8 @@ import sys
 MD_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
 TICK_PATH = re.compile(
     r"`((?:src|tests|benchmarks|examples|tools)/[A-Za-z0-9_./*-]+)`")
+PY_FENCE = re.compile(r"```python\s*\n(.*?)```", re.S)
+IMPORT_LINE = re.compile(r"^(?:>>>\s*)?((?:from\s+\S+\s+)?import\s+.+)$")
 
 
 def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
@@ -40,13 +49,33 @@ def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
             continue
         if not (root / ref).exists():
             errors.append(f"{md.name}: missing path -> {ref}")
+    errors.extend(check_imports(md, text))
+    return errors
+
+
+def check_imports(md: pathlib.Path, text: str) -> list[str]:
+    """Execute every import line found in ```python fences; a line that
+    raises (renamed module, deleted symbol) is a broken reference."""
+    errors = []
+    for fence in PY_FENCE.finditer(text):
+        for line in fence.group(1).splitlines():
+            m = IMPORT_LINE.match(line.strip())
+            if not m:
+                continue
+            stmt = m.group(1)
+            try:
+                exec(compile(stmt, f"<{md.name}>", "exec"), {})
+            except BaseException as e:
+                errors.append(
+                    f"{md.name}: broken import -> {stmt!r} ({e!r})")
     return errors
 
 
 def main(argv: list[str]) -> int:
     root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "src"))   # imports resolve like CI does
     files = [root / a for a in argv] if argv else \
-        [root / "README.md", root / "DESIGN.md"]
+        [root / "README.md", root / "DESIGN.md", root / "docs" / "API.md"]
     errors = []
     for f in files:
         if not f.exists():
