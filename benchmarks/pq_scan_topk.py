@@ -1,0 +1,140 @@
+"""Fused scan->select vs scan-then-``lax.top_k`` (DESIGN.md §11).
+
+  PYTHONPATH=src python -m benchmarks.pq_scan_topk [--smoke]
+
+The fused-selection claim: LOVO's fast search is bound by how many bytes
+the ADC scan moves, and the scan-then-select pipeline moves ~twice what the
+index demands — it writes the full ``(Q, N)`` f32 score matrix only for
+``lax.top_k`` to immediately re-read it (plus a third pass for the IMI
+base/window terms).  The fused kernels keep a per-query running top-k
+inside the scan and emit only ``(Q, k)``: output traffic shrinks ``N/k``-
+fold and the score matrix never exists outside the scan's working set.
+
+Both pipelines are timed at the production ``use_kernel='auto'``
+resolution for this host (Pallas kernels where they compile — TPU /
+``REPRO_PALLAS_COMPILE=1`` — blocked-jnp elsewhere), at the LOVO
+production scan shape P=64, M=256:
+
+  * ``scan_topk_ms`` — materialize ``(Q, N)`` scores, then ``lax.top_k``
+  * ``fused_ms``     — fused scan->select, ``(Q, N)`` never materialized
+  * ``ids_match_oracle`` — fused ids vs ``ref.pq_scan_topk_ref`` (exact)
+
+Off-TPU an informational interpret-parity pair also runs at the smallest N
+(the exact Pallas kernels a TPU would compile, under the interpreter) —
+interpreter dispatch dominates there, so it is reported, not gated.
+
+``--smoke`` gates: fused ids == oracle at every N, and fused >= 1.5x
+faster than scan-then-top_k at N = 262144.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+GATE_N = 262_144
+GATE_SPEEDUP = 1.5
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def bench_n(n: int, *, q: int = 8, p: int = 64, m: int = 256, k: int = 128,
+            reps: int = 3, parity_pair: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    from repro.kernels import pq_scan as pqs
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n))
+    # integer-valued LUTs: every ADC sum is exact in f32 regardless of the
+    # backend's reduction order, so id parity is bit-for-bit across the
+    # one-hot-matmul, gather-sum, and fused formulations — and exact score
+    # ties are abundant, so the lower-index-first tie rule is exercised
+    luts = jax.random.randint(k1, (q, p, m), -64, 64).astype(jnp.float32)
+    codes = jax.random.randint(k2, (n, p), 0, m, jnp.int32)
+    resolved = ops.resolve_use_kernel("auto")
+
+    if resolved == "pallas":
+        scan_topk = jax.jit(lambda l, c: jax.lax.top_k(
+            ops.pq_scan_batched(l, c), k))
+        fused = jax.jit(lambda l, c: ops.pq_scan_topk_batched(l, c, k))
+    else:
+        oracle_scan = jax.jit(ref.pq_scan_ref)
+        scan_topk = jax.jit(lambda l, c: jax.lax.top_k(oracle_scan(l, c), k))
+        fused = jax.jit(lambda l, c: pqs.pq_scan_topk_jnp(l, c, k))
+
+    scan_ms = _time(
+        lambda: jax.block_until_ready(scan_topk(luts, codes)), reps)
+    fused_ms = _time(
+        lambda: jax.block_until_ready(fused(luts, codes)), reps)
+
+    want_s, want_i = ref.pq_scan_topk_ref(luts, codes, k)
+    got_s, got_i = fused(luts, codes)
+    ids_match = float(np.mean(np.asarray(got_i) == np.asarray(want_i)))
+    row = {"n": n, "q": q, "k": k, "mode": resolved,
+           "scan_topk_ms": scan_ms, "fused_ms": fused_ms,
+           "speedup": scan_ms / fused_ms, "ids_match_oracle": ids_match}
+
+    if parity_pair and resolved != "pallas":
+        # the kernels a TPU would compile, under the interpreter: the win
+        # here is correctness parity — dispatch overhead hides the traffic
+        pal_scan = jax.jit(lambda l, c: jax.lax.top_k(
+            pqs.pq_scan_batched(l, c, interpret=True), k))
+        pal_fused = jax.jit(lambda l, c: pqs.pq_scan_topk_batched(
+            l, c, k, interpret=True))
+        row["pallas_scan_topk_ms"] = _time(
+            lambda: jax.block_until_ready(pal_scan(luts, codes)), 1)
+        row["pallas_fused_ms"] = _time(
+            lambda: jax.block_until_ready(pal_fused(luts, codes)), 1)
+        _, pi = pal_fused(luts, codes)
+        row["pallas_ids_match_oracle"] = float(
+            np.mean(np.asarray(pi) == np.asarray(want_i)))
+    return row
+
+
+def main(*, smoke: bool = False) -> dict:
+    reps = 3 if smoke else 5
+    sizes = (16_384, GATE_N)
+    rows = [bench_n(n, reps=reps, parity_pair=(n == sizes[0]))
+            for n in sizes]
+    print("n,mode,scan_topk_ms,fused_ms,speedup,ids_match_oracle")
+    for r in rows:
+        print(f"{r['n']},{r['mode']},{r['scan_topk_ms']:.1f},"
+              f"{r['fused_ms']:.1f},{r['speedup']:.2f}x,"
+              f"{r['ids_match_oracle']:.3f}")
+        if "pallas_fused_ms" in r:
+            print(f"#  interpret-parity @n={r['n']}: "
+                  f"scan_topk={r['pallas_scan_topk_ms']:.1f}ms "
+                  f"fused={r['pallas_fused_ms']:.1f}ms "
+                  f"ids_match={r['pallas_ids_match_oracle']:.3f}")
+    by_n = {r["n"]: r for r in rows}
+    for r in rows:
+        if r["ids_match_oracle"] < 1.0:
+            raise SystemExit(f"fused ids diverged from the oracle at "
+                             f"n={r['n']}: {r['ids_match_oracle']:.3f}")
+        if r.get("pallas_ids_match_oracle", 1.0) < 1.0:
+            raise SystemExit(
+                f"interpret-parity fused ids diverged at n={r['n']}: "
+                f"{r['pallas_ids_match_oracle']:.3f}")
+    gate = by_n[GATE_N]
+    if smoke and gate["speedup"] < GATE_SPEEDUP:
+        raise SystemExit(
+            f"fused scan->select under {GATE_SPEEDUP}x vs scan-then-top_k "
+            f"at n={GATE_N}: {gate['speedup']:.2f}x")
+    return {"rows": rows, "by_n": by_n}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fused ids exact at every N and >= "
+                         f"{GATE_SPEEDUP}x at N={GATE_N}")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

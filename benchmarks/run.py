@@ -1,13 +1,19 @@
 """Benchmark entrypoint: one harness per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only a,b] \
+      [--json BENCH_PR5.json]
 
 Prints ``name,us_per_call,derived`` CSV rows, one per table/figure, plus the
-roofline summary (from the dry-run artifacts).
+roofline summary (from the dry-run artifacts).  ``--json PATH`` additionally
+writes the rows as a machine-readable perf-trajectory artifact (schema
+``bench-rows/v1``: the CSV rows plus backend/config metadata) — CI uploads
+one per run so regressions are diffable across the PR trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -23,7 +29,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="skip the trained-engine accuracy benches")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a bench-rows/v1 JSON artifact")
     args = ap.parse_args()
 
     benches = []
@@ -87,6 +96,19 @@ def main() -> None:
         us = (time.perf_counter() - t0) / 3 * 1e6
         return us, "interpret-mode 8q x 65536rows x P64 M256"
 
+    @bench("kernel_pq_scan_topk")
+    def kpqt():
+        from benchmarks import pq_scan_topk
+        t0 = time.perf_counter()
+        out = pq_scan_topk.main(smoke=args.quick)
+        us = (time.perf_counter() - t0) * 1e6
+        big = out["by_n"][pq_scan_topk.GATE_N]
+        return us, (f"fused_{big['mode']}={big['fused_ms']:.0f}ms "
+                    f"scan_topk={big['scan_topk_ms']:.0f}ms "
+                    f"speedup={big['speedup']:.2f}x "
+                    f"ids_match={big['ids_match_oracle']:.3f} "
+                    f"@n={big['n']}")
+
     @bench("query_pipeline")
     def qpipe():
         from benchmarks import query_pipeline
@@ -142,18 +164,45 @@ def main() -> None:
                     f"bottlenecks={s['by_bottleneck']}")
 
     skip_slow = {"fig6_accuracy", "tab4_ablation"} if args.quick else set()
+    only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     failures = 0
+    rows = []
     for name, fn in benches:
-        if name in skip_slow or (args.only and args.only != name):
+        if name in skip_slow or (only is not None and name not in only):
             continue
         try:
             us, derived = fn()
             _row(name, us, derived)
-        except Exception as e:
+            rows.append({"name": name, "us_per_call": us,
+                         "derived": derived, "ok": True})
+        except (Exception, SystemExit) as e:
+            # SystemExit included: gated benches (pq_scan_topk, query_plan)
+            # signal a failed gate that way — it must become a FAILED row
+            # (and a nonzero exit below), not abort the harness before the
+            # remaining rows and the --json artifact are written
             failures += 1
             traceback.print_exc()
             _row(name, float("nan"), f"FAILED: {e}")
+            rows.append({"name": name, "us_per_call": None,
+                         "derived": f"FAILED: {e}", "ok": False})
+    if args.json:
+        import jax
+        artifact = {
+            "schema": "bench-rows/v1",
+            "meta": {
+                "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+                "backend": jax.default_backend(),
+                "platform": platform.platform(),
+                "quick": args.quick,
+                "only": sorted(only) if only else None,
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"# wrote {args.json} ({len(rows)} rows)")
     sys.exit(1 if failures else 0)
 
 

@@ -17,16 +17,23 @@ Pipeline per query:
      row-wise dense layout each candidate is one row so the vote is exact —
      the subspace-mixed variant is exposed as ``patch_vote`` for parity)
 
-The ADC scan (step 4) is the latency hot spot; ``use_kernel='pallas'``
-switches to the Pallas MXU kernel (compiled on TPU, interpret elsewhere —
-see ``repro.kernels.ops.INTERPRET``).
+The ADC scan (steps 4–5) is the latency hot spot.  By default it runs
+FUSED (``SearchConfig.fused_topk``): the scan keeps a per-query running
+top-``fetch_k`` inside the kernel and only the ``(Q, fetch_k)`` survivors
+ever leave it — the ``(Q, N)`` score matrix is never materialized, and the
+IMI base term, window validity, and the planner's row-mask sentinel ride
+the same single pass (DESIGN.md §11).  ``use_kernel`` picks the backend:
+``'auto'`` (default) resolves to the Pallas MXU kernels wherever they
+compile (TPU, or the ``REPRO_PALLAS_COMPILE=1`` interpret-parity leg) and
+to the blocked-jnp formulations elsewhere — fresh engines get the kernel
+path with no config plumbing; ``'jnp'``/``'pallas'`` force a backend.
 
 ``search_batch`` is the batched formulation of the same algorithm: the
-probe, window gather, ADC scan (one ``pq_scan_paired`` launch sharing
-LUT/code VMEM residency), and refine all carry a static leading Q dimension
-instead of issuing Q separate searches.  Per-row results match ``search``
-(same ids, scores equal up to f32 reduction-order noise); DESIGN.md §8
-records the static-shape/padding contract.
+probe, window gather, fused ADC scan->select (one launch sharing LUT/code
+VMEM residency), and refine all carry a static leading Q dimension instead
+of issuing Q separate searches.  Per-row results match ``search`` (same
+ids, scores equal up to f32 reduction-order noise); DESIGN.md §8 records
+the static-shape/padding contract.
 """
 from __future__ import annotations
 
@@ -49,11 +56,20 @@ class SearchConfig:
     top_k: int = 100           # candidates returned by fast search
     exact_rerank: bool = True
     rerank_overfetch: int = 4  # exact-rescore top_k * this approx candidates
-    use_kernel: str = "jnp"    # 'jnp' | 'pallas'
+    use_kernel: str = "auto"   # 'auto' | 'jnp' | 'pallas'
+    fused_topk: bool = True    # in-kernel scan->select (False: legacy
+    #                            materialize-(Q,N)-then-lax.top_k path)
+
+
+def _resolve_kernel(use_kernel: str) -> str:
+    """'auto' -> 'pallas' where the kernels compile (TPU / parity leg),
+    'jnp' elsewhere; resolved at trace time (see kernels.ops)."""
+    from repro.kernels import ops as kops
+    return kops.resolve_use_kernel(use_kernel)
 
 
 def _adc(lut: jax.Array, codes: jax.Array, use_kernel: str) -> jax.Array:
-    if use_kernel == "pallas":
+    if _resolve_kernel(use_kernel) == "pallas":
         from repro.kernels import ops as kops
         return kops.pq_scan(lut, codes)
     return pqmod.adc_scores(lut, codes)
@@ -65,7 +81,7 @@ def _adc_paired(luts: jax.Array, codes: jax.Array, use_kernel: str,
 
     ``mask`` (Q, N) nonzero=valid: filtered rows come back exactly -inf —
     the sentinel is fused into the Pallas scan (filter pushdown)."""
-    if use_kernel == "pallas":
+    if _resolve_kernel(use_kernel) == "pallas":
         from repro.kernels import ops as kops
         if mask is not None:
             return kops.pq_scan_paired_masked(luts, codes, mask)
@@ -79,13 +95,59 @@ def _adc_shared(luts: jax.Array, codes: jax.Array, use_kernel: str,
     """luts (Q, P, M), codes (N, P) -> (Q, N): every query scans all rows.
 
     ``mask`` (Q, N) nonzero=valid, same sentinel contract as above."""
-    if use_kernel == "pallas":
+    if _resolve_kernel(use_kernel) == "pallas":
         from repro.kernels import ops as kops
         if mask is not None:
             return kops.pq_scan_batched_masked(luts, codes, mask)
         return kops.pq_scan_batched(luts, codes)
     out = jax.vmap(lambda l: pqmod.adc_scores(l, codes))(luts)
     return out if mask is None else jnp.where(mask != 0, out, -jnp.inf)
+
+
+def _gather_windows(starts: jax.Array, counts: jax.Array, W: int, n: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Materialize the probe windows: (Q, A) descriptors -> (valid
+    (Q, A, W) slot-within-count, rows (Q, A*W) clipped global rows).
+
+    Shared by the fused-paired and legacy branches of ``search_batch`` so
+    the clipping/validity rule cannot drift between the fused path and its
+    ``fused_topk=False`` parity reference."""
+    Q = starts.shape[0]
+    window = starts[..., None] + jnp.arange(W)[None, None, :]    # (Q, A, W)
+    valid = jnp.arange(W)[None, None, :] < counts[..., None]
+    rows = jnp.clip(window, 0, n - 1).reshape(Q, -1)             # (Q, A*W)
+    return valid, rows
+
+
+def _topk_windowed(luts: jax.Array, codes: jax.Array, starts: jax.Array,
+                   counts: jax.Array, bases: jax.Array, fetch_k: int,
+                   use_kernel: str, mask: Optional[jax.Array]
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Fused scan->select over shared codes with IMI window descriptors:
+    -> (approx scores (Q, fetch_k), global rows (Q, fetch_k), dead = -1)."""
+    if _resolve_kernel(use_kernel) == "pallas":
+        from repro.kernels import ops as kops
+        if mask is not None:
+            return kops.pq_scan_topk_windowed_masked(
+                luts, codes, starts, counts, bases, mask, fetch_k)
+        return kops.pq_scan_topk_windowed(
+            luts, codes, starts, counts, bases, fetch_k)
+    from repro.kernels import pq_scan as _pq
+    return _pq.pq_scan_topk_windowed_jnp(
+        luts, codes, starts, counts, bases, fetch_k, mask)
+
+
+def _topk_paired(luts: jax.Array, codes: jax.Array, bias: jax.Array,
+                 mask: jax.Array, fetch_k: int, use_kernel: str
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Fused scan->select over per-query candidate windows: -> (approx
+    scores, positions into the candidate axis (Q, fetch_k), dead = -1)."""
+    if _resolve_kernel(use_kernel) == "pallas":
+        from repro.kernels import ops as kops
+        return kops.pq_scan_topk_paired_masked(luts, codes, mask, fetch_k,
+                                               bias=bias)
+    from repro.kernels import pq_scan as _pq
+    return _pq.pq_scan_topk_paired_jnp(luts, codes, fetch_k, bias, mask)
 
 
 def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig,
@@ -148,45 +210,66 @@ def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig,
     counts = index.cell_offsets[cells + 1] - starts
     counts = jnp.minimum(counts, cfg.max_cell_size)
     W = cfg.max_cell_size
-    window = starts[..., None] + jnp.arange(W)[None, None, :]    # (Q, A, W)
-    valid = jnp.arange(W)[None, None, :] < counts[..., None]
-    rows = jnp.clip(window, 0, index.n - 1).reshape(Q, -1)       # (Q, A*W)
 
     luts = jax.vmap(lambda q: pqmod.similarity_lut(index.pq, q))(qs)
-    if cfg.top_a * cfg.max_cell_size >= index.n:
-        # windows cover the whole index: one shared-codes scan (Q, n) —
-        # the codes stay resident across the whole query batch — then
-        # gather scores by row (identical per-row values, less work)
-        all_scores = _adc_shared(luts, index.codes, cfg.use_kernel,
-                                 row_mask)
-        resid = jnp.take_along_axis(all_scores, rows, axis=1)    # (Q, A*W)
-    else:
-        cand_codes = index.codes[rows]                           # (Q, A*W, P)
-        # the bitmap travels with the gathered windows: a clipped/overrun
-        # row may gather a True slot, but window validity masks it below
-        wmask = None if row_mask is None \
-            else jnp.take_along_axis(row_mask, rows, axis=1)     # (Q, A*W)
-        resid = _adc_paired(luts, cand_codes, cfg.use_kernel,
-                            wmask)                               # (Q, A*W)
-    approx = resid.reshape(Q, cfg.top_a, W) + base[..., None]
-    approx = jnp.where(valid, approx, -jnp.inf).reshape(Q, -1)
-
+    shared = cfg.top_a * cfg.max_cell_size >= index.n
     # refine factor: ADC order is approximate, so the true top-k by exact
     # score may sit below rank k in approx order — fetch a multiple, exact-
     # rescore, THEN cut to top_k (IVF-PQ "refine" stage; Algorithm 1 line 14)
-    fetch_k = min(cfg.top_k * max(cfg.rerank_overfetch, 1), approx.shape[1]) \
+    fetch_k = min(cfg.top_k * max(cfg.rerank_overfetch, 1), cfg.top_a * W) \
         if cfg.exact_rerank else cfg.top_k
-    top_approx, flat_idx = jax.lax.top_k(approx, fetch_k)        # (Q, fetch_k)
-    top_rows = jnp.take_along_axis(rows, flat_idx, axis=1)
 
+    if cfg.fused_topk and shared:
+        # windows cover the whole index: ONE fused pass over all rows — the
+        # IMI base term, window validity, and the planner's bitmap ride the
+        # scan, and only the (Q, fetch_k) survivors ever leave the kernel.
+        # EXACT approx-score ties at the fetch_k boundary break by global
+        # row id here (the oracle's rule) where the legacy path breaks them
+        # by probe-window position — identical results whenever boundary
+        # scores are distinct, which real-valued data makes generic
+        top_approx, top_rows = _topk_windowed(
+            luts, index.codes, starts, counts, base, fetch_k,
+            cfg.use_kernel, row_mask)
+    elif cfg.fused_topk:
+        valid, rows = _gather_windows(starts, counts, W, index.n)
+        cand_codes = index.codes[rows]                            # (Q,A*W,P)
+        # the bitmap travels with the gathered windows: a clipped/overrun
+        # row may gather a True slot, but window validity masks it in-kernel
+        wmask = valid.reshape(Q, -1)
+        if row_mask is not None:
+            wmask &= jnp.take_along_axis(row_mask, rows, axis=1) != 0
+        bias = jnp.repeat(base, W, axis=1)                        # (Q, A*W)
+        top_approx, pos = _topk_paired(luts, cand_codes, bias,
+                                       wmask.astype(jnp.uint8),
+                                       fetch_k, cfg.use_kernel)
+        top_rows = jnp.take_along_axis(rows, jnp.maximum(pos, 0), axis=1)
+    else:
+        # legacy scan-then-select: materialize the (Q, A*W) score matrix,
+        # apply base/validity in a second pass, lax.top_k in a third
+        valid, rows = _gather_windows(starts, counts, W, index.n)
+        if shared:
+            all_scores = _adc_shared(luts, index.codes, cfg.use_kernel,
+                                     row_mask)
+            resid = jnp.take_along_axis(all_scores, rows, axis=1)
+        else:
+            wmask = None if row_mask is None \
+                else jnp.take_along_axis(row_mask, rows, axis=1)
+            resid = _adc_paired(luts, index.codes[rows],
+                                cfg.use_kernel, wmask)            # (Q, A*W)
+        approx = resid.reshape(Q, cfg.top_a, W) + base[..., None]
+        approx = jnp.where(valid, approx, -jnp.inf).reshape(Q, -1)
+        top_approx, flat_idx = jax.lax.top_k(approx, fetch_k)
+        top_rows = jnp.take_along_axis(rows, flat_idx, axis=1)
+
+    safe_rows = jnp.maximum(top_rows, 0)       # fused dead slots carry -1
     if cfg.exact_rerank:
-        vecs = index.vectors[top_rows].astype(jnp.float32)       # (Q, fk, D')
+        vecs = index.vectors[safe_rows].astype(jnp.float32)      # (Q, fk, D')
         exact = jnp.einsum("qkd,qd->qk", vecs, qs)
-        # padding slots (-inf approx: window overrun / clipped rows) must
-        # not re-enter via their real dot product
+        # padding slots (-inf approx: window overrun / clipped / filtered
+        # rows) must not re-enter via their real dot product
         exact = jnp.where(jnp.isfinite(top_approx), exact, -jnp.inf)
         order = jnp.argsort(-exact, axis=1)[:, : cfg.top_k]
-        top_rows = jnp.take_along_axis(top_rows, order, axis=1)
+        safe_rows = jnp.take_along_axis(safe_rows, order, axis=1)
         scores = jnp.take_along_axis(exact, order, axis=1)
         top_approx = jnp.take_along_axis(top_approx, order, axis=1)
     else:
@@ -195,9 +278,9 @@ def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig,
     # behind it (window overrun, or every row filtered by the mask) — its
     # id/row must read as -1, not whatever the clipped gather landed on
     live = jnp.isfinite(scores)
-    return {"ids": jnp.where(live, index.ids[top_rows], -1),
+    return {"ids": jnp.where(live, index.ids[safe_rows], -1),
             "scores": scores, "approx_scores": top_approx,
-            "rows": jnp.where(live, top_rows, -1)}
+            "rows": jnp.where(live, safe_rows, -1)}
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -211,16 +294,20 @@ def brute_force(index: IMIIndex, q: jax.Array, k: int = 100
 
 
 @functools.partial(jax.jit, static_argnames=("k", "use_kernel",
-                                             "rerank_overfetch"))
+                                             "rerank_overfetch",
+                                             "fused_topk"))
 def exhaustive_adc(index: IMIIndex, q: jax.Array, k: int = 100,
-                   use_kernel: str = "jnp",
-                   rerank_overfetch: int = 4) -> dict[str, jax.Array]:
+                   use_kernel: str = "auto",
+                   rerank_overfetch: int = 4,
+                   fused_topk: bool = True) -> dict[str, jax.Array]:
     """'w/o ANNS' ablation: full ADC scan, no cell pruning (Table IV).
 
     Uses the same overfetch + exact-rescore refine protocol as ``search``
     (fetch ``k * rerank_overfetch`` by approximate score, exact-rescore,
     cut to k) so the ablation differs from cell-probe search only in the
-    pruning, not in the refine rule.
+    pruning, not in the refine rule.  With ``fused_topk`` (default) the
+    per-row coarse term rides the fused scan->select as its bias and only
+    the ``fetch_k`` survivors leave the kernel (DESIGN.md §11).
     """
     q = pqmod.normalize(q.astype(jnp.float32))
     # score = q . (coarse(cell_of) + residual)
@@ -230,9 +317,20 @@ def exhaustive_adc(index: IMIIndex, q: jax.Array, k: int = 100,
     s2 = index.coarse2 @ q[h:]
     base = s1[index.cell_of // K] + s2[index.cell_of % K]
     lut = pqmod.similarity_lut(index.pq, q)
-    scores = base + _adc(lut, index.codes, use_kernel)
-    fetch_k = min(k * max(rerank_overfetch, 1), scores.shape[0])
-    _, rows = jax.lax.top_k(scores, fetch_k)
+    fetch_k = min(k * max(rerank_overfetch, 1), index.n)
+    if fused_topk:
+        if _resolve_kernel(use_kernel) == "pallas":
+            from repro.kernels import ops as kops
+            _, rows = kops.pq_scan_topk_batched(lut[None], index.codes,
+                                                fetch_k, bias=base)
+        else:
+            from repro.kernels import pq_scan as _pq
+            _, rows = _pq.pq_scan_topk_jnp(lut[None], index.codes,
+                                           fetch_k, base)
+        rows = rows[0]          # no mask, fetch_k <= n: every slot live
+    else:
+        scores = base + _adc(lut, index.codes, use_kernel)
+        _, rows = jax.lax.top_k(scores, fetch_k)
     vecs = index.vectors[rows].astype(jnp.float32)
     exact = vecs @ q
     order = jnp.argsort(-exact)[:k]

@@ -133,9 +133,13 @@ def index_shardings(mesh: Mesh) -> Any:
 def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
                         mode: str = "exhaustive", top_a: int = 32,
                         max_cell_size: int = 1024,
-                        use_kernel: str = "jnp"):
+                        use_kernel: str = "auto"):
     """Builds a jit-able batched search: (ShardedIndex, qs (Q, D')) ->
-    dict(ids (Q, k), scores (Q, k))."""
+    dict(ids (Q, k), scores (Q, k)).
+
+    ``use_kernel`` matches ``SearchConfig.use_kernel`` ('auto' resolves per
+    backend); the per-shard scan currently always uses the jnp formulation
+    inside shard_map — the parameter is accepted for config symmetry."""
     axes = tuple(mesh.axis_names)
 
     def local_scan(codes, vectors, ids, cell_of, offsets, c1, c2, cents,

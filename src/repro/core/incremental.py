@@ -176,7 +176,13 @@ class SegmentedIndex:
         kernel, so the base still yields a full ``top_k`` valid candidates
         — no dynamic over-fetch, no per-tombstone-count jit recompiles
         (the former workaround for the shrink-below-k bug class,
-        DESIGN.md §10.2).  ``row_mask`` lets callers (the query planner)
+        DESIGN.md §10.2).  With the fused scan->select path (DESIGN.md
+        §11) the bitmap rides the same single pass that performs the
+        selection: the base never materializes a score matrix, returns
+        its (top_k,) survivors directly, and the (small) delta segments
+        are brute-scored and merged against that fused output below —
+        dead padding slots (id -1 / -inf) are dropped before the merge so
+        they can never displace a live delta row.  ``row_mask`` lets callers (the query planner)
         stack their own BASE-row filters on top; it is positional over
         base rows, so it cannot describe rows still sitting in delta
         segments — passing one while deltas are pending raises instead of

@@ -3,8 +3,16 @@
 ``INTERPRET`` defaults to ``None`` = auto: compiled Mosaic when the jax
 backend is TPU, interpret mode (kernel bodies run in Python/jax ops for
 correctness) on CPU/GPU containers like this one.  Override globally by
-setting ``repro.kernels.ops.INTERPRET`` to an explicit bool, or with the
-env var ``REPRO_PALLAS_COMPILE=1`` (forces compiled mode everywhere).
+setting ``repro.kernels.ops.INTERPRET`` to an explicit bool.
+
+``resolve_use_kernel`` is the companion dispatch for the query path's
+``SearchConfig.use_kernel='auto'``: callers get these Pallas kernels
+wherever they compile (TPU), and the blocked-jnp formulations elsewhere.
+``REPRO_PALLAS_COMPILE=1`` forces the Pallas route even off-TPU — the
+kernels then run under the interpreter (forced-compile *parity* mode, the
+CI leg that exercises the exact kernel code a TPU would compile).  The
+resolution is read at trace time and cached per jitted config, so set the
+env var before the process starts, not mid-run.
 """
 from __future__ import annotations
 
@@ -18,12 +26,24 @@ from repro.kernels import kmeans as _km
 from repro.kernels import pq_scan as _pq
 
 # None = auto (TPU -> compile, else interpret); see pq_scan.resolve_interpret.
-INTERPRET: bool | None = \
-    False if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1" else None
+INTERPRET: bool | None = None
 
 
 def _interpret() -> bool:
     return _pq.resolve_interpret(INTERPRET)
+
+
+def resolve_use_kernel(kind: str) -> str:
+    """'auto' -> 'pallas' on a TPU backend or under REPRO_PALLAS_COMPILE=1
+    (interpret parity), else 'jnp'.  'jnp' / 'pallas' pass through."""
+    if kind == "auto":
+        if jax.default_backend() == "tpu" \
+                or os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+            return "pallas"
+        return "jnp"
+    if kind not in ("jnp", "pallas"):
+        raise ValueError(f"use_kernel must be auto|jnp|pallas, got {kind!r}")
+    return kind
 
 
 def pq_scan(lut: jax.Array, codes: jax.Array) -> jax.Array:
@@ -61,6 +81,75 @@ def pq_scan_paired_masked(luts: jax.Array, codes: jax.Array,
     rows return exactly -inf (sentinel applied inside the kernel)."""
     return _pq.pq_scan_paired_masked(luts, codes, mask, block_n=block_n,
                                      interpret=_interpret())
+
+
+def pq_scan_topk_batched(luts: jax.Array, codes: jax.Array, k: int, *,
+                         bias: jax.Array | None = None,
+                         block_n: int = 1024
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fused shared-codes ADC top-k: (Q, P, M) x (N, P) [+ bias (N,)] ->
+    (scores (Q, k), rows (Q, k)); the (Q, N) score matrix never exists in
+    HBM (DESIGN.md §11).  Dead slots read (-inf, -1)."""
+    return _pq.pq_scan_topk_batched(luts, codes, k, bias=bias,
+                                    block_n=block_n, interpret=_interpret())
+
+
+def pq_scan_topk_batched_masked(luts: jax.Array, codes: jax.Array,
+                                mask: jax.Array, k: int, *,
+                                bias: jax.Array | None = None,
+                                block_n: int = 1024
+                                ) -> tuple[jax.Array, jax.Array]:
+    """Masked fused shared-codes top-k: mask (Q, N) nonzero=selectable;
+    filtered rows can never be selected (sentinel inside the pass)."""
+    return _pq.pq_scan_topk_batched_masked(luts, codes, mask, k, bias=bias,
+                                           block_n=block_n,
+                                           interpret=_interpret())
+
+
+def pq_scan_topk_windowed(luts: jax.Array, codes: jax.Array,
+                          starts: jax.Array, counts: jax.Array,
+                          bases: jax.Array, k: int, *,
+                          block_n: int = 1024
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused IMI-probe top-k over shared codes: (Q, A) window descriptors
+    fold the per-cell base term + window validity into the single pass."""
+    return _pq.pq_scan_topk_windowed(luts, codes, starts, counts, bases, k,
+                                     block_n=block_n, interpret=_interpret())
+
+
+def pq_scan_topk_windowed_masked(luts: jax.Array, codes: jax.Array,
+                                 starts: jax.Array, counts: jax.Array,
+                                 bases: jax.Array, mask: jax.Array, k: int,
+                                 *, block_n: int = 1024
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """``pq_scan_topk_windowed`` with the planner's (Q, N) row bitmap also
+    riding the pass (filter pushdown, DESIGN.md §10)."""
+    return _pq.pq_scan_topk_windowed_masked(luts, codes, starts, counts,
+                                            bases, mask, k, block_n=block_n,
+                                            interpret=_interpret())
+
+
+def pq_scan_topk_paired(luts: jax.Array, codes: jax.Array, k: int, *,
+                        bias: jax.Array | None = None,
+                        block_n: int = 1024
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Fused per-query candidate top-k: (Q, P, M) x (Q, N, P) [+ bias
+    (Q, N)] -> (scores (Q, k), positions (Q, k)) into each query's
+    candidate axis; dead slots (-inf, -1)."""
+    return _pq.pq_scan_topk_paired(luts, codes, k, bias=bias,
+                                   block_n=block_n, interpret=_interpret())
+
+
+def pq_scan_topk_paired_masked(luts: jax.Array, codes: jax.Array,
+                               mask: jax.Array, k: int, *,
+                               bias: jax.Array | None = None,
+                               block_n: int = 1024
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Masked fused per-query candidate top-k: mask (Q, N) folds window
+    validity AND the planner's gathered row bitmap into the pass."""
+    return _pq.pq_scan_topk_paired_masked(luts, codes, mask, k, bias=bias,
+                                          block_n=block_n,
+                                          interpret=_interpret())
 
 
 def kmeans_assign(x: jax.Array, cents: jax.Array):

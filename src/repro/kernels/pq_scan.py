@@ -1,46 +1,81 @@
-"""Pallas TPU kernel: PQ ADC scan (the LOVO fast-search hot loop).
+"""Pallas TPU kernels: PQ ADC scan + fused scan->select (LOVO's hot loop).
 
-Four entry points, each one ``pallas_call``:
+Two kernel families share this module:
+
+**Plain scans** (materialize the full score matrix):
 
   * ``pq_scan_batched`` — scores[q, n] = sum_p LUT[q, p, codes[n, p]] for Q
-    query LUTs against ONE shared code matrix (N, P).  Used when every query
-    scans the same rows (exhaustive ADC, benchmarks).
+    query LUTs against ONE shared code matrix (N, P).
   * ``pq_scan_paired``  — scores[q, n] = sum_p LUT[q, p, codes[q, n, p]]:
-    each query scans its OWN candidate rows (Q, N, P).  This is the batched
-    Algorithm-1 shape: after the IMI probe every query has gathered its own
-    (top_a * max_cell_size) candidate window, and the whole batch is scanned
-    in a single kernel launch instead of Q separate scans — the LUT block
-    stays VMEM-resident across that query's code blocks.
+    each query scans its OWN candidate rows (Q, N, P).
   * ``pq_scan_batched_masked`` / ``pq_scan_paired_masked`` — the same scans
     with a per-(query, row) validity mask applied INSIDE the kernel: invalid
-    rows come back as exactly ``-inf`` (the similarity sentinel), so they
-    can never survive a downstream top-k.  This is the filter-pushdown
-    contract of the complex-query planner (DESIGN.md §10): metadata
-    predicates (time range, video-id set, tombstones) become a row bitmap
-    that rides the scan, instead of a post-hoc filter that silently shrinks
-    the result set below k.  The sentinel write is fused into the scan's
-    single pass — no second (Q, N) traversal of the score matrix in HBM.
+    rows come back as exactly ``-inf`` (the similarity sentinel), the
+    filter-pushdown contract of the complex-query planner (DESIGN.md §10).
+
+**Fused scan->select** (``pq_scan_topk_*``, DESIGN.md §11): the scan keeps a
+per-query running top-L — scores AND row indices — in the VMEM-resident
+output carry across the sequential N-grid and emits only ``(Q, L)``.  The
+``(Q, N)`` score matrix never exists in HBM: the plain pipeline writes
+``4*Q*N`` bytes of scores and immediately re-reads them for ``lax.top_k``
+(then a third pass applies the IMI base term and window mask); the fused
+pipeline folds the per-cell IMI ``base`` term, window validity, and the
+planner's row-mask sentinel into the same single pass over the codes, so
+total scan traffic drops from ``(P + 8*Q) * N`` bytes to ``P * N`` + the
+mask/bias inputs.
+
+  * ``pq_scan_topk_batched[_masked]``  — shared codes, optional per-row bias
+    (the exhaustive-ADC coarse term) and (Q, N) validity mask.
+  * ``pq_scan_topk_windowed[_masked]`` — shared codes + per-query IMI probe
+    windows ``(starts, counts, bases) (Q, A)``: rows outside every window
+    score ``-inf``, rows inside get that cell's base term added — the
+    batched Algorithm-1 "windows cover the index" branch in one pass.
+  * ``pq_scan_topk_paired[_masked]``   — per-query candidate windows
+    (Q, N, P) with optional per-position bias/mask.
+
+All fused variants return ``(scores (Q, k) f32, idx (Q, k) int32)`` sorted
+descending with ``lax.top_k`` tie semantics (equal scores -> lower index
+first).  Dead slots — fewer than k selectable rows, or every row masked —
+carry ``idx == -1`` and ``score == -inf``, never a garbage index.
+
+The in-kernel selection is rank-based (no sort primitive): each block's
+scores are merged with the carry by counting, for every candidate, how many
+candidates beat it under (score desc, index asc); candidates with rank < L
+are scattered to output slot ``rank`` by a one-hot select.  Compare /
+reduce / where only, so the same body lowers on Mosaic and interprets
+elsewhere.  A threshold test (block max vs carried L-th best) skips the
+merge for blocks that cannot contribute — after the carry warms up, most
+blocks only pay the scan.
+
+``pq_scan_topk_*_jnp`` are the blocked pure-jnp formulations of the same
+fusion (lax.scan over code blocks, ``lax.top_k`` merges): the production
+path on hosts without a TPU (``SearchConfig.use_kernel='auto'``), where
+streaming block-resident scores beats materializing ``(Q, N)`` in RAM just
+as VMEM-residency beats HBM round-trips on TPU.
 
 TPU adaptation (DESIGN.md §3): the GPU/CPU formulation is a random gather
 from an L1-resident LUT — TPUs hate scattered gathers, so the contraction is
-re-expressed as P one-hot matmuls on the MXU:
+re-expressed as one-hot matmuls on the MXU:
 
     onehot(codes[:, p]) (bN x M)  @  LUT[:, p, :]^T (M x Q)  -> (bN x Q)
 
 The one-hot inflates nominal FLOPs by M, but MXU throughput at M=256 makes
 each block a dense matmul (f32: the LUT carries the two-level quantizer's
 per-cell offset term, and bf16 LUT rounding would move candidates across
-the overfetch boundary relative to the jnp oracle); LUTs (Q*P*M*4 B) and
-the code block live in VMEM, codes stream HBM->VMEM once — the scan is
-HBM-bandwidth-bound exactly like the CPU version is memory-bound, but at
-819 GB/s.
+the overfetch boundary relative to the jnp oracle).  The paired (one query
+per grid cell) contraction instead runs over the combined (p, m) index in
+chunks — ``lut (1, c*M) @ onehotT (c*M, bN) -> (1, bN)`` — so the output
+spans the full lane dimension and each dot is c*M deep, instead of P
+one-wide (bN, M) x (M, 1) matvecs that strand the MXU on a single column.
 
-Grid: (N / block_n,) (batched) or (Q, N / block_n) (paired); block shapes
-MXU-aligned (block_n mult of 128, M=2^k).
+Grid: (N / block_n,) (batched/windowed) or (Q, N / block_n) (paired); block
+shapes MXU-aligned (block_n mult of 128, M=2^k, top-L carry padded to 128).
 
 ``interpret=None`` (the default) auto-resolves: compiled Mosaic on a TPU
 backend, interpret mode (kernel bodies run as jax ops) everywhere else.
-Override with the env var ``REPRO_PALLAS_COMPILE=1`` or an explicit bool.
+``REPRO_PALLAS_COMPILE=1`` routes ``use_kernel='auto'`` callers onto these
+kernels even off-TPU (interpret parity mode — CI runs the kernel code that
+would compile on TPU, under the interpreter); an explicit bool overrides.
 """
 from __future__ import annotations
 
@@ -51,18 +86,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_LANES = 128          # TPU lane width: top-L carries are padded to this
+# rank-merge j-chunk: bounds the peak (Q', chunk, L + block_n) compare
+# tensor — at the production shape (Q=8, L=512, bn=1024) a 256-chunk keeps
+# it ~12 MB even if Mosaic materializes the mask at 4 B/element, inside a
+# 16 MB VMEM core alongside the LUT block
+_MERGE_CHUNK = 256
+
 
 def resolve_interpret(interpret: bool | None) -> bool:
-    """None -> False (compile) on TPU / REPRO_PALLAS_COMPILE=1, else True."""
+    """None -> False (compiled Mosaic) on a TPU backend, True elsewhere.
+
+    ``REPRO_PALLAS_COMPILE=1`` no longer forces ``interpret=False`` off-TPU
+    (Mosaic cannot lower there); it instead makes ``resolve_use_kernel``
+    route 'auto' callers to these kernels, which then run under the
+    interpreter — the forced-compile *parity* leg.
+    """
     if interpret is not None:
         return interpret
-    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
-        return False
     return jax.default_backend() != "tpu"
 
 
-def _kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
-    codes = codes_ref[...].astype(jnp.int32)          # (bN, P)
+# ---------------------------------------------------------------------------
+# plain scans (materializing): pq_scan_batched / pq_scan_paired (+ masked)
+# ---------------------------------------------------------------------------
+
+def _block_scores(lut_ref, codes, *, P: int, M: int) -> jax.Array:
+    """Shared-codes ADC block: (Q, P, M) LUT ref + (bN, P) codes -> (bN, Q)."""
     bn = codes.shape[0]
     Q = lut_ref.shape[0]
     iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
@@ -78,9 +128,48 @@ def _kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
             onehot, lut_p, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)        # (bN, Q)
 
-    acc = jax.lax.fori_loop(0, P, body,
-                            jnp.zeros((bn, Q), jnp.float32))
-    out_ref[...] = acc
+    return jax.lax.fori_loop(0, P, body, jnp.zeros((bn, Q), jnp.float32))
+
+
+def _pm_chunk(P: int) -> int:
+    """Largest divisor of P that is <= 8 (paired-contraction chunk)."""
+    for c in range(min(P, 8), 0, -1):
+        if P % c == 0:
+            return c
+    return 1
+
+
+def _paired_block_scores(lut_ref, codes, *, P: int, M: int) -> jax.Array:
+    """Per-query ADC block: (1, P, M) LUT ref + (bN, P) codes -> (1, bN).
+
+    The contraction runs over the combined (p, m) index in chunks of c
+    subspaces: ``lut (1, c*M) @ onehotT (c*M, bN) -> (1, bN)``.  The output
+    row spans the full lane dimension and each dot is c*M deep — real MXU
+    tiles, unlike the former per-subspace (bN, M) x (M, 1) matvecs whose
+    1-wide result column stranded the systolic array.
+    """
+    bn = codes.shape[0]
+    c = _pm_chunk(P)
+    lut_flat = lut_ref[...].reshape(1, P * M)
+    codes_t = codes.T                                  # (P, bN)
+
+    def body(j, acc):
+        cc = jax.lax.dynamic_slice(codes_t, (j * c, 0), (c, bn))
+        iota_m = jax.lax.broadcasted_iota(jnp.int32, (c, M, bn), 1)
+        onehot_t = (cc[:, None, :] == iota_m).astype(jnp.float32) \
+            .reshape(c * M, bn)
+        lut_c = jax.lax.dynamic_slice(lut_flat, (0, j * c * M), (1, c * M))
+        return acc + jax.lax.dot_general(
+            lut_c, onehot_t, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (1, bN)
+
+    return jax.lax.fori_loop(0, P // c, body,
+                             jnp.zeros((1, bn), jnp.float32))
+
+
+def _kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
+    codes = codes_ref[...].astype(jnp.int32)          # (bN, P)
+    out_ref[...] = _block_scores(lut_ref, codes, P=P, M=M)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -113,19 +202,7 @@ def _masked_kernel(lut_ref, codes_ref, mask_ref, out_ref, *, P: int, M: int):
     """Shared-codes scan with the validity sentinel fused into the pass:
     out[n, q] = mask[q, n] ? sum_p LUT[q, p, codes[n, p]] : -inf."""
     codes = codes_ref[...].astype(jnp.int32)          # (bN, P)
-    bn = codes.shape[0]
-    Q = lut_ref.shape[0]
-    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
-
-    def body(p, acc):
-        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
-        lut_p = lut_ref[:, p, :]                       # (Q, M) f32
-        return acc + jax.lax.dot_general(
-            onehot, lut_p, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)        # (bN, Q)
-
-    acc = jax.lax.fori_loop(0, P, body,
-                            jnp.zeros((bn, Q), jnp.float32))
+    acc = _block_scores(lut_ref, codes, P=P, M=M)
     valid = mask_ref[...].astype(jnp.int32).T != 0     # (bN, Q)
     out_ref[...] = jnp.where(valid, acc, -jnp.inf)
 
@@ -163,19 +240,7 @@ def pq_scan_batched_masked(luts: jax.Array, codes: jax.Array,
 
 def _paired_kernel(lut_ref, codes_ref, out_ref, *, P: int, M: int):
     codes = codes_ref[0].astype(jnp.int32)            # (bN, P)
-    bn = codes.shape[0]
-    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
-
-    def body(p, acc):
-        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
-        lut_p = lut_ref[0, p, :]                       # (M,) f32
-        return acc + jax.lax.dot_general(
-            onehot, lut_p[:, None], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)        # (bN, 1)
-
-    acc = jax.lax.fori_loop(0, P, body,
-                            jnp.zeros((bn, 1), jnp.float32))
-    out_ref[...] = acc[:, 0][None, :]                  # (1, bN)
+    out_ref[...] = _paired_block_scores(lut_ref, codes, P=P, M=M)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -214,20 +279,9 @@ def _paired_masked_kernel(lut_ref, codes_ref, mask_ref, out_ref, *,
     """Per-query candidate scan with the validity sentinel fused in:
     out[q, n] = mask[q, n] ? sum_p LUT[q, p, codes[q, n, p]] : -inf."""
     codes = codes_ref[0].astype(jnp.int32)            # (bN, P)
-    bn = codes.shape[0]
-    iota_m = jax.lax.broadcasted_iota(jnp.int32, (bn, M), 1)
-
-    def body(p, acc):
-        onehot = (codes[:, p][:, None] == iota_m).astype(jnp.float32)
-        lut_p = lut_ref[0, p, :]                       # (M,) f32
-        return acc + jax.lax.dot_general(
-            onehot, lut_p[:, None], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)        # (bN, 1)
-
-    acc = jax.lax.fori_loop(0, P, body,
-                            jnp.zeros((bn, 1), jnp.float32))
+    acc = _paired_block_scores(lut_ref, codes, P=P, M=M)
     valid = mask_ref[...].astype(jnp.int32) != 0       # (1, bN)
-    out_ref[...] = jnp.where(valid, acc[:, 0][None, :], -jnp.inf)
+    out_ref[...] = jnp.where(valid, acc, -jnp.inf)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -260,3 +314,514 @@ def pq_scan_paired_masked(luts: jax.Array, codes: jax.Array,
         interpret=resolve_interpret(interpret),
     )(luts.astype(jnp.float32), codes, mask.astype(jnp.uint8))
     return out[:, :N]                                  # (Q, N)
+
+
+# ---------------------------------------------------------------------------
+# fused scan->select: in-kernel running top-L (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _topk_pad(k: int) -> int:
+    """Carry width: k rounded up to the lane width (>= 128)."""
+    return max(_LANES, -(-k // _LANES) * _LANES)
+
+
+def _rank_merge(cs: jax.Array, ci: jax.Array, L: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Exact top-L of (cs (Q, T) f32, ci (Q, T) int32), sorted descending.
+
+    Total order: score desc, then index asc (``lax.top_k`` ties), then
+    concat position asc (distinguishes identical (-inf, -1) dead slots —
+    without it, equal pairs would share a rank and collide in the scatter).
+    rank[i] = #candidates that beat i, counted in j-chunks so the compare
+    matrix never exceeds (Q, chunk, T); candidates with rank < L scatter to
+    output slot ``rank`` via a one-hot select.  Compare/reduce/where only —
+    no sort primitive — so the body lowers on Mosaic and interprets anywhere.
+    """
+    Q, T = cs.shape
+    c = min(_MERGE_CHUNK, T)
+    t_pad = -(-T // c) * c - T
+    csp, cip = cs, ci
+    if t_pad:
+        # padded candidates (score -inf, idx INT32_MAX) never beat anything
+        csp = jnp.concatenate(
+            [cs, jnp.full((Q, t_pad), -jnp.inf, cs.dtype)], axis=1)
+        cip = jnp.concatenate(
+            [ci, jnp.full((Q, t_pad), jnp.iinfo(jnp.int32).max, ci.dtype)],
+            axis=1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (Q, T), 1)
+
+    def chunk(j, rank):
+        s_j = jax.lax.dynamic_slice(csp, (0, j * c), (Q, c))[:, :, None]
+        i_j = jax.lax.dynamic_slice(cip, (0, j * c), (Q, c))[:, :, None]
+        p_j = (j * c
+               + jax.lax.broadcasted_iota(jnp.int32, (Q, c), 1))[:, :, None]
+        beats = (s_j > cs[:, None, :]) | (
+            (s_j == cs[:, None, :]) & (
+                (i_j < ci[:, None, :]) | (
+                    (i_j == ci[:, None, :]) & (p_j < pos[:, None, :]))))
+        return rank + jnp.sum(beats.astype(jnp.int32), axis=1)
+
+    rank = jax.lax.fori_loop(0, (T + t_pad) // c, chunk,
+                             jnp.zeros((Q, T), jnp.int32))
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, 1, L), 2)
+    onehot = rank[:, :, None] == slot                  # (Q, T, L)
+    new_s = jnp.sum(jnp.where(onehot, cs[:, :, None], 0.0), axis=1)
+    new_i = jnp.sum(jnp.where(onehot, ci[:, :, None], 0), axis=1)
+    return new_s, new_i
+
+
+def _topk_carry_update(i, n_blocks, s, rid, s_out, i_out, *, L: int) -> None:
+    """Fold one block (s, rid) (Q', bN) into the (Q', L) output carry.
+
+    The output blocks themselves are the carry: their index map is constant
+    across the sequential N-grid, so they stay VMEM-resident and are flushed
+    to HBM once.  A threshold test (block max vs carried L-th best) skips
+    the merge when the block cannot contribute — ties at the threshold lose
+    to the carried element's lower row index, so skipping is exact.
+    """
+    @pl.when(i == 0)
+    def _init():
+        s_out[...] = jnp.full(s_out.shape, -jnp.inf, jnp.float32)
+        i_out[...] = jnp.full(i_out.shape, -1, jnp.int32)
+
+    threshold = s_out[:, L - 1:L]                      # (Q', 1)
+
+    @pl.when(jnp.any(jnp.max(s, axis=1, keepdims=True) > threshold))
+    def _merge():
+        cs = jnp.concatenate([s_out[...], s], axis=1)
+        ci = jnp.concatenate([i_out[...], rid], axis=1)
+        new_s, new_i = _rank_merge(cs, ci, L)
+        s_out[...] = new_s
+        i_out[...] = new_i
+
+    @pl.when(i == n_blocks - 1)
+    def _finalize():
+        # dead slots (nothing selectable behind them) read as idx -1
+        i_out[...] = jnp.where(jnp.isfinite(s_out[...]), i_out[...], -1)
+
+
+def _window_terms(starts, counts, bases, rid, *, A: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Per-row IMI window terms from (Q, A) descriptors.
+
+    rid (Q, bN) global row ids -> (base_add (Q, bN) f32, in_window (Q, bN)).
+    Windows are disjoint slices of the cell-sorted base, so summing the
+    per-window selects is exact.
+    """
+    Q, bn = rid.shape
+
+    def body(a, carry):
+        badd, valid = carry
+        st = jax.lax.dynamic_slice(starts, (0, a), (Q, 1))
+        ct = jax.lax.dynamic_slice(counts, (0, a), (Q, 1))
+        bs = jax.lax.dynamic_slice(bases, (0, a), (Q, 1))
+        inw = (rid >= st) & (rid < st + ct)
+        return badd + jnp.where(inw, bs, 0.0), valid | inw
+
+    return jax.lax.fori_loop(
+        0, A, body,
+        (jnp.zeros((Q, bn), jnp.float32), jnp.zeros((Q, bn), jnp.bool_)))
+
+
+def _topk_batched_kernel(lut_ref, codes_ref, *rest, P: int, M: int, L: int,
+                         N: int, has_bias: bool, has_mask: bool):
+    """Fused shared-codes scan->select; optional per-row bias + (Q, N) mask."""
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    mask_ref = refs.pop(0) if has_mask else None
+    s_out, i_out = refs
+    i = pl.program_id(0)
+    codes = codes_ref[...].astype(jnp.int32)          # (bN, P)
+    bn = codes.shape[0]
+    acc = _block_scores(lut_ref, codes, P=P, M=M)      # (bN, Q)
+    if has_bias:
+        acc = acc + bias_ref[...]                      # (bN, 1) broadcast
+    rid = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, acc.shape[1]), 0)
+    valid = rid < N
+    if has_mask:
+        valid &= mask_ref[...].astype(jnp.int32).T != 0
+    s = jnp.where(valid, acc, -jnp.inf).T              # (Q, bN)
+    _topk_carry_update(i, pl.num_programs(0), s, rid.T, s_out, i_out, L=L)
+
+
+def _topk_windowed_kernel(lut_ref, codes_ref, starts_ref, counts_ref,
+                          bases_ref, *rest, P: int, M: int, L: int, N: int,
+                          A: int, has_mask: bool):
+    """Fused shared-codes scan->select with the IMI base term + window
+    validity folded in from (Q, A) probe descriptors."""
+    refs = list(rest)
+    mask_ref = refs.pop(0) if has_mask else None
+    s_out, i_out = refs
+    i = pl.program_id(0)
+    codes = codes_ref[...].astype(jnp.int32)          # (bN, P)
+    bn = codes.shape[0]
+    Q = lut_ref.shape[0]
+    acc = _block_scores(lut_ref, codes, P=P, M=M).T    # (Q, bN)
+    rid = i * bn + jax.lax.broadcasted_iota(jnp.int32, (Q, bn), 1)
+    base_add, valid = _window_terms(starts_ref[...], counts_ref[...],
+                                    bases_ref[...].astype(jnp.float32),
+                                    rid, A=A)
+    valid &= rid < N
+    if has_mask:
+        valid &= mask_ref[...].astype(jnp.int32) != 0
+    s = jnp.where(valid, acc + base_add, -jnp.inf)
+    _topk_carry_update(i, pl.num_programs(0), s, rid, s_out, i_out, L=L)
+
+
+def _topk_paired_kernel(lut_ref, codes_ref, *rest, P: int, M: int, L: int,
+                        N: int, has_bias: bool, has_mask: bool):
+    """Fused per-query candidate scan->select (grid (Q, N/bN), q-major)."""
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    mask_ref = refs.pop(0) if has_mask else None
+    s_out, i_out = refs
+    i = pl.program_id(1)
+    codes = codes_ref[0].astype(jnp.int32)            # (bN, P)
+    bn = codes.shape[0]
+    s = _paired_block_scores(lut_ref, codes, P=P, M=M)  # (1, bN)
+    if has_bias:
+        s = s + bias_ref[...]                          # (1, bN)
+    pid = i * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    valid = pid < N
+    if has_mask:
+        valid &= mask_ref[...].astype(jnp.int32) != 0
+    s = jnp.where(valid, s, -jnp.inf)
+    _topk_carry_update(i, pl.num_programs(1), s, pid, s_out, i_out, L=L)
+
+
+def _topk_out(Q: int, L: int, index_map):
+    return (
+        [pl.BlockSpec((Q, L), index_map), pl.BlockSpec((Q, L), index_map)],
+        [jax.ShapeDtypeStruct((Q, L), jnp.float32),
+         jax.ShapeDtypeStruct((Q, L), jnp.int32)],
+    )
+
+
+def _pq_scan_topk_batched(luts, codes, k, bias, mask, *, block_n, interpret,
+                          windows=None):
+    """Shared implementation behind the batched/windowed fused entry points."""
+    Q, P, M = luts.shape
+    N = codes.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    L = _topk_pad(k)
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        if bias is not None:
+            bias = jnp.pad(bias, (0, pad))
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    grid = ((N + pad) // bn,)
+    in_specs = [
+        pl.BlockSpec((Q, P, M), lambda i: (0, 0, 0)),
+        pl.BlockSpec((bn, P), lambda i: (i, 0)),
+    ]
+    args = [luts.astype(jnp.float32), codes]
+    if windows is not None:
+        starts, counts, bases = windows
+        A = starts.shape[1]
+        for w in (starts.astype(jnp.int32), counts.astype(jnp.int32),
+                  bases.astype(jnp.float32)):
+            in_specs.append(pl.BlockSpec((Q, A), lambda i: (0, 0)))
+            args.append(w)
+        kern = functools.partial(_topk_windowed_kernel, P=P, M=M, L=L, N=N,
+                                 A=A, has_mask=mask is not None)
+    else:
+        if bias is not None:
+            in_specs.append(pl.BlockSpec((bn, 1), lambda i: (i, 0)))
+            args.append(bias.astype(jnp.float32)[:, None])
+        kern = functools.partial(_topk_batched_kernel, P=P, M=M, L=L, N=N,
+                                 has_bias=bias is not None,
+                                 has_mask=mask is not None)
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((Q, bn), lambda i: (0, i)))
+        args.append(mask.astype(jnp.uint8))
+    out_specs, out_shape = _topk_out(Q, L, lambda i: (0, 0))
+    scores, idx = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=resolve_interpret(interpret),
+    )(*args)
+    return scores[:, :k], idx[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def pq_scan_topk_batched(luts: jax.Array, codes: jax.Array, k: int, *,
+                         bias: jax.Array | None = None, block_n: int = 1024,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fused shared-codes ADC top-k: luts (Q, P, M) f32, codes (N, P)
+    integer, optional per-row ``bias`` (N,) f32 (the exhaustive-ADC coarse
+    term) -> (scores (Q, k) f32, rows (Q, k) int32) sorted descending,
+    ``lax.top_k`` tie order, dead slots (score -inf) as row -1.  The (Q, N)
+    score matrix never exists in HBM (module docstring / DESIGN.md §11)."""
+    return _pq_scan_topk_batched(luts, codes, k, bias, None,
+                                 block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def pq_scan_topk_batched_masked(luts: jax.Array, codes: jax.Array,
+                                mask: jax.Array, k: int, *,
+                                bias: jax.Array | None = None,
+                                block_n: int = 1024,
+                                interpret: bool | None = None
+                                ) -> tuple[jax.Array, jax.Array]:
+    """``pq_scan_topk_batched`` with the planner's (Q, N) validity bitmap
+    (nonzero = selectable) folded into the same pass: filtered rows can
+    never be selected; if fewer than k rows survive, the tail slots read
+    (-inf, -1)."""
+    return _pq_scan_topk_batched(luts, codes, k, bias, mask,
+                                 block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def pq_scan_topk_windowed(luts: jax.Array, codes: jax.Array,
+                          starts: jax.Array, counts: jax.Array,
+                          bases: jax.Array, k: int, *, block_n: int = 1024,
+                          interpret: bool | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused IMI-probe scan->select over shared codes: rows inside window a
+    of query q (``starts[q, a] <= row < starts[q, a] + counts[q, a]``) score
+    ``ADC + bases[q, a]``; rows outside every window score -inf.  One pass:
+    scan, base add, window mask, and selection never leave VMEM."""
+    return _pq_scan_topk_batched(luts, codes, k, None, None,
+                                 block_n=block_n, interpret=interpret,
+                                 windows=(starts, counts, bases))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def pq_scan_topk_windowed_masked(luts: jax.Array, codes: jax.Array,
+                                 starts: jax.Array, counts: jax.Array,
+                                 bases: jax.Array, mask: jax.Array, k: int,
+                                 *, block_n: int = 1024,
+                                 interpret: bool | None = None
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """``pq_scan_topk_windowed`` with the planner's (Q, N) row bitmap also
+    folded into the pass (tombstones / metadata pushdown, DESIGN.md §10)."""
+    return _pq_scan_topk_batched(luts, codes, k, None, mask,
+                                 block_n=block_n, interpret=interpret,
+                                 windows=(starts, counts, bases))
+
+
+def _pq_scan_topk_paired(luts, codes, k, bias, mask, *, block_n, interpret):
+    Q, P, M = luts.shape
+    N = codes.shape[1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    L = _topk_pad(k)
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+        if bias is not None:
+            bias = jnp.pad(bias, ((0, 0), (0, pad)))
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    grid = (Q, (N + pad) // bn)
+    in_specs = [
+        pl.BlockSpec((1, P, M), lambda q, i: (q, 0, 0)),
+        pl.BlockSpec((1, bn, P), lambda q, i: (q, i, 0)),
+    ]
+    args = [luts.astype(jnp.float32), codes]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda q, i: (q, i)))
+        args.append(bias.astype(jnp.float32))
+    if mask is not None:
+        in_specs.append(pl.BlockSpec((1, bn), lambda q, i: (q, i)))
+        args.append(mask.astype(jnp.uint8))
+    out_specs, out_shape = _topk_out(1, L, lambda q, i: (q, 0))
+    out_shape = [jax.ShapeDtypeStruct((Q, L), s.dtype) for s in out_shape]
+    kern = functools.partial(_topk_paired_kernel, P=P, M=M, L=L, N=N,
+                             has_bias=bias is not None,
+                             has_mask=mask is not None)
+    scores, idx = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=resolve_interpret(interpret),
+    )(*args)
+    return scores[:, :k], idx[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def pq_scan_topk_paired(luts: jax.Array, codes: jax.Array, k: int, *,
+                        bias: jax.Array | None = None, block_n: int = 1024,
+                        interpret: bool | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Fused per-query candidate scan->select: luts (Q, P, M) f32, codes
+    (Q, N, P) integer, optional per-position ``bias`` (Q, N) f32 (the IMI
+    base term broadcast over each probe window) -> (scores (Q, k), pos
+    (Q, k) int32) — ``pos`` indexes each query's candidate axis; dead slots
+    are (-inf, -1).  Same grid/LUT-residency contract as ``pq_scan_paired``
+    but only (Q, k) ever reaches HBM."""
+    return _pq_scan_topk_paired(luts, codes, k, bias, None,
+                                block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def pq_scan_topk_paired_masked(luts: jax.Array, codes: jax.Array,
+                               mask: jax.Array, k: int, *,
+                               bias: jax.Array | None = None,
+                               block_n: int = 1024,
+                               interpret: bool | None = None
+                               ) -> tuple[jax.Array, jax.Array]:
+    """``pq_scan_topk_paired`` with a (Q, N) per-position validity mask
+    (window validity AND the planner's gathered row bitmap) folded into the
+    same pass."""
+    return _pq_scan_topk_paired(luts, codes, k, bias, mask,
+                                block_n=block_n, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# blocked-jnp fused formulations (the 'auto' path off-TPU)
+# ---------------------------------------------------------------------------
+
+def _adc_block_jnp(luts: jax.Array, codes: jax.Array) -> jax.Array:
+    """(Q, P, M) luts x (bN, P) codes -> (Q, bN) via LUT gather (CPU-fast)."""
+    c = codes.astype(jnp.int32)
+
+    def one(lut):
+        per = jax.vmap(lambda l, idx: l[idx], in_axes=(0, 1))(lut, c)
+        return jnp.sum(per, axis=0)
+
+    return jax.vmap(one)(luts)
+
+
+def _merge_topk_jnp(run_s, run_i, blk_s, blk_i, L):
+    """Carry merge via lax.top_k.  The carry precedes the block and block
+    ids ascend across blocks, so top_k's lower-position-first tie rule
+    reproduces the global lower-index-first order inductively."""
+    cs = jnp.concatenate([run_s, blk_s], axis=1)
+    ci = jnp.concatenate([run_i, blk_i], axis=1)
+    new_s, sel = jax.lax.top_k(cs, L)
+    return new_s, jnp.take_along_axis(ci, sel, axis=1)
+
+
+def _finalize_topk_jnp(scores, idx):
+    return scores, jnp.where(jnp.isfinite(scores), idx, -1)
+
+
+def _topk_scan_blocks_jnp(Q, N, bn, k, step_scores):
+    """Shared lax.scan skeleton: step_scores(i0, blk_ix) -> (Q, bn) scores
+    (already biased/masked, padded rows -inf)."""
+    n_blocks = -(-N // bn)
+
+    def step(carry, blk_ix):
+        run_s, run_i = carry
+        i0 = blk_ix * bn
+        s = step_scores(i0, blk_ix)
+        rid = i0 + jnp.arange(bn, dtype=jnp.int32)[None, :]
+        run = _merge_topk_jnp(run_s, run_i, s,
+                              jnp.broadcast_to(rid, (Q, bn)), k)
+        return run, None
+
+    init = (jnp.full((Q, k), -jnp.inf, jnp.float32),
+            jnp.full((Q, k), -1, jnp.int32))
+    (scores, idx), _ = jax.lax.scan(step, init,
+                                    jnp.arange(n_blocks, dtype=jnp.int32))
+    return _finalize_topk_jnp(scores, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def pq_scan_topk_jnp(luts: jax.Array, codes: jax.Array, k: int,
+                     bias: jax.Array | None = None,
+                     mask: jax.Array | None = None, *,
+                     block_n: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """Blocked jnp fused scan->select over shared codes (contract of
+    ``pq_scan_topk_batched[_masked]``): streams (Q, block_n) score blocks
+    through a running top-k instead of materializing (Q, N)."""
+    Q = luts.shape[0]
+    N = codes.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
+    blocks = codes_p.reshape(-1, bn, codes.shape[1])
+    mask_p = None
+    if mask is not None:
+        mask_p = jnp.pad(mask.astype(jnp.uint8), ((0, 0), (0, pad))) \
+            if pad else mask.astype(jnp.uint8)
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias.astype(jnp.float32), (0, pad)) \
+            if pad else bias.astype(jnp.float32)
+
+    def step_scores(i0, blk_ix):
+        s = _adc_block_jnp(luts, blocks[blk_ix])
+        if bias_p is not None:
+            s = s + jax.lax.dynamic_slice(bias_p, (i0,), (bn,))[None, :]
+        rid = i0 + jnp.arange(bn, dtype=jnp.int32)[None, :]
+        valid = rid < N
+        if mask_p is not None:
+            valid &= jax.lax.dynamic_slice(
+                mask_p, (0, i0), (Q, bn)) != 0
+        return jnp.where(valid, s, -jnp.inf)
+
+    return _topk_scan_blocks_jnp(Q, N, bn, k, step_scores)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def pq_scan_topk_windowed_jnp(luts: jax.Array, codes: jax.Array,
+                              starts: jax.Array, counts: jax.Array,
+                              bases: jax.Array, k: int,
+                              mask: jax.Array | None = None, *,
+                              block_n: int = 4096
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Blocked jnp fused IMI-probe scan->select (contract of
+    ``pq_scan_topk_windowed[_masked]``)."""
+    Q = luts.shape[0]
+    N = codes.shape[0]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    codes_p = jnp.pad(codes, ((0, pad), (0, 0))) if pad else codes
+    blocks = codes_p.reshape(-1, bn, codes.shape[1])
+    mask_p = None
+    if mask is not None:
+        mask_p = jnp.pad(mask.astype(jnp.uint8), ((0, 0), (0, pad))) \
+            if pad else mask.astype(jnp.uint8)
+    starts = starts.astype(jnp.int32)
+    counts = counts.astype(jnp.int32)
+    bases = bases.astype(jnp.float32)
+
+    def step_scores(i0, blk_ix):
+        s = _adc_block_jnp(luts, blocks[blk_ix])
+        rid = i0 + jnp.arange(bn, dtype=jnp.int32)[None, :]    # (1, bN)
+        inw = (rid[:, None, :] >= starts[..., None]) & \
+            (rid[:, None, :] < (starts + counts)[..., None])   # (Q, A, bN)
+        base_add = jnp.sum(jnp.where(inw, bases[..., None], 0.0), axis=1)
+        valid = jnp.any(inw, axis=1) & (rid < N)
+        if mask_p is not None:
+            valid &= jax.lax.dynamic_slice(mask_p, (0, i0), (Q, bn)) != 0
+        return jnp.where(valid, s + base_add, -jnp.inf)
+
+    return _topk_scan_blocks_jnp(Q, N, bn, k, step_scores)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n"))
+def pq_scan_topk_paired_jnp(luts: jax.Array, codes: jax.Array, k: int,
+                            bias: jax.Array | None = None,
+                            mask: jax.Array | None = None, *,
+                            block_n: int = 4096
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Blocked jnp fused per-query candidate scan->select (contract of
+    ``pq_scan_topk_paired[_masked]``)."""
+    Q, N, P = codes.shape
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    codes_p = jnp.pad(codes, ((0, 0), (0, pad), (0, 0))) if pad else codes
+    mask_p = None
+    if mask is not None:
+        mask_p = jnp.pad(mask.astype(jnp.uint8), ((0, 0), (0, pad))) \
+            if pad else mask.astype(jnp.uint8)
+    bias_p = None
+    if bias is not None:
+        bias_p = jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, pad))) \
+            if pad else bias.astype(jnp.float32)
+
+    def step_scores(i0, blk_ix):
+        cb = jax.lax.dynamic_slice(codes_p, (0, i0, 0), (Q, bn, P))
+        s = jax.vmap(lambda lut, c: _adc_block_jnp(lut[None], c)[0]
+                     )(luts, cb)
+        if bias_p is not None:
+            s = s + jax.lax.dynamic_slice(bias_p, (0, i0), (Q, bn))
+        pid = i0 + jnp.arange(bn, dtype=jnp.int32)[None, :]
+        valid = pid < N
+        if mask_p is not None:
+            valid &= jax.lax.dynamic_slice(mask_p, (0, i0), (Q, bn)) != 0
+        return jnp.where(valid, s, -jnp.inf)
+
+    return _topk_scan_blocks_jnp(Q, N, bn, k, step_scores)

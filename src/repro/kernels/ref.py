@@ -27,6 +27,59 @@ def pq_scan_masked_ref(luts: jax.Array, codes: jax.Array,
     return jnp.where(mask != 0, pq_scan_ref(luts, codes), -jnp.inf)
 
 
+def pq_scan_topk_ref(luts: jax.Array, codes: jax.Array, k: int,
+                     bias: jax.Array | None = None,
+                     mask: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Materialize-then-select oracle for every fused ``pq_scan_topk_*``
+    kernel: full (Q, N) scores (+ optional per-row ``bias`` (N,) or per-
+    (query, row) bias (Q, N); optional ``mask`` (Q, N) nonzero=selectable),
+    then ``lax.top_k`` — which fixes the tie rule the kernels must
+    reproduce: equal scores select the lower index first.  Slots whose
+    score is ``-inf`` (masked out, or fewer than k rows) read index ``-1``.
+
+    ``codes`` may be (N, P) shared (indices are row ids) or (Q, N, P)
+    per-query (indices are candidate positions).
+    """
+    if codes.ndim == 3:
+        scores = jax.vmap(pq_scan_ref)(
+            jnp.expand_dims(luts, 1), jnp.asarray(codes))[:, 0]
+    else:
+        scores = pq_scan_ref(luts, codes)
+    if bias is not None:
+        b = jnp.asarray(bias, jnp.float32)
+        scores = scores + (b[None, :] if b.ndim == 1 else b)
+    if mask is not None:
+        scores = jnp.where(jnp.asarray(mask) != 0, scores, -jnp.inf)
+    if k > scores.shape[1]:                       # k > rows: pad dead slots
+        scores = jnp.pad(scores, ((0, 0), (0, k - scores.shape[1])),
+                         constant_values=-jnp.inf)
+    top, idx = jax.lax.top_k(scores, k)
+    return top, jnp.where(jnp.isfinite(top), idx, -1)
+
+
+def pq_scan_topk_windowed_ref(luts: jax.Array, codes: jax.Array,
+                              starts: jax.Array, counts: jax.Array,
+                              bases: jax.Array, k: int,
+                              mask: jax.Array | None = None
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for ``pq_scan_topk_windowed[_masked]``: expands the (Q, A)
+    IMI window descriptors to a dense per-(query, row) bias + validity
+    mask, then defers to ``pq_scan_topk_ref``."""
+    N = codes.shape[0]
+    rid = jnp.arange(N, dtype=jnp.int32)[None, None, :]        # (1, 1, N)
+    starts = jnp.asarray(starts, jnp.int32)[..., None]         # (Q, A, 1)
+    counts = jnp.asarray(counts, jnp.int32)[..., None]
+    inw = (rid >= starts) & (rid < starts + counts)            # (Q, A, N)
+    bias = jnp.sum(jnp.where(
+        inw, jnp.asarray(bases, jnp.float32)[..., None], 0.0), axis=1)
+    valid = jnp.any(inw, axis=1)
+    if mask is not None:
+        valid &= jnp.asarray(mask) != 0
+    return pq_scan_topk_ref(luts, codes, k, bias=bias,
+                            mask=valid.astype(jnp.uint8))
+
+
 def kmeans_assign_ref(x: jax.Array, cents: jax.Array
                       ) -> tuple[jax.Array, jax.Array]:
     """Full (N, M) distance matrix, then argmin (the memory-heavy baseline

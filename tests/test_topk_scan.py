@@ -1,0 +1,270 @@
+"""Fused scan->select kernels vs the materialize-then-top_k oracle, and
+search_batch end-to-end id-equality with the fusion on vs off.
+
+Parity tests use integer-valued f32 LUTs: every ADC sum is then exact in
+f32 regardless of reduction order, so id equality is bit-for-bit across
+the one-hot-matmul (Pallas), gather-sum (jnp), and oracle formulations —
+and exact score ties are abundant, exercising the lower-index-first tie
+rule at the L boundary instead of dodging it.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anns, imi
+from repro.kernels import ops, ref
+from repro.kernels import pq_scan as pqs
+
+
+def _int_luts(key, Q, P, M):
+    return jax.random.randint(key, (Q, P, M), -32, 32).astype(jnp.float32)
+
+
+def _check(got, want):
+    gs, gi = map(np.asarray, got)
+    ws, wi = map(np.asarray, want)
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_array_equal(
+        np.nan_to_num(gs, neginf=-1e30), np.nan_to_num(ws, neginf=-1e30))
+
+
+@pytest.mark.parametrize("Q,P,M,N,k,block", [
+    (1, 4, 16, 100, 10, 64),
+    (4, 8, 32, 1000, 37, 256),     # k unaligned, N % block != 0
+    (2, 4, 16, 130, 200, 128),     # k > N: dead slots
+    (3, 8, 32, 2048, 100, 512),
+])
+def test_topk_batched_oracle_parity(Q, P, M, N, k, block):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(P * M + N))
+    luts = _int_luts(k1, Q, P, M)
+    codes = jax.random.randint(k2, (N, P), 0, M)
+    # duplicated rows across block boundaries: exact ties at the L boundary
+    codes = codes.at[N // 2:N // 2 + 5].set(codes[:5])
+    _check(ops.pq_scan_topk_batched(luts, codes, k, block_n=block),
+           ref.pq_scan_topk_ref(luts, codes, k))
+
+
+def test_topk_batched_bias_and_mask():
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    luts = _int_luts(keys[0], 3, 8, 32)
+    codes = jax.random.randint(keys[1], (777, 8), 0, 32)
+    bias = jax.random.randint(keys[2], (777,), -16, 16).astype(jnp.float32)
+    mask = (jax.random.uniform(keys[3], (3, 777)) < 0.5).astype(jnp.uint8)
+    _check(ops.pq_scan_topk_batched(luts, codes, 50, bias=bias, block_n=256),
+           ref.pq_scan_topk_ref(luts, codes, 50, bias=bias))
+    _check(ops.pq_scan_topk_batched_masked(luts, codes, mask, 50, bias=bias,
+                                           block_n=256),
+           ref.pq_scan_topk_ref(luts, codes, 50, bias=bias, mask=mask))
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_topk_windowed_oracle_parity(masked):
+    keys = jax.random.split(jax.random.PRNGKey(7), 6)
+    Q, P, M, N, A, k = 3, 8, 32, 911, 5, 50
+    luts = _int_luts(keys[0], Q, P, M)
+    codes = jax.random.randint(keys[1], (N, P), 0, M)
+    starts = jax.random.randint(keys[2], (Q, A), 0, N)
+    counts = jnp.minimum(jax.random.randint(keys[3], (Q, A), 0, 200),
+                         N - starts)
+    bases = jax.random.randint(keys[4], (Q, A), -16, 16).astype(jnp.float32)
+    mask = (jax.random.uniform(keys[5], (Q, N)) < 0.7).astype(jnp.uint8)
+    if masked:
+        got = ops.pq_scan_topk_windowed_masked(luts, codes, starts, counts,
+                                               bases, mask, k, block_n=256)
+        want = ref.pq_scan_topk_windowed_ref(luts, codes, starts, counts,
+                                             bases, k, mask=mask)
+    else:
+        got = ops.pq_scan_topk_windowed(luts, codes, starts, counts,
+                                        bases, k, block_n=256)
+        want = ref.pq_scan_topk_windowed_ref(luts, codes, starts, counts,
+                                             bases, k)
+    _check(got, want)
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_topk_paired_oracle_parity(masked):
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    Q, P, M, Nc, k = 3, 8, 32, 700, 64
+    luts = _int_luts(keys[0], Q, P, M)
+    codes = jax.random.randint(keys[1], (Q, Nc, P), 0, M)
+    bias = jax.random.randint(keys[2], (Q, Nc), -16, 16).astype(jnp.float32)
+    mask = (jax.random.uniform(keys[3], (Q, Nc)) < 0.6).astype(jnp.uint8)
+    if masked:
+        got = ops.pq_scan_topk_paired_masked(luts, codes, mask, k,
+                                             bias=bias, block_n=256)
+        want = ref.pq_scan_topk_ref(luts, codes, k, bias=bias, mask=mask)
+    else:
+        got = ops.pq_scan_topk_paired(luts, codes, k, bias=bias, block_n=256)
+        want = ref.pq_scan_topk_ref(luts, codes, k, bias=bias)
+    _check(got, want)
+
+
+def test_topk_jnp_blocked_parity():
+    """The blocked-jnp fused formulations (the 'auto' path off-TPU) honor
+    the exact same contract as the Pallas kernels."""
+    keys = jax.random.split(jax.random.PRNGKey(11), 6)
+    luts = _int_luts(keys[0], 3, 8, 32)
+    codes = jax.random.randint(keys[1], (901, 8), 0, 32)
+    bias = jax.random.randint(keys[2], (901,), -16, 16).astype(jnp.float32)
+    mask = (jax.random.uniform(keys[3], (3, 901)) < 0.5).astype(jnp.uint8)
+    _check(pqs.pq_scan_topk_jnp(luts, codes, 40, bias, mask, block_n=256),
+           ref.pq_scan_topk_ref(luts, codes, 40, bias=bias, mask=mask))
+    starts = jax.random.randint(keys[4], (3, 4), 0, 901)
+    counts = jnp.minimum(
+        jax.random.randint(keys[5], (3, 4), 0, 300), 901 - starts)
+    bases = bias[:12].reshape(3, 4)
+    _check(pqs.pq_scan_topk_windowed_jnp(luts, codes, starts, counts,
+                                         bases, 40, mask, block_n=256),
+           ref.pq_scan_topk_windowed_ref(luts, codes, starts, counts,
+                                         bases, 40, mask=mask))
+    pcodes = jax.random.randint(keys[1], (3, 500, 8), 0, 32)
+    pbias = jax.random.randint(keys[2], (3, 500), -16, 16) \
+        .astype(jnp.float32)
+    pmask = (jax.random.uniform(keys[3], (3, 500)) < 0.6).astype(jnp.uint8)
+    _check(pqs.pq_scan_topk_paired_jnp(luts, pcodes, 64, pbias, pmask,
+                                       block_n=128),
+           ref.pq_scan_topk_ref(luts, pcodes, 64, bias=pbias, mask=pmask))
+
+
+def test_topk_massive_ties_lower_index_first():
+    """A constant LUT makes every row score identically: the top-k must be
+    rows 0..k-1 in order, across block boundaries."""
+    luts = jnp.ones((2, 4, 16), jnp.float32)
+    codes = jax.random.randint(jax.random.PRNGKey(0), (500, 4), 0, 16)
+    for got in (ops.pq_scan_topk_batched(luts, codes, 20, block_n=128),
+                pqs.pq_scan_topk_jnp(luts, codes, 20, block_n=128)):
+        s, i = map(np.asarray, got)
+        np.testing.assert_array_equal(
+            i, np.broadcast_to(np.arange(20), (2, 20)))
+        np.testing.assert_array_equal(s, np.full((2, 20), 4.0))
+
+
+def test_topk_all_rows_masked_dead_slots():
+    """All-False mask: exactly k (-inf, -1) slots — never a garbage index."""
+    luts = _int_luts(jax.random.PRNGKey(1), 2, 4, 16)
+    codes = jax.random.randint(jax.random.PRNGKey(2), (300, 4), 0, 16)
+    zmask = jnp.zeros((2, 300), jnp.uint8)
+    for got in (
+            ops.pq_scan_topk_batched_masked(luts, codes, zmask, 10,
+                                            block_n=128),
+            pqs.pq_scan_topk_jnp(luts, codes, 10, None, zmask, block_n=128)):
+        s, i = map(np.asarray, got)
+        assert (i == -1).all() and np.isneginf(s).all()
+
+
+def test_topk_k_exceeds_live_rows():
+    """Mask leaves fewer than k selectable rows: the tail is dead slots."""
+    luts = _int_luts(jax.random.PRNGKey(4), 2, 4, 16)
+    codes = jax.random.randint(jax.random.PRNGKey(5), (400, 4), 0, 16)
+    mask = jnp.zeros((2, 400), jnp.uint8).at[:, :7].set(1)
+    for got in (
+            ops.pq_scan_topk_batched_masked(luts, codes, mask, 25,
+                                            block_n=128),
+            pqs.pq_scan_topk_jnp(luts, codes, 25, None, mask, block_n=128)):
+        s, i = map(np.asarray, got)
+        assert np.isfinite(s[:, :7]).all() and (i[:, :7] >= 0).all()
+        assert (i[:, 7:] == -1).all() and np.isneginf(s[:, 7:]).all()
+    _check(ops.pq_scan_topk_batched_masked(luts, codes, mask, 25,
+                                           block_n=128),
+           ref.pq_scan_topk_ref(luts, codes, 25, mask=mask))
+
+
+# -- search_batch end to end --------------------------------------------------
+
+@pytest.fixture(scope="module")
+def index():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (3000, 64))
+    ids = jnp.arange(3000, dtype=jnp.int32)
+    return imi.build_imi(jax.random.PRNGKey(1), x, ids,
+                         K=8, P=8, M=32, kmeans_iters=5)
+
+
+QS = jax.random.normal(jax.random.PRNGKey(7), (5, 64))
+
+
+@pytest.mark.parametrize("use_kernel", ["jnp", "pallas"])
+@pytest.mark.parametrize("branch,masked", [
+    ("shared", False), ("shared", True),
+    ("paired", False), ("paired", True),
+])
+def test_search_batch_fused_matches_legacy(index, branch, masked,
+                                           use_kernel):
+    """The fused path must return identical ids (scores to f32 noise) to
+    the legacy materialize-then-top_k path, on both scan branches, with
+    and without the planner's row mask.
+
+    Exact equality relies on the fetch_k-boundary approx scores being
+    distinct (generic for real-valued embeddings): on an exact cross-
+    window score tie the shared-branch fused path breaks by global row id
+    (the oracle's rule) while legacy breaks by probe-window position —
+    see the note in ``search_batch``."""
+    if branch == "shared":
+        kw = dict(top_a=8, max_cell_size=1024)      # covers the index
+    else:
+        kw = dict(top_a=4, max_cell_size=128)
+    cfg_fused = anns.SearchConfig(top_k=32, use_kernel=use_kernel, **kw)
+    cfg_legacy = anns.SearchConfig(top_k=32, use_kernel=use_kernel,
+                                   fused_topk=False, **kw)
+    mask = None
+    if masked:
+        mask = (np.arange(index.n) % 3 != 0)
+        mask = jnp.asarray(mask)
+    rf = anns.search_batch(index, QS, cfg_fused, mask)
+    rl = anns.search_batch(index, QS, cfg_legacy, mask)
+    np.testing.assert_array_equal(np.asarray(rf["ids"]),
+                                  np.asarray(rl["ids"]))
+    np.testing.assert_array_equal(np.asarray(rf["rows"]),
+                                  np.asarray(rl["rows"]))
+    np.testing.assert_allclose(
+        np.nan_to_num(np.asarray(rf["scores"]), neginf=-1e30),
+        np.nan_to_num(np.asarray(rl["scores"]), neginf=-1e30),
+        rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.nan_to_num(np.asarray(rf["approx_scores"]), neginf=-1e30),
+        np.nan_to_num(np.asarray(rl["approx_scores"]), neginf=-1e30),
+        rtol=1e-3, atol=1e-3)
+
+
+def test_search_single_query_fused_matches_legacy(index):
+    cfg_f = anns.SearchConfig(top_a=4, max_cell_size=128, top_k=16)
+    cfg_l = anns.SearchConfig(top_a=4, max_cell_size=128, top_k=16,
+                              fused_topk=False)
+    rf = anns.search(index, QS[0], cfg_f)
+    rl = anns.search(index, QS[0], cfg_l)
+    np.testing.assert_array_equal(np.asarray(rf["ids"]),
+                                  np.asarray(rl["ids"]))
+
+
+def test_search_batch_all_masked_returns_dead_slots(index):
+    cfg = anns.SearchConfig(top_a=8, max_cell_size=1024, top_k=16)
+    res = anns.search_batch(index, QS, cfg,
+                            jnp.zeros((index.n,), jnp.uint8))
+    assert (np.asarray(res["ids"]) == -1).all()
+    assert (np.asarray(res["rows"]) == -1).all()
+    assert np.isneginf(np.asarray(res["scores"])).all()
+
+
+def test_exhaustive_adc_fused_matches_legacy(index):
+    rf = anns.exhaustive_adc(index, QS[0], k=20)
+    rl = anns.exhaustive_adc(index, QS[0], k=20, fused_topk=False)
+    np.testing.assert_array_equal(np.asarray(rf["ids"]),
+                                  np.asarray(rl["ids"]))
+    np.testing.assert_allclose(np.asarray(rf["scores"]),
+                               np.asarray(rl["scores"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_use_kernel_auto_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    expect = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert ops.resolve_use_kernel("auto") == expect
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert ops.resolve_use_kernel("auto") == "pallas"
+    assert ops.resolve_use_kernel("jnp") == "jnp"
+    assert ops.resolve_use_kernel("pallas") == "pallas"
+    with pytest.raises(ValueError):
+        ops.resolve_use_kernel("cuda")
