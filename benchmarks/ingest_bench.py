@@ -1,0 +1,175 @@
+"""Ingest benchmark: sustained multi-camera frame throughput and standing
+query alert latency (append -> emit), DESIGN.md §12.
+
+  PYTHONPATH=src python -m benchmarks.ingest_bench [--smoke]
+
+Frame/text encoders are deterministic fakes (label -> fixed direction) so
+the numbers isolate the ingest pipeline itself — key-frame sampling, WAL
+append, delta evaluation against the standing plans, alert delivery —
+rather than ViT inference, which ``query_pipeline`` already covers.
+
+``--smoke`` gates for CI:
+  * alert p99 append->emit latency under ``GATE_P99_S``;
+  * sustained throughput above ``GATE_FRAMES_PER_S`` frames/s;
+  * delta-only evaluation — total scanned rows must stay below the
+    full-rescan cost ``index_rows * evaluations`` by at least 10x.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+
+import numpy as np
+
+GATE_P99_S = 5.0          # generous: CI runners jit-compile on first eval
+GATE_FRAMES_PER_S = 20.0
+GATE_DELTA_FACTOR = 10.0  # scanned rows must undercut full rescans by this
+
+D = 32
+KP = 4
+LABELS = ["red square", "blue circle", "green triangle", "person walking",
+          "nothing"]
+_BASIS = np.random.default_rng(11).normal(0, 1, (16, D)).astype(np.float32)
+
+
+def _dir(text: str) -> np.ndarray:
+    return _BASIS[zlib.crc32(text.encode()) % 16]
+
+
+def _encode_texts(texts):
+    return np.stack([_dir(t) for t in texts])
+
+
+def _encode_frames(frames):
+    f = frames.shape[0]
+    out = np.zeros((f, KP, D), np.float32)
+    for i in range(f):
+        lab = LABELS[int(round(float(frames[i, 0, 0, 0]) * 10))]
+        d = _dir(lab)
+        for p in range(KP):
+            out[i, p] = d + 0.01 * _BASIS[(p + 7) % 16]
+    return out
+
+
+def _camera_frames(rng, n_frames, res=8):
+    """A stream that is mostly idle with short labelled events."""
+    labels = ["nothing"] * n_frames
+    t = 0
+    while t < n_frames:
+        t += int(rng.integers(4, 12))
+        lab = LABELS[int(rng.integers(0, len(LABELS) - 1))]
+        for k in range(t, min(t + int(rng.integers(2, 5)), n_frames)):
+            labels[k] = lab
+        t += 6
+    out = np.zeros((n_frames, res, res, 3), np.float32)
+    for i, lab in enumerate(labels):
+        out[i, :, :, 0] = LABELS.index(lab) / 10.0
+    return out
+
+
+def main(*, smoke: bool = False) -> dict:
+    import pathlib
+    import shutil
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import imi as imimod
+    from repro.ingest import (CompactionPolicy, CompactionScheduler,
+                              IngestService, MemorySink, ReplayCamera,
+                              StandingQueryRegistry, dedup_by_key)
+    from repro.store import VectorStore
+
+    n_cameras = 2 if smoke else 4
+    n_frames = 96 if smoke else 384
+    base_n = 4_000 if smoke else 20_000
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (base_n, D)).astype(np.float32)
+    idx = imimod.build_imi(jax.random.PRNGKey(0), jnp.asarray(x),
+                           jnp.arange(base_n), K=8, P=4, M=16,
+                           kmeans_iters=4)
+
+    root = pathlib.Path(tempfile.mkdtemp(prefix="lovo-ingest-bench-"))
+    out: dict = {"n_cameras": n_cameras, "n_frames_per_camera": n_frames}
+    try:
+        store = VectorStore.create(root / "s", idx, flush_rows=10 ** 9)
+        cams = [ReplayCamera(_camera_frames(
+            np.random.default_rng(100 + c), n_frames))
+            for c in range(n_cameras)]
+
+        reg = StandingQueryRegistry(_encode_texts, patches_per_frame=KP,
+                                    pad_rows=256)
+        for c in range(n_cameras):
+            reg.register(f"cam{c}", {"and": [{"text": LABELS[c % 4]},
+                                             {"videos": [c]}]},
+                         threshold=0.5, top_k=64)
+
+        sched = CompactionScheduler(store, CompactionPolicy(max_segments=4))
+        svc = IngestService(store, cams, _encode_frames, reg,
+                            sink=MemorySink(), frames_per_step=16,
+                            keyframe_stride=2, checkpoint_every_steps=4,
+                            scheduler=sched)
+        t0 = time.perf_counter()
+        svc.run()
+        wall = time.perf_counter() - t0
+
+        st = svc.stats
+        lat = np.asarray(svc.latencies) if svc.latencies else np.zeros(1)
+        out["wall_s"] = wall
+        out["frames_per_s"] = st.frames_in / max(wall, 1e-9)
+        out["keyframes"] = st.keyframes
+        out["rows"] = st.rows
+        out["evaluations"] = st.evaluations
+        out["alerts"] = st.alerts
+        out["alert_p50_s"] = float(np.percentile(lat, 50))
+        out["alert_p99_s"] = float(np.percentile(lat, 99))
+        out["rows_scanned"] = reg.total_rows_scanned
+        out["full_rescan_rows"] = store.n * max(reg.evaluations, 1)
+        out["delta_factor"] = (out["full_rescan_rows"]
+                               / max(out["rows_scanned"], 1))
+        out["compactions"] = sched.compactions + sched.refreshes
+        out["max_pause_s"] = max(sched.pauses, default=0.0)
+        alerts = svc.sink.sink.alerts
+        out["duplicate_alerts"] = len(alerts) - len(dedup_by_key(alerts))
+        svc.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    print(f"cameras={n_cameras} frames={st.frames_in} "
+          f"({out['frames_per_s']:.1f} frames/s) keyframes={st.keyframes} "
+          f"rows={st.rows}")
+    print(f"alerts={st.alerts} append->emit p50={out['alert_p50_s']*1e3:.1f}ms "
+          f"p99={out['alert_p99_s']*1e3:.1f}ms")
+    print(f"delta-only: scanned {out['rows_scanned']} rows vs "
+          f"{out['full_rescan_rows']} full-rescan ({out['delta_factor']:.0f}x) "
+          f"compactions={out['compactions']} "
+          f"max_pause={out['max_pause_s']*1e3:.1f}ms")
+
+    if out["duplicate_alerts"]:
+        raise SystemExit(f"{out['duplicate_alerts']} duplicate alerts")
+    if smoke:
+        if out["alert_p99_s"] > GATE_P99_S:
+            raise SystemExit(f"alert p99 {out['alert_p99_s']:.2f}s over the "
+                             f"{GATE_P99_S}s gate")
+        if out["frames_per_s"] < GATE_FRAMES_PER_S:
+            raise SystemExit(f"throughput {out['frames_per_s']:.1f} frames/s "
+                             f"under the {GATE_FRAMES_PER_S} gate")
+        if out["delta_factor"] < GATE_DELTA_FACTOR:
+            raise SystemExit(
+                f"delta evaluation scanned {out['rows_scanned']} rows — "
+                f"only {out['delta_factor']:.1f}x below full rescans "
+                f"(gate {GATE_DELTA_FACTOR}x); standing queries are "
+                f"rescanning the base index")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI gate: alert p99 < {GATE_P99_S}s, throughput > "
+                         f"{GATE_FRAMES_PER_S} frames/s, delta-only scan")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -154,6 +154,18 @@ def main() -> None:
                     f"replay={r['wal_replay_rows_per_s']:.0f}rows/s "
                     f"compact8={r['compact_s_deltas8']*1e3:.0f}ms")
 
+    @bench("ingest_standing_queries")
+    def ingest():
+        from benchmarks import ingest_bench
+        t0 = time.perf_counter()
+        r = ingest_bench.main(smoke=args.quick)
+        us = (time.perf_counter() - t0) * 1e6
+        return us, (f"{r['frames_per_s']:.1f}frames/s "
+                    f"alert_p50={r['alert_p50_s']*1e3:.0f}ms "
+                    f"p99={r['alert_p99_s']*1e3:.0f}ms "
+                    f"delta_factor={r['delta_factor']:.0f}x "
+                    f"alerts={r['alerts']}")
+
     @bench("roofline_summary")
     def roof():
         from benchmarks import roofline

@@ -26,6 +26,7 @@ can schedule a retrain (full rebuild) when it degrades.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Optional
 
 import jax
@@ -67,6 +68,19 @@ class SegmentedIndex:
         self.segment_capacity = segment_capacity
         self.persistence = persistence
         self.tombstones: set[int] = set()
+        # compaction generation: bumped on every base swap.  Readers that
+        # cache base-aligned state (alive bitmaps, positional masks, the
+        # ingest registry's delta cursors) key it to know their view is
+        # stale.  The swap itself happens under ``_swap_lock`` so a reader
+        # never observes the new base paired with the old delta list (which
+        # would double-count rows) or the old base with the emptied list
+        # (which would drop them).
+        self.generation = 0
+        self._swap_lock = threading.Lock()
+        # reader-visible pause of the most recent base swap (seconds of
+        # _swap_lock hold time) — the compaction scheduler's pause-bound
+        # instrumentation (DESIGN.md §12.4)
+        self.last_swap_pause_s = 0.0
         # (n_tombstones, host bool (N,), device copy) — rebuilt only when
         # deletes/compaction change it, so masked search costs no per-query
         # O(N) host pass or host->device upload
@@ -75,21 +89,26 @@ class SegmentedIndex:
         # estimated on a strided row sample: decoding the WHOLE base would
         # materialize an (N, D') f32 copy — unacceptable for streaming-built
         # indexes sized near host memory
-        n = base.n
-        rows = jnp.arange(0, n, max(1, n // self._RESID_SAMPLE))
-        rec = pqmod.pq_decode(base.pq, base.codes[rows])
-        self._train_resid = float(jnp.mean(jnp.sum(jnp.square(
-            rec - self._base_residuals(rows)), axis=-1)))
+        self._train_resid = self._resid_baseline(base)
 
     _RESID_SAMPLE = 4096  # rows used for the drift baseline estimate
 
-    def _base_residuals(self, rows: jax.Array) -> jax.Array:
-        K = self.base.K
-        cell = self.base.cell_of[rows]
-        c1 = self.base.coarse1[cell // K]
-        c2 = self.base.coarse2[cell % K]
+    @classmethod
+    def _resid_baseline(cls, base: IMIIndex) -> float:
+        n = base.n
+        rows = jnp.arange(0, n, max(1, n // cls._RESID_SAMPLE))
+        rec = pqmod.pq_decode(base.pq, base.codes[rows])
+        return float(jnp.mean(jnp.sum(jnp.square(
+            rec - cls._base_residuals(base, rows)), axis=-1)))
+
+    @staticmethod
+    def _base_residuals(base: IMIIndex, rows: jax.Array) -> jax.Array:
+        K = base.K
+        cell = base.cell_of[rows]
+        c1 = base.coarse1[cell // K]
+        c2 = base.coarse2[cell % K]
         coarse = jnp.concatenate([c1, c2], axis=-1)
-        return self.base.vectors[rows].astype(jnp.float32) - coarse
+        return base.vectors[rows].astype(jnp.float32) - coarse
 
     @property
     def n(self) -> int:
@@ -145,13 +164,13 @@ class SegmentedIndex:
         self.tombstones.update({int(i) for i in ids})
         self._alive_cache = None
 
-    def _alive_base_mask(self, tombstones: set
+    def _alive_base_mask(self, tombstones: set, base: Optional[IMIIndex] = None
                          ) -> tuple[np.ndarray, jax.Array]:
         """(host, device) validity bitmap over base rows for the given
         tombstone snapshot; cached until deletes/compaction invalidate it."""
         cache = self._alive_cache
         if cache is None or cache[0] != len(tombstones):
-            host = ~np.isin(np.asarray(self.base.ids),
+            host = ~np.isin(np.asarray((base or self.base).ids),
                             np.fromiter(tombstones, imimod.ID_DTYPE))
             cache = (len(tombstones), host, jnp.asarray(host))
             self._alive_cache = cache
@@ -182,43 +201,68 @@ class SegmentedIndex:
         its (top_k,) survivors directly, and the (small) delta segments
         are brute-scored and merged against that fused output below —
         dead padding slots (id -1 / -inf) are dropped before the merge so
-        they can never displace a live delta row.  ``row_mask`` lets callers (the query planner)
-        stack their own BASE-row filters on top; it is positional over
-        base rows, so it cannot describe rows still sitting in delta
-        segments — passing one while deltas are pending raises instead of
-        silently leaking unfiltered delta rows (``compact()`` first).
+        they can never displace a live delta row.
+
+        ``row_mask`` lets callers (the query planner, the ingest standing-
+        query registry) stack their own filters on top.  It is positional:
+        either length ``base.n`` (base rows only — accepted only while no
+        delta rows are pending, since such a mask cannot describe them) or
+        length ``base.n + sum(delta rows)`` (base rows first, then delta
+        rows in segment append order — the live-index layout the ingest
+        path filters while segments are pending).  Any other length, or a
+        base-only mask with pending deltas, raises instead of silently
+        leaking unfiltered delta rows.
 
         Safe to call from reader threads concurrent with the single writer:
-        segments/tombstones are snapshotted with C-level copies (atomic
-        under the GIL), so a racing insert/delete is either fully visible
-        or not yet — never a torn view.
+        base/segments/tombstones are snapshotted under ``_swap_lock`` (so
+        a racing ``compact()`` swap is either fully visible or not at all),
+        and the C-level copies mean a racing insert/delete is never torn.
         """
-        segments = list(self.segments)
-        tombstones = set(self.tombstones)
+        with self._swap_lock:
+            base = self.base
+            segments = list(self.segments)
+            tombstones = set(self.tombstones)
+        n_base = base.n
+        n_delta = sum(len(s.ids) for s in segments)
         mask = None if row_mask is None \
-            else np.ascontiguousarray(row_mask, bool)
-        if mask is not None and any(len(s.ids) for s in segments):
-            raise ValueError(
-                "row_mask is positional over base rows and cannot filter "
-                "pending delta segments — compact() before masked search")
+            else np.ascontiguousarray(row_mask, bool).reshape(-1)
+        delta_mask = None
+        if mask is not None:
+            if len(mask) == n_base + n_delta and n_delta:
+                mask, delta_mask = mask[:n_base], mask[n_base:]
+            elif len(mask) != n_base:
+                raise ValueError(
+                    f"row_mask length {len(mask)} matches neither base rows "
+                    f"({n_base}) nor base+delta rows ({n_base + n_delta})")
+            elif n_delta:
+                raise ValueError(
+                    "row_mask is positional over base rows and cannot filter "
+                    "pending delta segments — pass a base+delta mask of "
+                    f"length {n_base + n_delta} (base rows first, then delta "
+                    "rows in append order) or compact() first")
         tomb = None
         dev_mask = None if mask is None else jnp.asarray(mask)
         if tombstones:
             tomb = np.fromiter(tombstones, imimod.ID_DTYPE)
-            alive_host, alive_dev = self._alive_base_mask(tombstones)
+            alive_host, alive_dev = self._alive_base_mask(tombstones, base)
             dev_mask = alive_dev if mask is None \
                 else jnp.asarray(mask & alive_host)
-        res = anns.search(self.base, q, cfg, dev_mask)
+        res = anns.search(base, q, cfg, dev_mask)
         ids = np.asarray(res["ids"])
         scores = np.asarray(res["scores"])
         # drop exactly-k padding slots (id -1 / -inf score) before merging
         live = np.isfinite(scores)
         ids, scores = ids[live], scores[live]
         qn = np.asarray(pqmod.normalize(jnp.asarray(q, jnp.float32)))
+        cursor = 0
         for seg in segments:
-            if not len(seg.ids):
+            n_seg = len(seg.ids)
+            if not n_seg:
                 continue
-            keep = np.ones(len(seg.ids), bool)
+            keep = np.ones(n_seg, bool)
+            if delta_mask is not None:
+                keep &= delta_mask[cursor: cursor + n_seg]
+            cursor += n_seg
             if tomb is not None:
                 keep &= ~np.isin(seg.ids, tomb)
             ids = np.concatenate([ids, seg.ids[keep]])
@@ -226,13 +270,70 @@ class SegmentedIndex:
         order = np.argsort(-scores)[: cfg.top_k]
         return {"ids": ids[order], "scores": scores[order]}
 
+    # -- ingest bridge --------------------------------------------------------
+    def rows_since(self, watermark: int) -> dict[str, np.ndarray]:
+        """Gather every live row whose id is ``> watermark``, sorted by id.
+
+        This is the standing-query registry's delta cursor (DESIGN.md §12):
+        ingested ids are assigned monotonically, so "rows newer than the
+        subscription's generation" is exactly ``ids > watermark``.  The
+        common case finds them all in the (small) pending delta segments;
+        only when a compaction folded un-evaluated rows into the base does
+        the gather fall back to an O(N) id scan of the base — the registry
+        evaluates before the scheduler compacts, so that path is rare.
+
+        Returns host arrays ``codes`` (n, P), ``vectors`` (n, D') f32,
+        ``cells`` (n,), ``ids`` (n,) — id-sorted, which restores frame-major
+        append order for ids laid out as ``frame_seq * patches + patch``.
+        """
+        with self._swap_lock:
+            base = self.base
+            segments = list(self.segments)
+            tombstones = set(self.tombstones)
+        parts = []
+        for seg in segments:
+            sel = seg.ids > watermark
+            if sel.any():
+                parts.append((seg.codes[sel],
+                              np.asarray(seg.vectors, np.float32)[sel],
+                              seg.cell_of[sel], seg.ids[sel]))
+        base_ids = np.asarray(base.ids)
+        sel = base_ids > watermark
+        if sel.any():
+            parts.append((np.asarray(base.codes)[sel],
+                          np.asarray(base.vectors)[sel].astype(np.float32),
+                          np.asarray(base.cell_of)[sel], base_ids[sel]))
+        if not parts:
+            e = np.empty
+            return {"codes": e((0, base.codes.shape[1]), np.uint8),
+                    "vectors": e((0, base.vectors.shape[1]), np.float32),
+                    "cells": e((0,), np.int32),
+                    "ids": e((0,), imimod.ID_DTYPE)}
+        codes = np.concatenate([p[0] for p in parts])
+        vectors = np.concatenate([p[1] for p in parts])
+        cells = np.concatenate([p[2] for p in parts])
+        ids = np.concatenate([p[3] for p in parts])
+        if tombstones:
+            keep = ~np.isin(ids, np.fromiter(tombstones, imimod.ID_DTYPE))
+            codes, vectors, cells, ids = (codes[keep], vectors[keep],
+                                          cells[keep], ids[keep])
+        order = np.argsort(ids, kind="stable")
+        return {"codes": codes[order], "vectors": vectors[order],
+                "cells": cells[order].astype(np.int32), "ids": ids[order]}
+
     # -- maintenance ----------------------------------------------------------
     def compact(self) -> None:
         """Segmented rebuild: merge deltas into a new cell-sorted base.
-        Reuses stored codes/cells — no re-encoding, one sort + concat."""
+        Reuses stored codes/cells — no re-encoding, one sort + concat.
+
+        The rebuild runs entirely on the side; searches keep serving the
+        pre-compaction generation until the O(1) pointer swap at the end
+        (under ``_swap_lock``), so the reader-visible pause is bounded by
+        the swap, not the merge (DESIGN.md §12.4)."""
         if not self.segments and not self.tombstones:
             return
         base = self.base
+        tombstones = set(self.tombstones)
         codes = np.concatenate([np.asarray(base.codes)]
                                + [s.codes for s in self.segments])
         vectors = np.concatenate(
@@ -242,16 +343,15 @@ class SegmentedIndex:
                              + [s.ids for s in self.segments])
         cells = np.concatenate([np.asarray(base.cell_of)]
                                + [s.cell_of for s in self.segments])
-        if self.tombstones:
-            keep = ~np.isin(ids, np.fromiter(self.tombstones, imimod.ID_DTYPE))
+        if tombstones:
+            keep = ~np.isin(ids, np.fromiter(tombstones, imimod.ID_DTYPE))
             codes, vectors, ids, cells = (codes[keep], vectors[keep],
                                           ids[keep], cells[keep])
-            self.tombstones.clear()
         order = np.argsort(cells, kind="stable")
         K2 = base.K * base.K
         counts = np.bincount(cells, minlength=K2)
         offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
-        self.base = IMIIndex(
+        new_base = IMIIndex(
             coarse1=base.coarse1, coarse2=base.coarse2, pq=base.pq,
             codes=jnp.asarray(codes[order]),
             vectors=jnp.asarray(vectors[order], jnp.bfloat16),
@@ -259,7 +359,37 @@ class SegmentedIndex:
             cell_of=jnp.asarray(cells[order], jnp.int32),
             cell_offsets=jnp.asarray(offsets),
         )
-        self.segments = []
-        self._alive_cache = None   # base rows changed; tombstones folded
+        import time as _time
+        t_swap = _time.perf_counter()
+        with self._swap_lock:   # the bounded pause: pointer swaps only
+            self.base = new_base
+            self.segments = []
+            self.tombstones.clear()
+            self._alive_cache = None   # base rows changed; tombstones folded
+            self.generation += 1
+        self.last_swap_pause_s = _time.perf_counter() - t_swap
         if self.persistence is not None:
             self.persistence.on_compact(self)
+
+    def swap_base(self, new_base: IMIIndex) -> None:
+        """Install a rebuilt base — the codebook-refresh commit point.
+
+        Requires no pending deltas (``compact()`` first: the new base
+        must already contain every row).  Resets the drift baseline to
+        the NEW codebooks (the refresh changes what "training-time
+        residual energy" means) and bumps the generation, all under the
+        same bounded-pause swap discipline as :meth:`compact`."""
+        if self.segments:
+            raise ValueError(
+                "swap_base with pending delta segments would drop their "
+                "rows — compact() first")
+        baseline = self._resid_baseline(new_base)
+        import time as _time
+        t_swap = _time.perf_counter()
+        with self._swap_lock:
+            self.base = new_base
+            self.tombstones.clear()
+            self._alive_cache = None
+            self._train_resid = baseline
+            self.generation += 1
+        self.last_swap_pause_s = _time.perf_counter() - t_swap

@@ -15,29 +15,69 @@ from __future__ import annotations
 import numpy as np
 
 
-def motion_energy(frames: np.ndarray) -> np.ndarray:
-    """(T, H, W, 3) -> (T,) mean abs inter-frame delta; e[0] = 0."""
+def motion_energy(frames: np.ndarray,
+                  prev_frame: np.ndarray | None = None) -> np.ndarray:
+    """(T, H, W, 3) -> (T,) mean abs inter-frame delta.
+
+    ``prev_frame``: the last frame of the PRECEDING chunk, for streaming
+    callers that feed a video in pieces (the ingest pipeline) — with it,
+    e[0] is the real motion across the chunk boundary instead of the
+    batch-mode 0 sentinel, so a scene cut landing exactly on a boundary is
+    still a peak."""
     d = np.abs(np.diff(frames.astype(np.float32), axis=0)).mean(axis=(1, 2, 3))
-    return np.concatenate([[0.0], d])
+    if prev_frame is None:
+        e0 = 0.0
+    else:
+        e0 = float(np.abs(frames[0].astype(np.float32)
+                          - prev_frame.astype(np.float32)).mean())
+    return np.concatenate([[e0], d])
 
 
 def extract_keyframes(frames: np.ndarray, *, stride: int = 8,
                       peak_sigma: float = 1.0,
-                      max_keyframes: int | None = None) -> np.ndarray:
-    """Returns sorted key-frame indices (always includes frame 0)."""
+                      max_keyframes: int | None = None,
+                      prev_frame: np.ndarray | None = None,
+                      offset: int = 0,
+                      always_first: bool = True) -> np.ndarray:
+    """Returns sorted key-frame indices (always includes frame 0 in batch
+    mode).
+
+    Streaming extension (DESIGN.md §12.1): the ingest pipeline feeds one
+    video in chunks, so three knobs make chunked extraction equal to the
+    batch pass over the concatenated frames:
+
+      * ``prev_frame`` — last frame of the previous chunk; gives e[0] its
+        real cross-boundary motion energy (see :func:`motion_energy`).
+      * ``offset`` — the chunk's global start index; temporal-stride picks
+        stay phase-locked to the video, not to chunk boundaries.
+      * ``always_first`` — False drops the unconditional frame-0 pick, so
+        a chunk's first frame competes on energy like any other (only the
+        true start of a stream should keep the guarantee).
+
+    ``max_keyframes`` is the sampling BUDGET: when the candidate set
+    exceeds it, the highest-energy subset is kept.  The ingest bandit
+    (``repro.ingest.sampler``) allocates this budget across cameras.
+    """
     T = frames.shape[0]
-    energy = motion_energy(frames)
-    picks = set(range(0, T, stride))
+    energy = motion_energy(frames, prev_frame)
+    picks = {t for t in range(T) if (t + offset) % stride == 0}
+    if always_first:
+        picks.add(0)
     thresh = energy.mean() + peak_sigma * energy.std()
-    for t in range(1, T - 1):
-        if energy[t] > thresh and energy[t] >= energy[t - 1] \
+    lo = 0 if prev_frame is not None else 1
+    for t in range(lo, T - 1):
+        left = energy[t - 1] if t > 0 else 0.0
+        if energy[t] > thresh and energy[t] >= left \
                 and energy[t] >= energy[t + 1]:
             picks.add(t)
     idx = np.asarray(sorted(picks), np.int32)
     if max_keyframes is not None and len(idx) > max_keyframes:
-        # keep the highest-energy subset but always frame 0
+        # keep the highest-energy subset (plus frame 0 where guaranteed)
         order = np.argsort(-energy[idx])
-        keep = set(idx[order[: max_keyframes - 1]].tolist()) | {0}
+        if always_first:
+            keep = set(idx[order[: max_keyframes - 1]].tolist()) | {0}
+        else:
+            keep = set(idx[order[: max_keyframes]].tolist())
         idx = np.asarray(sorted(keep), np.int32)
     return idx
 

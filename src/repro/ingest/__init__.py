@@ -1,0 +1,25 @@
+"""repro.ingest — live multi-camera ingest with standing queries.
+
+Turns the batch "scan at ask" pipeline into "query at ingest"
+(DESIGN.md §12): cameras feed adaptive key-frame sampling, sampled
+frames encode into the WAL-backed store's delta segments, every ingested
+chunk is evaluated against registered plan trees with one batched masked
+scan over only the new rows, and matches become at-least-once alerts.
+"""
+from repro.ingest.alerts import (Alert, AlertSink, JsonlSink, MemorySink,
+                                 RetryingSink, dedup_by_key)
+from repro.ingest.compaction import CompactionPolicy, CompactionScheduler
+from repro.ingest.pipeline import (FrameSource, IngestService, IngestStats,
+                                   ReplayCamera, synthetic_camera)
+from repro.ingest.registry import (DeltaChunk, EvalStats,
+                                   StandingQueryRegistry, Subscription,
+                                   plan_fingerprint)
+from repro.ingest.sampler import CameraBandit
+
+__all__ = [
+    "Alert", "AlertSink", "JsonlSink", "MemorySink", "RetryingSink",
+    "dedup_by_key", "CompactionPolicy", "CompactionScheduler",
+    "FrameSource", "IngestService", "IngestStats", "ReplayCamera",
+    "synthetic_camera", "DeltaChunk", "EvalStats", "StandingQueryRegistry",
+    "Subscription", "plan_fingerprint", "CameraBandit",
+]

@@ -1,0 +1,218 @@
+"""Alert records and delivery sinks for the standing-query registry.
+
+Delivery contract (DESIGN.md §12.3): **at-least-once**.  Alerts are
+enqueued into a bounded retry queue; the queue is part of the ingest
+service's checkpointed state, so alerts that were evaluated but not yet
+delivered when the process died are re-delivered after reopen.  The one
+unavoidable duplicate window is "delivered, then crashed before the next
+checkpoint" — consumers that need exactly-once de-duplicate on
+:attr:`Alert.key`, which is deterministic for a given (plan, camera,
+frame).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from typing import Callable, Optional, Protocol, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Alert:
+    """One standing-query match.
+
+    ``frame`` is the source-frame index within the camera's stream (the
+    stable coordinate a consumer can seek to); ``frame_seq`` is the
+    global key-frame row the match was found at (index provenance).
+    """
+
+    subscription: str   # registry name of the subscription
+    fingerprint: str    # canonical plan fingerprint (sha1 prefix)
+    camera: int
+    frame: int
+    score: float
+    frame_seq: int = -1
+
+    @property
+    def key(self) -> tuple[str, int, int]:
+        """Deterministic identity for consumer-side dedup."""
+        return (self.fingerprint, self.camera, self.frame)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "Alert":
+        return cls(subscription=str(obj["subscription"]),
+                   fingerprint=str(obj["fingerprint"]),
+                   camera=int(obj["camera"]), frame=int(obj["frame"]),
+                   score=float(obj["score"]),
+                   frame_seq=int(obj.get("frame_seq", -1)))
+
+
+class AlertSink(Protocol):
+    """Anything that accepts a batch of alerts; raising = delivery failed
+    (the retry queue keeps the batch and backs off)."""
+
+    def emit(self, alerts: Sequence[Alert]) -> None: ...
+
+
+class MemorySink:
+    """In-process sink (tests, benchmarks, the serve demo)."""
+
+    def __init__(self) -> None:
+        self.alerts: list[Alert] = []
+
+    def emit(self, alerts: Sequence[Alert]) -> None:
+        self.alerts.extend(alerts)
+
+
+class JsonlSink:
+    """Durable append-only sink: one JSON object per line, fsync'd per
+    batch — the file survives the process, so a reopened consumer can
+    dedup by :attr:`Alert.key` over the whole history."""
+
+    def __init__(self, path, *, fsync: bool = True):
+        self.path = os.fspath(path)
+        self.fsync = fsync
+
+    def emit(self, alerts: Sequence[Alert]) -> None:
+        if not alerts:
+            return
+        with open(self.path, "a", encoding="utf-8") as f:
+            for a in alerts:
+                f.write(json.dumps(a.to_json(), sort_keys=True) + "\n")
+            f.flush()
+            if self.fsync:
+                os.fsync(f.fileno())
+
+    @staticmethod
+    def read(path) -> list[Alert]:
+        out = []
+        try:
+            with open(os.fspath(path), encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        out.append(Alert.from_json(json.loads(line)))
+        except FileNotFoundError:
+            pass
+        return out
+
+
+class RetryingSink:
+    """Bounded retry/backoff queue in front of any :class:`AlertSink`.
+
+    ``enqueue`` never blocks and never raises: when the queue is full the
+    OLDEST alerts are dropped (and counted in ``dropped``) — live alerts
+    about the present beat a backlog about the past.  ``try_deliver``
+    attempts one delivery of the whole queue, respecting exponential
+    backoff after failures; ``drain`` blocks until empty or timeout (the
+    graceful-shutdown path).
+
+    The pending queue is exposed for checkpointing (``pending_alerts`` /
+    ``load_pending``): the ingest service persists it BEFORE delivering,
+    which is what makes the delivery contract at-least-once across
+    crashes instead of at-most-once.
+    """
+
+    def __init__(self, sink: AlertSink, *, max_queue: int = 4096,
+                 base_backoff_s: float = 0.05, max_backoff_s: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.sink = sink
+        self.max_queue = int(max_queue)
+        self.base_backoff_s = float(base_backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
+        self._clock = clock
+        self._sleep = sleep
+        self._queue: deque[Alert] = deque()
+        self._failures = 0
+        self._next_attempt = 0.0
+        self.delivered = 0
+        self.dropped = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_alerts(self) -> list[Alert]:
+        return list(self._queue)
+
+    def load_pending(self, alerts: Sequence[Alert]) -> None:
+        """Restore a checkpointed queue (reopen path); de-duplicates
+        against whatever is already queued by alert key."""
+        have = {a.key for a in self._queue}
+        for a in alerts:
+            if a.key not in have:
+                self._queue.append(a)
+                have.add(a.key)
+        self._trim()
+
+    def enqueue(self, alerts: Sequence[Alert]) -> None:
+        self._queue.extend(alerts)
+        self._trim()
+
+    def emit(self, alerts: Sequence[Alert]) -> None:
+        """AlertSink-compatible convenience: enqueue + one attempt."""
+        self.enqueue(alerts)
+        self.try_deliver()
+
+    def try_deliver(self) -> bool:
+        """One delivery attempt of the whole queue (all-or-nothing per
+        attempt).  Honors the backoff window; returns True if the queue
+        is empty afterwards."""
+        if not self._queue:
+            return True
+        now = self._clock()
+        if now < self._next_attempt:
+            return False
+        batch = list(self._queue)
+        try:
+            self.sink.emit(batch)
+        except Exception:
+            self._failures += 1
+            backoff = min(self.base_backoff_s * (2 ** (self._failures - 1)),
+                          self.max_backoff_s)
+            self._next_attempt = now + backoff
+            return False
+        for _ in batch:
+            self._queue.popleft()
+        self.delivered += len(batch)
+        self._failures = 0
+        self._next_attempt = 0.0
+        return not self._queue
+
+    def drain(self, timeout_s: float = 5.0) -> bool:
+        """Blocking flush (shutdown path): retry until the queue is empty
+        or ``timeout_s`` passes.  Returns True when fully drained."""
+        deadline = self._clock() + timeout_s
+        while self._queue:
+            if self.try_deliver():
+                return True
+            now = self._clock()
+            if now >= deadline:
+                return False
+            self._sleep(min(max(self._next_attempt - now, 1e-3),
+                            deadline - now))
+        return True
+
+    def _trim(self) -> None:
+        while len(self._queue) > self.max_queue:
+            self._queue.popleft()
+            self.dropped += 1
+
+
+def dedup_by_key(alerts: Sequence[Alert]) -> list[Alert]:
+    """Consumer-side helper: first occurrence per :attr:`Alert.key` (the
+    exactly-once view over an at-least-once stream)."""
+    seen: set = set()
+    out = []
+    for a in alerts:
+        if a.key not in seen:
+            seen.add(a.key)
+            out.append(a)
+    return out

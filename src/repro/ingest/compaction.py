@@ -1,0 +1,125 @@
+"""Background compaction scheduling for live ingest (DESIGN.md §12.4).
+
+The ingest loop appends delta segments; somebody has to fold them back
+into the cell-sorted base (search over deltas is a brute scan) and watch
+for codebook drift.  This module keeps that work OFF the hot path:
+
+  * :class:`CompactionPolicy` decides *whether* maintenance is due from
+    delta-segment pressure (count, rows) and ``drift_score()``;
+  * :class:`CompactionScheduler` runs the decision either cooperatively
+    (``maybe_run`` from the ingest loop's checkpoint slot) or in a
+    background thread (``start``/``stop``), serialized against the
+    ingest writer through a shared lock.
+
+The reader-visible pause is bounded by the base pointer swap, not the
+merge: ``SegmentedIndex.compact`` builds the new base on the side and
+swaps under its lock (``last_swap_pause_s`` records the lock hold time,
+collected here into ``pauses`` so the bench can assert the bound).
+
+When drift exceeds ``refresh_drift``, the scheduler escalates from a
+code-reusing compact to a full codebook refresh
+(``VectorStore.refresh_codebooks``): retrain on the current vectors,
+re-encode, atomically swap base + codebooks.  That is the expensive
+remedy for a shifted stream distribution — off by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+
+@dataclasses.dataclass
+class CompactionPolicy:
+    """When is maintenance due?  Any satisfied trigger compacts; the
+    drift escalation (``refresh_drift``) retrains instead."""
+
+    max_segments: int = 3        # pending delta segments
+    max_delta_rows: int = 50_000  # total rows across deltas
+    max_drift: float = 1.5       # drift_score() beyond this -> compact
+    refresh_drift: Optional[float] = None  # beyond this -> codebook refresh
+
+    def decide(self, seg) -> Optional[str]:
+        """-> "refresh" | "compact" | None for a ``SegmentedIndex``."""
+        has_pending = bool(seg.segments) or bool(seg.tombstones)
+        if not has_pending:
+            return None
+        drift = seg.drift_score()
+        if self.refresh_drift is not None and drift > self.refresh_drift:
+            return "refresh"
+        n_delta = sum(len(s.ids) for s in seg.segments)
+        if len(seg.segments) > self.max_segments \
+                or n_delta > self.max_delta_rows \
+                or (seg.segments and drift > self.max_drift):
+            return "compact"
+        return None
+
+
+class CompactionScheduler:
+    """Runs :class:`CompactionPolicy` decisions against a store.
+
+    ``store`` is a :class:`repro.store.VectorStore` (or anything with
+    ``to_segmented_index()``/``compact()``; ``refresh_codebooks()`` is
+    optional — without it, "refresh" degrades to "compact").  ``lock``
+    serializes maintenance against the writer; :class:`IngestService`
+    installs its own write lock here when given a scheduler.
+    """
+
+    def __init__(self, store, policy: Optional[CompactionPolicy] = None, *,
+                 interval_s: float = 0.05,
+                 lock: Optional[threading.Lock] = None):
+        self.store = store
+        self.seg = store.to_segmented_index()
+        self.policy = policy or CompactionPolicy()
+        self.interval_s = float(interval_s)
+        self.lock = lock or threading.Lock()
+        self.compactions = 0
+        self.refreshes = 0
+        self.pauses: list[float] = []   # reader-visible swap pauses (s)
+        self.last_error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_run(self) -> Optional[str]:
+        """One cooperative maintenance slot: decide and (maybe) act.
+        Returns the action taken ("compact" / "refresh") or None."""
+        action = self.policy.decide(self.seg)
+        if action is None:
+            return None
+        with self.lock:
+            if action == "refresh" \
+                    and hasattr(self.store, "refresh_codebooks"):
+                self.store.refresh_codebooks()
+                self.refreshes += 1
+            else:
+                self.store.compact()
+                self.compactions += 1
+                action = "compact"
+        pause = getattr(self.seg, "last_swap_pause_s", None)
+        if pause is not None:
+            self.pauses.append(pause)
+        return action
+
+    # -- background thread ----------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.wait(self.interval_s):
+                try:
+                    self.maybe_run()
+                except BaseException as e:  # keep the thread alive
+                    self.last_error = e
+
+        self._thread = threading.Thread(target=loop, name="lovo-compaction",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout_s: float = 5.0) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout_s)
+        self._thread = None

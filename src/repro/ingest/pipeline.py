@@ -1,0 +1,453 @@
+"""Live multi-camera ingest service (DESIGN.md §12.1).
+
+Wires the existing seams into a continuously running loop:
+
+    cameras --frames--> adaptive key-frame sampling (CameraBandit budget)
+            --encode--> WAL-backed VectorStore (SegmentedIndex deltas)
+            --rows_since--> StandingQueryRegistry (delta-only evaluation)
+            --alerts--> RetryingSink (at-least-once delivery)
+
+Single writer: :meth:`IngestService.step` is the only index mutator; the
+compaction scheduler shares the service's write lock so background
+``compact()`` never interleaves with an insert.
+
+Crash consistency (DESIGN.md §12.3): frame attribution metadata (which
+camera/source-frame produced each key-frame row) is written to a
+frame-meta log and fsync'd BEFORE the vector rows enter the store WAL —
+so a row that survives a crash can always be re-attributed on reopen.  A
+meta record whose rows never reached the WAL (crash in between) is a
+*dangling tail*: reopen trims it and rewinds the camera to re-consume
+those frames.  Watermarks, seen-sets, the bandit posterior, camera
+positions, and the undelivered-alert queue checkpoint atomically to
+``ingest-state.json``; replayed-but-unevaluated rows are evaluated once
+at reopen — the exactly-once alert path exercised by the crash tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from collections import deque
+from typing import Callable, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core import imi as imimod
+from repro.data import video as videomod
+from repro.ingest.alerts import Alert, MemorySink, RetryingSink
+from repro.ingest.registry import DeltaChunk, StandingQueryRegistry
+from repro.ingest.sampler import CameraBandit
+
+META_LOG = "ingest-frames.log"
+STATE_FILE = "ingest-state.json"
+
+# frames (F, H, W, 3) -> patch embeddings (F, patches_per_frame, D')
+EncodeFramesFn = Callable[[np.ndarray], np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Frame sources
+# ---------------------------------------------------------------------------
+class FrameSource(Protocol):
+    """A camera: hands out consecutive frame chunks; seekable so the
+    service can rewind to a checkpointed position after a crash."""
+
+    pos: int
+
+    def read(self, max_frames: int) -> Optional[np.ndarray]: ...
+
+    def seek(self, pos: int) -> None: ...
+
+
+class ReplayCamera:
+    """Replays a prerecorded (T, H, W, 3) array in chunks — the test and
+    benchmark camera, and the recovery model for any source that can
+    rewind (a file, a segment store, a broker with offsets)."""
+
+    def __init__(self, frames: np.ndarray):
+        self.frames = frames
+        self.pos = 0
+
+    def read(self, max_frames: int) -> Optional[np.ndarray]:
+        if self.pos >= len(self.frames):
+            return None
+        chunk = self.frames[self.pos: self.pos + max_frames]
+        self.pos += len(chunk)
+        return chunk
+
+    def seek(self, pos: int) -> None:
+        self.pos = min(int(pos), len(self.frames))
+
+
+def synthetic_camera(seed: int, *, n_frames: int = 96, res: int = 64,
+                     max_objects: int = 3
+                     ) -> tuple[ReplayCamera, list[str]]:
+    """One synthetic camera stream (``data/synthetic.py`` world) plus the
+    ground-truth object captions that appear in it — callers register
+    standing queries for captions they expect to fire."""
+    from repro.data import synthetic
+
+    rng = np.random.default_rng(seed)
+    vid = synthetic.make_video(rng, n_frames=n_frames, res=res,
+                               max_objects=max_objects)
+    captions = sorted({o.caption() for objs in vid.objects for o in objs})
+    return ReplayCamera(vid.frames), captions
+
+
+# ---------------------------------------------------------------------------
+# Service
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class IngestStats:
+    steps: int = 0
+    frames_in: int = 0        # raw frames consumed from cameras
+    keyframes: int = 0        # frames that passed sampling and were encoded
+    rows: int = 0             # index rows appended
+    evaluations: int = 0
+    rows_scanned: int = 0     # delta rows scanned by standing queries
+    alerts: int = 0
+
+
+class IngestService:
+    """Continuous ingest over a :class:`repro.store.VectorStore`.
+
+    ``encode_frames``: (F, H, W, 3) -> (F, patches_per_frame, D') patch
+    embeddings (the serving path binds the ViT; tests bind cheap
+    deterministic projections).  ``registry`` supplies the standing
+    queries; ``sink`` receives alerts (wrapped in a
+    :class:`RetryingSink` unless it already is one).
+
+    Construction recovers any previous ingest session found next to the
+    store (frame-meta log + state file) and evaluates replayed rows the
+    registry has not seen — alerts for those are enqueued exactly once.
+    """
+
+    def __init__(self, store, cameras: Sequence[FrameSource],
+                 encode_frames: EncodeFramesFn,
+                 registry: StandingQueryRegistry, *,
+                 sink=None, bandit: Optional[CameraBandit] = None,
+                 frames_per_step: int = 16, keyframe_stride: int = 4,
+                 peak_sigma: float = 1.0,
+                 keyframe_budget: Optional[int] = None,
+                 checkpoint_every_steps: int = 8,
+                 scheduler=None, auto_recover: bool = True):
+        import threading
+
+        self.store = store
+        self.seg = store.to_segmented_index()
+        self.cameras = list(cameras)
+        self.encode_frames = encode_frames
+        self.registry = registry
+        self.sink = sink if isinstance(sink, RetryingSink) \
+            else RetryingSink(sink if sink is not None else MemorySink())
+        self.bandit = bandit or CameraBandit(len(self.cameras))
+        self.frames_per_step = int(frames_per_step)
+        self.keyframe_stride = int(keyframe_stride)
+        self.peak_sigma = float(peak_sigma)
+        self.keyframe_budget = int(
+            keyframe_budget if keyframe_budget is not None
+            else len(self.cameras) * max(1, frames_per_step // keyframe_stride))
+        self.checkpoint_every_steps = int(checkpoint_every_steps)
+        self.scheduler = scheduler
+        self.write_lock = threading.Lock()
+        if scheduler is not None:
+            scheduler.lock = self.write_lock
+
+        root = pathlib.Path(store.root)
+        self.meta_log_path = root / META_LOG
+        self.state_path = root / STATE_FILE
+
+        self.stats = IngestStats()
+        self.latencies: deque[float] = deque(maxlen=4096)  # append->emit s
+        self.exhausted = False
+        # frame tables: (frame_seq - _frame_base) -> camera / source frame.
+        # _frame_base keys the ingest id space ABOVE every id already in
+        # the store (the built base uses its own patch ids), so ingested
+        # ids never collide and "ingested rows" is exactly
+        # ids >= _frame_base * patches_per_frame
+        self._frame_camera: list[int] = []
+        self._frame_time: list[int] = []
+        self._frame_base = self._present_max_id() \
+            // self.registry.patches_per_frame + 1
+        self._next_seq = self._frame_base
+        self._prev_frame: list[Optional[np.ndarray]] = \
+            [None] * len(self.cameras)
+        self._append_t: dict[int, float] = {}
+        self._kp: Optional[int] = None       # patches/frame, checked on use
+
+        if auto_recover:
+            self.recover()
+
+    def _present_max_id(self) -> int:
+        """Highest row id currently in the index (base + deltas)."""
+        ids = np.asarray(self.seg.base.ids)
+        out = int(ids.max()) if ids.size else -1
+        for s in self.seg.segments:
+            if len(s.ids):
+                out = max(out, int(s.ids.max()))
+        return out
+
+    # -- the hot loop ---------------------------------------------------------
+    def step(self) -> list[Alert]:
+        """One ingest round: sample + encode + append each camera's next
+        chunk, evaluate standing queries on the new rows, deliver alerts.
+        Returns the alerts that fired this step."""
+        budgets = self.bandit.allocate(self.keyframe_budget)
+        sampled = np.zeros(len(self.cameras), np.int64)
+        got_frames = False
+        for ci, cam in enumerate(self.cameras):
+            pos0 = cam.pos
+            frames = cam.read(self.frames_per_step)
+            if frames is None or len(frames) == 0:
+                continue
+            got_frames = True
+            self.stats.frames_in += len(frames)
+            kf = videomod.extract_keyframes(
+                frames, stride=self.keyframe_stride,
+                peak_sigma=self.peak_sigma,
+                max_keyframes=max(int(budgets[ci]), 1),
+                prev_frame=self._prev_frame[ci], offset=pos0,
+                always_first=(pos0 == 0))
+            self._prev_frame[ci] = frames[-1]
+            self._ingest_chunk(ci, frames, kf, pos0, cam.pos)
+            sampled[ci] = len(kf)
+        self.exhausted = not got_frames
+
+        alerts = self._evaluate()
+
+        match_per_cam = np.zeros(len(self.cameras), np.int64)
+        for a in alerts:
+            if 0 <= a.camera < len(self.cameras):
+                match_per_cam[a.camera] += 1
+        for ci in range(len(self.cameras)):
+            if sampled[ci]:
+                self.bandit.update(ci, samples=int(sampled[ci]),
+                                   matches=int(match_per_cam[ci]))
+
+        # persist watermarks/seen/pending BEFORE delivering: a crash after
+        # this point re-delivers (at-least-once), never re-evaluates
+        self._save_state()
+        if self.sink.try_deliver() and alerts:
+            self._save_state()  # shrink the duplicate window: queue drained
+
+        self.stats.steps += 1
+        if self.checkpoint_every_steps \
+                and self.stats.steps % self.checkpoint_every_steps == 0:
+            self.checkpoint()
+        elif self.scheduler is not None:
+            self.scheduler.maybe_run()
+        return alerts
+
+    def run(self, max_steps: Optional[int] = None) -> list[Alert]:
+        """Step until every camera is exhausted (or ``max_steps``)."""
+        out: list[Alert] = []
+        steps = 0
+        while max_steps is None or steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+            if self.exhausted:
+                break
+        return out
+
+    def _ingest_chunk(self, camera: int, frames: np.ndarray,
+                      kf: np.ndarray, pos0: int, pos1: int) -> None:
+        """Meta-first append: the frame-attribution record is durable
+        before the rows enter the store WAL (see module docstring)."""
+        seq0 = self._next_seq
+        times = (pos0 + kf).tolist()
+        self._append_meta({"cam": camera, "seq0": seq0, "times": times,
+                           "pos0": pos0, "pos1": pos1})
+        if not len(kf):
+            return
+        embeds = np.asarray(self.encode_frames(frames[kf]), np.float32)
+        f, kp, d = embeds.shape
+        if self._kp is None:
+            self._kp = kp
+            if kp != self.registry.patches_per_frame:
+                raise ValueError(
+                    f"encoder yields {kp} patches/frame but the registry "
+                    f"was built for {self.registry.patches_per_frame}")
+        ids = (seq0 + np.arange(f, dtype=np.int64))[:, None] * kp \
+            + np.arange(kp, dtype=np.int64)[None, :]
+        with self.write_lock:
+            self.store.insert(embeds.reshape(f * kp, d),
+                              ids.reshape(-1).astype(imimod.ID_DTYPE))
+        now = time.monotonic()
+        for j in range(f):
+            self._append_t[seq0 + j] = now
+        if len(self._append_t) > 65_536:  # bound the latency book-keeping
+            for k in list(self._append_t)[: len(self._append_t) - 65_536]:
+                del self._append_t[k]
+        self._frame_camera.extend([camera] * f)
+        self._frame_time.extend(times)
+        self._next_seq += f
+        self.stats.keyframes += f
+        self.stats.rows += f * kp
+
+    def _evaluate(self) -> list[Alert]:
+        wm = self.registry.min_watermark()
+        if wm is None:
+            return []
+        # standing queries see INGESTED rows only: rows predating the
+        # service (the built base) have no camera attribution
+        floor = self._frame_base * self.registry.patches_per_frame - 1
+        rows = self.seg.rows_since(max(wm, floor))
+        if rows["ids"].size == 0:
+            return []
+        chunk = self._make_chunk(rows)
+        alerts, st = self.registry.evaluate(self.seg.base, chunk)
+        self.stats.evaluations += 1
+        self.stats.rows_scanned += st.rows_scanned
+        self.stats.alerts += len(alerts)
+        now = time.monotonic()
+        for a in alerts:
+            t0 = self._append_t.get(a.frame_seq)
+            if t0 is not None:
+                self.latencies.append(now - t0)
+        self.sink.enqueue(alerts)
+        return alerts
+
+    def _make_chunk(self, rows: dict) -> DeltaChunk:
+        kp = self.registry.patches_per_frame
+        cam_of = np.asarray(self._frame_camera, np.int32)
+        time_of = np.asarray(self._frame_time, np.int32)
+        fseq = (rows["ids"] // kp).astype(np.int64)
+        frames = np.unique(fseq)                       # sorted, global
+        rel = fseq - self._frame_base                  # frame-table rows
+        rel_f = frames - self._frame_base
+        return DeltaChunk(
+            codes=rows["codes"], vectors=rows["vectors"],
+            cells=rows["cells"], ids=rows["ids"],
+            row_camera=cam_of[rel], row_time=time_of[rel],
+            frame_seq=frames, frame_camera=cam_of[rel_f],
+            frame_time=time_of[rel_f])
+
+    # -- durability -----------------------------------------------------------
+    def _append_meta(self, rec: dict) -> None:
+        with open(self.meta_log_path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _save_state(self) -> None:
+        state = {
+            "bandit": self.bandit.state_dict(),
+            "registry": self.registry.state_dict(),
+            "sink_pending": [a.to_json() for a in self.sink.pending_alerts],
+            "camera_pos": [cam.pos for cam in self.cameras],
+            "steps": self.stats.steps,
+        }
+        tmp = self.state_path.with_suffix(".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(state, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.state_path)
+
+    def checkpoint(self) -> None:
+        """Fold the store WAL into segments (manifest swap), persist the
+        ingest state, and give the compaction scheduler a slot."""
+        with self.write_lock:
+            self.store.flush()
+        self._save_state()
+        if self.scheduler is not None:
+            self.scheduler.maybe_run()
+
+    def close(self, drain_timeout_s: float = 5.0) -> None:
+        """Graceful shutdown: deliver what is queued, fold the WAL, save
+        state, close the store."""
+        self.sink.drain(drain_timeout_s)
+        with self.write_lock:
+            self.store.flush()
+        self._save_state()
+        self.store.close()
+
+    # -- recovery -------------------------------------------------------------
+    def recover(self) -> list[Alert]:
+        """Resume a previous ingest session (no-op on a fresh store).
+
+        Rebuilds the frame table from the frame-meta log, trims any
+        dangling tail (meta records whose rows never reached the WAL)
+        and rewinds those cameras, restores bandit/registry/sink state,
+        then evaluates replayed rows the registry has not seen — firing
+        their alerts exactly once."""
+        had_session = self.meta_log_path.exists() or self.state_path.exists()
+        records = self._read_meta_log()
+
+        # present_max: the highest row id that actually survived (base +
+        # replayed deltas); meta records beyond it are the dangling tail
+        present_max = self._present_max_id()
+        kp = self.registry.patches_per_frame
+        good = []
+        for rec in records:
+            if rec["times"]:
+                last_id = (rec["seq0"] + len(rec["times"])) * kp - 1
+                if last_id > present_max:
+                    break
+            good.append(rec)
+        if len(good) < len(records):
+            self._rewrite_meta_log(good)
+
+        cam_pos = {}
+        if records:
+            # the previous session fixed the ingest id space; adopt it
+            self._frame_base = int(records[0]["seq0"])
+            self._next_seq = self._frame_base
+        for rec in good:
+            self._frame_camera.extend([rec["cam"]] * len(rec["times"]))
+            self._frame_time.extend(int(t) for t in rec["times"])
+            self._next_seq = rec["seq0"] + len(rec["times"])
+            cam_pos[rec["cam"]] = rec["pos1"]
+        for ci, cam in enumerate(self.cameras):
+            cam.seek(cam_pos.get(ci, 0))
+            # prev_frame is not persisted (frames are large); the first
+            # post-recovery chunk falls back to batch-mode boundary energy
+
+        if self.state_path.exists():
+            with open(self.state_path, encoding="utf-8") as f:
+                state = json.load(f)
+            self.bandit.load_state_dict(state["bandit"])
+            if state["registry"]:
+                self.registry.load_state_dict(state["registry"])
+            self.sink.load_pending([Alert.from_json(a)
+                                    for a in state["sink_pending"]])
+            for ci, pos in enumerate(state.get("camera_pos", [])):
+                if ci < len(self.cameras) and ci not in cam_pos:
+                    self.cameras[ci].seek(int(pos))
+            self.stats.steps = int(state.get("steps", 0))
+
+        if not had_session or not self.registry.subs:
+            return []
+        # replayed-but-unevaluated rows: evaluate once, persist, deliver
+        alerts = self._evaluate()
+        self._save_state()
+        if self.sink.try_deliver() and alerts:
+            self._save_state()
+        return alerts
+
+    def _read_meta_log(self) -> list[dict]:
+        records = []
+        try:
+            with open(self.meta_log_path, encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        records.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        break  # torn trailing write: everything after is dead
+        except FileNotFoundError:
+            pass
+        return records
+
+    def _rewrite_meta_log(self, records: list[dict]) -> None:
+        tmp = self.meta_log_path.with_suffix(".tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            for rec in records:
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.meta_log_path)

@@ -1,0 +1,331 @@
+"""Standing-query registry: plan trees evaluated at ingest time.
+
+LOVO's index is query-agnostic, so flipping "scan at ask" into "query at
+ingest" costs nothing at the index layer — a standing query is just a
+``repro.core.plan`` tree whose Text leaves were encoded ONCE at
+registration.  Each ingested chunk is then evaluated against every
+subscription with a single batched masked PQ scan over ONLY the new
+delta rows (DESIGN.md §12.2):
+
+  * the delta cursor is an id watermark per subscription — ingested ids
+    are assigned monotonically, so "rows newer than the subscription's
+    generation" is exactly ``ids > watermark``, which rides the fused
+    scan->select kernels (PR 5) as one more row-mask term next to the
+    plan's own predicate pushdown;
+  * plans execute in CHUNK-LOCAL coordinates: the chunk's rows/frames
+    form their own little ``PlanMeta``, so the boolean/temporal merge
+    machinery from ``plan.execute`` is reused verbatim.  ``Not`` inside
+    a standing plan therefore means "not matched within this chunk" —
+    the only semantics with bounded state on an unbounded stream;
+  * matches dedup against a per-subscription seen-set keyed by
+    (camera, source frame) — re-sightings of the same frame across
+    chunk re-evaluations (e.g. crash replay) never re-alert.
+
+Per-evaluation scanned-row counts are recorded (``EvalStats``) so tests
+and benchmarks can verify delta-only evaluation: rows scanned per chunk
+stays O(chunk), not O(index).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from collections import OrderedDict
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anns, plan as planmod, pq as pqmod
+from repro.core.imi import IMIIndex
+
+EncodeTextsFn = Callable[[Sequence[str]], np.ndarray]  # texts -> (Q, D')
+
+
+def plan_fingerprint(node: planmod.Node) -> str:
+    """Deterministic identity of a plan tree: sha1 of its canonical JSON.
+    Two subscriptions with the same tree share a fingerprint, so alert
+    consumers can dedup across re-registrations."""
+    blob = json.dumps(planmod.to_json(node), sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class DeltaChunk:
+    """One ingested chunk in evaluation form: the delta rows plus the
+    chunk-local frame table.  ``frame_seq`` holds GLOBAL key-frame rows
+    (sorted ascending); row/frame arrays are aligned local views."""
+
+    codes: np.ndarray         # (n, P) uint8
+    vectors: np.ndarray       # (n, D') f32 (normalized)
+    cells: np.ndarray         # (n,) int32
+    ids: np.ndarray           # (n,) global patch ids, ascending
+    row_camera: np.ndarray    # (n,) int32 camera id per row
+    row_time: np.ndarray      # (n,) int32 source-frame index per row
+    frame_seq: np.ndarray     # (F,) global key-frame rows, ascending
+    frame_camera: np.ndarray  # (F,) int32
+    frame_time: np.ndarray    # (F,) int32
+
+    @property
+    def n(self) -> int:
+        return len(self.ids)
+
+
+@dataclasses.dataclass
+class EvalStats:
+    """Per-evaluation instrumentation (delta-only verification)."""
+
+    rows_scanned: int      # delta rows this evaluation touched
+    index_rows: int        # total live rows in the index at the time
+    n_leaves: int          # text leaves batched into the one scan
+    n_alerts: int
+    wall_s: float
+
+
+@dataclasses.dataclass
+class Subscription:
+    name: str
+    node: planmod.Node
+    threshold: float
+    top_k: int
+    fingerprint: str
+    leaves: list              # collect_leaves(node) output
+    leaf_embeds: np.ndarray   # (L, D') normalized text embeddings
+    watermark: int = -1       # evaluate only rows with id > watermark
+    seen: "OrderedDict[tuple, None]" = dataclasses.field(
+        default_factory=OrderedDict)
+    matched: int = 0
+
+
+class StandingQueryRegistry:
+    """Holds subscriptions; evaluates them against ingested chunks.
+
+    ``encode_texts`` maps leaf query strings to (Q, D') embeddings — the
+    serving path binds the engine's text encoder, tests bind fakes.  Leaf
+    embeddings are computed once at registration (standing queries are
+    fixed), so per-chunk evaluation never touches the text encoder.
+    """
+
+    def __init__(self, encode_texts: EncodeTextsFn, *,
+                 patches_per_frame: int, use_kernel: str = "auto",
+                 rerank_overfetch: int = 4, seen_cap: int = 65_536,
+                 pad_rows: int = 256):
+        self.encode_texts = encode_texts
+        self.patches_per_frame = int(patches_per_frame)
+        self.use_kernel = use_kernel
+        self.rerank_overfetch = int(rerank_overfetch)
+        self.seen_cap = int(seen_cap)
+        # chunk rows are padded to a multiple of this so varying chunk
+        # sizes reuse a handful of kernel executables instead of
+        # recompiling per size
+        self.pad_rows = int(pad_rows)
+        self.subs: dict[str, Subscription] = {}
+        # cumulative instrumentation
+        self.evaluations = 0
+        self.total_rows_scanned = 0
+        self.total_alerts = 0
+
+    # -- subscription management ---------------------------------------------
+    def register(self, name: str, spec, *, threshold: float = 0.0,
+                 top_k: int = 16, start_after: int = -1) -> Subscription:
+        """Register a standing plan under ``name``.
+
+        ``spec``: a plan Node, dict, or JSON string (the serve wire
+        syntax).  ``threshold`` gates the fused frame score; ``top_k``
+        caps alerts per chunk per subscription.  ``start_after``: only
+        rows with id strictly greater ever match — pass the index's
+        current max id to alert on new data only (the default -1 also
+        evaluates rows that predate registration)."""
+        if name in self.subs:
+            raise ValueError(f"subscription {name!r} already registered")
+        node = spec if isinstance(spec, planmod.Node) \
+            else planmod.from_json(spec)
+        leaves = planmod.collect_leaves(node)
+        if not leaves:
+            raise ValueError("a standing query needs at least one Text leaf")
+        embeds = np.asarray(self.encode_texts([leaf.query
+                                               for leaf, _ in leaves]),
+                            np.float32)
+        embeds = np.asarray(pqmod.normalize(jnp.asarray(embeds)))
+        sub = Subscription(name=name, node=node, threshold=float(threshold),
+                           top_k=int(top_k),
+                           fingerprint=plan_fingerprint(node),
+                           leaves=leaves, leaf_embeds=embeds,
+                           watermark=int(start_after))
+        self.subs[name] = sub
+        return sub
+
+    def unregister(self, name: str) -> None:
+        del self.subs[name]
+
+    def min_watermark(self) -> Optional[int]:
+        """Lowest watermark across subscriptions (the ``rows_since``
+        cursor); None when nothing is registered."""
+        if not self.subs:
+            return None
+        return min(s.watermark for s in self.subs.values())
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate(self, base: IMIIndex, chunk: DeltaChunk):
+        """Evaluate every subscription against ``chunk`` -> (alerts,
+        EvalStats).
+
+        One batched masked scan answers ALL text leaves of ALL
+        subscriptions: per-leaf row masks stack predicate pushdown with
+        the per-subscription watermark, the per-row IMI coarse term rides
+        the paired kernel as its bias (per-query, like ``search_batch``'s
+        windowed path), survivors are exact-rescored against the chunk's
+        f32 vectors, then each plan merges on the host in chunk-local
+        coordinates."""
+        from repro.ingest.alerts import Alert
+
+        t0 = time.perf_counter()
+        subs = list(self.subs.values())
+        n = chunk.n
+        index_rows = base.n + n  # chunk rows are the pending deltas
+
+        def stats(n_alerts: int, scanned: int = 0, leaves: int = 0):
+            return EvalStats(rows_scanned=scanned, index_rows=index_rows,
+                             n_leaves=leaves, n_alerts=n_alerts,
+                             wall_s=time.perf_counter() - t0)
+
+        if not subs or n == 0:
+            return [], stats(0)
+
+        kp = self.patches_per_frame
+        # chunk-local coordinates: frame_seq is sorted, so searchsorted
+        # maps each row's global frame to its local frame index
+        local_frame = np.searchsorted(chunk.frame_seq, chunk.ids // kp)
+        local_ids = (local_frame * kp + chunk.ids % kp).astype(np.int64)
+        meta = planmod.PlanMeta(
+            row_video=np.asarray(chunk.row_camera, np.int64),
+            row_time=np.asarray(chunk.row_time, np.int64),
+            frame_video=np.asarray(chunk.frame_camera, np.int64),
+            frame_time=np.asarray(chunk.frame_time, np.int64),
+            patches_per_frame=kp)
+
+        # stack every leaf of every subscription into one device batch
+        flat: list[tuple[Subscription, planmod.Text, tuple]] = []
+        for sub in subs:
+            for leaf, preds in sub.leaves:
+                flat.append((sub, leaf, preds))
+        L = len(flat)
+        qs = np.concatenate([s.leaf_embeds for s in subs], axis=0)
+        masks = np.ones((L, n), bool)
+        for i, (sub, _, preds) in enumerate(flat):
+            for p in preds:
+                masks[i] &= planmod.predicate_row_mask(p, meta)
+            # the rows-newer-than-generation term: this is what makes the
+            # scan delta-only per subscription
+            masks[i] &= chunk.ids > sub.watermark
+        if not masks.any():
+            self._advance(subs, chunk)
+            return [], stats(0, scanned=0, leaves=L)
+
+        # pad the row axis to a multiple of pad_rows (bounded recompiles)
+        n_pad = -(-n // self.pad_rows) * self.pad_rows
+        pad = n_pad - n
+        codes = np.concatenate(
+            [chunk.codes, np.zeros((pad, chunk.codes.shape[1]), np.uint8)]) \
+            if pad else chunk.codes
+        cells = np.concatenate([chunk.cells, np.zeros(pad, np.int32)]) \
+            if pad else chunk.cells
+        masks_p = np.concatenate(
+            [masks, np.zeros((L, pad), bool)], axis=1) if pad else masks
+
+        # device batch: per-leaf LUTs + per-row IMI coarse bias, one fused
+        # masked scan->select (PR 5 paired kernel: per-query bias)
+        qs_dev = jnp.asarray(qs)
+        luts = jax.vmap(lambda q: pqmod.similarity_lut(base.pq, q))(qs_dev)
+        h = qs.shape[-1] // 2
+        s1 = qs_dev[:, :h] @ base.coarse1.T                       # (L, K)
+        s2 = qs_dev[:, h:] @ base.coarse2.T
+        cells_dev = jnp.asarray(cells)
+        K = base.K
+        bias = (jnp.take(s1, cells_dev // K, axis=1)
+                + jnp.take(s2, cells_dev % K, axis=1))            # (L, n_pad)
+        codes_b = jnp.broadcast_to(jnp.asarray(codes)[None],
+                                   (L, n_pad, codes.shape[1]))
+        fetch_k = min(max(s.top_k for s in subs) * self.rerank_overfetch,
+                      n_pad)
+        _, pos = anns._topk_paired(luts, codes_b, bias,
+                                   jnp.asarray(masks_p, jnp.uint8),
+                                   fetch_k, self.use_kernel)
+
+        # exact refine on the chunk's f32 vectors (host: the chunk is small)
+        pos = np.asarray(pos)                                     # (L, fetch_k)
+        dead = pos < 0
+        safe = np.clip(pos, 0, n - 1)
+        exact = np.einsum("lkd,ld->lk",
+                          chunk.vectors[safe].astype(np.float32), qs)
+        exact[dead] = -np.inf
+        out_ids = local_ids[safe]
+        out_ids[dead] = -1
+
+        # per-subscription host merge + threshold + dedup
+        alerts: list[Alert] = []
+        cursor = 0
+        for sub in subs:
+            ls = len(sub.leaves)
+            sl = slice(cursor, cursor + ls)
+            cursor += ls
+
+            def search_texts(texts, _masks, _sl=sl):
+                return out_ids[_sl], exact[_sl]
+
+            res = planmod.execute(sub.node, meta, search_texts)
+            fired = 0
+            for f, sc in zip(res.frames, res.scores):
+                if fired >= sub.top_k or sc < sub.threshold:
+                    break  # scores are sorted descending
+                cam = int(meta.frame_video[f])
+                t = int(meta.frame_time[f])
+                if (cam, t) in sub.seen:
+                    continue
+                sub.seen[(cam, t)] = None
+                while len(sub.seen) > self.seen_cap:
+                    sub.seen.popitem(last=False)
+                alerts.append(Alert(
+                    subscription=sub.name, fingerprint=sub.fingerprint,
+                    camera=cam, frame=t, score=float(sc),
+                    frame_seq=int(chunk.frame_seq[f])))
+                fired += 1
+            sub.matched += fired
+        self._advance(subs, chunk)
+        self.evaluations += 1
+        self.total_rows_scanned += n
+        self.total_alerts += len(alerts)
+        return alerts, stats(len(alerts), scanned=n, leaves=L)
+
+    @staticmethod
+    def _advance(subs: Sequence[Subscription], chunk: DeltaChunk) -> None:
+        top = int(chunk.ids.max())
+        for sub in subs:
+            sub.watermark = max(sub.watermark, top)
+
+    # -- checkpoint round-trip ------------------------------------------------
+    def state_dict(self) -> dict:
+        return {name: {
+            "plan": planmod.to_json(sub.node),
+            "threshold": sub.threshold,
+            "top_k": sub.top_k,
+            "watermark": sub.watermark,
+            "seen": [list(k) for k in sub.seen],
+            "matched": sub.matched,
+        } for name, sub in self.subs.items()}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Rebuild subscriptions from a checkpoint: plans re-parse, leaf
+        embeddings re-encode (the encoder is deterministic), watermarks
+        and seen-sets restore — the exactly-once dedup state round-trips."""
+        self.subs.clear()
+        for name, s in state.items():
+            sub = self.register(name, s["plan"],
+                                threshold=float(s["threshold"]),
+                                top_k=int(s["top_k"]),
+                                start_after=int(s["watermark"]))
+            sub.seen = OrderedDict(((int(c), int(t)), None)
+                                   for c, t in s["seen"])
+            sub.matched = int(s.get("matched", 0))

@@ -1,0 +1,99 @@
+"""ExSample-style per-camera sampling bandit (PAPERS.md: ExSample).
+
+Live ingest cannot afford to key-frame every camera at full rate; the
+budget has to chase the cameras that are currently producing matches.
+ExSample frames this as a Thompson-sampling bandit: each camera keeps a
+Beta posterior over "a sampled frame from this camera fires an alert",
+and every allocation round draws from the posteriors and splits the
+key-frame budget proportionally to the draws.
+
+Differences from the paper's setting, on purpose:
+
+  * the reward is "standing-query alert fired" (our match signal), not
+    "new distinct object found" — the registry's dedup already removes
+    re-sightings, so alert count approximates distinct-result count;
+  * counts decay geometrically toward the prior so the posterior tracks
+    a non-stationary stream (an idle camera that becomes busy recovers
+    its share in O(1/(1-decay)) updates);
+  * every camera keeps a ``min_per_camera`` floor — exploration never
+    starves a camera to zero, so a match there can still be observed.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class CameraBandit:
+    """Beta-Bernoulli Thompson sampler allocating key-frame budget.
+
+    Single-threaded by design: the ingest service is the only caller
+    (``allocate`` at the top of each step, ``update`` at the bottom).
+    """
+
+    def __init__(self, n_cameras: int, *, min_per_camera: int = 1,
+                 decay: float = 0.98, prior: tuple[float, float] = (1.0, 1.0),
+                 seed: int = 0):
+        if n_cameras <= 0:
+            raise ValueError("need at least one camera")
+        self.n_cameras = n_cameras
+        self.min_per_camera = int(min_per_camera)
+        self.decay = float(decay)
+        self.prior = (float(prior[0]), float(prior[1]))
+        self.alpha = np.full(n_cameras, self.prior[0], np.float64)
+        self.beta = np.full(n_cameras, self.prior[1], np.float64)
+        self._rng = np.random.default_rng(seed)
+
+    def allocate(self, budget: int) -> np.ndarray:
+        """Split ``budget`` key-frame slots across cameras -> (C,) ints.
+
+        Thompson draw per camera, proportional split of what remains
+        after the ``min_per_camera`` floor, largest-remainder rounding
+        (so the result sums exactly to ``budget`` whenever the floor
+        fits)."""
+        c = self.n_cameras
+        budget = int(budget)
+        floor = min(self.min_per_camera, budget // c)
+        out = np.full(c, floor, np.int64)
+        extra = budget - floor * c
+        if extra <= 0:
+            return out
+        draws = self._rng.beta(self.alpha, self.beta)
+        w = draws / max(float(draws.sum()), 1e-12)
+        give = np.floor(w * extra).astype(np.int64)
+        frac = w * extra - give
+        short = extra - int(give.sum())
+        if short > 0:
+            give[np.argsort(-frac)[:short]] += 1
+        return out + give
+
+    def update(self, camera: int, *, samples: int, matches: int) -> None:
+        """Record one step's outcome for ``camera``: ``samples`` key
+        frames taken, ``matches`` of them fired an alert."""
+        samples = max(int(samples), 0)
+        matches = min(max(int(matches), 0), samples)
+        if samples == 0:
+            return
+        # geometric forgetting toward the prior keeps the posterior
+        # responsive to regime changes in the stream
+        a0, b0 = self.prior
+        self.alpha[camera] = a0 + (self.alpha[camera] - a0) * self.decay
+        self.beta[camera] = b0 + (self.beta[camera] - b0) * self.decay
+        self.alpha[camera] += matches
+        self.beta[camera] += samples - matches
+
+    def match_rate(self) -> np.ndarray:
+        """Posterior mean match probability per camera -> (C,)."""
+        return self.alpha / (self.alpha + self.beta)
+
+    # -- checkpoint round-trip (ingest-state.json) ---------------------------
+    def state_dict(self) -> dict:
+        return {"alpha": self.alpha.tolist(), "beta": self.beta.tolist()}
+
+    def load_state_dict(self, state: dict) -> None:
+        alpha = np.asarray(state["alpha"], np.float64)
+        if len(alpha) != self.n_cameras:
+            raise ValueError(
+                f"bandit state covers {len(alpha)} cameras, "
+                f"this service has {self.n_cameras}")
+        self.alpha = alpha
+        self.beta = np.asarray(state["beta"], np.float64)

@@ -6,10 +6,20 @@ batched text queries through the full two-stage pipeline.
   PYTHONPATH=src python -m repro.launch.serve --batch-size 8 --max-wait-ms 5
   PYTHONPATH=src python -m repro.launch.serve \
       --plan '{"and": [{"text": "a red square"}, {"time_range": [0, 32]}]}'
+  PYTHONPATH=src python -m repro.launch.serve --videos 2 \
+      --ingest --ingest-cameras 2 --expect-exactly-once
 
 ``--plan`` switches to the complex-query path: the JSON plan tree
 (conjunction/negation, time windows, per-video grouping — DESIGN.md §10)
 is answered index-only through ``QueryEngine.query_plan``.
+
+``--ingest`` switches to the live path (DESIGN.md §12): synthetic
+cameras stream frames into the WAL-backed store through adaptive
+key-frame sampling, standing plans (``--standing-plan``, or ground-truth
+captions by default) are evaluated at ingest time against only the new
+delta rows, and matches emit alerts (``--alerts-out`` for a durable
+JSONL sink).  Shutdown drains the alert queue and folds the WAL.  The
+full flag reference lives in README.md §"Serving flags".
 
 The ``MicroBatcher`` is the front door: concurrent submissions are grouped
 into batches of up to ``--batch-size`` (or whatever arrived within
@@ -96,6 +106,105 @@ def build_engine(*, seed: int = 0, n_videos: int = 6, res: int = 96,
     return engine, videos
 
 
+def run_ingest(engine, args) -> int:
+    """The ``--ingest`` path: cameras -> pipeline -> standing queries ->
+    alerts, wired next to the ad-hoc query engine.  Returns an exit code
+    (nonzero when ``--expect-exactly-once`` finds duplicates)."""
+    import tempfile
+
+    from repro.core.index_builder import encode_keyframes
+    from repro.ingest import (CompactionPolicy, CompactionScheduler,
+                              IngestService, JsonlSink, MemorySink,
+                              StandingQueryRegistry, dedup_by_key,
+                              synthetic_camera)
+    from repro.store import VectorStore, manifest as storemanifest
+
+    res = engine.vit_cfg.img_res
+    cameras, captions = [], []
+    for ci in range(args.ingest_cameras):
+        cam, caps = synthetic_camera(1000 + ci, n_frames=args.ingest_frames,
+                                     res=res)
+        cameras.append(cam)
+        captions.append(caps)
+
+    store_dir = args.store_dir or tempfile.mkdtemp(prefix="lovo-ingest-")
+    if storemanifest.exists(store_dir):
+        store = VectorStore.open(store_dir)
+    else:
+        store = VectorStore.create(store_dir, engine.built)
+
+    def encode_frames(frames):
+        return encode_keyframes(engine.vit_params, frames,
+                                engine.vit_cfg)[0]
+
+    def encode_texts(texts):
+        return engine._encode_texts(texts)[0]
+
+    registry = StandingQueryRegistry(
+        encode_texts, patches_per_frame=engine.built.patches_per_frame)
+    if args.standing_plan:
+        for i, spec in enumerate(args.standing_plan):
+            registry.register(f"plan-{i}", spec,
+                              threshold=args.alert_threshold)
+    else:
+        # ground truth: one plan per camera, its first object's caption
+        # scoped to that camera (VideoIn doubles as camera-id predicate)
+        for ci, caps in enumerate(captions):
+            registry.register(
+                f"cam{ci}-{caps[0]}",
+                {"and": [{"text": caps[0]}, {"videos": [ci]}]},
+                threshold=args.alert_threshold, top_k=4)
+
+    sink = JsonlSink(args.alerts_out) if args.alerts_out else MemorySink()
+    scheduler = CompactionScheduler(store,
+                                    CompactionPolicy(max_segments=2))
+    service = IngestService(store, cameras, encode_frames, registry,
+                            sink=sink, scheduler=scheduler,
+                            frames_per_step=args.ingest_frames_per_step)
+    scheduler.start()
+    t0 = time.perf_counter()
+    service.run(max_steps=args.ingest_steps)
+    wall = time.perf_counter() - t0
+    scheduler.stop()
+    service.close()
+
+    st = service.stats
+    lat = sorted(service.latencies)
+    p50 = lat[len(lat) // 2] * 1e3 if lat else float("nan")
+    print(f"ingested {st.frames_in} frames -> {st.keyframes} key frames "
+          f"-> {st.rows} rows across {len(cameras)} cameras "
+          f"({st.frames_in / max(wall, 1e-9):.1f} frames/s)")
+    print(f"standing queries: {len(registry.subs)} plans, "
+          f"{st.evaluations} delta evaluations scanning "
+          f"{st.rows_scanned} rows (index holds {store.n}); "
+          f"{st.alerts} alerts, append->emit p50 {p50:.1f}ms; "
+          f"compactions: {scheduler.compactions}")
+    alerts = sink.alerts if isinstance(sink, MemorySink) \
+        else JsonlSink.read(args.alerts_out)
+    for a in alerts[:10]:
+        print(f"  ALERT {a.subscription}: camera {a.camera} frame "
+              f"{a.frame} score {a.score:.3f}")
+    if len(alerts) > 10:
+        print(f"  ... and {len(alerts) - 10} more")
+    if args.expect_exactly_once:
+        uniq = dedup_by_key(alerts)
+        if not alerts:
+            print("exactly-once check FAILED: no alerts fired")
+            return 1
+        if len(uniq) != len(alerts):
+            print(f"exactly-once check FAILED: {len(alerts) - len(uniq)} "
+                  f"duplicate alert keys")
+            return 1
+        if st.rows_scanned >= store.n * st.evaluations:
+            print("delta-only check FAILED: standing queries scanned as "
+                  "many rows as full rescans would")
+            return 1
+        print(f"exactly-once check passed: {len(alerts)} alerts, all "
+              f"unique; delta evaluations scanned {st.rows_scanned} rows "
+              f"vs {store.n * st.evaluations} for full rescans")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--videos", type=int, default=6)
@@ -123,6 +232,32 @@ def main() -> None:
                          "of the text-query demo; JSON plan-tree syntax, "
                          'e.g. \'{"and": [{"text": "a red square"}, '
                          '{"time_range": [0, 32]}]}\' — see DESIGN.md §10')
+    ap.add_argument("--ingest", action="store_true",
+                    help="live path: synthetic cameras stream into the "
+                         "WAL-backed store, standing plans evaluate at "
+                         "ingest time, matches emit alerts (DESIGN.md §12)")
+    ap.add_argument("--ingest-cameras", type=int, default=2,
+                    help="number of synthetic camera streams")
+    ap.add_argument("--ingest-frames", type=int, default=64,
+                    help="frames per camera stream")
+    ap.add_argument("--ingest-frames-per-step", type=int, default=16,
+                    help="frames consumed per camera per ingest step")
+    ap.add_argument("--ingest-steps", type=int, default=None,
+                    help="max ingest steps (default: until cameras drain)")
+    ap.add_argument("--standing-plan", action="append", default=None,
+                    metavar="JSON",
+                    help="standing plan to register (repeatable; default: "
+                         "one ground-truth caption plan per camera)")
+    ap.add_argument("--alert-threshold", type=float, default=-1e30,
+                    help="per-subscription score threshold (default: fire "
+                         "on any top match — untrained demo encoders give "
+                         "uncalibrated scores)")
+    ap.add_argument("--alerts-out", default=None,
+                    help="durable JSONL alert sink path (default: "
+                         "in-memory, printed at exit)")
+    ap.add_argument("--expect-exactly-once", action="store_true",
+                    help="CI gate: exit 1 unless alerts fired, carried no "
+                         "duplicate keys, and evaluation stayed delta-only")
     args = ap.parse_args()
 
     from repro.serving.batcher import HedgedExecutor, MicroBatcher
@@ -163,6 +298,9 @@ def main() -> None:
                        meta={"build_seconds": wall})
             print(f"store created at {args.store_dir} "
                   f"({time.perf_counter()-t0:.2f}s); next launch reopens it")
+
+    if args.ingest:
+        raise SystemExit(run_ingest(engine, args))
 
     if args.plan:
         # complex-query path: plans are answered index-only (one batched

@@ -257,6 +257,50 @@ class VectorStore:
         if self._needs_base_rewrite:  # compact() no-oped after replay-compact
             self._checkpoint(rewrite_base=True)
 
+    def refresh_codebooks(self, *, seed: int = 0, M: Optional[int] = None,
+                          coarse_cells: int = 1, kmeans_iters: int = 8,
+                          opq_iters: int = 0) -> None:
+        """Codebook drift remedy (DESIGN.md §12.4): retrain coarse + PQ
+        codebooks on the CURRENT vectors, re-encode every row, and commit
+        base + codebooks together.
+
+        The expensive work (k-means, re-encode, cell sort) happens off
+        the read path; readers see the old generation until the O(1)
+        ``swap_base``.  Durability: the new codebooks file is written
+        under a fresh versioned name (unreferenced until commit), then
+        one manifest swap publishes new base + new codebooks atomically
+        — a crash anywhere leaves the store consistent on either side.
+
+        ``M`` defaults to the current expanded table size with a flat
+        residual codebook (``coarse_cells=1``), preserving code width
+        and ADC cost across the refresh.
+        """
+        import jax
+
+        self.compact()  # fold deltas so the new base covers every row
+        base = self.seg.base
+        vecs = jnp.asarray(np.asarray(base.vectors).astype(np.float32))
+        M = int(M if M is not None else base.pq.M)
+        new_base = imimod.build_imi(
+            jax.random.PRNGKey(seed), vecs, jnp.asarray(base.ids),
+            K=base.K, P=base.pq.P, M=M, kmeans_iters=kmeans_iters,
+            opq_iters=opq_iters, coarse_cells=coarse_cells)
+        self.seg.swap_base(new_base)
+
+        name = f"codebooks-{self.manifest['next_segment_id']:06d}.npz"
+        cb_arrays = dict(coarse1=np.asarray(new_base.coarse1, np.float32),
+                         coarse2=np.asarray(new_base.coarse2, np.float32),
+                         pq=np.asarray(new_base.pq.centroids, np.float32))
+        if new_base.pq.rotation is not None:
+            cb_arrays["rotation"] = np.asarray(new_base.pq.rotation,
+                                               np.float32)
+        np.savez(self.root / name, **cb_arrays)
+        old = self.manifest["codebooks"]
+        self.manifest = {**self.manifest, "codebooks": name}
+        self._checkpoint(rewrite_base=True)   # <- the atomic commit
+        if old != name:
+            (self.root / old).unlink(missing_ok=True)
+
     def flush(self) -> None:
         """Fold the WAL into on-disk segments and reset it.  Rewrites the
         base too if a compaction happened during replay and is still

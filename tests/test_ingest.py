@@ -1,0 +1,460 @@
+"""Live ingest: sampling bandit, standing queries, alerts, crash
+consistency, compaction scheduling (DESIGN.md §12)."""
+import json
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import anns, imi as imimod, pq as pqmod
+from repro.core.incremental import SegmentedIndex
+from repro.data import video as videomod
+from repro.ingest import (Alert, CameraBandit, CompactionPolicy,
+                          CompactionScheduler, IngestService, JsonlSink,
+                          MemorySink, ReplayCamera, RetryingSink,
+                          StandingQueryRegistry, dedup_by_key,
+                          plan_fingerprint)
+from repro.store import VectorStore
+
+# ---------------------------------------------------------------------------
+# A deterministic miniature world: frames carry a label index in their
+# pixels; fake encoders map labels and captions to shared fixed
+# directions, so "this caption matches that frame" is exact by
+# construction and every alert expectation is computable.
+# ---------------------------------------------------------------------------
+D = 32
+KP = 4  # patches per frame
+LABELS = ["red square", "blue circle", "green triangle", "nothing"]
+_BASIS = np.random.default_rng(7).normal(0, 1, (16, D)).astype(np.float32)
+
+
+def _dir(text: str) -> np.ndarray:
+    return _BASIS[zlib.crc32(text.encode()) % 16]
+
+
+def encode_texts(texts):
+    return np.stack([_dir(t) for t in texts])
+
+
+def label_frames(labels, res=8):
+    out = np.zeros((len(labels), res, res, 3), np.float32)
+    for i, lab in enumerate(labels):
+        out[i, :, :, 0] = LABELS.index(lab) / 10.0
+    return out
+
+
+def encode_frames(frames):
+    f = frames.shape[0]
+    out = np.zeros((f, KP, D), np.float32)
+    for i in range(f):
+        lab = LABELS[int(round(float(frames[i, 0, 0, 0]) * 10))]
+        d = _dir(lab)
+        for p in range(KP):
+            out[i, p] = d + 0.01 * _BASIS[(p + 7) % 16]
+    return out
+
+
+def _base_index(n=2000, seed=0):
+    x = np.random.default_rng(seed).normal(0, 1, (n, D)).astype(np.float32)
+    return imimod.build_imi(jax.random.PRNGKey(seed), jnp.asarray(x),
+                            jnp.arange(n), K=4, P=4, M=16, kmeans_iters=3)
+
+
+def _service(store, cameras, registry, **kw):
+    """All frames become key frames: stride 1, per-camera floor covering
+    the whole step — alert expectations stay exact."""
+    fps = kw.pop("frames_per_step", 8)
+    bandit = CameraBandit(len(cameras), min_per_camera=fps)
+    kw.setdefault("sink", MemorySink())
+    return IngestService(store, cameras, encode_frames, registry,
+                         bandit=bandit, frames_per_step=fps,
+                         keyframe_stride=1,
+                         keyframe_budget=fps * len(cameras), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Sampler
+# ---------------------------------------------------------------------------
+def test_bandit_budget_split_and_adaptation():
+    b = CameraBandit(3, min_per_camera=1, seed=0)
+    alloc = b.allocate(12)
+    assert alloc.sum() == 12 and (alloc >= 1).all()
+    # camera 1 keeps matching, others never do
+    for _ in range(50):
+        b.update(0, samples=4, matches=0)
+        b.update(1, samples=4, matches=3)
+        b.update(2, samples=4, matches=0)
+    rates = b.match_rate()
+    assert rates[1] > rates[0] and rates[1] > rates[2]
+    # over many draws the matching camera wins most of the budget
+    total = np.zeros(3)
+    for _ in range(50):
+        total += b.allocate(12)
+    assert total[1] > total[0] and total[1] > total[2]
+    # state round-trip
+    b2 = CameraBandit(3)
+    b2.load_state_dict(json.loads(json.dumps(b.state_dict())))
+    np.testing.assert_allclose(b2.match_rate(), rates)
+
+
+# ---------------------------------------------------------------------------
+# Alert sinks
+# ---------------------------------------------------------------------------
+class FlakySink:
+    def __init__(self, fail_times):
+        self.fail_times = fail_times
+        self.calls = 0
+        self.alerts = []
+
+    def emit(self, alerts):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise RuntimeError("transient")
+        self.alerts.extend(alerts)
+
+
+def _alert(i, sub="s"):
+    return Alert(subscription=sub, fingerprint="f", camera=0, frame=i,
+                 score=1.0)
+
+
+def test_retrying_sink_backoff_then_delivery():
+    clock = {"t": 0.0}
+    flaky = FlakySink(fail_times=2)
+    sink = RetryingSink(flaky, base_backoff_s=1.0, max_backoff_s=8.0,
+                        clock=lambda: clock["t"], sleep=lambda s: None)
+    sink.enqueue([_alert(1), _alert(2)])
+    assert not sink.try_deliver() and sink.pending == 2
+    # backoff window: an immediate retry is a no-op (no sink call)
+    assert not sink.try_deliver() and flaky.calls == 1
+    clock["t"] = 1.1
+    assert not sink.try_deliver() and flaky.calls == 2   # fails again
+    clock["t"] = 1.1 + 2.0                                # doubled backoff
+    assert sink.try_deliver() and sink.pending == 0
+    assert [a.frame for a in flaky.alerts] == [1, 2]
+    assert sink.delivered == 2
+
+
+def test_retrying_sink_bounded_queue_drops_oldest():
+    sink = RetryingSink(FlakySink(fail_times=10**9), max_queue=3,
+                        clock=lambda: 0.0, sleep=lambda s: None)
+    sink.enqueue([_alert(i) for i in range(5)])
+    assert sink.pending == 3 and sink.dropped == 2
+    assert [a.frame for a in sink.pending_alerts] == [2, 3, 4]
+
+
+def test_alert_json_roundtrip_and_fingerprint():
+    a = _alert(3)
+    assert Alert.from_json(json.loads(json.dumps(a.to_json()))) == a
+    from repro.core import plan as planmod
+    p1 = planmod.from_json({"and": [{"text": "x"}, {"videos": [1]}]})
+    p2 = planmod.from_json({"and": [{"text": "x"}, {"videos": [1]}]})
+    assert plan_fingerprint(p1) == plan_fingerprint(p2)
+    assert plan_fingerprint(p1) != plan_fingerprint(
+        planmod.from_json({"text": "x"}))
+
+
+# ---------------------------------------------------------------------------
+# SegmentedIndex ingest seams
+# ---------------------------------------------------------------------------
+def test_row_mask_over_base_plus_delta_rows():
+    """The PR 4 refusal is lifted: a mask covering base+delta rows
+    filters pending delta segments instead of raising."""
+    idx = _base_index()
+    seg = SegmentedIndex(idx)
+    cfg = anns.SearchConfig(top_a=16, max_cell_size=512, top_k=20)
+    v0 = np.random.default_rng(1).normal(0, 1, D).astype(np.float32)
+    v = np.asarray(pqmod.normalize(jnp.asarray(
+        np.stack([v0, v0 + 0.01]))))  # near-twins: both rank for q
+    seg.insert(v, np.array([50_000, 50_001]))
+    q = v[0]
+    full = np.ones(idx.n + 2, bool)
+    res = seg.search(q, cfg, row_mask=full)
+    assert 50_000 in res["ids"].tolist()
+    # mask out exactly that delta row: it must vanish, its twin stays
+    full[idx.n] = False
+    res = seg.search(q, cfg, row_mask=full)
+    assert 50_000 not in res["ids"].tolist()
+    assert 50_001 in res["ids"].tolist()
+    # base-only mask still refused while deltas pend; wrong length named
+    with pytest.raises(ValueError, match="delta"):
+        seg.search(q, cfg, row_mask=np.ones(idx.n, bool))
+    with pytest.raises(ValueError, match="neither"):
+        seg.search(q, cfg, row_mask=np.ones(idx.n + 5, bool))
+
+
+def test_rows_since_watermark():
+    idx = _base_index()
+    seg = SegmentedIndex(idx)
+    v = np.asarray(pqmod.normalize(jnp.asarray(
+        np.random.default_rng(2).normal(0, 1, (6, D)).astype(np.float32))))
+    seg.insert(v[:3], np.array([8_000, 8_001, 8_002]))
+    seg.insert(v[3:], np.array([8_003, 8_004, 8_005]))
+    rows = seg.rows_since(8_001)
+    assert rows["ids"].tolist() == [8_002, 8_003, 8_004, 8_005]
+    assert rows["codes"].shape == (4, 4) and rows["vectors"].shape == (4, D)
+    seg.delete([8_004])
+    assert seg.rows_since(8_001)["ids"].tolist() == [8_002, 8_003, 8_005]
+    # after compaction the gather falls back to the base id scan
+    seg.compact()
+    assert seg.rows_since(8_001)["ids"].tolist() == [8_002, 8_003, 8_005]
+    assert seg.rows_since(10_000)["ids"].size == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end standing queries
+# ---------------------------------------------------------------------------
+def _two_camera_world():
+    cam0 = ReplayCamera(label_frames(
+        ["nothing"] * 10 + ["red square"] * 4 + ["nothing"] * 10))
+    cam1 = ReplayCamera(label_frames(
+        ["blue circle"] * 3 + ["nothing"] * 18 + ["green triangle"] * 3))
+    return cam0, cam1
+
+
+def _registry(**kw):
+    reg = StandingQueryRegistry(encode_texts, patches_per_frame=KP,
+                                pad_rows=64, **kw)
+    # compound plan: caption AND camera scope (VideoIn doubles as the
+    # camera-id predicate in ingest coordinates)
+    reg.register("red@0", {"and": [{"text": "red square"},
+                                   {"videos": [0]}]},
+                 threshold=0.5, top_k=32)
+    reg.register("moving@1", {"or": [{"text": "blue circle"},
+                                     {"text": "green triangle"}]},
+                 threshold=0.5, top_k=32)
+    return reg
+
+
+EXPECTED_RED = {(0, t) for t in range(10, 14)}
+EXPECTED_MOVING = {(1, t) for t in range(0, 3)} | {(1, t)
+                                                   for t in range(21, 24)}
+
+
+def test_ingest_e2e_exactly_once_and_delta_only(tmp_path):
+    store = VectorStore.create(tmp_path / "s", _base_index(),
+                               flush_rows=10**9)
+    reg = _registry()
+    svc = _service(store, list(_two_camera_world()), reg)
+    svc.run()
+    alerts = svc.sink.sink.alerts
+    # every ground-truth (camera, frame) fired, exactly once, no extras
+    assert {(a.camera, a.frame) for a in alerts
+            if a.subscription == "red@0"} == EXPECTED_RED
+    assert {(a.camera, a.frame) for a in alerts
+            if a.subscription == "moving@1"} == EXPECTED_MOVING
+    assert len(alerts) == len(dedup_by_key(alerts))
+    # delta-only evaluation: scanned rows ~ ingested rows, far below
+    # what per-evaluation full rescans of the index would cost
+    assert reg.total_rows_scanned <= svc.stats.rows
+    assert reg.total_rows_scanned < store.n * reg.evaluations / 10
+    assert svc.latencies and max(svc.latencies) < 60.0
+    svc.close()
+
+    # reopen: seen-set + watermark round-trip -> nothing re-fires
+    store2 = VectorStore.open(tmp_path / "s")
+    reg2 = StandingQueryRegistry(encode_texts, patches_per_frame=KP,
+                                 pad_rows=64)
+    svc2 = _service(store2, list(_two_camera_world()), reg2)
+    assert set(reg2.subs) == {"red@0", "moving@1"}
+    assert svc2.run(max_steps=5) == []
+    assert svc2.sink.sink.alerts == []
+    svc2.close()
+
+
+def test_crash_mid_chunk_no_lost_no_duplicate_alerts(tmp_path):
+    """Kill after the WAL append but before the manifest swap / state
+    save: reopen must fire the crashed chunk's alerts exactly once
+    (idempotent replay + seen-set round-trip)."""
+    store = VectorStore.create(tmp_path / "s", _base_index(),
+                               flush_rows=10**9)
+    reg = _registry()
+    svc = _service(store, list(_two_camera_world()), reg,
+                   checkpoint_every_steps=0)
+    first = svc.step()          # frames 0..7: blue-circle alerts fire
+
+    class Crash(Exception):
+        pass
+
+    def boom(*a, **kw):
+        raise Crash
+
+    reg.evaluate = boom
+    with pytest.raises(Crash):
+        svc.step()              # frames 8..15 hit the WAL, then we die
+    # no close(), no flush: the manifest still points at the pre-crash
+    # state; only the fsync'd WAL + frame-meta log survive
+
+    store2 = VectorStore.open(tmp_path / "s")
+    reg2 = StandingQueryRegistry(encode_texts, patches_per_frame=KP,
+                                 pad_rows=64)
+    svc2 = _service(store2, list(_two_camera_world()), reg2)
+    # recovery evaluated the replayed rows; resume the stream to the end
+    svc2.run()
+    svc2.close()
+
+    combined = first + svc2.sink.sink.alerts
+    assert {(a.camera, a.frame) for a in combined
+            if a.subscription == "red@0"} == EXPECTED_RED
+    assert {(a.camera, a.frame) for a in combined
+            if a.subscription == "moving@1"} == EXPECTED_MOVING
+    assert len(combined) == len(dedup_by_key(combined))
+
+
+def test_crash_before_wal_append_rewinds_camera(tmp_path):
+    """The other half of the window: the frame-meta record is durable but
+    the rows never reached the WAL — reopen trims the dangling tail and
+    rewinds the camera so the frames are re-consumed, not lost."""
+    store = VectorStore.create(tmp_path / "s", _base_index(),
+                               flush_rows=10**9)
+    reg = _registry()
+    svc = _service(store, list(_two_camera_world()), reg,
+                   checkpoint_every_steps=0)
+    first = svc.step()
+
+    class Crash(Exception):
+        pass
+
+    orig = store.insert
+    calls = {"n": 0}
+
+    def insert_then_die(x, ids):
+        raise Crash  # meta log written, WAL append never happens
+
+    store.insert = insert_then_die
+    with pytest.raises(Crash):
+        svc.step()
+
+    store2 = VectorStore.open(tmp_path / "s")
+    reg2 = StandingQueryRegistry(encode_texts, patches_per_frame=KP,
+                                 pad_rows=64)
+    cam0, cam1 = _two_camera_world()
+    svc2 = _service(store2, [cam0, cam1], reg2)
+    assert cam0.pos == 8        # rewound to the last durable position
+    svc2.run()
+    svc2.close()
+    combined = first + svc2.sink.sink.alerts
+    assert {(a.camera, a.frame) for a in combined
+            if a.subscription == "red@0"} == EXPECTED_RED
+    assert len(combined) == len(dedup_by_key(combined))
+
+
+def test_registry_threshold_and_unregister():
+    reg = StandingQueryRegistry(encode_texts, patches_per_frame=KP,
+                                pad_rows=64)
+    reg.register("hi", {"text": "red square"}, threshold=10.0)  # unmeetable
+    base = _base_index()
+    seg = SegmentedIndex(base)
+    rows = encode_frames(label_frames(["red square"] * 2)).reshape(-1, D)
+    seg.insert(rows, np.arange(90_000, 90_000 + len(rows)))
+    got = seg.rows_since(-1)
+    sel = got["ids"] >= 90_000
+    from repro.ingest.registry import DeltaChunk
+    chunk = DeltaChunk(
+        codes=got["codes"][sel], vectors=got["vectors"][sel],
+        cells=got["cells"][sel], ids=got["ids"][sel],
+        row_camera=np.zeros(sel.sum(), np.int32),
+        row_time=np.repeat([0, 1], KP).astype(np.int32),
+        frame_seq=np.asarray([22_500, 22_501]),
+        frame_camera=np.zeros(2, np.int32),
+        frame_time=np.asarray([0, 1], np.int32))
+    alerts, st = reg.evaluate(seg.base, chunk)
+    assert alerts == [] and st.rows_scanned == 2 * KP
+    reg.unregister("hi")
+    assert reg.min_watermark() is None
+
+
+# ---------------------------------------------------------------------------
+# Compaction scheduling
+# ---------------------------------------------------------------------------
+def test_compaction_scheduler_triggers_and_bounded_pause(tmp_path):
+    store = VectorStore.create(tmp_path / "s", _base_index(),
+                               flush_rows=10**9)
+    seg = store.to_segmented_index()
+    seg.max_segments = 100      # let pressure build; the POLICY decides
+    seg.segment_capacity = 8
+    sched = CompactionScheduler(store, CompactionPolicy(
+        max_segments=2, max_drift=float("inf")))
+    assert sched.maybe_run() is None
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        v = pqmod.normalize(jnp.asarray(
+            rng.normal(0, 1, (8, D)).astype(np.float32)))
+        store.insert(np.asarray(v), np.arange(70_000 + 8 * i,
+                                              70_008 + 8 * i))
+    assert len(seg.segments) > 2
+    gen0 = seg.generation
+    assert sched.maybe_run() == "compact"
+    assert seg.generation == gen0 + 1 and not seg.segments
+    assert sched.compactions == 1
+    # the reader-visible pause is the pointer swap, not the merge
+    assert sched.pauses and sched.pauses[-1] < 0.1
+    # background thread mode: starts, acts, stops cleanly
+    store.insert(np.asarray(v), np.arange(71_000, 71_008))
+    sched.policy.max_segments = 0
+    sched.start()
+    import time
+    deadline = time.monotonic() + 5.0
+    while seg.segments and time.monotonic() < deadline:
+        time.sleep(0.01)
+    sched.stop()
+    assert sched.last_error is None
+    assert not seg.segments
+
+
+def test_codebook_refresh_swaps_base_and_codebooks(tmp_path):
+    store = VectorStore.create(tmp_path / "s", _base_index(n=800),
+                               flush_rows=10**9)
+    seg = store.to_segmented_index()
+    # out-of-distribution inserts: the frozen codebooks quantize poorly
+    shifted = np.asarray(pqmod.normalize(jnp.asarray(
+        5.0 + np.random.default_rng(4).normal(
+            0, 1, (32, D)).astype(np.float32))))
+    store.insert(shifted, np.arange(60_000, 60_032))
+    assert seg.drift_score() > 1.0
+    old_cb = store.manifest["codebooks"]
+    gen0 = seg.generation
+    store.refresh_codebooks(kmeans_iters=3)
+    assert seg.generation > gen0 and not seg.segments
+    assert store.manifest["codebooks"] != old_cb
+    assert not (store.root / old_cb).exists()
+    store.close()
+    # reopen with the refreshed codebooks; inserted rows stay findable
+    store2 = VectorStore.open(tmp_path / "s")
+    cfg = anns.SearchConfig(top_a=16, max_cell_size=512, top_k=10)
+    res = store2.search(jnp.asarray(shifted[3]), cfg)
+    assert 60_003 in np.asarray(res["ids"]).tolist()
+    store2.close()
+
+
+# ---------------------------------------------------------------------------
+# Chunked key-frame extraction parity (data/video.py streaming knobs)
+# ---------------------------------------------------------------------------
+def test_chunked_keyframe_extraction_matches_batch():
+    # Noise-free, one flash per 8-frame chunk: the chunk-local peak
+    # threshold (mean + sigma of the chunk's own energies) then lands
+    # below the flash energy exactly as the batch threshold does.  The
+    # flash at 24 sits ON a chunk boundary — only the prev_frame knob
+    # gives e[24] its true cross-boundary motion energy.
+    frames = np.full((32, 8, 8, 3), 0.4, np.float32)
+    for t in (5, 13, 24):
+        frames[t] += 0.5
+    batch = videomod.extract_keyframes(frames, stride=8, peak_sigma=1.0)
+    chunked = []
+    for lo in range(0, 32, 8):
+        chunk = frames[lo: lo + 8]
+        idx = videomod.extract_keyframes(
+            chunk, stride=8, peak_sigma=1.0,
+            prev_frame=frames[lo - 1] if lo else None,
+            offset=lo, always_first=(lo == 0))
+        chunked.extend((lo + idx).tolist())
+    assert sorted(set(chunked)) == sorted(batch.tolist())
+
+
+def test_keyframe_budget_keeps_highest_energy():
+    frames = np.zeros((16, 8, 8, 3), np.float32)
+    frames[10] += 0.9           # the single dominant motion event
+    idx = videomod.extract_keyframes(frames, stride=4, max_keyframes=2)
+    assert 0 in idx and 10 in idx and len(idx) == 2
