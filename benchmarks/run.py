@@ -166,6 +166,37 @@ def main() -> None:
                     f"delta_factor={r['delta_factor']:.0f}x "
                     f"alerts={r['alerts']}")
 
+    @bench("sharded_scan")
+    def sharded():
+        # the farm needs 8 devices; this process's jax is already pinned
+        # to the host's device count, so the sweep runs as a subprocess
+        # (benchmarks.sharded_scan forces the XLA flag before jax imports)
+        import os
+        import subprocess
+        t0 = time.perf_counter()
+        env = dict(os.environ, XLA_FLAGS=(
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip())
+        env.setdefault("PYTHONPATH", "src")
+        cmd = [sys.executable, "-m", "benchmarks.sharded_scan"]
+        if args.quick:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              env=env, timeout=1200)
+        us = (time.perf_counter() - t0) * 1e6
+        if proc.returncode != 0:
+            raise SystemExit(f"sharded_scan gate: "
+                             f"{(proc.stderr or proc.stdout)[-300:]}")
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        r = json.loads(line[len("RESULT "):])
+        s8 = r["by_s"]["8"]
+        return us, (f"parity={r['parity']} "
+                    f"s8={s8['us_per_query']:.0f}us/q "
+                    f"traffic_s8={s8['traffic_bytes_per_query']}B/q "
+                    f"n_independent={r['traffic_n_independent']} "
+                    f"@n={r['n']}")
+
     @bench("roofline_summary")
     def roof():
         from benchmarks import roofline

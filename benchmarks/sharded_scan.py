@@ -1,0 +1,150 @@
+"""Sharded fused-scan benchmark: shard-count sweep, merge parity gate, and
+the interconnect traffic model (DESIGN.md §13).
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.sharded_scan [--smoke]
+
+Run as ``__main__`` the module forces 8 simulated host devices itself
+(before jax imports) so it works from a bare shell; imported as a library
+(``main()``) it uses whatever devices exist — ``benchmarks.run`` therefore
+spawns it as a subprocess.
+
+``--smoke`` gates for CI:
+  * merge parity — the S-shard farm's ids AND scores are bit-identical to
+    single-host ``search_batch(fused_topk=True)`` for every shard count;
+  * traffic — modeled per-query interconnect bytes stay within the
+    O(k·S) envelope (butterfly ships ``log2(S)`` rounds of ``fetch_k``
+    slots) and are INDEPENDENT of index size N (the collective form of
+    the paper's latency-flat-in-N claim, Fig. 11b).
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__" and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+import json
+import time
+
+import numpy as np
+
+SHARD_COUNTS = (1, 2, 4, 8)
+SLOT_BYTES = 16     # f32 approx + i32 global row + f32 exact + i32 id
+Q = 16
+TOP_K = 32
+
+
+def _build(n: int, d: int = 32, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import imi as imimod
+
+    cents = jax.random.normal(jax.random.PRNGKey(seed + 1), (16, d))
+    a = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, 16)
+    x = cents[a] + 0.3 * jax.random.normal(jax.random.PRNGKey(seed + 3),
+                                           (n, d))
+    return imimod.build_imi(jax.random.PRNGKey(seed), x, jnp.arange(n),
+                            K=8, P=4, M=32, kmeans_iters=4)
+
+
+def _traffic_bytes(S: int, fetch_k: int) -> int:
+    """Modeled per-query interconnect bytes of the tree merge: butterfly
+    ships one (Q, fetch_k) slot tuple per round, ``log2(S)`` rounds."""
+    rounds = max(S - 1, 0).bit_length()
+    return rounds * fetch_k * SLOT_BYTES
+
+
+def main(smoke: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core import anns, distributed as dist
+
+    n = 16_384 if smoke else 65_536
+    d = 32
+    index = _build(n, d)
+    top_a = 32
+    cfg = anns.SearchConfig(top_a=top_a, max_cell_size=-(-n // top_a),
+                            top_k=TOP_K, rerank_overfetch=4)
+    fetch_k = cfg.top_k * cfg.rerank_overfetch
+    qs = jax.random.normal(jax.random.PRNGKey(9), (Q, d))
+    ref = jax.jit(lambda q: anns.search_batch(index, q, cfg))(qs)
+    jax.block_until_ready(ref["ids"])
+
+    devs = jax.devices()
+    out: dict = {"n": n, "q": Q, "top_k": TOP_K, "fetch_k": fetch_k,
+                 "devices": len(devs), "by_s": {}}
+    all_parity = True
+    for S in SHARD_COUNTS:
+        if S > len(devs):
+            out["by_s"][S] = {"skipped": f"only {len(devs)} devices"}
+            continue
+        mesh = Mesh(np.array(devs[:S]), ("shards",))
+        sidx = dist.shard_put(dist.shard_index(index, S), mesh)
+        search = jax.jit(dist.make_sharded_search(mesh, cfg=cfg))
+        res = search(sidx, qs)
+        jax.block_until_ready(res["ids"])            # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            res = search(sidx, qs)
+            jax.block_until_ready(res["ids"])
+        us_q = (time.perf_counter() - t0) / (reps * Q) * 1e6
+        parity = bool(all(
+            np.array_equal(np.asarray(ref[k]), np.asarray(res[k]))
+            for k in ("ids", "rows", "scores", "approx_scores")))
+        all_parity &= parity
+        out["by_s"][S] = {"us_per_query": us_q, "parity": parity,
+                          "traffic_bytes_per_query":
+                              _traffic_bytes(S, fetch_k)}
+        print(f"S={S}: {us_q:.0f}us/query, parity={parity}, "
+              f"interconnect {_traffic_bytes(S, fetch_k)} B/query "
+              f"(scatter of (Q, N) scores would be {4 * n} B/query)")
+
+    out["parity"] = all_parity
+    # N-independence: the merge ships fetch_k slots/round regardless of N
+    # (fetch_k = top_k * overfetch once coverage >= top_k * overfetch), so
+    # a 4x smaller index produces byte-identical traffic at every S
+    n2 = n // 4
+    cfg2 = anns.SearchConfig(top_a=top_a, max_cell_size=-(-n2 // top_a),
+                             top_k=TOP_K, rerank_overfetch=4)
+    fetch_k2 = min(cfg2.top_k * cfg2.rerank_overfetch,
+                   cfg2.top_a * cfg2.max_cell_size)
+    out["traffic_n_independent"] = all(
+        _traffic_bytes(S, fetch_k) == _traffic_bytes(S, fetch_k2)
+        for S in SHARD_COUNTS)
+    max_s = max(S for S in SHARD_COUNTS if S <= len(devs))
+    if smoke:
+        if not all_parity:
+            raise SystemExit("GATE: sharded merge diverged from the "
+                             "single-host fused scan")
+        for S in SHARD_COUNTS:
+            if S <= len(devs):
+                b = out["by_s"][S]["traffic_bytes_per_query"]
+                if b > SLOT_BYTES * fetch_k * max(S, 1):
+                    raise SystemExit(
+                        f"GATE: traffic {b} B/query exceeds the O(k*S) "
+                        f"envelope at S={S}")
+        if max_s < 2:
+            raise SystemExit("GATE: smoke needs >= 2 devices (set "
+                             "XLA_FLAGS=--xla_force_host_platform_"
+                             "device_count=8)")
+        if not out["traffic_n_independent"]:
+            raise SystemExit("GATE: interconnect bytes varied with N")
+    print("RESULT " + json.dumps(out))
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -1,5 +1,6 @@
 """Distributed LOVO index on an 8-device mesh (forced host devices):
-shard the index, run batched queries, show the merge ships only top-k.
+shard the index, run the fused scan farm, prove bit-parity with the
+single-host path, and show the merge ships only (Q, k) tuples.
 
   PYTHONPATH=src python examples/distributed_search.py
 """
@@ -15,6 +16,8 @@ import numpy as np
 
 
 def main():
+    from jax.sharding import Mesh
+
     from repro.core import anns, distributed as dist, imi as imimod, pq as pqmod
 
     n, d = 65_536, 64
@@ -26,17 +29,20 @@ def main():
     index = imimod.build_imi(jax.random.PRNGKey(0), x, jnp.arange(n),
                              K=16, P=8, M=64, kmeans_iters=8)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
-    sidx = jax.tree.map(jax.device_put, dist.shard_index(index, 8),
-                        dist.index_shardings(mesh))
-    print(f"sharded: {sidx.codes.shape[0]} shards x "
+    # flat power-of-two mesh -> butterfly ppermute merge (log2 S rounds)
+    mesh = Mesh(np.array(jax.devices()), ("shards",))
+    sidx = dist.shard_put(dist.shard_index(index, 8), mesh)
+    print(f"sharded: {sidx.codes.shape[0]} contiguous shards x "
           f"{sidx.codes.shape[1]} rows")
 
     qs = pqmod.normalize(cents[:16] + 0.1 * jax.random.normal(
         jax.random.PRNGKey(9), (16, d)))
-    for mode in ("exhaustive", "cell_probe"):
-        search = jax.jit(dist.make_sharded_search(
-            mesh, top_k=50, mode=mode, top_a=32, max_cell_size=512))
+    # shared-coverage config: top_a * max_cell_size >= n => the farm is
+    # BIT-IDENTICAL to single-host search_batch (DESIGN.md §13)
+    cfg = anns.SearchConfig(top_a=128, max_cell_size=512, top_k=50)
+    ref = jax.jit(lambda q: anns.search_batch(index, q, cfg))(qs)
+    for mode in ("cell_probe", "exhaustive"):
+        search = jax.jit(dist.make_sharded_search(mesh, cfg=cfg, mode=mode))
         res = search(sidx, qs)  # compile
         jax.block_until_ready(res["ids"])
         t0 = time.perf_counter()
@@ -46,10 +52,14 @@ def main():
         bf = anns.brute_force(index, qs[0], k=50)
         rec = len(set(np.asarray(res["ids"])[0].tolist())
                   & set(np.asarray(bf["ids"]).tolist())) / 50
-        merged_bytes = 8 * 50 * 8  # devices x top_k x (score+id)
+        bit = all(np.array_equal(np.asarray(ref[k]), np.asarray(res[k]))
+                  for k in ("ids", "rows", "scores"))
+        fetch_k = cfg.top_k * cfg.rerank_overfetch
+        merged_bytes = 3 * fetch_k * 16  # log2(8) rounds x slots x 16 B
         print(f"[{mode:10s}] 16 queries in {dt*1e3:.1f}ms "
               f"({dt/16*1e3:.2f}ms/q), recall@50 vs BF {rec:.2f}, "
-              f"interconnect payload/query ~{merged_bytes} B "
+              f"{'bit-identical to single host' if bit else 'approx'}, "
+              f"interconnect/query ~{merged_bytes} B "
               f"(independent of N={n})")
 
 

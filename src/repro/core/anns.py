@@ -150,6 +150,44 @@ def _topk_paired(luts: jax.Array, codes: jax.Array, bias: jax.Array,
     return _pq.pq_scan_topk_paired_jnp(luts, codes, fetch_k, bias, mask)
 
 
+def probe_descriptors(coarse1: jax.Array, coarse2: jax.Array, pq: Any,
+                      cell_offsets: jax.Array, qs: jax.Array, *,
+                      top_a: int, max_cell_size: int
+                      ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                 jax.Array, jax.Array]:
+    """The IMI probe math of Algorithm 1 lines 3–9, batched: NORMALIZED
+    queries ``qs (Q, D')`` -> ``(cells (Q, A), bases (Q, A), starts (Q, A),
+    counts (Q, A), luts (Q, P, M))``.
+
+    Extracted from ``search_batch`` so every consumer of window descriptors
+    — the single-host fused scan AND the shard_map scan farm
+    (``repro.core.distributed``) — computes them from the SAME code path.
+    The distributed bit-parity contract depends on this: descriptors are
+    computed once against the GLOBAL CSR (``cell_offsets``) with counts
+    capped globally at ``max_cell_size``, then shifted per shard; a
+    per-shard recomputation (local CSR, local cap) would select a
+    different candidate set than the single-host prefix cap and break
+    parity (DESIGN.md §13).
+    """
+    h = qs.shape[-1] // 2
+    s1 = qs[:, :h] @ coarse1.T                                   # (Q, K)
+    s2 = qs[:, h:] @ coarse2.T
+    # probe selection must agree with the L2 cell assignment (imi.probe_adjust)
+    adj1 = imimod.probe_adjust(coarse1)
+    adj2 = imimod.probe_adjust(coarse2)
+    cells = jax.vmap(
+        lambda a, b: imimod.multi_sequence_top_a(a, b, top_a)
+    )(s1 + adj1[None, :], s2 + adj2[None, :])                    # (Q, A)
+    K = coarse1.shape[0]
+    bases = jnp.take_along_axis(s1, cells // K, axis=1) \
+        + jnp.take_along_axis(s2, cells % K, axis=1)             # (Q, A)
+    starts = cell_offsets[cells]                                 # (Q, A)
+    counts = cell_offsets[cells + 1] - starts
+    counts = jnp.minimum(counts, max_cell_size)
+    luts = jax.vmap(lambda q: pqmod.similarity_lut(pq, q))(qs)
+    return cells, bases, starts, counts, luts
+
+
 def search(index: IMIIndex, q: jax.Array, cfg: SearchConfig,
            row_mask: Optional[jax.Array] = None) -> dict[str, jax.Array]:
     """Single-query Algorithm 1.  q: (D',) raw query embedding.
@@ -193,25 +231,10 @@ def search_batch(index: IMIIndex, qs: jax.Array, cfg: SearchConfig,
     if row_mask is not None:
         row_mask = jnp.broadcast_to(
             jnp.asarray(row_mask), (Q, index.n)).astype(jnp.uint8)
-    h = qs.shape[-1] // 2
-    s1 = qs[:, :h] @ index.coarse1.T                             # (Q, K)
-    s2 = qs[:, h:] @ index.coarse2.T
-    # probe selection must agree with the L2 cell assignment (imi.probe_adjust)
-    adj1 = imimod.probe_adjust(index.coarse1)
-    adj2 = imimod.probe_adjust(index.coarse2)
-    cells = jax.vmap(
-        lambda a, b: imimod.multi_sequence_top_a(a, b, cfg.top_a)
-    )(s1 + adj1[None, :], s2 + adj2[None, :])                    # (Q, A)
-    K = index.K
-    base = jnp.take_along_axis(s1, cells // K, axis=1) \
-        + jnp.take_along_axis(s2, cells % K, axis=1)             # (Q, A)
-
-    starts = index.cell_offsets[cells]                           # (Q, A)
-    counts = index.cell_offsets[cells + 1] - starts
-    counts = jnp.minimum(counts, cfg.max_cell_size)
+    cells, base, starts, counts, luts = probe_descriptors(
+        index.coarse1, index.coarse2, index.pq, index.cell_offsets, qs,
+        top_a=cfg.top_a, max_cell_size=cfg.max_cell_size)
     W = cfg.max_cell_size
-
-    luts = jax.vmap(lambda q: pqmod.similarity_lut(index.pq, q))(qs)
     shared = cfg.top_a * cfg.max_cell_size >= index.n
     # refine factor: ADC order is approximate, so the true top-k by exact
     # score may sit below rank k in approx order — fetch a multiple, exact-

@@ -1,35 +1,56 @@
-"""Distributed LOVO index: shard_map scan farm over the mesh.
+"""Distributed LOVO index: the shard_map fused scan farm + elastic shards.
 
 The paper scales via Milvus server shards; the TPU-native equivalent shards
-index rows across EVERY mesh axis (the whole pod is one flat scan farm for
-serving).  Per device:
+index ROWS across the device mesh and lifts the PR-5 fused scan->select
+kernels (``repro.kernels.pq_scan``) into a ``shard_map`` farm.  Per shard:
 
-  local ADC scan (Pallas kernel on real TPU)  ->  local top-k
-  all_gather of (k scores, k global ids)       ->  global top-k
+  in-kernel per-query running top-L over LOCAL rows   (one fused pass:
+      windowed probe descriptors + row-validity/tombstone bitmap + the
+      planner's row mask all ride the scan)
+  per-shard exact bf16 rerank of its L survivors      (same einsum shape
+      as the single-host path => bitwise-identical per-row scores)
+  tree-structured cross-shard top-L merge             (butterfly ppermute
+      on a flat power-of-two mesh, all_gather+sort otherwise)
 
-Only O(k x devices) bytes cross the interconnect per query — independent of
-index size N, which is the collective-form statement of the paper's
-"latency flat in dataset size" claim (Fig. 11b).
+Only ``(Q, L)`` score/id/payload tuples ever cross the interconnect —
+never a score matrix — so per-query traffic is O(k·S·log S) bytes on the
+butterfly (O(k·S) gathered), independent of index size N: the collective
+form of the paper's "latency flat in dataset size" claim (Fig. 11b).
 
-Two search modes:
-  * ``sharded_exhaustive`` — full ADC over local rows (baseline / w-o-ANNS)
-  * ``sharded_cell_probe`` — each shard holds its own CSR layout over the
-    SHARED coarse codebooks; top-A cells are probed locally then merged
-    (the paper's IMI, distributed).
+**Bit-parity contract** (DESIGN.md §13, proven by tests/test_sharded_scan):
+shards are CONTIGUOUS row ranges of the same cell-sorted global row space,
+probe descriptors are computed ONCE against the global CSR
+(``anns.probe_descriptors``) and only SHIFTED per shard, and the merge is
+keyed ``(approx score desc, global row asc)`` — the ``lax.top_k`` tie rule
+the fused kernels implement.  The merged result is therefore bit-identical
+to single-host ``anns.search_batch(fused_topk=True)`` on the shared/windowed
+branch (``cfg.top_a * cfg.max_cell_size >= n``) for every shard count,
+including masked rows, tombstones, and exact score ties at the L boundary.
+
+**Elastic shards**: ``shard_index_from_store`` builds shards straight from a
+persistent ``VectorStore`` (segment-aligned: pending delta segments are
+folded first, cuts land on cell boundaries, tombstones become the row-valid
+bitmap).  ``RoutingTable`` assigns shards to serving replicas with a
+generation stamp bumped on every split/migration; ``QueryRouter`` refuses a
+``call_sharded`` broadcast against a stale or demoted assignment (a missing
+shard must fail loudly, never merge incomplete).  ``repro.store
+.migrate_rows`` is the data-plane seam: rows move between shard stores as
+WAL-logged delete+insert, so a crash mid-migration loses no rows.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import anns
 from repro.core import pq as pqmod
 from repro.core.imi import IMIIndex
+from repro.kernels import pq_scan as _pq
 
 
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
@@ -46,26 +67,42 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
 
 @dataclasses.dataclass
 class ShardedIndex:
-    """Row-sharded index arrays + replicated codebooks.
+    """Contiguous row-range shards of one cell-sorted index + replicated
+    codebooks.
 
-    All arrays carry a leading 'shards' dim of size n_devices so shapes are
-    static per device under shard_map.
+    All sharded arrays carry a leading ``S`` (shards) dim, padded to a
+    uniform ``n_pad`` rows per shard (``row_valid`` zeroes the padding and
+    any tombstoned rows) so shapes are static per device under shard_map.
+    ``row_start`` maps local row ``i`` of shard ``s`` to GLOBAL row
+    ``row_start[s] + i`` of the cell-sorted space — the fused farm runs on
+    global probe descriptors shifted by it, and the cross-shard merge keys
+    on the reconstructed global row (DESIGN.md §13).
     """
 
-    codes: jax.Array         # (S, n_local, P) uint8
-    vectors: jax.Array       # (S, n_local, D') bf16
-    ids: jax.Array           # (S, n_local) int32 global patch ids
-    cell_of: jax.Array       # (S, n_local) int32
-    cell_offsets: jax.Array  # (S, K*K+1) int32 per-shard CSR
-    coarse1: jax.Array       # (K, D'/2) replicated
+    codes: jax.Array           # (S, n_pad, P) uint8
+    vectors: jax.Array         # (S, n_pad, D') bf16
+    ids: jax.Array             # (S, n_pad) int32 global patch ids (-1 pad)
+    cell_of: jax.Array         # (S, n_pad) int32 (K*K on padding)
+    row_valid: jax.Array       # (S, n_pad) uint8: 0 = padding or tombstone
+    row_start: jax.Array       # (S, 1) int32 global row of local row 0
+    cell_offsets: jax.Array    # (S, K*K+1) int32 per-shard (local) CSR
+    global_offsets: jax.Array  # (K*K+1,) int32 global CSR, replicated
+    coarse1: jax.Array         # (K, D'/2) replicated
     coarse2: jax.Array
-    pq_centroids: jax.Array  # (P, M, m) replicated
-    pq_rotation: jax.Array   # (D', D') replicated (identity when no OPQ —
-    #                          static shape keeps shard_map specs uniform)
+    pq_centroids: jax.Array    # (P, M, m) replicated
+    # None when the quantizer has no OPQ rotation — structurally absent
+    # (an empty pytree slot), matching how ``pq.similarity_lut`` skips the
+    # rotate, instead of a dense identity matmul on every LUT build
+    pq_rotation: Optional[jax.Array] = None
+
+    @property
+    def n_shards(self) -> int:
+        return self.codes.shape[0]
 
     def tree_flatten(self):
         return ((self.codes, self.vectors, self.ids, self.cell_of,
-                 self.cell_offsets, self.coarse1, self.coarse2,
+                 self.row_valid, self.row_start, self.cell_offsets,
+                 self.global_offsets, self.coarse1, self.coarse2,
                  self.pq_centroids, self.pq_rotation), None)
 
     @classmethod
@@ -76,134 +113,393 @@ class ShardedIndex:
 jax.tree_util.register_pytree_node_class(ShardedIndex)
 
 
-def shard_index(index: IMIIndex, n_shards: int) -> ShardedIndex:
-    """Round-robin rows into n_shards, rebuilding per-shard CSR offsets.
+def shard_index(index: IMIIndex, n_shards: int, *,
+                alive: Optional[np.ndarray] = None,
+                boundaries: Optional[Sequence[int]] = None,
+                cell_aligned: bool = False) -> ShardedIndex:
+    """Slice the cell-sorted index into ``n_shards`` CONTIGUOUS row ranges.
 
-    Host-side (numpy) — this is the ingest/placement step a router would do.
+    Host-side (numpy) — the ingest/placement step a router performs.
+    Contiguity (vs the former round-robin striping) is what makes the
+    distributed fused scan exact: global probe windows stay intervals, so
+    a shard evaluates ``window ∩ [row_start, row_start + n_local)`` by a
+    constant shift of the SAME descriptors the single-host scan uses.
+
+    ``alive``: optional (n,) bool bitmap — tombstoned rows become
+    ``row_valid == 0`` and ride the fused pass as the mask (never
+    selectable, exactly like the single-host tombstone pushdown).
+    ``boundaries``: explicit ``n_shards + 1`` global row cuts (must start
+    at 0, end at n, be non-decreasing) — the segment-alignment hook.
+    ``cell_aligned``: snap the default equal-split cuts to the nearest
+    cell boundary so no probe window straddles shards (cells are the
+    finest persisted sort unit of a base segment).
     """
     n = index.n
-    per = -(-n // n_shards)
-    pad = per * n_shards - n
-    def pad_rows(a, fill=0):
-        a = np.asarray(a)
-        if pad:
-            a = np.concatenate([a, np.full((pad,) + a.shape[1:], fill,
-                                           a.dtype)])
-        return a
-    # rows are cell-sorted; strided assignment keeps each shard's rows
-    # cell-sorted too (order-preserving subsequence)
-    codes = pad_rows(index.codes)
-    vectors = pad_rows(index.vectors)
-    ids = pad_rows(index.ids, fill=-1)
-    cell_of = pad_rows(index.cell_of, fill=2 ** 30)
-    K2 = index.cell_offsets.shape[0] - 1
-    s_codes, s_vec, s_ids, s_cell, s_off = [], [], [], [], []
+    offsets = np.asarray(index.cell_offsets, np.int64)
+    K2 = offsets.shape[0] - 1
+    if boundaries is not None:
+        bounds = [int(b) for b in boundaries]
+        if len(bounds) != n_shards + 1 or bounds[0] != 0 or bounds[-1] != n \
+                or any(b < a for a, b in zip(bounds, bounds[1:])):
+            raise ValueError(
+                f"boundaries must be {n_shards + 1} non-decreasing cuts "
+                f"from 0 to {n}, got {bounds}")
+    else:
+        bounds = [round(i * n / n_shards) for i in range(n_shards + 1)]
+        if cell_aligned:
+            bounds = [int(offsets[np.abs(offsets - t).argmin()])
+                      for t in bounds]
+        bounds[0], bounds[-1] = 0, n
+        for i in range(1, len(bounds)):          # snapping can reorder cuts
+            bounds[i] = max(bounds[i], bounds[i - 1])
+    sizes = [hi - lo for lo, hi in zip(bounds, bounds[1:])]
+    n_pad = max(max(sizes), 1)
+
+    codes = np.asarray(index.codes)
+    vectors = np.asarray(index.vectors)
+    ids = np.asarray(index.ids)
+    cell_of = np.asarray(index.cell_of)
+    alive_arr = np.ones(n, bool) if alive is None \
+        else np.asarray(alive, bool).reshape(n)
+
+    def pad_to(a, fill):
+        out = np.full((n_pad,) + a.shape[1:], fill, a.dtype)
+        out[: len(a)] = a
+        return out
+
+    s_codes, s_vec, s_ids, s_cell, s_valid, s_off = [], [], [], [], [], []
     for s in range(n_shards):
-        sel = np.arange(s, per * n_shards, n_shards)
-        c = cell_of[sel]
-        s_codes.append(codes[sel])
-        s_vec.append(vectors[sel])
-        s_ids.append(ids[sel])
-        s_cell.append(c)
-        counts = np.bincount(np.clip(c, 0, K2 - 1), minlength=K2,
-                             weights=(c < K2).astype(np.int64)).astype(np.int64)
-        s_off.append(np.concatenate([[0], np.cumsum(counts)]).astype(np.int32))
+        lo, hi = bounds[s], bounds[s + 1]
+        s_codes.append(pad_to(codes[lo:hi], 0))
+        s_vec.append(pad_to(vectors[lo:hi], 0))
+        s_ids.append(pad_to(ids[lo:hi], -1))
+        s_cell.append(pad_to(cell_of[lo:hi].astype(np.int32), K2))
+        s_valid.append(pad_to(alive_arr[lo:hi].astype(np.uint8), 0))
+        # local CSR: the global prefix sums clipped into this shard's range
+        s_off.append(np.clip(offsets - lo, 0, hi - lo).astype(np.int32))
     return ShardedIndex(
         codes=jnp.asarray(np.stack(s_codes)),
         vectors=jnp.asarray(np.stack(s_vec)),
-        ids=jnp.asarray(np.stack(s_ids)),
+        ids=jnp.asarray(np.stack(s_ids), jnp.int32),
         cell_of=jnp.asarray(np.stack(s_cell)),
+        row_valid=jnp.asarray(np.stack(s_valid)),
+        row_start=jnp.asarray(np.asarray(bounds[:-1], np.int32)[:, None]),
         cell_offsets=jnp.asarray(np.stack(s_off)),
+        global_offsets=jnp.asarray(offsets.astype(np.int32)),
         coarse1=index.coarse1, coarse2=index.coarse2,
         pq_centroids=index.pq.centroids,
-        pq_rotation=(index.pq.rotation if index.pq.rotation is not None
-                     else jnp.eye(index.vectors.shape[-1], dtype=jnp.float32)),
+        pq_rotation=index.pq.rotation,
     )
 
 
-def index_shardings(mesh: Mesh) -> Any:
+def shard_index_from_store(store: Any, n_shards: int) -> ShardedIndex:
+    """Build shards straight from a persistent ``VectorStore``
+    (segment-aligned): pending delta segments are folded into the
+    cell-sorted base first (``compact`` — deltas are unsorted appendices,
+    so a window-exact shard cannot contain half of one), shard cuts snap
+    to cell boundaries (the base segment's internal sort unit), and
+    tombstones ride along as the row-valid bitmap WITHOUT forcing a
+    physical rewrite.  This is ``add_replica_from_store``'s device-mesh
+    counterpart: open the store, call this, ``shard_put`` the result.
+    """
+    seg = store.seg
+    if seg.segments:
+        store.compact()
+    alive = None
+    if seg.tombstones:
+        import numpy as _np
+        from repro.core import imi as imimod
+        alive = ~_np.isin(
+            _np.asarray(seg.base.ids),
+            _np.fromiter(seg.tombstones, imimod.ID_DTYPE))
+    return shard_index(seg.base, n_shards, alive=alive, cell_aligned=True)
+
+
+def index_shardings(mesh: Mesh, *, has_rotation: bool = True) -> Any:
+    """The ``NamedSharding`` pytree matching :class:`ShardedIndex`: row
+    shards split their leading S dim over EVERY mesh axis, codebooks
+    replicate.  ``has_rotation`` must match the index (the rotation slot is
+    structurally absent without OPQ)."""
     axes = tuple(mesh.axis_names)
     row = NamedSharding(mesh, P(axes))
     rep = NamedSharding(mesh, P())
     return ShardedIndex(codes=row, vectors=row, ids=row, cell_of=row,
-                        cell_offsets=row, coarse1=rep, coarse2=rep,
-                        pq_centroids=rep, pq_rotation=rep)
+                        row_valid=row, row_start=row, cell_offsets=row,
+                        global_offsets=rep, coarse1=rep, coarse2=rep,
+                        pq_centroids=rep,
+                        pq_rotation=rep if has_rotation else None)
 
 
-def make_sharded_search(mesh: Mesh, *, top_k: int = 100,
-                        mode: str = "exhaustive", top_a: int = 32,
-                        max_cell_size: int = 1024,
-                        use_kernel: str = "auto"):
-    """Builds a jit-able batched search: (ShardedIndex, qs (Q, D')) ->
-    dict(ids (Q, k), scores (Q, k)).
+def shard_put(sidx: ShardedIndex, mesh: Mesh) -> ShardedIndex:
+    """Place a host-built :class:`ShardedIndex` onto the mesh (one shard
+    per device; ``n_shards`` must equal the mesh's device count)."""
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    if sidx.n_shards != n_dev:
+        raise ValueError(
+            f"index has {sidx.n_shards} shards but mesh has {n_dev} devices")
+    sh = index_shardings(mesh, has_rotation=sidx.pq_rotation is not None)
+    return jax.tree.map(jax.device_put, sidx, sh)
 
-    ``use_kernel`` matches ``SearchConfig.use_kernel`` ('auto' resolves per
-    backend); the per-shard scan currently always uses the jnp formulation
-    inside shard_map — the parameter is accepted for config symmetry."""
+
+def tree_merge_topk(parts: Sequence[tuple[jax.Array, jax.Array]], k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Host-facing tree fold of per-shard fused-scan ``(scores, ids)``
+    lists (GLOBAL ids) with the exact lexicographic merge — the same
+    reduction the in-farm butterfly performs, usable without a mesh (the
+    property tests and the traffic-model benchmark drive it directly)."""
+    from repro.kernels import ops as kops
+    parts = [(s, i) for s, i in parts]
+    if not parts:
+        raise ValueError("tree_merge_topk needs at least one shard part")
+    while len(parts) > 1:
+        nxt = []
+        for j in range(0, len(parts) - 1, 2):
+            (sa, ia), (sb, ib) = parts[j], parts[j + 1]
+            nxt.append(kops.topk_merge(sa, ia, sb, ib, k))
+        if len(parts) % 2:
+            nxt.append(parts[-1])
+        parts = nxt
+    s, i = parts[0]
+    z = s[:, :0]
+    return kops.topk_merge(s, i, z, i[:, :0], k)   # normalize width to k
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def make_sharded_search(mesh: Mesh, *,
+                        cfg: Optional[anns.SearchConfig] = None,
+                        mode: str = "probe", **overrides):
+    """Build the jit-able sharded batched search:
+    ``(ShardedIndex, qs (Q, D')[, row_mask]) -> dict(ids, scores,
+    approx_scores, rows)`` — the distributed formulation of
+    ``anns.search_batch``.
+
+    ``cfg`` is a ``SearchConfig`` (defaults match the single-host path,
+    including ``use_kernel='auto'`` resolving through
+    ``kernels.ops.resolve_use_kernel`` at trace time — Pallas on TPU /
+    forced-compile parity, blocked-jnp elsewhere); keyword ``overrides``
+    patch individual fields (``top_k=...`` etc.).
+
+    ``mode``:
+      * ``'probe'`` (default; alias ``'cell_probe'``) — IMI top-A probe.
+        On a shared-coverage config (``top_a * max_cell_size >= n``) the
+        result is BIT-IDENTICAL to single-host
+        ``search_batch(fused_topk=True)``: same ids, same scores, same
+        dead-slot ``(-inf, -1)`` padding (DESIGN.md §13).
+      * ``'exhaustive'`` — descriptors cover all K² cells (the w/o-ANNS
+        ablation, distributed): same candidate semantics as
+        ``anns.exhaustive_adc``.
+
+    ``row_mask`` (optional (n,) or (Q, n) over GLOBAL rows) is split per
+    shard and fused into the same scan pass as the row-valid/tombstone
+    bitmap (filter pushdown, DESIGN.md §10).
+    """
+    base_cfg = cfg or anns.SearchConfig()
+    if overrides:
+        base_cfg = dataclasses.replace(base_cfg, **overrides)
+    if mode == "cell_probe":
+        mode = "probe"
+    if mode not in ("probe", "exhaustive"):
+        raise ValueError(f"mode must be probe|exhaustive, got {mode!r}")
+    scfg = base_cfg
     axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod([mesh.shape[a] for a in axes]))
 
-    def local_scan(codes, vectors, ids, cell_of, offsets, c1, c2, cents,
-                   rot, qs):
-        # shapes inside shard_map: codes (1, n_local, P) etc.; qs replicated
+    def farm(codes, vectors, ids, row_start, smask, qs, starts, counts,
+             bases, luts, fetch_k: int):
+        # per-shard block shapes: sharded args carry a leading (1, ...) dim
         codes, vectors, ids = codes[0], vectors[0], ids[0]
-        cell_of, offsets = cell_of[0], offsets[0]
-        pq = pqmod.PQ(cents, rotation=rot)
-        K = c1.shape[0]
+        smask = smask[0]                       # (1 | Q, n_local)
+        r0 = row_start[0, 0]
+        Q, n_local = qs.shape[0], codes.shape[0]
+        lmask = jnp.broadcast_to(smask != 0, (Q, n_local)).astype(jnp.uint8)
+        # the SAME global descriptors, shifted: local row i is global row
+        # r0 + i, so membership in [start, start+count) is exactly
+        # membership in the shifted window — no per-shard recomputation,
+        # no per-shard count cap (which would break parity)
+        sc, lrows = anns._topk_windowed(
+            luts, codes, starts - r0, counts, bases, fetch_k,
+            scfg.use_kernel, lmask)
+        safe = jnp.maximum(lrows, 0)
+        gid = ids[safe]                                        # (Q, L)
+        grow = jnp.where(lrows >= 0, lrows + r0, -1)
+        if scfg.exact_rerank:
+            # per-shard exact rerank of the L survivors: the einsum shape
+            # (Q, L, D') matches the single-host refine exactly, so each
+            # row's exact score is bitwise what one host would compute —
+            # carrying exact through the merge keeps the refine exact
+            # because the global top-L is a subset of the shard top-Ls
+            vecs = vectors[safe].astype(jnp.float32)
+            exact = jnp.einsum("qkd,qd->qk", vecs, qs)
+            exact = jnp.where(jnp.isfinite(sc), exact, -jnp.inf)
+        else:
+            exact = sc
+        # -- tree merge: only (Q, L) tuples cross the interconnect --------
+        cur = (sc, grow, exact, gid)
+        if n_dev > 1 and len(axes) == 1 and _is_pow2(n_dev):
+            # butterfly (recursive doubling): log2(S) ppermute rounds, each
+            # shipping L slots/query; after the last round every device
+            # holds the identical global top-L (sort-merge is deterministic)
+            d = 1
+            while d < n_dev:
+                perm = [(i, i ^ d) for i in range(n_dev)]
+                oth = tuple(jax.lax.ppermute(x, axes[0], perm) for x in cur)
+                m = _pq.topk_merge(cur[0], cur[1], oth[0], oth[1], fetch_k,
+                                   (cur[2], cur[3]), (oth[2], oth[3]))
+                cur = m
+                d *= 2
+        elif n_dev > 1:
+            # non-power-of-two or multi-axis mesh: gather the (Q, L) lists
+            # (still O(L·S)/query, never a score matrix) and sort-merge once
+            g = tuple(jax.lax.all_gather(x, axes, axis=1, tiled=True)
+                      for x in cur)
+            cur = _pq.topk_merge(g[0], g[1], g[0][:, :0], g[1][:, :0],
+                                 fetch_k, (g[2], g[3]),
+                                 (g[2][:, :0], g[3][:, :0]))
+        return cur
 
-        def one(q):
-            q = pqmod.normalize(q.astype(jnp.float32))
-            h = q.shape[-1] // 2
-            s1, s2 = c1 @ q[:h], c2 @ q[h:]
-            lut = pqmod.similarity_lut(pq, q)
-            if mode == "exhaustive":
-                base = s1[jnp.clip(cell_of // K, 0, K - 1)] \
-                    + s2[jnp.clip(cell_of % K, 0, K - 1)]
-                base = jnp.where(cell_of < K * K, base, -jnp.inf)
-                scores = base + pqmod.adc_scores(lut, codes)
-                rows = None
-            else:  # cell_probe
-                from repro.core.imi import multi_sequence_top_a, probe_adjust
-                cells = multi_sequence_top_a(s1 + probe_adjust(c1),
-                                             s2 + probe_adjust(c2), top_a)
-                cbase = s1[cells // K] + s2[cells % K]
-                starts = offsets[cells]
-                counts = jnp.minimum(offsets[cells + 1] - starts,
-                                     max_cell_size)
-                win = starts[:, None] + jnp.arange(max_cell_size)[None, :]
-                valid = jnp.arange(max_cell_size)[None, :] < counts[:, None]
-                rows = jnp.clip(win, 0, codes.shape[0] - 1)
-                cand = codes[rows.reshape(-1)]
-                sc = pqmod.adc_scores(lut, cand).reshape(rows.shape)
-                scores_w = jnp.where(valid, sc + cbase[:, None], -jnp.inf)
-                scores, rows = scores_w.reshape(-1), rows.reshape(-1)
-            # same overfetch + exact-refine protocol as anns.search /
-            # exhaustive_adc: ADC order is approximate, so fetch a multiple
-            # of top_k, exact-rescore, THEN cut
-            fetch_k = min(top_k * 4, scores.shape[0])
-            vals, idx = jax.lax.top_k(scores, fetch_k)
-            sel = idx if rows is None else rows[idx]
-            exact = vectors[sel].astype(jnp.float32) @ q
-            exact = jnp.where(jnp.isfinite(vals), exact, -jnp.inf)
-            order = jnp.argsort(-exact)[:top_k]
-            return exact[order], ids[sel[order]]
+    def search(sidx: ShardedIndex, qs: jax.Array,
+               row_mask: Optional[jax.Array] = None) -> dict[str, jax.Array]:
+        qs = pqmod.normalize(qs.astype(jnp.float32))
+        Q = qs.shape[0]
+        pq = pqmod.PQ(sidx.pq_centroids, rotation=sidx.pq_rotation)
+        n_pad = sidx.codes.shape[1]
+        if mode == "probe":
+            _, bases, starts, counts, luts = anns.probe_descriptors(
+                sidx.coarse1, sidx.coarse2, pq, sidx.global_offsets, qs,
+                top_a=scfg.top_a, max_cell_size=scfg.max_cell_size)
+            cap = scfg.top_a * scfg.max_cell_size
+        else:  # exhaustive: every cell is a window, counts uncapped
+            K = sidx.coarse1.shape[0]
+            h = qs.shape[-1] // 2
+            s1 = qs[:, :h] @ sidx.coarse1.T
+            s2 = qs[:, h:] @ sidx.coarse2.T
+            cells = np.arange(K * K)
+            bases = s1[:, cells // K] + s2[:, cells % K]       # (Q, K*K)
+            starts = jnp.broadcast_to(sidx.global_offsets[:-1], (Q, K * K))
+            counts = jnp.broadcast_to(
+                sidx.global_offsets[1:] - sidx.global_offsets[:-1],
+                (Q, K * K))
+            luts = jax.vmap(lambda q: pqmod.similarity_lut(pq, q))(qs)
+            cap = sidx.n_shards * n_pad
+        fetch_k = min(scfg.top_k * max(scfg.rerank_overfetch, 1), cap) \
+            if scfg.exact_rerank else scfg.top_k
+        # fold the planner's GLOBAL row mask into each shard's validity
+        # bitmap host-of-mesh side; padding/tombstones are already zero
+        if row_mask is not None:
+            n_rows = sidx.global_offsets[-1]
+            rm = jnp.broadcast_to(
+                jnp.asarray(row_mask),
+                (Q, row_mask.shape[-1])).astype(jnp.uint8)
+            gr = sidx.row_start + jnp.arange(n_pad, dtype=jnp.int32)[None]
+            m = rm[:, jnp.clip(gr, 0, n_rows - 1)]             # (Q, S, n_pad)
+            smask = jnp.transpose(m, (1, 0, 2)) * sidx.row_valid[:, None, :]
+        else:
+            smask = sidx.row_valid[:, None, :]                 # (S, 1, n_pad)
 
-        ex, gid = jax.vmap(one)(qs)                       # (Q, k) each
-        # global merge: ship only k ids+scores per device
-        all_ex = jax.lax.all_gather(ex, axes, axis=1, tiled=True)
-        all_id = jax.lax.all_gather(gid, axes, axis=1, tiled=True)
-        vals, idx = jax.lax.top_k(all_ex, top_k)
-        return vals, jnp.take_along_axis(all_id, idx, axis=1)
-
-    in_specs = (P(axes), P(axes), P(axes), P(axes), P(axes),
-                P(), P(), P(), P(), P())
-    out_specs = (P(), P())
-    f = shard_map_compat(local_scan, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs)
-
-    def search(sidx: ShardedIndex, qs: jax.Array):
-        vals, ids = f(sidx.codes, sidx.vectors, sidx.ids, sidx.cell_of,
-                      sidx.cell_offsets, sidx.coarse1, sidx.coarse2,
-                      sidx.pq_centroids, sidx.pq_rotation, qs)
-        return {"scores": vals, "ids": ids}
+        shd = P(axes)
+        rep = P()
+        f = shard_map_compat(
+            lambda *a: farm(*a, fetch_k=fetch_k), mesh=mesh,
+            in_specs=(shd, shd, shd, shd, shd, rep, rep, rep, rep, rep),
+            out_specs=(rep, rep, rep, rep))
+        sc, grow, exact, gid = f(sidx.codes, sidx.vectors, sidx.ids,
+                                 sidx.row_start, smask, qs,
+                                 starts.astype(jnp.int32),
+                                 counts.astype(jnp.int32), bases, luts)
+        if scfg.exact_rerank:
+            # identical final refine to search_batch: stable argsort over
+            # the exact scores of the SAME candidate list in the SAME
+            # order => bit-identical top_k cut
+            order = jnp.argsort(-exact, axis=1)[:, : scfg.top_k]
+            scores = jnp.take_along_axis(exact, order, axis=1)
+            approx = jnp.take_along_axis(sc, order, axis=1)
+            grow = jnp.take_along_axis(grow, order, axis=1)
+            gid = jnp.take_along_axis(gid, order, axis=1)
+        else:
+            scores = sc[:, : scfg.top_k]
+            approx = sc[:, : scfg.top_k]
+            grow, gid = grow[:, : scfg.top_k], gid[:, : scfg.top_k]
+        live = jnp.isfinite(scores)
+        return {"ids": jnp.where(live, gid, -1), "scores": scores,
+                "approx_scores": approx,
+                "rows": jnp.where(live, grow, -1)}
 
     return search
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard control plane: generation-stamped routing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardAssignment:
+    """One shard's placement: global row range + the replica serving it."""
+    shard_id: int
+    row_range: tuple[int, int]     # [lo, hi) global rows (informational)
+    replica: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingTable:
+    """Immutable shard->replica map with a GENERATION stamp.
+
+    Every topology change — migration, split — returns a NEW table with
+    ``generation + 1``.  ``QueryRouter.install_routing`` stamps the
+    serving replicas with the table's generation; a ``call_sharded``
+    broadcast then refuses replicas stamped with an older generation (a
+    replica still serving a pre-migration shard layout would merge rows
+    twice or not at all).  The stamp protocol is what makes mid-stream
+    migration safe: queries race the move, but never observe half of it.
+    """
+    assignments: tuple[ShardAssignment, ...]
+    generation: int = 0
+
+    @classmethod
+    def initial(cls, replicas: Sequence[str],
+                boundaries: Optional[Sequence[int]] = None) -> "RoutingTable":
+        n = len(replicas)
+        if boundaries is None:
+            boundaries = [0] * (n + 1)       # row ranges unknown/abstract
+        if len(boundaries) != n + 1:
+            raise ValueError("need len(replicas)+1 boundaries")
+        return cls(tuple(
+            ShardAssignment(i, (int(boundaries[i]), int(boundaries[i + 1])),
+                            r)
+            for i, r in enumerate(replicas)))
+
+    def replicas(self) -> tuple[str, ...]:
+        return tuple(a.replica for a in self.assignments)
+
+    def migrate(self, shard_id: int, to_replica: str) -> "RoutingTable":
+        """Move one shard to a new replica; bumps the generation."""
+        if shard_id not in {a.shard_id for a in self.assignments}:
+            raise ValueError(f"unknown shard {shard_id}")
+        return RoutingTable(tuple(
+            dataclasses.replace(a, replica=to_replica)
+            if a.shard_id == shard_id else a for a in self.assignments),
+            self.generation + 1)
+
+    def split(self, shard_id: int, at_row: int,
+              new_replica: str) -> "RoutingTable":
+        """Split a hot shard at ``at_row``: the upper half moves to
+        ``new_replica`` as a fresh shard id; bumps the generation."""
+        out: list[ShardAssignment] = []
+        next_id = 1 + max(a.shard_id for a in self.assignments)
+        found = False
+        for a in self.assignments:
+            if a.shard_id == shard_id:
+                lo, hi = a.row_range
+                if not (lo <= at_row <= hi):
+                    raise ValueError(
+                        f"split row {at_row} outside shard range {a.row_range}")
+                out.append(dataclasses.replace(a, row_range=(lo, at_row)))
+                out.append(ShardAssignment(next_id, (at_row, hi),
+                                           new_replica))
+                found = True
+            else:
+                out.append(a)
+        if not found:
+            raise ValueError(f"unknown shard {shard_id}")
+        return RoutingTable(tuple(out), self.generation + 1)

@@ -604,3 +604,24 @@ def merge_grouped(results: Sequence[PlanResult], plan: Node,
                       videos=meta.frame_video[frames].astype(np.int64),
                       times=meta.frame_time[frames].astype(np.int64),
                       moments=moments)
+
+
+def execute_sharded(plan: Node, meta: PlanMeta, router: Any, *,
+                    replicas: Optional[Sequence[str]] = None) -> PlanResult:
+    """Answer ``plan`` against a sharded deployment through a
+    ``serving.QueryRouter``: broadcast ``shard_plan(plan)`` to every shard
+    replica (``call_sharded`` — refuses demoted or stale-generation
+    shards, a partial merge is never returned) and fold the per-shard
+    results with :func:`merge_grouped` so grouped reductions run once,
+    over the complete set.
+
+    Each shard replica's ``fn`` must map a plan node to its local
+    ``PlanResult`` (e.g. ``lambda p: plan.execute(p, meta, shard_search)``
+    over that shard's rows).  ``replicas`` restricts the broadcast when
+    the router also fronts non-shard (pure) replicas and no routing table
+    is installed.
+    """
+    sub = shard_plan(plan)
+    return router.call_sharded(
+        sub, lambda outs: merge_grouped(outs, plan, meta),
+        replicas=replicas)

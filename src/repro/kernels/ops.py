@@ -152,6 +152,21 @@ def pq_scan_topk_paired_masked(luts: jax.Array, codes: jax.Array,
                                           interpret=_interpret())
 
 
+def topk_merge(scores_a: jax.Array, ids_a: jax.Array,
+               scores_b: jax.Array, ids_b: jax.Array, k: int,
+               payload_a: tuple = (), payload_b: tuple = ()
+               ) -> tuple[jax.Array, ...]:
+    """Exact cross-shard merge of two fused-scan top-k lists, per query:
+    keyed (score desc, id asc) — the ``lax.top_k`` tie rule all
+    ``pq_scan_topk_*`` variants implement — so a tree of these merges over
+    per-shard lists is bit-identical to one fused scan over the union of
+    rows.  Dead slots keep the ``(-inf, -1)`` contract; ``payload_*``
+    tuples of side arrays ride the permutation.  Pure jnp (lax.sort) — the
+    merge is O(Q·k·S), never the scan bottleneck."""
+    return _pq.topk_merge(scores_a, ids_a, scores_b, ids_b, k,
+                          payload_a, payload_b)
+
+
 def kmeans_assign(x: jax.Array, cents: jax.Array):
     return _km.kmeans_assign(x, cents, interpret=_interpret())
 

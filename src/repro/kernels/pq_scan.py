@@ -825,3 +825,47 @@ def pq_scan_topk_paired_jnp(luts: jax.Array, codes: jax.Array, k: int,
         return jnp.where(valid, s, -jnp.inf)
 
     return _topk_scan_blocks_jnp(Q, N, bn, k, step_scores)
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard top-k merge (the distributed scan farm's reduction primitive)
+# ---------------------------------------------------------------------------
+def topk_merge(scores_a: jax.Array, ids_a: jax.Array,
+               scores_b: jax.Array, ids_b: jax.Array, k: int,
+               payload_a: tuple = (), payload_b: tuple = ()
+               ) -> tuple[jax.Array, ...]:
+    """Exact merge of two fused-scan top-k lists into one, per query row.
+
+    Inputs are two ``(Q, La)`` / ``(Q, Lb)`` (scores, ids) pairs in the
+    fused-scan output contract (descending scores, dead slots exactly
+    ``(-inf, -1)``).  The merge is a multi-operand ``lax.sort`` keyed
+    lexicographically on ``(score desc, id asc)`` — the global tie rule
+    every ``pq_scan_topk_*`` variant implements (``lax.top_k``: equal
+    scores break toward the lower index) — so folding per-shard lists
+    through this merge reproduces BIT-IDENTICALLY the list a single fused
+    scan over the union of rows would have produced, as long as the id
+    key is globally unique (global row ids across shards).  Dead slots
+    sort last and keep the ``(-inf, -1)`` contract.
+
+    ``payload_a`` / ``payload_b`` are optional tuples of equal-shaped
+    side arrays (e.g. exact rerank scores, patch ids) carried through the
+    permutation without participating in the key.  Returns
+    ``(scores (Q, k), ids (Q, k), *payloads)``.
+    """
+    if len(payload_a) != len(payload_b):
+        raise ValueError("payload_a and payload_b must pair up")
+    cs = jnp.concatenate([scores_a.astype(jnp.float32),
+                          scores_b.astype(jnp.float32)], axis=1)
+    ci = jnp.concatenate([ids_a.astype(jnp.int32),
+                          ids_b.astype(jnp.int32)], axis=1)
+    # dead slots: -score = +inf sorts last; force the id key to int32 max so
+    # a dead slot can never order before a live one under any key mix
+    dead = ~jnp.isfinite(cs)
+    ckey = jnp.where(dead, jnp.iinfo(jnp.int32).max, ci)
+    operands = (-cs, ckey, ci) + tuple(
+        jnp.concatenate([a, b], axis=1) for a, b in zip(payload_a, payload_b))
+    out = jax.lax.sort(operands, dimension=1, num_keys=2, is_stable=True)
+    k = min(k, cs.shape[1])
+    s = -out[0][:, :k]
+    ids = jnp.where(jnp.isfinite(s), out[2][:, :k], -1)
+    return (s, ids) + tuple(p[:, :k] for p in out[3:])

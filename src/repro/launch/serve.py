@@ -39,6 +39,8 @@ and the two-stage batch-native QueryEngine.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -205,6 +207,64 @@ def run_ingest(engine, args) -> int:
     return 0
 
 
+def run_sharded(engine, n_shards: int) -> int:
+    """Shard the engine's index across the device mesh and prove the
+    distributed fused scan farm against the single-host path (DESIGN.md
+    §13): real text queries, bit-compared ids/scores, and the O(k·S)
+    interconnect model printed.  Returns a process exit code."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.core import anns, distributed as dist
+
+    devs = jax.devices()
+    S = min(n_shards, len(devs))
+    if S < n_shards:
+        print(f"only {len(devs)} device(s); clamping --sharded "
+              f"{n_shards} -> {S} (set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={n_shards} "
+              f"before launch, or pass --sharded-reexec)")
+    index = engine.built.index
+    # shared-coverage config: the farm's bit-parity contract is against
+    # the single-host windowed branch (top_a * max_cell_size >= n)
+    top_a = min(32, index.K * index.K)
+    cfg = _dc.replace(engine.search_cfg, top_a=top_a,
+                      max_cell_size=max(64, -(-index.n // top_a)),
+                      top_k=min(engine.search_cfg.top_k, index.n))
+    texts = ["a large red square", "a small blue circle",
+             "a medium green triangle", "a white bar in the center"]
+    qs, _, _ = engine._encode_texts(texts)
+    qs = jnp.asarray(qs)
+    ref = jax.jit(lambda q: anns.search_batch(index, q, cfg))(qs)
+
+    mesh = Mesh(np.array(devs[:S]), ("shards",))
+    t0 = time.perf_counter()
+    sidx = dist.shard_put(dist.shard_index(index, S), mesh)
+    t_shard = time.perf_counter() - t0
+    search = jax.jit(dist.make_sharded_search(mesh, cfg=cfg))
+    out = search(sidx, qs)
+    ok = all(np.array_equal(np.asarray(ref[k]), np.asarray(out[k]))
+             for k in ("ids", "scores", "rows"))
+    fetch_k = min(cfg.top_k * max(cfg.rerank_overfetch, 1),
+                  cfg.top_a * cfg.max_cell_size)
+    # butterfly traffic: log2(S) rounds x fetch_k slots x
+    # (f32 score + i32 row + f32 exact + i32 id) per query
+    rounds = max(S - 1, 0).bit_length()
+    per_q = rounds * fetch_k * 16
+    print(f"sharded scan farm: S={S} shards "
+          f"({index.n} rows, {t_shard*1e3:.0f}ms to place), "
+          f"{len(texts)} text queries")
+    print(f"  parity vs single-host fused scan: "
+          f"{'BIT-IDENTICAL' if ok else 'MISMATCH'}")
+    print(f"  interconnect per query: {per_q} B "
+          f"({rounds} butterfly rounds x {fetch_k} slots x 16 B) — "
+          f"independent of N; a (Q, N) scatter would ship "
+          f"{index.n * 4} B/query")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--videos", type=int, default=6)
@@ -258,7 +318,28 @@ def main() -> None:
     ap.add_argument("--expect-exactly-once", action="store_true",
                     help="CI gate: exit 1 unless alerts fired, carried no "
                          "duplicate keys, and evaluation stayed delta-only")
+    ap.add_argument("--sharded", type=int, default=None, metavar="S",
+                    help="shard the index across S devices and prove the "
+                         "distributed fused scan bit-identical to the "
+                         "single-host path (DESIGN.md §13)")
+    ap.add_argument("--sharded-reexec", action="store_true",
+                    help="with --sharded S: if fewer than S devices exist, "
+                         "relaunch this process with XLA_FLAGS forcing S "
+                         "simulated host devices")
     args = ap.parse_args()
+
+    if args.sharded and args.sharded_reexec \
+            and len(jax.devices()) < args.sharded \
+            and os.environ.get("REPRO_SHARDED_REEXEC") != "1":
+        import subprocess
+        env = dict(os.environ,
+                   REPRO_SHARDED_REEXEC="1",
+                   XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                              " --xla_force_host_platform_device_count="
+                              f"{args.sharded}").strip())
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "repro.launch.serve", *sys.argv[1:]],
+            env=env))
 
     from repro.serving.batcher import HedgedExecutor, MicroBatcher
 
@@ -298,6 +379,9 @@ def main() -> None:
                        meta={"build_seconds": wall})
             print(f"store created at {args.store_dir} "
                   f"({time.perf_counter()-t0:.2f}s); next launch reopens it")
+
+    if args.sharded:
+        raise SystemExit(run_sharded(engine, args.sharded))
 
     if args.ingest:
         raise SystemExit(run_ingest(engine, args))

@@ -47,6 +47,9 @@ class Replica:
     outstanding: int = 0
     failures: int = 0
     last_error: Optional[str] = None
+    # routing-table generation this replica last acknowledged
+    # (core.distributed.RoutingTable protocol); -1 = never installed
+    generation: int = -1
 
 
 class ReplicaUnavailable(RuntimeError):
@@ -65,6 +68,7 @@ class QueryRouter:
         self._rng = random.Random(0)
         self._last_probe: dict[str, float] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._routing: Optional[Any] = None   # distributed.RoutingTable
 
     # -- membership -----------------------------------------------------------
     def add_replica(self, name: str, fn: Callable[[Any], Any], *,
@@ -95,6 +99,36 @@ class QueryRouter:
         cfg = search_cfg or anns.SearchConfig()
         self.add_replica(name, lambda q: store.search(q, cfg))
         return store
+
+    def install_routing(self, table: Any) -> None:
+        """Install a ``core.distributed.RoutingTable``: every replica the
+        table names gets stamped with its generation (acknowledging the
+        shard layout).  A later ``call_sharded`` broadcast refuses any
+        target still stamped with an OLDER generation — after a migration
+        or split, a straggler replica serving the pre-move layout would
+        double-count or drop the moved rows, so staleness is a hard error,
+        exactly like a demoted shard."""
+        with self._lock:
+            missing = [n for n in table.replicas() if n not in self._replicas]
+            if missing:
+                raise ReplicaUnavailable(
+                    f"routing table names unregistered replicas: {missing}")
+            self._routing = table
+            for n in table.replicas():
+                self._replicas[n].generation = table.generation
+
+    def pick_placement(self, exclude: Sequence[str] = ()) -> str:
+        """Load-aware placement for a NEW or migrating shard: the healthy
+        replica with the fewest outstanding requests (ties -> fewest
+        recent failures, then name for determinism).  ``exclude`` skips
+        the shard's current holder."""
+        with self._lock:
+            cands = [r for r in self._replicas.values()
+                     if r.healthy and r.name not in exclude]
+        if not cands:
+            raise ReplicaUnavailable("no healthy replica for placement")
+        return min(cands, key=lambda r: (r.outstanding, r.failures,
+                                         r.name)).name
 
     def remove_replica(self, name: str) -> None:
         with self._lock:
@@ -224,8 +258,15 @@ class QueryRouter:
         means a MISSING SHARD — the merged answer would be silently
         incomplete — so the broadcast refuses to run without every shard
         and a mid-call fault is demoted and re-raised, never degraded.
+        With a ``RoutingTable`` installed (``install_routing``), the
+        default targets come from the table (one per shard) and any target
+        stamped with an older generation is refused the same way — a
+        straggler from before a migration/split must not be merged.
         """
         with self._lock:
+            routing = self._routing
+            if replicas is None and routing is not None:
+                replicas = routing.replicas()
             targets = [r for r in self._replicas.values()
                        if replicas is None or r.name in replicas]
             if not targets:
@@ -235,6 +276,14 @@ class QueryRouter:
                 raise ReplicaUnavailable(
                     f"shard replicas unhealthy (merge would be "
                     f"incomplete): {dead}")
+            if routing is not None:
+                stale = [r.name for r in targets
+                         if r.generation != routing.generation]
+                if stale:
+                    raise ReplicaUnavailable(
+                        f"shard replicas stale (routing generation "
+                        f"{routing.generation}, merge would be "
+                        f"incomplete): {stale}")
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(max_workers=32)
         futs = [self._pool.submit(self._run_shard, r, [payload])

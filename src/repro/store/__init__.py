@@ -6,6 +6,6 @@ segments + an append-only WAL + an atomic manifest, composed by the
 ``VectorStore`` facade.  See DESIGN.md §4 for the on-disk format and §5 for
 the crash-consistency guarantees.
 """
-from repro.store.store import VectorStore, StoreError
+from repro.store.store import VectorStore, StoreError, migrate_rows
 
-__all__ = ["VectorStore", "StoreError"]
+__all__ = ["VectorStore", "StoreError", "migrate_rows"]

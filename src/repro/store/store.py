@@ -360,6 +360,35 @@ class VectorStore:
     def search(self, q, cfg) -> dict:
         return self.seg.search(q, cfg)
 
+    def extract_rows(self, ids) -> tuple[np.ndarray, np.ndarray]:
+        """Gather the stored (normalized) vectors for ``ids`` from the base
+        and any delta segments, skipping tombstoned rows.
+
+        Returns ``(vectors (m, D') f32, found_ids (m,))`` in the order
+        found — the read half of :func:`migrate_rows`.  Unknown ids are
+        simply absent from the result (a shard move wants "whatever this
+        store still holds of these rows", not an error).
+        """
+        want = set(int(i) for i in np.asarray(ids).ravel())
+        want -= {int(t) for t in self.seg.tombstones}
+        vecs, found = [], []
+        pools = [(np.asarray(self.seg.base.ids),
+                  np.asarray(self.seg.base.vectors, np.float32))]
+        pools += [(np.asarray(s.ids), np.asarray(s.vectors, np.float32))
+                  for s in self.seg.segments]
+        for pids, pvecs in pools:
+            hit = np.asarray([i for i, pid in enumerate(pids)
+                              if int(pid) in want], np.int64)
+            if hit.size:
+                vecs.append(pvecs[hit])
+                found.append(pids[hit])
+                want -= set(int(p) for p in pids[hit])
+        if not found:
+            d = np.asarray(self.seg.base.vectors).shape[-1]
+            return (np.zeros((0, d), np.float32),
+                    np.zeros((0,), np.asarray(self.seg.base.ids).dtype))
+        return np.concatenate(vecs), np.concatenate(found)
+
     @property
     def n(self) -> int:
         return self.seg.n
@@ -405,3 +434,23 @@ class VectorStore:
             keyframe_frame=sc["kf_frame"],
             patches_per_frame=kp,
         )
+
+
+def migrate_rows(src: VectorStore, dst: VectorStore, ids) -> int:
+    """Move rows between shard stores: the data plane of a shard
+    migration/split (``core.distributed.RoutingTable`` is the control
+    plane — bump its generation AFTER this returns, then
+    ``QueryRouter.install_routing`` the new table).
+
+    Copy-then-delete, both halves WAL-logged on their own store: the
+    insert lands in ``dst``'s WAL before the delete lands in ``src``'s, so
+    a crash at any point loses no rows (the worst case is a transient
+    duplicate, which the stale-generation refusal keeps out of merged
+    results).  Returns the number of rows moved.
+    """
+    vecs, found = src.extract_rows(ids)
+    if len(found) == 0:
+        return 0
+    dst.insert(vecs, found)
+    src.delete(found)
+    return len(found)

@@ -1,0 +1,58 @@
+"""Seeded fault-injection helpers for router/shard tests.
+
+``FaultyReplica`` wraps a working replica fn and fails DETERMINISTICALLY:
+a seeded schedule decides which calls raise, so tests of the demotion /
+re-route / refuse-to-merge paths are reproducible.  Import from tests as
+``from _faulty import FaultyReplica`` (conftest puts tests/ on the path).
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Optional
+
+
+class ShardFault(RuntimeError):
+    """The injected failure — distinct type so tests can assert provenance."""
+
+
+class FaultyReplica:
+    """A replica callable that fails on a seeded schedule.
+
+    ``fail_rate``: probability (seeded ``random.Random(seed)``) that any
+    given call raises.  ``fail_calls``: explicit 0-based call indices that
+    raise (takes precedence; e.g. ``{0}`` = fail only the first call —
+    exactly one mid-stream fault).  ``fail_after``: every call from that
+    index on raises (a replica that dies and stays dead).  Counts calls
+    across both the scalar and batch entry points; ``batch_fn`` is exposed
+    so the router's batched path exercises the same schedule.
+    """
+
+    def __init__(self, fn: Callable[[Any], Any], *, seed: int = 0,
+                 fail_rate: float = 0.0,
+                 fail_calls: Optional[set] = None,
+                 fail_after: Optional[int] = None):
+        self._fn = fn
+        self._rng = random.Random(seed)
+        self._fail_rate = fail_rate
+        self._fail_calls = fail_calls
+        self._fail_after = fail_after
+        self.calls = 0
+        self.faults = 0
+
+    def _should_fail(self, idx: int) -> bool:
+        if self._fail_calls is not None:
+            return idx in self._fail_calls
+        if self._fail_after is not None and idx >= self._fail_after:
+            return True
+        return self._rng.random() < self._fail_rate
+
+    def __call__(self, payload: Any) -> Any:
+        idx = self.calls
+        self.calls += 1
+        if self._should_fail(idx):
+            self.faults += 1
+            raise ShardFault(f"injected fault on call {idx}")
+        return self._fn(payload)
+
+    def batch_fn(self, payloads: list) -> list:
+        return [self(p) for p in payloads]

@@ -1,0 +1,543 @@
+"""Multi-host sharded fused scan: shard-parity + fault-injection layer.
+
+The headline contract (DESIGN.md §13): the ``shard_map`` top-k farm in
+``core.distributed`` is BIT-IDENTICAL to the single-host fused scan
+(``anns.search_batch(fused_topk=True)``) for every shard count — same ids,
+same scores, same dead-slot ``(-inf, -1)`` padding — under row masks,
+tombstone bitmaps, exact ADC ties at the fetch boundary, ragged last
+shards, and after shard-boundary migration.  Multi-device cases run in one
+cached subprocess over 8 simulated host devices (conftest forbids
+``xla_force_host_platform_device_count`` in the pytest process itself);
+property tests, the merge primitive, ``shard_map_compat`` spellings, the
+generation-stamped routing protocol, and the router fault-injection layer
+run in-process.
+"""
+import functools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from _faulty import FaultyReplica, ShardFault
+from repro.core import anns, distributed as dist, imi as imimod
+from repro.core import plan as P, pq as pqmod
+from repro.kernels import ops as kops, pq_scan as _pq, ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# headline: bit-parity across shard counts on 8 simulated devices
+# ---------------------------------------------------------------------------
+_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, tempfile
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import anns, distributed as dist, imi as imimod
+
+    out = {"devices": len(jax.devices())}
+    n, d = 4096, 32
+    cents = jax.random.normal(jax.random.PRNGKey(1), (16, d))
+    a = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, 16)
+    x = np.array(cents[a] + 0.3 * jax.random.normal(
+        jax.random.PRNGKey(3), (n, d)))
+    # duplicated rows encode to identical PQ codes -> exact ADC score ties,
+    # including at the fetch-k boundary; parity must hold through them
+    x[1024:1056] = x[0:32]
+    x[3000:3008] = x[2000:2008]
+    index = imimod.build_imi(jax.random.PRNGKey(0), jnp.asarray(x),
+                             jnp.arange(n), K=8, P=4, M=32, kmeans_iters=5)
+    cfg = anns.SearchConfig(top_a=16, max_cell_size=256, top_k=32,
+                            rerank_overfetch=4)
+    assert cfg.top_a * cfg.max_cell_size >= n   # shared/windowed branch
+    qs = jax.random.normal(jax.random.PRNGKey(9), (5, d))
+    ref = jax.jit(lambda q: anns.search_batch(index, q, cfg))(qs)
+    # evidence the tie scenario is real: duplicate approx scores survive
+    # into the returned window
+    ap = np.asarray(ref["approx_scores"])
+    out["ties_present"] = bool(any(
+        len(np.unique(r[np.isfinite(r)])) < np.isfinite(r).sum()
+        for r in ap))
+
+    KEYS = ("ids", "rows", "scores", "approx_scores")
+    def parity(got, want, keys=KEYS):
+        return bool(all(np.array_equal(np.asarray(want[k]),
+                                       np.asarray(got[k])) for k in keys))
+
+    mask1 = jnp.asarray((np.arange(n) % 3 != 0).astype(np.uint8))
+    maskq = jnp.asarray((np.random.default_rng(4).random((5, n)) < 0.7)
+                        .astype(np.uint8))
+    refm1 = jax.jit(lambda q, m: anns.search_batch(index, q, cfg,
+                                                   row_mask=m))(qs, mask1)
+    refmq = jax.jit(lambda q, m: anns.search_batch(index, q, cfg,
+                                                   row_mask=m))(qs, maskq)
+
+    for S in (1, 2, 4, 8):
+        mesh = Mesh(np.array(jax.devices()[:S]), ("shards",))
+        sidx = dist.shard_put(dist.shard_index(index, S), mesh)
+        search = jax.jit(dist.make_sharded_search(mesh, cfg=cfg))
+        out[f"parity_s{S}"] = parity(search(sidx, qs), ref)
+        out[f"masked_s{S}"] = parity(search(sidx, qs, mask1), refm1,
+                                     ("ids", "rows", "scores"))
+    mesh4 = Mesh(np.array(jax.devices()[:4]), ("shards",))
+    search4 = jax.jit(dist.make_sharded_search(mesh4, cfg=cfg))
+    sidx4 = dist.shard_put(dist.shard_index(index, 4), mesh4)
+    out["per_query_mask"] = parity(search4(sidx4, qs, maskq), refmq,
+                                   ("ids", "rows", "scores"))
+    # tombstone bitmap folded into row_valid == single-host row_mask
+    tomb = dist.shard_put(
+        dist.shard_index(index, 4, alive=np.asarray(mask1, bool)), mesh4)
+    out["tombstones"] = parity(search4(tomb, qs), refm1,
+                               ("ids", "rows", "scores"))
+    # ragged/uneven shard boundaries (tiny + huge + empty-ish shards)
+    rag = dist.shard_put(dist.shard_index(
+        index, 4, boundaries=[0, 64, 64, 3777, n]), mesh4)
+    out["ragged"] = parity(search4(rag, qs), ref)
+    # shard-boundary migration: a segment moves from shard 0 to shard 1
+    # (the routing-table generation bump rides the host tier; the farm
+    # itself must give identical answers for BOTH layouts)
+    pre = dist.shard_put(dist.shard_index(
+        index, 4, boundaries=[0, 2048, 2560, 3072, n]), mesh4)
+    post = dist.shard_put(dist.shard_index(
+        index, 4, boundaries=[0, 1024, 2560, 3072, n]), mesh4)
+    out["migration"] = (parity(search4(pre, qs), ref)
+                        and parity(search4(post, qs), ref))
+    # multi-axis mesh -> all_gather merge branch (butterfly needs a flat
+    # power-of-two axis)
+    mesh42 = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    s8 = dist.shard_put(dist.shard_index(index, 8, cell_aligned=True),
+                        mesh42)
+    out["all_gather_mesh"] = parity(
+        jax.jit(dist.make_sharded_search(mesh42, cfg=cfg))(s8, qs), ref)
+
+    # elastic: shards built straight from a VectorStore (segment fold +
+    # tombstone bitmap), parity vs single-host over the same store state
+    from repro.store import VectorStore
+    root = tempfile.mkdtemp()
+    store = VectorStore.create(root, index)
+    extra = jax.random.normal(jax.random.PRNGKey(11), (64, d))
+    store.insert(np.asarray(extra), np.arange(n, n + 64))
+    sidx_st = dist.shard_index_from_store(store, 4)   # folds the delta
+    base2 = store.seg.base
+    cfg2 = anns.SearchConfig(top_a=16, max_cell_size=-(-base2.n // 16),
+                             top_k=32, rerank_overfetch=4)
+    ref2 = jax.jit(lambda q: anns.search_batch(base2, q, cfg2))(qs)
+    search_st = jax.jit(dist.make_sharded_search(mesh4, cfg=cfg2))
+    out["from_store"] = parity(search_st(
+        dist.shard_put(sidx_st, mesh4), qs), ref2)
+    # now tombstones only (no pending segments -> no compact, bitmap path)
+    dead_ids = np.arange(0, base2.n, 5)
+    store.delete(dead_ids)
+    sidx_tomb = dist.shard_index_from_store(store, 4)
+    alive2 = ~np.isin(np.asarray(base2.ids), dead_ids)
+    ref3 = jax.jit(lambda q, m: anns.search_batch(
+        base2, q, cfg2, row_mask=m))(qs, jnp.asarray(
+            alive2.astype(np.uint8)))
+    out["from_store_tombstones"] = parity(
+        search_st(dist.shard_put(sidx_tomb, mesh4), qs), ref3,
+        ("ids", "rows", "scores"))
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@functools.lru_cache(maxsize=1)
+def _subprocess_results() -> dict:
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS],
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout[-2000:] + proc.stderr[-2000:]
+    return json.loads(line[-1][len("RESULT "):])
+
+
+def test_sharded_scan_bit_parity_across_shard_counts():
+    r = _subprocess_results()
+    assert r["devices"] == 8
+    for S in (1, 2, 4, 8):
+        assert r[f"parity_s{S}"], f"S={S} diverged from single-host scan"
+
+
+def test_sharded_scan_parity_under_masks_and_tombstones():
+    r = _subprocess_results()
+    for S in (1, 2, 4, 8):
+        assert r[f"masked_s{S}"]
+    assert r["per_query_mask"]
+    assert r["tombstones"]
+
+
+def test_sharded_scan_parity_ties_ragged_migration():
+    r = _subprocess_results()
+    assert r["ties_present"], "tie scenario was not actually exercised"
+    assert r["ragged"]
+    assert r["migration"]
+    assert r["all_gather_mesh"]
+
+
+def test_sharded_scan_from_store_segment_aligned():
+    r = _subprocess_results()
+    assert r["from_store"]
+    assert r["from_store_tombstones"]
+
+
+# ---------------------------------------------------------------------------
+# property-based shard parity: sharded merge == materialize-then-top_k oracle
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_sharded_merge_matches_oracle(data):
+    """Random (N, Q, k, shard count, mask) draws: contiguous per-shard
+    fused scans + ``tree_merge_topk`` must equal ``ref.pq_scan_topk_ref``
+    over the union — including k > live rows, fully-masked shards, empty
+    shards, and the exact ``(-inf, -1)`` dead-slot contract."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    N = data.draw(st.integers(1, 300))
+    Q = data.draw(st.integers(1, 4))
+    k = data.draw(st.integers(1, 2 * N))        # may exceed live rows
+    S = data.draw(st.integers(1, 6))
+    P_, M = 4, 16
+    luts = jnp.asarray(rng.normal(size=(Q, P_, M)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, M, size=(N, P_)).astype(np.uint8))
+    mask_kind = data.draw(st.sampled_from(
+        ["none", "random", "dead_shard", "all_dead"]))
+    cuts = sorted(rng.integers(0, N + 1, size=S - 1).tolist())
+    bounds = [0] + cuts + [N]
+    mask = None
+    if mask_kind == "random":
+        mask = (rng.random((Q, N)) < 0.6).astype(np.uint8)
+    elif mask_kind == "dead_shard":                 # one whole shard masked
+        mask = np.ones((Q, N), np.uint8)
+        s = int(rng.integers(0, S))
+        mask[:, bounds[s]: bounds[s + 1]] = 0
+    elif mask_kind == "all_dead":
+        mask = np.zeros((Q, N), np.uint8)
+
+    parts = []
+    for s in range(S):
+        lo, hi = bounds[s], bounds[s + 1]
+        if hi == lo:                                 # empty shard
+            parts.append((jnp.full((Q, k), -jnp.inf),
+                          jnp.full((Q, k), -1, jnp.int32)))
+            continue
+        m = jnp.asarray(mask[:, lo:hi]) if mask is not None else None
+        sc, rows = _pq.pq_scan_topk_jnp(luts, codes[lo:hi], k, None, m)
+        parts.append((sc, jnp.where(rows >= 0, rows + lo, -1)))
+    got_s, got_i = dist.tree_merge_topk(parts, k)
+    want_s, want_i = kref.pq_scan_topk_ref(
+        luts, codes, k, mask=jnp.asarray(mask) if mask is not None else None)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    dead = ~np.isfinite(np.asarray(got_s))
+    assert (np.asarray(got_i)[dead] == -1).all()
+
+
+def test_topk_merge_ties_payload_and_dead_slots():
+    """Unit contract of the merge primitive: (score desc, id asc) keying,
+    payload permutation, dead slots last with ``(-inf, -1)``."""
+    s_a = jnp.asarray([[3.0, 1.0, -jnp.inf]])
+    i_a = jnp.asarray([[7, 2, -1]], dtype=jnp.int32)
+    s_b = jnp.asarray([[3.0, 2.0, -jnp.inf]])
+    i_b = jnp.asarray([[4, 9, -1]], dtype=jnp.int32)
+    pay_a = (jnp.asarray([[70.0, 20.0, 0.0]]),)
+    pay_b = (jnp.asarray([[40.0, 90.0, 0.0]]),)
+    s, i, p = kops.topk_merge(s_a, i_a, s_b, i_b, 6, pay_a, pay_b)
+    # tie at 3.0 -> lower id (4) first; dead slots trail as (-inf, -1)
+    np.testing.assert_array_equal(np.asarray(i), [[4, 7, 9, 2, -1, -1]])
+    np.testing.assert_array_equal(np.asarray(s)[0, :4], [3.0, 3.0, 2.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(p)[0, :4],
+                                  [40.0, 70.0, 90.0, 20.0])
+    assert np.isneginf(np.asarray(s)[0, 4:]).all()
+    # k smaller than either input cuts after the global sort
+    s2, i2 = kops.topk_merge(s_a, i_a, s_b, i_b, 2)
+    np.testing.assert_array_equal(np.asarray(i2), [[4, 7]])
+
+
+# ---------------------------------------------------------------------------
+# shard_map_compat: both jax spellings
+# ---------------------------------------------------------------------------
+def test_shard_map_compat_stable_spelling(monkeypatch):
+    """When ``jax.shard_map`` exists (newer jax), compat must route there
+    with ``check_vma`` (not the legacy ``check_rep``)."""
+    seen = {}
+
+    def fake_shard_map(f, *, mesh, in_specs, out_specs, check_vma):
+        seen.update(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check_vma)
+        return lambda *a: "stable"
+
+    monkeypatch.setattr(jax, "shard_map", fake_shard_map, raising=False)
+    mesh = jax.make_mesh((1,), ("shards",))
+    wrapped = dist.shard_map_compat(lambda x: x, mesh=mesh,
+                                    in_specs=(None,), out_specs=None)
+    assert wrapped() == "stable"
+    assert seen["check_vma"] is False and seen["mesh"] is mesh
+
+
+def test_shard_map_compat_experimental_spelling(monkeypatch):
+    """Without ``jax.shard_map`` (this container's jax), compat must fall
+    back to ``jax.experimental.shard_map`` — and actually execute."""
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    assert not hasattr(jax, "shard_map")
+    from jax.sharding import PartitionSpec as PS
+    mesh = jax.make_mesh((1,), ("shards",))
+    f = dist.shard_map_compat(lambda x: x * 2, mesh=mesh,
+                              in_specs=(PS("shards"),),
+                              out_specs=PS("shards"))
+    np.testing.assert_array_equal(
+        np.asarray(f(jnp.arange(4.0))), [0.0, 2.0, 4.0, 6.0])
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: defaults + optional-rotation handling
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_index():
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 32))
+    return imimod.build_imi(jax.random.PRNGKey(1), x, jnp.arange(512),
+                            K=4, P=4, M=16, kmeans_iters=4)
+
+
+def test_make_sharded_search_default_kernel_matches_auto(small_index):
+    """The default config must flow through ``resolve_use_kernel('auto')``
+    like the single-host PR-5 path (stale pre-fusion defaults are gone):
+    off-TPU the auto route IS the jnp route, bit for bit."""
+    assert anns.SearchConfig().use_kernel == "auto"
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
+    sidx = dist.shard_put(dist.shard_index(small_index, 1), mesh)
+    qs = jax.random.normal(jax.random.PRNGKey(2), (3, 32))
+    cfg = anns.SearchConfig(top_a=8, max_cell_size=64, top_k=16)
+    auto = dist.make_sharded_search(mesh, cfg=cfg)(sidx, qs)
+    forced = dist.make_sharded_search(
+        mesh, cfg=cfg, use_kernel="jnp")(sidx, qs)
+    for k in ("ids", "scores", "rows"):
+        np.testing.assert_array_equal(np.asarray(auto[k]),
+                                      np.asarray(forced[k]))
+    # parity against the single-host auto path too
+    ref = anns.search_batch(small_index, qs, cfg)
+    for k in ("ids", "scores", "rows"):
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(auto[k]))
+
+
+def test_sharded_index_rotation_is_structurally_optional(small_index):
+    """No OPQ -> ``pq_rotation`` is None (an absent pytree child), not a
+    dense identity matmul smuggled into every LUT build; with OPQ the
+    rotation rides along and parity still holds."""
+    s = dist.shard_index(small_index, 2)
+    assert small_index.pq.rotation is None
+    assert s.pq_rotation is None
+    leaves = jax.tree_util.tree_leaves(s)
+    assert not any(l.ndim == 2 and l.shape[0] == l.shape[1]
+                   and np.array_equal(np.asarray(l), np.eye(l.shape[0]))
+                   for l in leaves if hasattr(l, "ndim"))
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (512, 32))
+    opq = imimod.build_imi(jax.random.PRNGKey(6), x, jnp.arange(512),
+                           K=4, P=4, M=16, kmeans_iters=4, opq_iters=2)
+    assert opq.pq.rotation is not None
+    so = dist.shard_index(opq, 2)
+    assert so.pq_rotation is not None
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("shards",))
+    cfg = anns.SearchConfig(top_a=8, max_cell_size=64, top_k=16)
+    qs = jax.random.normal(jax.random.PRNGKey(7), (2, 32))
+    got = dist.make_sharded_search(mesh, cfg=cfg)(
+        dist.shard_put(dist.shard_index(opq, 1), mesh), qs)
+    ref = anns.search_batch(opq, qs, cfg)
+    for k in ("ids", "scores"):
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(got[k]))
+
+
+# ---------------------------------------------------------------------------
+# fault injection: the router around the shard farm
+# ---------------------------------------------------------------------------
+F, KP = 30, 4
+
+
+def _plan_meta():
+    return P.PlanMeta(
+        row_video=np.repeat(np.arange(3), 10 * KP).astype(np.int32),
+        row_time=np.tile(np.repeat(np.arange(10), KP), 3).astype(np.int32),
+        frame_video=np.repeat(np.arange(3), 10).astype(np.int32),
+        frame_time=np.tile(np.arange(10), 3).astype(np.int32),
+        patches_per_frame=KP)
+
+
+def _shard_search(lo, hi):
+    def search(texts, masks, k=20):
+        ids = np.zeros((len(texts), k), np.int32)
+        scores = np.full((len(texts), k), -np.inf, np.float32)
+        for i, t in enumerate(texts):
+            r = np.random.default_rng(sum(t.encode()) % 2**32)
+            pid = r.choice(F * KP, size=k, replace=False).astype(np.int32)
+            sc = (1.0 + r.random(k)).astype(np.float32)
+            ok = (pid >= lo) & (pid < hi)
+            if masks is not None:
+                ok &= masks[i][pid]
+            pid, sc = np.where(ok, pid, -1), np.where(ok, sc, -np.inf)
+            o = np.argsort(-sc)
+            ids[i], scores[i] = pid[o], sc[o]
+        return ids, scores
+    return search
+
+
+def test_execute_sharded_raises_on_midstream_fault_never_merges():
+    """A shard fault mid-``call_sharded`` via ``plan.execute_sharded``
+    must RAISE (missing shard == incomplete merge), while ``call_batch``
+    over the same router re-routes around the demoted replica."""
+    from repro.serving.router import QueryRouter, ReplicaUnavailable
+    meta = _plan_meta()
+    node = P.GroupTopK(P.Or(P.Text("red truck"), P.Text("pedestrian")),
+                       per="video", k=2)
+    router = QueryRouter(unhealthy_after=1)
+    bounds = [0, F * KP // 2, F * KP]
+    faulty = None
+    for s in range(2):
+        fn = (lambda payload, s=s: P.execute(
+            payload, meta, _shard_search(bounds[s], bounds[s + 1])))
+        if s == 1:
+            fn = faulty = FaultyReplica(fn, fail_calls={0})  # first call dies
+        router.add_replica(f"shard-{s}", fn)
+    with pytest.raises(ShardFault):
+        P.execute_sharded(node, meta, router)
+    assert faulty.faults == 1
+    # the fault demoted shard-1 -> the broadcast now refuses up front
+    with pytest.raises(ReplicaUnavailable, match="shard-1"):
+        P.execute_sharded(node, meta, router)
+    # call_batch by contrast degrades: items re-route to shard-0
+    router.mark_recovered("shard-1")
+    got = router.call_batch([P.Text("red truck")] * 3)
+    assert len(got) == 3 and all(g is not None for g in got)
+    router.close()
+
+    # healthy run for reference: merged == single-index execution
+    router2 = QueryRouter()
+    for s in range(2):
+        router2.add_replica(f"shard-{s}", lambda payload, s=s: P.execute(
+            payload, meta, _shard_search(bounds[s], bounds[s + 1])))
+    merged = P.execute_sharded(node, meta, router2)
+    full = P.execute(node, meta, _shard_search(0, F * KP))
+    np.testing.assert_array_equal(merged.frames, full.frames)
+    router2.close()
+
+
+def test_seeded_faulty_replica_rates_are_deterministic():
+    f1 = FaultyReplica(lambda p: p, seed=7, fail_rate=0.5)
+    f2 = FaultyReplica(lambda p: p, seed=7, fail_rate=0.5)
+    pat1, pat2 = [], []
+    for f, pat in ((f1, pat1), (f2, pat2)):
+        for i in range(20):
+            try:
+                f(i)
+                pat.append(True)
+            except ShardFault:
+                pat.append(False)
+    assert pat1 == pat2 and not all(pat1) and any(pat1)
+
+
+# ---------------------------------------------------------------------------
+# generation-stamped routing: migration/split protocol
+# ---------------------------------------------------------------------------
+def test_routing_table_generation_protocol():
+    t0 = dist.RoutingTable.initial(["a", "b"], boundaries=[0, 100, 200])
+    assert t0.generation == 0 and t0.replicas() == ("a", "b")
+    t1 = t0.migrate(1, "c")
+    assert t1.generation == 1 and t1.replicas() == ("a", "c")
+    assert t0.replicas() == ("a", "b")          # immutable
+    t2 = t1.split(0, 50, "d")
+    assert t2.generation == 2
+    ranges = {a.shard_id: a.row_range for a in t2.assignments}
+    assert ranges[0] == (0, 50) and (50, 100) in ranges.values()
+    with pytest.raises(ValueError):
+        t0.migrate(9, "x")
+    with pytest.raises(ValueError):
+        t0.split(0, 999, "x")
+
+
+def test_router_refuses_stale_generation_broadcast():
+    """A replica that re-registers (pod restart) after a routing install
+    has not acked the shard layout — ``call_sharded`` must refuse it
+    exactly like a demoted shard, never merge around it."""
+    from repro.serving.router import QueryRouter, ReplicaUnavailable
+    router = QueryRouter()
+    router.add_replica("a", lambda p: [("a", p)])
+    router.add_replica("b", lambda p: [("b", p)])
+    table = dist.RoutingTable.initial(["a", "b"])
+    router.install_routing(table)
+    assert router.call_sharded("q", lambda outs: len(outs)) == 2
+    router.add_replica("b", lambda p: [("b2", p)])   # restart: stamp lost
+    with pytest.raises(ReplicaUnavailable, match="stale"):
+        router.call_sharded("q", lambda outs: outs)
+    router.install_routing(table)                    # re-ack -> serves again
+    assert router.call_sharded("q", lambda outs: len(outs)) == 2
+    # a migration bumps the generation; an un-acked table refuses too
+    router.install_routing(table.migrate(0, "b"))
+    assert router.call_sharded("q", lambda outs: len(outs)) == 1
+    with pytest.raises(ReplicaUnavailable):
+        router.install_routing(dist.RoutingTable.initial(["a", "ghost"]))
+    router.close()
+
+
+def test_pick_placement_prefers_least_loaded():
+    from repro.serving.router import QueryRouter, ReplicaUnavailable
+    router = QueryRouter()
+    router.add_replica("busy", lambda p: p)
+    router.add_replica("idle", lambda p: p)
+    with router._lock:
+        router._replicas["busy"].outstanding = 5
+    assert router.pick_placement() == "idle"
+    assert router.pick_placement(exclude=("idle",)) == "busy"
+    with pytest.raises(ReplicaUnavailable):
+        router.pick_placement(exclude=("idle", "busy"))
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# data plane: WAL-logged segment migration between shard stores
+# ---------------------------------------------------------------------------
+def test_migrate_rows_between_stores_survives_reopen(tmp_path):
+    from repro.store import VectorStore, migrate_rows
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 32))
+    idx_a = imimod.build_imi(jax.random.PRNGKey(1), x[:192],
+                             jnp.arange(192), K=4, P=4, M=16,
+                             kmeans_iters=4)
+    idx_b = imimod.build_imi(jax.random.PRNGKey(2), x[192:],
+                             jnp.arange(192, 256), K=4, P=4, M=16,
+                             kmeans_iters=4)
+    src = VectorStore.create(tmp_path / "src", idx_a)
+    dst = VectorStore.create(tmp_path / "dst", idx_b)
+
+    moved = migrate_rows(src, dst, np.arange(100, 140))
+    assert moved == 40
+    assert migrate_rows(src, dst, np.arange(5000, 5010)) == 0  # unknown ids
+    # already-moved rows are tombstoned at the source -> idempotent
+    assert migrate_rows(src, dst, np.arange(100, 140)) == 0
+
+    def live_ids(store):
+        ids = set(np.asarray(store.seg.base.ids).tolist())
+        for s in store.seg.segments:
+            ids |= set(np.asarray(s.ids).tolist())
+        return ids - {int(t) for t in store.seg.tombstones}
+
+    assert live_ids(src) == set(range(100)) | set(range(140, 192))
+    assert live_ids(dst) == set(range(100, 140)) | set(range(192, 256))
+
+    # both halves are WAL-logged: a reopen (replay) loses nothing
+    src.close(), dst.close()
+    src2 = VectorStore.open(tmp_path / "src")
+    dst2 = VectorStore.open(tmp_path / "dst")
+    assert live_ids(src2) == set(range(100)) | set(range(140, 192))
+    assert live_ids(dst2) == set(range(100, 140)) | set(range(192, 256))
+    src2.close(), dst2.close()
