@@ -197,6 +197,24 @@ def main() -> None:
                     f"n_independent={r['traffic_n_independent']} "
                     f"@n={r['n']}")
 
+    @bench("static_analysis")
+    def lint():
+        # the DESIGN.md §14 invariant gate, timed end-to-end as CI pays
+        # for it (fresh process: imports + jaxpr trace battery + AST walk);
+        # a finding is a FAILED row, same as any perf gate
+        import subprocess
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.lint", "--strict"],
+            capture_output=True, text=True, timeout=600)
+        us = (time.perf_counter() - t0) * 1e6
+        summary = [l for l in proc.stdout.splitlines()
+                   if l.startswith("repro-lint:")]
+        if proc.returncode != 0:
+            raise SystemExit(f"repro-lint gate: "
+                             f"{(summary or [proc.stderr])[-1][:300]}")
+        return us, summary[-1][len("repro-lint: "):]
+
     @bench("roofline_summary")
     def roof():
         from benchmarks import roofline

@@ -1,0 +1,11 @@
+"""Static invariant checker: jaxpr contract audits, kernel-purity and
+durability-ordering AST lints, and the findings/baseline/suppression
+infrastructure (DESIGN.md §14).  Run via ``python -m tools.lint``."""
+from repro.analysis.findings import (  # noqa: F401
+    Finding,
+    SEV_ERROR,
+    SEV_WARNING,
+    apply_suppressions,
+    scan_suppressions,
+)
+from repro.analysis import ast_checks, baseline, jaxpr_checks  # noqa: F401

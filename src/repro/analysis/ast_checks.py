@@ -1,0 +1,422 @@
+"""AST lints: kernel-purity rules, the kernel/oracle registry cross-check,
+and the store/ingest durability-ordering analysis (DESIGN.md §14).
+
+Three rule families, all pure ``ast`` — no imports of the checked code:
+
+**Kernel purity** (``KN1xx``, over ``src/repro/kernels/``): a *kernel body*
+is any function handed to ``pl.pallas_call`` (resolved through
+``functools.partial`` and local aliases) or, by convention, any function
+with a ``*_ref``/``*_scr``/``*_out`` parameter — the Mosaic-lowered subset.
+Inside one, Python control flow on traced refs, numpy calls, ``.item()``
+escapes, and float64 dtypes all fail to lower on TPU (or silently de-trace);
+each is a rule.
+
+**Registry cross-check** (``RG301``): every public ``pq_scan_*`` kernel must
+be registered in :data:`KERNEL_ORACLES` with a ``ref.py`` oracle (the parity
+tests' ground truth) and a jnp fallback (the off-TPU production path), and
+the named functions must actually exist — a new kernel variant cannot land
+oracle-less (the PR 5 regression class).
+
+**Durability ordering** (``DS2xx``, over ``src/repro/store/`` +
+``src/repro/ingest/``): statement-order dominance checks of the §5/§12.3
+crash-consistency chain — ``os.replace`` dominated by ``flush``+``fsync``,
+durable ``np.savez``/``np.save`` artifacts fsync'd before the function
+returns, renames followed by a directory fsync, and the meta-log append
+preceding the store/WAL insert.  The walk is linear per function body
+(source order), a sound approximation for this codebase's straight-line
+durability helpers.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.findings import Finding, SEV_ERROR, finding_at
+
+# -- rule ids ---------------------------------------------------------------
+RULE_KERNEL_BRANCH = "KN101"    # Python if/for/while on a traced ref
+RULE_KERNEL_NUMPY = "KN102"     # numpy call inside a kernel body
+RULE_KERNEL_ITEM = "KN103"      # .item()/.tolist() host escape
+RULE_KERNEL_F64 = "KN104"       # float64 dtype in a kernel body
+RULE_REGISTRY = "RG301"         # kernel without oracle/fallback registration
+RULE_REPLACE_FSYNC = "DS201"    # os.replace not dominated by flush+fsync
+RULE_WRITE_FSYNC = "DS202"      # durable artifact written without fsync
+RULE_META_ORDER = "DS203"       # store/WAL insert not preceded by meta log
+RULE_DIR_FSYNC = "DS204"        # os.replace without directory fsync after
+
+KERNEL_DIRS = ("src/repro/kernels",)
+DURABILITY_DIRS = ("src/repro/store", "src/repro/ingest")
+_REF_SUFFIXES = ("_ref", "_scr", "_out")
+
+# Every public pq_scan_* kernel entry point -> (oracle def in kernels/ref.py,
+# jnp fallback: a def in kernels/pq_scan.py, or "module:name" elsewhere).
+# RG301 checks three ways: unregistered kernels, dangling oracle names,
+# dangling fallback names.
+KERNEL_ORACLES: dict[str, tuple[str, str]] = {
+    "pq_scan_batched": ("pq_scan_ref", "repro.core.pq:adc_scores"),
+    "pq_scan_batched_masked": ("pq_scan_masked_ref",
+                               "repro.core.pq:adc_scores"),
+    "pq_scan_paired": ("pq_scan_ref", "repro.core.pq:adc_scores"),
+    "pq_scan_paired_masked": ("pq_scan_masked_ref",
+                              "repro.core.pq:adc_scores"),
+    "pq_scan_topk_batched": ("pq_scan_topk_ref", "pq_scan_topk_jnp"),
+    "pq_scan_topk_batched_masked": ("pq_scan_topk_ref", "pq_scan_topk_jnp"),
+    "pq_scan_topk_windowed": ("pq_scan_topk_windowed_ref",
+                              "pq_scan_topk_windowed_jnp"),
+    "pq_scan_topk_windowed_masked": ("pq_scan_topk_windowed_ref",
+                                     "pq_scan_topk_windowed_jnp"),
+    "pq_scan_topk_paired": ("pq_scan_topk_ref", "pq_scan_topk_paired_jnp"),
+    "pq_scan_topk_paired_masked": ("pq_scan_topk_ref",
+                                   "pq_scan_topk_paired_jnp"),
+}
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+def _dotted(node: ast.AST) -> str:
+    """'os.replace' for Attribute chains, 'open' for Names, '' otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    elif parts:
+        parts.append("?")          # e.g. call().attr — keep the attr chain
+    return ".".join(reversed(parts))
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _calls_in_order(fn: ast.FunctionDef) -> list[tuple[ast.Call, str]]:
+    """Every Call in ``fn``, with its dotted callee name, in source order."""
+    calls = [(node, _dotted(node.func)) for node in ast.walk(fn)
+             if isinstance(node, ast.Call)]
+    calls.sort(key=lambda pair: (pair[0].lineno, pair[0].col_offset))
+    return calls
+
+
+def _function_defs(tree: ast.Module) -> list[ast.FunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+# ---------------------------------------------------------------------------
+# kernel-body discovery
+# ---------------------------------------------------------------------------
+def _partial_target(call: ast.Call) -> str | None:
+    """functools.partial(F, ...) -> 'F'."""
+    name = _dotted(call.func)
+    if name.split(".")[-1] == "partial" and call.args:
+        return _dotted(call.args[0]) or None
+    return None
+
+
+def kernel_body_names(tree: ast.Module) -> set[str]:
+    """Names of functions that are Pallas kernel bodies in this module.
+
+    Union of (a) first arguments of ``pl.pallas_call`` calls, unwrapping
+    ``functools.partial`` and resolving single-assignment local aliases
+    (``kern = functools.partial(_body, ...)``), and (b) the signature
+    convention: any function with a ``*_ref``/``*_scr``/``*_out`` parameter
+    (shared block helpers called from kernel bodies use it too).
+    """
+    # local aliases: name -> partial target, anywhere in the module
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            tgt = _partial_target(node.value)
+            if tgt and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                aliases[node.targets[0].id] = tgt
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func).split(".")[-1] != "pallas_call" or not node.args:
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Call):
+            tgt = _partial_target(first)
+            if tgt:
+                out.add(tgt.split(".")[-1])
+        else:
+            name = _dotted(first).split(".")[-1]
+            out.add(aliases.get(name, name))
+    for fn in _function_defs(tree):
+        params = [a.arg for a in fn.args.args + fn.args.kwonlyargs]
+        if any(p.endswith(_REF_SUFFIXES) for p in params):
+            out.add(fn.name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KN1xx: kernel purity
+# ---------------------------------------------------------------------------
+_F64_NAMES = {"float64", "f64", "double"}
+
+
+def _check_kernel_body(fn: ast.FunctionDef, path: str, src: str
+                       ) -> list[Finding]:
+    refs = {a.arg for a in fn.args.args + fn.args.kwonlyargs
+            if a.arg.endswith(_REF_SUFFIXES)}
+    out: list[Finding] = []
+
+    for node in ast.walk(fn):
+        # KN101: Python control flow branching on a traced ref — the body
+        # must stay in the compare/reduce/where subset (use jnp.where /
+        # lax.fori_loop / pl.when); a Python `if codes_ref[...]` either
+        # fails to trace or silently bakes in one branch.
+        if isinstance(node, (ast.If, ast.While)) \
+                and _names_in(node.test) & refs:
+            out.append(finding_at(
+                RULE_KERNEL_BRANCH, path, node.lineno,
+                f"kernel body '{fn.name}' branches on traced ref(s) "
+                f"{sorted(_names_in(node.test) & refs)} with Python "
+                f"{'if' if isinstance(node, ast.If) else 'while'}; use "
+                "jnp.where / pl.when", src))
+        if isinstance(node, ast.For) and _names_in(node.iter) & refs:
+            out.append(finding_at(
+                RULE_KERNEL_BRANCH, path, node.lineno,
+                f"kernel body '{fn.name}' iterates a traced ref with a "
+                "Python for; use lax.fori_loop", src))
+        # KN102: numpy inside a kernel body runs at trace time on the host —
+        # a constant-folding bug at best, a tracer leak at worst.
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            root = callee.split(".")[0]
+            if root in ("np", "numpy") and "." in callee:
+                out.append(finding_at(
+                    RULE_KERNEL_NUMPY, path, node.lineno,
+                    f"kernel body '{fn.name}' calls numpy ({callee}); "
+                    "use jnp/lax so the op lowers with the kernel", src))
+            # KN103: .item()/.tolist() forces a device->host sync and cannot
+            # appear in traced code at all.
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist"):
+                out.append(finding_at(
+                    RULE_KERNEL_ITEM, path, node.lineno,
+                    f"kernel body '{fn.name}' calls .{node.func.attr}() — "
+                    "host escape inside a kernel", src))
+        # KN104: float64 anywhere in a kernel body — Mosaic has no f64 path
+        # and x64 is globally disabled (imi.ID_DTYPE rationale).
+        is_f64 = (isinstance(node, ast.Attribute)
+                  and node.attr in _F64_NAMES) \
+            or (isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node.value in ("float64", "double"))
+        if is_f64:
+            out.append(finding_at(
+                RULE_KERNEL_F64, path, node.lineno,
+                f"kernel body '{fn.name}' references float64; kernels are "
+                "f32/bf16/int only (x64 is disabled repo-wide)", src))
+    return out
+
+
+def check_kernel_source(src: str, path: str) -> list[Finding]:
+    """KN101–KN104 over one kernels/ module."""
+    tree = ast.parse(src)
+    bodies = kernel_body_names(tree)
+    out: list[Finding] = []
+    for fn in _function_defs(tree):
+        if fn.name in bodies:
+            out.extend(_check_kernel_body(fn, path, src))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RG301: kernel/oracle/fallback registry cross-check
+# ---------------------------------------------------------------------------
+def _module_def_names(src: str) -> set[str]:
+    return {n.name for n in ast.parse(src).body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def check_registry(kernel_src: str, ref_src: str, *,
+                   kernel_path: str = "src/repro/kernels/pq_scan.py",
+                   fallback_srcs: dict[str, str] | None = None,
+                   registry: dict[str, tuple[str, str]] | None = None
+                   ) -> list[Finding]:
+    """Every public ``pq_scan_*`` def in ``kernel_src`` must be registered
+    with an existing oracle (in ``ref_src``) and an existing jnp fallback
+    (in ``kernel_src`` or, for ``module:name`` specs, in
+    ``fallback_srcs[module]``)."""
+    registry = KERNEL_ORACLES if registry is None else registry
+    fallback_srcs = fallback_srcs or {}
+    tree = ast.parse(kernel_src)
+    kernel_defs = {n.name: n.lineno for n in tree.body
+                   if isinstance(n, ast.FunctionDef)}
+    ref_defs = _module_def_names(ref_src)
+    out: list[Finding] = []
+    public = [(name, line) for name, line in kernel_defs.items()
+              if name.startswith("pq_scan") and not name.startswith("_")
+              and not name.endswith("_jnp") and not name.endswith("_ref")]
+    for name, line in sorted(public, key=lambda p: p[1]):
+        if name not in registry:
+            out.append(finding_at(
+                RULE_REGISTRY, kernel_path, line,
+                f"kernel '{name}' has no KERNEL_ORACLES entry — register "
+                "its ref.py oracle and jnp fallback "
+                "(repro.analysis.ast_checks.KERNEL_ORACLES)", kernel_src))
+            continue
+        oracle, fallback = registry[name]
+        if oracle not in ref_defs:
+            out.append(finding_at(
+                RULE_REGISTRY, kernel_path, line,
+                f"kernel '{name}' registers oracle '{oracle}' which does "
+                "not exist in kernels/ref.py", kernel_src))
+        if ":" in fallback:
+            mod, fb_name = fallback.split(":", 1)
+            fb_defs = _module_def_names(fallback_srcs[mod]) \
+                if mod in fallback_srcs else None
+            if fb_defs is not None and fb_name not in fb_defs:
+                out.append(finding_at(
+                    RULE_REGISTRY, kernel_path, line,
+                    f"kernel '{name}' registers fallback '{fallback}' "
+                    f"but {mod} has no def '{fb_name}'", kernel_src))
+        elif fallback not in kernel_defs:
+            out.append(finding_at(
+                RULE_REGISTRY, kernel_path, line,
+                f"kernel '{name}' registers jnp fallback '{fallback}' "
+                "which does not exist in the kernel module", kernel_src))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DS2xx: durability ordering
+# ---------------------------------------------------------------------------
+def _is_fsync(callee: str) -> bool:
+    return callee.split(".")[-1] == "fsync"
+
+
+def _is_flush(callee: str) -> bool:
+    return callee.split(".")[-1] == "flush"
+
+
+def _is_dir_fsync(callee: str) -> bool:
+    # os.fsync on a directory fd, or the module-local _fsync_dir helper
+    last = callee.split(".")[-1]
+    return last in ("_fsync_dir", "fsync_dir") or last == "fsync"
+
+
+_DURABLE_WRITERS = {"savez", "savez_compressed", "save"}
+
+
+def _check_durability_fn(fn: ast.FunctionDef, path: str, src: str, *,
+                         ingest: bool) -> list[Finding]:
+    calls = _calls_in_order(fn)
+    out: list[Finding] = []
+    for i, (call, callee) in enumerate(calls):
+        last = callee.split(".")[-1]
+        before = calls[:i]
+        after = calls[i + 1:]
+        if callee in ("os.replace", "os.rename"):
+            # DS201: the §5 commit-point rule — whatever os.replace
+            # publishes must be ON DISK first: a flush AND an fsync must
+            # dominate the rename in this body.
+            if not any(_is_flush(c) for _, c in before) \
+                    or not any(_is_fsync(c) for _, c in before):
+                out.append(finding_at(
+                    RULE_REPLACE_FSYNC, path, call.lineno,
+                    f"'{callee}' in '{fn.name}' is not dominated by "
+                    "flush+fsync — a crash can publish a name whose bytes "
+                    "never hit disk (DESIGN.md §5)", src))
+            # DS204: the rename itself is only durable once the directory
+            # entry is fsync'd (manifest.write_manifest's _fsync_dir).
+            if not any(_is_dir_fsync(c) for _, c in after):
+                out.append(finding_at(
+                    RULE_DIR_FSYNC, path, call.lineno,
+                    f"'{callee}' in '{fn.name}' has no directory fsync "
+                    "after it — the rename may not survive a crash "
+                    "(DESIGN.md §5)", src))
+        # DS202: numpy artifact writers don't fsync; a durable file written
+        # via np.savez/np.save must be fsync'd before the function returns
+        # (or the manifest can name a file with no bytes behind it).
+        if last in _DURABLE_WRITERS and callee.split(".")[0] in ("np",
+                                                                "numpy"):
+            if not any(_is_fsync(c) for _, c in after):
+                out.append(finding_at(
+                    RULE_WRITE_FSYNC, path, call.lineno,
+                    f"'{callee}' in '{fn.name}' writes a durable artifact "
+                    "with no fsync before return — commit points may "
+                    "reference unsynced bytes (DESIGN.md §5)", src))
+        # DS203 (ingest only): meta-log-then-WAL — the frame-attribution
+        # record must be durable BEFORE the rows enter the store WAL
+        # (DESIGN.md §12.3); an insert with no preceding meta append can
+        # strand unattributable rows after a crash.
+        if ingest and last == "insert" \
+                and callee.split(".")[-2:-1] == ["store"]:
+            if not any("append_meta" in c or "meta_log" in c
+                       for _, c in before):
+                out.append(finding_at(
+                    RULE_META_ORDER, path, call.lineno,
+                    f"'{callee}' in '{fn.name}' appends rows to the store "
+                    "WAL without a preceding meta-log append — crash "
+                    "recovery cannot re-attribute these rows "
+                    "(DESIGN.md §12.3)", src))
+    return out
+
+
+def check_durability_source(src: str, path: str, *, ingest: bool
+                            ) -> list[Finding]:
+    """DS201–DS204 over one store/ or ingest/ module."""
+    tree = ast.parse(src)
+    out: list[Finding] = []
+    for fn in _function_defs(tree):
+        out.extend(_check_durability_fn(fn, path, src, ingest=ingest))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# tree-level driver
+# ---------------------------------------------------------------------------
+def run_ast_checks(root: str | pathlib.Path,
+                   files: set[str] | None = None
+                   ) -> tuple[list[Finding], dict[str, str]]:
+    """All AST rules over the repo at ``root``.  ``files`` (repo-relative
+    posix paths) restricts the per-file rules (``--changed-only``); the
+    registry cross-check always runs when any kernels/ file is in scope.
+    Returns ``(findings, sources)`` — sources feed suppression scanning.
+    """
+    root = pathlib.Path(root)
+    findings: list[Finding] = []
+    sources: dict[str, str] = {}
+
+    def in_scope(rel: str) -> bool:
+        return files is None or rel in files
+
+    def read(rel: str) -> str:
+        if rel not in sources:
+            sources[rel] = (root / rel).read_text(encoding="utf-8")
+        return sources[rel]
+
+    kernel_files = []
+    for d in KERNEL_DIRS:
+        kernel_files += sorted((root / d).glob("*.py"))
+    any_kernel_in_scope = False
+    for p in kernel_files:
+        rel = p.relative_to(root).as_posix()
+        if not in_scope(rel):
+            continue
+        any_kernel_in_scope = True
+        findings.extend(check_kernel_source(read(rel), rel))
+
+    if any_kernel_in_scope or files is None:
+        pq_rel = "src/repro/kernels/pq_scan.py"
+        ref_rel = "src/repro/kernels/ref.py"
+        pq_src, ref_src = read(pq_rel), read(ref_rel)
+        fb_srcs = {"repro.core.pq": read("src/repro/core/pq.py")}
+        findings.extend(check_registry(pq_src, ref_src, kernel_path=pq_rel,
+                                       fallback_srcs=fb_srcs))
+
+    for d in DURABILITY_DIRS:
+        for p in sorted((root / d).glob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            if not in_scope(rel):
+                continue
+            findings.extend(check_durability_source(
+                read(rel), rel, ingest="ingest" in d))
+    return findings, sources

@@ -1,0 +1,112 @@
+"""Committed findings baseline — pre-existing accepted findings don't block.
+
+The baseline file (``tools/lint_baseline.json``) pins the findings the tree
+is *allowed* to have: CI's ``--strict`` gate fails only on findings that are
+not in it.  Each entry carries a mandatory human justification; an entry
+whose justification is empty or still the ``--write-baseline`` placeholder
+fails ``--strict`` — baselining a finding is an explicit, reviewed decision,
+not an escape hatch.
+
+Entries are keyed by a *content fingerprint* — ``sha256(rule | path |
+normalized flagged line)`` — not by line number, so unrelated edits that
+shift a file do not invalidate the baseline, while editing the flagged line
+itself (the thing the rule looked at) does.
+
+Stale entries (fingerprints no longer produced by the tree) are reported so
+the baseline shrinks as findings get fixed; ``--strict`` fails on them too,
+keeping the committed file an exact mirror of the accepted debt.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+import re
+
+from repro.analysis.findings import Finding
+
+VERSION = 1
+PLACEHOLDER = "FIXME: justify this baseline entry"
+
+
+def fingerprint(f: Finding) -> str:
+    """Content fingerprint: stable under line moves, invalidated by edits
+    to the flagged line (or, for trace-level findings, the trace label)."""
+    norm = re.sub(r"\s+", " ", f.snippet).strip()
+    blob = f"{f.rule}|{f.path}|{norm}".encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    rule: str
+    path: str
+    fingerprint: str
+    justification: str
+    snippet: str = ""
+
+
+@dataclasses.dataclass
+class BaselineMatch:
+    new: list[Finding]              # findings not covered by the baseline
+    accepted: list[Finding]         # findings the baseline covers
+    stale: list[BaselineEntry]      # entries no current finding matches
+    unjustified: list[BaselineEntry]  # entries with empty/placeholder why
+
+
+def load(path: str | pathlib.Path) -> list[BaselineEntry]:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if data.get("version") != VERSION:
+        raise ValueError(f"baseline version {data.get('version')} != "
+                         f"{VERSION}; regenerate with --write-baseline")
+    return [BaselineEntry(**e) for e in data["entries"]]
+
+
+def save(path: str | pathlib.Path, findings: list[Finding],
+         previous: list[BaselineEntry] | None = None) -> list[BaselineEntry]:
+    """Write ``findings`` as the new baseline, keeping the justification of
+    any previous entry with the same fingerprint (new entries get the
+    placeholder, which ``--strict`` rejects until a human edits it)."""
+    prev = {e.fingerprint: e for e in (previous or [])}
+    entries = []
+    seen = set()
+    for f in sorted(findings, key=lambda f: (f.path, f.rule, f.line)):
+        fp = fingerprint(f)
+        if fp in seen:
+            continue
+        seen.add(fp)
+        old = prev.get(fp)
+        entries.append(BaselineEntry(
+            rule=f.rule, path=f.path, fingerprint=fp,
+            justification=old.justification if old else PLACEHOLDER,
+            snippet=f.snippet))
+    payload = {"version": VERSION,
+               "entries": [dataclasses.asdict(e) for e in entries]}
+    pathlib.Path(path).write_text(json.dumps(payload, indent=1) + "\n",
+                                  encoding="utf-8")
+    return entries
+
+
+def match(findings: list[Finding], entries: list[BaselineEntry]
+          ) -> BaselineMatch:
+    """Split ``findings`` into new vs baseline-accepted, and the baseline
+    into live vs stale entries."""
+    by_fp: dict[str, BaselineEntry] = {e.fingerprint: e for e in entries}
+    new, accepted, live = [], [], set()
+    for f in findings:
+        fp = fingerprint(f)
+        if fp in by_fp:
+            accepted.append(f)
+            live.add(fp)
+        else:
+            new.append(f)
+    stale = [e for e in entries if e.fingerprint not in live]
+    unjustified = [e for e in entries
+                   if not e.justification.strip()
+                   or e.justification.strip() == PLACEHOLDER]
+    return BaselineMatch(new=new, accepted=accepted, stale=stale,
+                         unjustified=unjustified)

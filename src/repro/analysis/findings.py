@@ -1,0 +1,114 @@
+"""Structured findings for the static invariant checker (DESIGN.md §14).
+
+A :class:`Finding` is one rule violation at one site: ``(rule, path, line,
+severity, message)`` plus the flagged source line (``snippet``), which the
+baseline layer fingerprints so accepted findings survive unrelated line
+shifts.  Jaxpr-level findings anchor to the traced entry point instead of a
+source line (``path`` is the module of the entry point, ``line`` 0, and the
+``snippet`` is the entry-point label — stable across edits that do not
+change the traced program).
+
+Per-site suppressions: a source line (or the dedicated comment line right
+above it) may carry
+
+    # repro-lint: allow[RULE_ID] <mandatory justification>
+
+which drops findings of that rule on that line.  A suppression with no
+justification text is itself a finding (``SUP001``) — silencing a rule
+requires saying why, in the diff, where review sees it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+# '# repro-lint: allow[DS201] reason...'  (multiple rules comma-separated)
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*allow\[(?P<rules>[A-Z0-9_,\s]+)\]\s*"
+    r"(?P<why>.*?)\s*$")
+
+RULE_SUPPRESSION = "SUP001"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    rule: str          # e.g. "KN101", "JX001"
+    path: str          # repo-relative posix path (or module for jaxpr rules)
+    line: int          # 1-based source line; 0 = not line-anchored
+    severity: str      # SEV_ERROR | SEV_WARNING
+    message: str
+    snippet: str = ""  # flagged source line / trace label (baseline anchor)
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{self.severity}[{self.rule}] {loc}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rules: tuple[str, ...]
+    line: int            # line the suppression comment sits on
+    justification: str
+
+
+def scan_suppressions(source: str) -> list[Suppression]:
+    """All ``# repro-lint: allow[...]`` comments in ``source``."""
+    out = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",")
+                      if r.strip())
+        why = m.group("why").strip().lstrip("-—:").strip()
+        out.append(Suppression(rules=rules, line=i, justification=why))
+    return out
+
+
+def apply_suppressions(findings: list[Finding], sources: dict[str, str]
+                       ) -> tuple[list[Finding], list[Finding]]:
+    """Drop findings covered by a suppression comment on the same line or
+    the line directly above; return ``(kept, suppressed)``.
+
+    Bare suppressions (no justification) are re-injected as ``SUP001``
+    findings, and suppressions cannot silence ``SUP001`` itself.
+    """
+    by_path: dict[str, list[Suppression]] = {}
+    kept: list[Finding] = []
+    suppressed: list[Finding] = []
+    for path, src in sources.items():
+        sups = scan_suppressions(src)
+        by_path[path] = sups
+        for s in sups:
+            if not s.justification:
+                kept.append(Finding(
+                    rule=RULE_SUPPRESSION, path=path, line=s.line,
+                    severity=SEV_ERROR,
+                    message="suppression without justification: "
+                            f"allow[{','.join(s.rules)}] must say why",
+                    snippet=_line_at(src, s.line)))
+    for f in findings:
+        covering = [s for s in by_path.get(f.path, ())
+                    if f.rule in s.rules and f.rule != RULE_SUPPRESSION
+                    and s.justification
+                    and s.line in (f.line, f.line - 1)]
+        (suppressed if covering else kept).append(f)
+    return kept, suppressed
+
+
+def _line_at(source: str, line: int) -> str:
+    lines = source.splitlines()
+    return lines[line - 1].strip() if 0 < line <= len(lines) else ""
+
+
+def finding_at(rule: str, path: str, line: int, message: str, source: str,
+               severity: str = SEV_ERROR) -> Finding:
+    """Build a line-anchored finding, capturing the source line as the
+    baseline fingerprint anchor."""
+    return Finding(rule=rule, path=path, line=line, severity=severity,
+                   message=message, snippet=_line_at(source, line))

@@ -1,0 +1,442 @@
+"""Jaxpr contract audits: trace the hot-path entry points with canonical
+abstract shapes and assert structural invariants on the traced program
+(DESIGN.md §14).
+
+Everything here runs ``jax.make_jaxpr``/``jax.eval_shape`` on
+``jax.ShapeDtypeStruct`` leaves — no data, no device execution, a few
+hundred ms for the whole battery — so CI can audit the *compiled program's
+shape* on every commit without running a benchmark:
+
+``JX001`` — the materialization-regression detector.  The fused scan's
+whole point is that the ``(Q, N)`` score matrix never exists (DESIGN.md
+§11); a refactor that quietly reintroduces it still returns correct
+results, so only a structural check catches it.  We walk every
+intermediate of the traced program (recursing into pjit/scan/pallas_call
+sub-jaxprs) and fail on any float-dtype value of shape exactly ``(Q, N)``.
+Canonical ``N`` is chosen a non-multiple of every internal block size, so
+legitimate ``(Q, block)`` tiles and padded ``(Q, N_pad)`` buffers never
+alias the forbidden shape.
+
+``JX002`` — no float64 anywhere in the trace (x64 is disabled repo-wide;
+an f64 that survives to lowering means someone re-enabled it locally).
+
+``JX003`` — id-carrying outputs are exactly ``imi.ID_DTYPE`` (the
+persisted-segment round-trip contract).
+
+``JX004`` — no host callbacks on the hot path (a stray ``jax.debug.print``
+serializes every batch through the host).
+
+``JX005`` — recompile-hazard check: re-trace at a second ``(Q, N, k)``
+setting and require the two jaxprs be isomorphic up to shape constants
+(same recursive primitive sequence).  A Python value leaking into a
+trace-time branch (PR 5's stale ``use_kernel`` default was one) shows up
+as a structural diff between the settings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.analysis.findings import Finding, SEV_ERROR
+
+RULE_TRACE = "JX000"         # entry point failed to trace at all
+RULE_QN_MAT = "JX001"        # (Q, N) float intermediate on a fused path
+RULE_F64 = "JX002"           # float64 value in the trace
+RULE_ID_DTYPE = "JX003"      # id-carrying output not ID_DTYPE
+RULE_CALLBACK = "JX004"      # host callback on the hot path
+RULE_RETRACE = "JX005"       # trace structure varies with (Q, N, k)
+
+_CALLBACK_PRIMS = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "outside_call", "infeed", "outfeed",
+}
+
+# canonical trace geometry — N=6001 is prime-ish on purpose: not a multiple
+# of any kernel block (1024) or jnp fallback block (4096), so padded/tiled
+# buffers never collide with the forbidden (Q, N) shape
+CANON = dict(Q=7, N=6001, D=32, P=8, M=16, K=4)
+RETRACE = dict(Q=5, N=6500, D=32, P=8, M=16, K=4)   # both settings pad
+
+
+def _sds(shape: tuple, dtype: Any) -> Any:
+    import jax
+    return jax.ShapeDtypeStruct(shape, np.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# canonical abstract inputs
+# ---------------------------------------------------------------------------
+def canonical_index(*, n: int, d: int, p: int, m: int, k: int) -> Any:
+    """An ``IMIIndex`` whose leaves are ``ShapeDtypeStruct``s — enough for
+    ``make_jaxpr``/``eval_shape``, never touches a device."""
+    import jax.numpy as jnp
+    from repro.core import imi as imimod
+    from repro.core import pq as pqmod
+    pq = pqmod.PQ(centroids=_sds((p, m, d // p), np.float32), rotation=None)
+    return imimod.IMIIndex(
+        coarse1=_sds((k, d // 2), np.float32),
+        coarse2=_sds((k, d // 2), np.float32),
+        pq=pq,
+        codes=_sds((n, p), np.uint8),
+        vectors=_sds((n, d), jnp.bfloat16),
+        ids=_sds((n,), imimod.ID_DTYPE),
+        cell_of=_sds((n,), np.int32),
+        cell_offsets=_sds((k * k + 1,), np.int32),
+    )
+
+
+def canonical_sharded(*, n: int, d: int, p: int, m: int, k: int) -> Any:
+    """A 1-shard ``ShardedIndex`` of ``ShapeDtypeStruct`` leaves (the
+    per-shard body is what we audit; shard count only changes collectives)."""
+    import jax.numpy as jnp
+    from repro.core import distributed as dist
+    from repro.core import imi as imimod
+    return dist.ShardedIndex(
+        codes=_sds((1, n, p), np.uint8),
+        vectors=_sds((1, n, d), jnp.bfloat16),
+        ids=_sds((1, n), imimod.ID_DTYPE),
+        cell_of=_sds((1, n), np.int32),
+        row_valid=_sds((1, n), np.uint8),
+        row_start=_sds((1, 1), np.int32),
+        cell_offsets=_sds((1, k * k + 1), np.int32),
+        global_offsets=_sds((k * k + 1,), np.int32),
+        coarse1=_sds((k, d // 2), np.float32),
+        coarse2=_sds((k, d // 2), np.float32),
+        pq_centroids=_sds((p, m, d // p), np.float32),
+        pq_rotation=None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking (duck-typed: survives jax.core module reshuffles)
+# ---------------------------------------------------------------------------
+def _is_jaxpr(v: Any) -> bool:
+    return hasattr(v, "eqns") and hasattr(v, "invars")
+
+
+def _as_jaxpr(v: Any) -> Any:
+    if _is_jaxpr(v):
+        return v
+    inner = getattr(v, "jaxpr", None)          # ClosedJaxpr
+    return inner if _is_jaxpr(inner) else None
+
+
+def iter_eqns(jaxpr: Any):
+    """Every equation of ``jaxpr`` and, recursively, of every sub-jaxpr in
+    its equations' params (pjit bodies, scan/cond branches, pallas_call
+    kernels, shard_map bodies)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for item in (v if isinstance(v, (list, tuple)) else (v,)):
+                sub = _as_jaxpr(item)
+                if sub is not None:
+                    yield from iter_eqns(sub)
+
+
+def trace_jaxpr(fn: Callable, args: Sequence[Any]) -> Any:
+    """``jax.make_jaxpr`` over abstract args; returns the (open) jaxpr."""
+    import jax
+    return jax.make_jaxpr(fn)(*args).jaxpr
+
+
+def primitive_signature(jaxpr: Any) -> list[str]:
+    """Recursive primitive-name sequence — the shape-free skeleton JX005
+    compares across trace settings."""
+    return [eqn.primitive.name for eqn in iter_eqns(jaxpr)]
+
+
+# ---------------------------------------------------------------------------
+# per-rule checks (each usable standalone; tests drive them directly)
+# ---------------------------------------------------------------------------
+def check_qn_materialization(jaxpr: Any, q: int, n: int, label: str,
+                             path: str) -> list[Finding]:
+    """JX001: no float-dtype intermediate of shape exactly ``(q, n)``."""
+    out: list[Finding] = []
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", None)
+            dtype = getattr(aval, "dtype", None)
+            if shape == (q, n) and dtype is not None \
+                    and np.issubdtype(dtype, np.floating):
+                out.append(Finding(
+                    rule=RULE_QN_MAT, path=path, line=0, severity=SEV_ERROR,
+                    message=f"{label}: traced program materializes a "
+                            f"({q}, {n}) {dtype} intermediate "
+                            f"(primitive '{eqn.primitive.name}') — the "
+                            "fused path must never build the (Q, N) score "
+                            "matrix (DESIGN.md §11)",
+                    snippet=label))
+                return out          # one finding per entry point is enough
+    return out
+
+
+def check_no_f64(jaxpr: Any, label: str, path: str) -> list[Finding]:
+    """JX002: no float64 output anywhere in the trace (conversions
+    included — a convert_element_type to f64 produces an f64 outvar)."""
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            dtype = getattr(getattr(var, "aval", None), "dtype", None)
+            if dtype is not None and dtype == np.float64:
+                return [Finding(
+                    rule=RULE_F64, path=path, line=0, severity=SEV_ERROR,
+                    message=f"{label}: trace contains a float64 value "
+                            f"(primitive '{eqn.primitive.name}'); x64 is "
+                            "disabled repo-wide and kernels have no f64 "
+                            "path", snippet=label)]
+    return []
+
+
+def check_no_callbacks(jaxpr: Any, label: str, path: str) -> list[Finding]:
+    """JX004: no host-callback primitives on the hot path."""
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name in _CALLBACK_PRIMS:
+            return [Finding(
+                rule=RULE_CALLBACK, path=path, line=0, severity=SEV_ERROR,
+                message=f"{label}: trace contains host callback "
+                        f"'{eqn.primitive.name}' — every batch would "
+                        "round-trip through the host", snippet=label)]
+    return []
+
+
+def check_id_dtype(fn: Callable, args: Sequence[Any],
+                   id_outputs: Sequence[Any], label: str, path: str
+                   ) -> list[Finding]:
+    """JX003: outputs named in ``id_outputs`` (dict keys or positional
+    indices) have dtype exactly ``imi.ID_DTYPE``."""
+    import jax
+    from repro.core import imi as imimod
+    out_shape = jax.eval_shape(fn, *args)
+    findings: list[Finding] = []
+    for key in id_outputs:
+        leaf = out_shape[key]
+        if np.dtype(leaf.dtype) != np.dtype(imimod.ID_DTYPE):
+            findings.append(Finding(
+                rule=RULE_ID_DTYPE, path=path, line=0, severity=SEV_ERROR,
+                message=f"{label}: id-carrying output {key!r} has dtype "
+                        f"{leaf.dtype}, contract is "
+                        f"{np.dtype(imimod.ID_DTYPE).name} "
+                        "(imi.ID_DTYPE; segments round-trip int32)",
+                snippet=label))
+    return findings
+
+
+def check_retrace_stable(fn_a: Callable, args_a: Sequence[Any],
+                         fn_b: Callable, args_b: Sequence[Any],
+                         label: str, path: str) -> list[Finding]:
+    """JX005: the two traces must share one primitive skeleton."""
+    sig_a = primitive_signature(trace_jaxpr(fn_a, args_a))
+    sig_b = primitive_signature(trace_jaxpr(fn_b, args_b))
+    if sig_a == sig_b:
+        return []
+    # first structural divergence, for the message
+    i = next((j for j, (x, y) in enumerate(zip(sig_a, sig_b)) if x != y),
+             min(len(sig_a), len(sig_b)))
+    at = (f"position {i}: "
+          f"{sig_a[i] if i < len(sig_a) else '<end>'} vs "
+          f"{sig_b[i] if i < len(sig_b) else '<end>'}")
+    return [Finding(
+        rule=RULE_RETRACE, path=path, line=0, severity=SEV_ERROR,
+        message=f"{label}: trace structure differs between shape settings "
+                f"({len(sig_a)} vs {len(sig_b)} primitives; first diff at "
+                f"{at}) — a Python value is leaking into a trace-time "
+                "branch (recompile hazard)", snippet=label)]
+
+
+# ---------------------------------------------------------------------------
+# entry-point registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TraceEntry:
+    """One audited entry point: how to build it abstractly at a geometry,
+    and which rules apply."""
+
+    label: str
+    path: str                                   # module anchoring findings
+    # geometry dict -> (callable, abstract args)
+    build: Callable[[dict], tuple[Callable, tuple]]
+    check_qn: bool = True
+    qn_q: Optional[int] = None                  # JX001 Q override (single-
+    #                                             query entries score (1, N))
+    id_outputs: tuple = ()                      # JX003 output keys/indices
+    retrace: bool = False                       # JX005 at CANON vs RETRACE
+
+
+def _search_cfg(**kw):
+    from repro.core import anns
+    return anns.SearchConfig(**kw)
+
+
+def _entry_search_batch(fused: bool, shared: bool, masked: bool,
+                        use_kernel: str):
+    def build(g: dict) -> tuple[Callable, tuple]:
+        from repro.core import anns
+        idx = canonical_index(n=g["N"], d=g["D"], p=g["P"], m=g["M"],
+                              k=g["K"])
+        qs = _sds((g["Q"], g["D"]), np.float32)
+        # shared branch iff top_a * max_cell_size >= N
+        cfg = _search_cfg(top_a=4, max_cell_size=2048,
+                          top_k=g.get("k", 25), use_kernel=use_kernel,
+                          fused_topk=fused) if shared else \
+            _search_cfg(top_a=2, max_cell_size=512, top_k=g.get("k", 25),
+                        use_kernel=use_kernel, fused_topk=fused)
+        args = (idx, qs) if not masked \
+            else (idx, qs, _sds((g["Q"], g["N"]), np.uint8))
+        return (lambda *a: anns.search_batch(a[0], a[1], cfg, *a[2:])), args
+    return build
+
+
+def _entry_exhaustive(use_kernel: str):
+    def build(g: dict) -> tuple[Callable, tuple]:
+        from repro.core import anns
+        idx = canonical_index(n=g["N"], d=g["D"], p=g["P"], m=g["M"],
+                              k=g["K"])
+        q = _sds((g["D"],), np.float32)
+        k = g.get("k", 25)
+        return (lambda i, q_: anns.exhaustive_adc(
+            i, q_, k=k, use_kernel=use_kernel, fused_topk=True)), (idx, q)
+    return build
+
+
+def _entry_ops_topk(name: str, masked: bool, windowed: bool, paired: bool):
+    def build(g: dict) -> tuple[Callable, tuple]:
+        from repro.kernels import ops as kops
+        fn = getattr(kops, name)
+        Q, N, P, M, k = g["Q"], g["N"], g["P"], g["M"], g.get("k", 25)
+        luts = _sds((Q, P, M), np.float32)
+        codes = _sds((Q, N, P) if paired else (N, P), np.uint8)
+        mask = _sds((Q, N), np.uint8)
+        if windowed:
+            A = 4
+            st = _sds((Q, A), np.int32)
+            ct = _sds((Q, A), np.int32)
+            bs = _sds((Q, A), np.float32)
+            args = (luts, codes, st, ct, bs, mask) if masked \
+                else (luts, codes, st, ct, bs)
+        elif masked:
+            args = (luts, codes, mask)
+        else:
+            args = (luts, codes)
+        # k is a static (shape-determining) arg — close over it so
+        # make_jaxpr only sees array args
+        return (lambda *a: fn(*a, k)), args
+    return build
+
+
+def _entry_sharded(mode: str):
+    def build(g: dict) -> tuple[Callable, tuple]:
+        import jax
+        from jax.sharding import Mesh
+        from repro.core import distributed as dist
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("shard",))
+        cfg = _search_cfg(top_a=4, max_cell_size=2048, top_k=g.get("k", 25),
+                          use_kernel="jnp")
+        search = dist.make_sharded_search(mesh, cfg=cfg, mode=mode)
+        sidx = canonical_sharded(n=g["N"], d=g["D"], p=g["P"], m=g["M"],
+                                 k=g["K"])
+        qs = _sds((g["Q"], g["D"]), np.float32)
+        return search, (sidx, qs)
+    return build
+
+
+ANNS = "src/repro/core/anns.py"
+OPS = "src/repro/kernels/ops.py"
+DIST = "src/repro/core/distributed.py"
+
+
+def default_entries() -> list[TraceEntry]:
+    """The audited hot-path surface.  The legacy ``fused_topk=False`` path
+    is deliberately NOT here — it materializes (Q, N) by design and exists
+    only as the parity reference; tests assert JX001 fires on it."""
+    entries = [
+        TraceEntry("trace:search_batch/fused-shared", ANNS,
+                   _entry_search_batch(True, True, False, "jnp"),
+                   id_outputs=("ids", "rows"), retrace=True),
+        TraceEntry("trace:search_batch/fused-shared-masked", ANNS,
+                   _entry_search_batch(True, True, True, "jnp"),
+                   id_outputs=("ids", "rows")),
+        TraceEntry("trace:search_batch/fused-paired", ANNS,
+                   _entry_search_batch(True, False, False, "jnp"),
+                   id_outputs=("ids", "rows"), retrace=True),
+        TraceEntry("trace:search_batch/fused-paired-masked", ANNS,
+                   _entry_search_batch(True, False, True, "jnp"),
+                   id_outputs=("ids", "rows")),
+        TraceEntry("trace:exhaustive_adc/fused", ANNS,
+                   _entry_exhaustive("jnp"), qn_q=1,
+                   id_outputs=("ids", "rows"), retrace=True),
+        TraceEntry("trace:sharded_search/probe", DIST,
+                   _entry_sharded("probe"),
+                   id_outputs=("ids", "rows"), retrace=True),
+    ]
+    for name, masked, windowed, paired in [
+            ("pq_scan_topk_batched", False, False, False),
+            ("pq_scan_topk_batched_masked", True, False, False),
+            ("pq_scan_topk_windowed", False, True, False),
+            ("pq_scan_topk_windowed_masked", True, True, False),
+            ("pq_scan_topk_paired", False, False, True),
+            ("pq_scan_topk_paired_masked", True, False, True)]:
+        entries.append(TraceEntry(
+            f"trace:ops.{name}", OPS,
+            _entry_ops_topk(name, masked, windowed, paired),
+            id_outputs=(1,),        # (scores, rows): rows carries ids/rows
+            retrace=(name == "pq_scan_topk_windowed")))
+    return entries
+
+
+def check_entry(entry: TraceEntry, geometry: Optional[dict] = None
+                ) -> list[Finding]:
+    """Run every applicable rule on one entry point."""
+    g = dict(CANON if geometry is None else geometry)
+    findings: list[Finding] = []
+    try:
+        fn, args = entry.build(g)
+        jaxpr = trace_jaxpr(fn, args)
+    except Exception as e:  # noqa: BLE001 - any trace failure is a finding
+        return [Finding(
+            rule=RULE_TRACE, path=entry.path, line=0, severity=SEV_ERROR,
+            message=f"{entry.label}: failed to trace with canonical "
+                    f"abstract shapes: {type(e).__name__}: {e}",
+            snippet=entry.label)]
+    if entry.check_qn:
+        findings += check_qn_materialization(
+            jaxpr, entry.qn_q if entry.qn_q is not None else g["Q"],
+            g["N"], entry.label, entry.path)
+    findings += check_no_f64(jaxpr, entry.label, entry.path)
+    findings += check_no_callbacks(jaxpr, entry.label, entry.path)
+    if entry.id_outputs:
+        try:
+            findings += check_id_dtype(fn, args, entry.id_outputs,
+                                       entry.label, entry.path)
+        except Exception as e:  # noqa: BLE001
+            findings.append(Finding(
+                rule=RULE_TRACE, path=entry.path, line=0,
+                severity=SEV_ERROR,
+                message=f"{entry.label}: eval_shape failed: "
+                        f"{type(e).__name__}: {e}", snippet=entry.label))
+    if entry.retrace:
+        try:
+            g2 = dict(RETRACE)
+            g2["k"] = 50
+            fn2, args2 = entry.build(g2)
+            findings += check_retrace_stable(fn, args, fn2, args2,
+                                             entry.label, entry.path)
+        except Exception as e:  # noqa: BLE001
+            findings.append(Finding(
+                rule=RULE_TRACE, path=entry.path, line=0,
+                severity=SEV_ERROR,
+                message=f"{entry.label}: retrace at second geometry "
+                        f"failed: {type(e).__name__}: {e}",
+                snippet=entry.label))
+    return findings
+
+
+def run_jaxpr_checks(entries: Optional[list[TraceEntry]] = None
+                     ) -> list[Finding]:
+    """The full jaxpr audit battery (layer 1 of ``tools.lint``)."""
+    findings: list[Finding] = []
+    for entry in (default_entries() if entries is None else entries):
+        findings.extend(check_entry(entry))
+    return findings

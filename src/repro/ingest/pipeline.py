@@ -325,6 +325,20 @@ class IngestService:
             frame_time=time_of[rel_f])
 
     # -- durability -----------------------------------------------------------
+    @staticmethod
+    def _fsync_dir(path: pathlib.Path) -> None:
+        """Durable-rename tail: an ``os.replace`` only survives a crash
+        once the directory entry itself is fsync'd (same helper as
+        ``store.manifest``; lint rule DS204)."""
+        try:
+            fd = os.open(path, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
     def _append_meta(self, rec: dict) -> None:
         with open(self.meta_log_path, "a", encoding="utf-8") as f:
             f.write(json.dumps(rec, sort_keys=True) + "\n")
@@ -345,6 +359,7 @@ class IngestService:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.state_path)
+        self._fsync_dir(self.state_path.parent)
 
     def checkpoint(self) -> None:
         """Fold the store WAL into segments (manifest swap), persist the
@@ -451,3 +466,4 @@ class IngestService:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.meta_log_path)
+        self._fsync_dir(self.meta_log_path.parent)

@@ -26,6 +26,7 @@ WAL replay is idempotent via per-record sequence numbers.
 """
 from __future__ import annotations
 
+import os
 import pathlib
 import shutil
 from typing import Any, Optional
@@ -42,6 +43,16 @@ from repro.store import segment as segmentmod
 from repro.store import wal as walmod
 
 CODEBOOKS = "codebooks.npz"
+
+
+def _savez_synced(path: pathlib.Path, **arrays: np.ndarray) -> None:
+    """``np.savez`` + flush + fsync: codebook files are named by the
+    manifest, so their bytes must be on disk before the manifest swap
+    commits a reference to them (DESIGN.md §5; lint rule DS202)."""
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
 WAL_FILE = "wal.log"
 SEGMENTS_DIR = "segments"
 SIDECAR = "sidecar"
@@ -113,7 +124,7 @@ class VectorStore:
                          pq=np.asarray(index.pq.centroids, np.float32))
         if index.pq.rotation is not None:   # OPQ rotation rides along
             cb_arrays["rotation"] = np.asarray(index.pq.rotation, np.float32)
-        np.savez(root / CODEBOOKS, **cb_arrays)
+        _savez_synced(root / CODEBOOKS, **cb_arrays)
         base_name = "seg-000001"
         segmentmod.write_segment(root / SEGMENTS_DIR / base_name,
                                  _base_arrays(index), {"kind": "base"})
@@ -294,7 +305,7 @@ class VectorStore:
         if new_base.pq.rotation is not None:
             cb_arrays["rotation"] = np.asarray(new_base.pq.rotation,
                                                np.float32)
-        np.savez(self.root / name, **cb_arrays)
+        _savez_synced(self.root / name, **cb_arrays)
         old = self.manifest["codebooks"]
         self.manifest = {**self.manifest, "codebooks": name}
         self._checkpoint(rewrite_base=True)   # <- the atomic commit

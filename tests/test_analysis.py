@@ -1,0 +1,346 @@
+"""Static invariant checker (repro.analysis, DESIGN.md §14).
+
+Every implemented rule is demonstrated against a seeded violation — a
+fixture snippet (AST rules) or a deliberately-broken traced function
+(jaxpr rules) — plus the matching negative: the correct idiom, or the
+current tree, stays silent.  The last test runs the real CI gate
+(``python -m tools.lint --strict``) on the working tree as a subprocess.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import ast_checks, baseline as basemod, jaxpr_checks
+from repro.analysis.findings import (
+    Finding,
+    RULE_SUPPRESSION,
+    apply_suppressions,
+    scan_suppressions,
+)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# KN1xx kernel purity
+# ---------------------------------------------------------------------------
+BAD_KERNEL = textwrap.dedent("""
+    import numpy as np
+    import jax.numpy as jnp
+
+    def _bad_kernel(lut_ref, codes_ref, out_ref):
+        if codes_ref[0, 0] > 0:                 # KN101: branch on a ref
+            out_ref[...] = lut_ref[...]
+        for c in codes_ref:                     # KN101: iterate a ref
+            out_ref[0] += c
+        x = np.take(lut_ref[...], 0)            # KN102: numpy in kernel
+        y = out_ref[0].item()                   # KN103: host escape
+        out_ref[...] = lut_ref[...].astype(jnp.float64)   # KN104
+""")
+
+
+def test_kernel_rules_fire_on_seeded_violations():
+    got = rules_of(ast_checks.check_kernel_source(BAD_KERNEL, "fix.py"))
+    assert got.count("KN101") == 2
+    assert "KN102" in got and "KN103" in got and "KN104" in got
+
+
+def test_static_python_branch_in_kernel_is_allowed():
+    # `if has_bias:` on a static (non-ref) value is the repo's standard
+    # kernel-specialization idiom and must not be flagged
+    src = textwrap.dedent("""
+        def _kernel(lut_ref, out_ref, *, has_bias):
+            if has_bias:
+                out_ref[...] = lut_ref[...] + 1.0
+            else:
+                out_ref[...] = lut_ref[...]
+    """)
+    assert ast_checks.check_kernel_source(src, "k.py") == []
+
+
+def test_kernel_discovery_unwraps_partial_and_aliases():
+    src = textwrap.dedent("""
+        import functools
+        import numpy as np
+
+        def body(a_tile, o_tile):              # no *_ref naming on purpose
+            o_tile[...] = np.abs(a_tile[...])  # KN102 once discovered
+
+        def launch(x):
+            kern = functools.partial(body, 3)
+            return pl.pallas_call(kern, out_shape=x)(x)
+    """)
+    import ast as astmod
+    assert "body" in ast_checks.kernel_body_names(astmod.parse(src))
+    assert rules_of(ast_checks.check_kernel_source(src, "k.py")) == ["KN102"]
+
+
+def test_current_kernel_tree_is_clean():
+    for rel in sorted((REPO / "src/repro/kernels").glob("*.py")):
+        src = rel.read_text(encoding="utf-8")
+        assert ast_checks.check_kernel_source(src, rel.name) == [], rel
+
+
+# ---------------------------------------------------------------------------
+# RG301 registry cross-check
+# ---------------------------------------------------------------------------
+REF_SRC = "def pq_scan_topk_ref(l, c, k):\n    return l\n"
+
+
+def test_registry_flags_unregistered_kernel():
+    src = "def pq_scan_topk_foo(luts, codes, k):\n    return luts\n"
+    got = ast_checks.check_registry(src, REF_SRC)
+    assert rules_of(got) == ["RG301"]
+    assert "no KERNEL_ORACLES entry" in got[0].message
+
+
+def test_registry_flags_dangling_oracle_and_fallback():
+    src = ("def pq_scan_topk_batched(luts, codes, k):\n    return luts\n")
+    reg = {"pq_scan_topk_batched": ("missing_ref", "missing_jnp")}
+    got = ast_checks.check_registry(src, REF_SRC, registry=reg)
+    assert rules_of(got) == ["RG301", "RG301"]
+
+
+def test_registry_passes_on_current_tree():
+    pq = (REPO / "src/repro/kernels/pq_scan.py").read_text(encoding="utf-8")
+    ref = (REPO / "src/repro/kernels/ref.py").read_text(encoding="utf-8")
+    fb = {"repro.core.pq":
+          (REPO / "src/repro/core/pq.py").read_text(encoding="utf-8")}
+    assert ast_checks.check_registry(pq, ref, fallback_srcs=fb) == []
+
+
+# ---------------------------------------------------------------------------
+# DS2xx durability ordering
+# ---------------------------------------------------------------------------
+def test_unfsyncd_replace_fires_ds201_and_ds204():
+    src = textwrap.dedent("""
+        import json, os
+
+        def save_state(tmp, path, state):
+            with open(tmp, "w") as f:
+                json.dump(state, f)
+            os.replace(tmp, path)              # no flush/fsync, no dir sync
+    """)
+    got = rules_of(ast_checks.check_durability_source(src, "s.py",
+                                                      ingest=False))
+    assert got == ["DS201", "DS204"]
+
+
+def test_correct_replace_chain_is_clean():
+    src = textwrap.dedent("""
+        import json, os
+
+        def save_state(tmp, path, state):
+            with open(tmp, "w") as f:
+                json.dump(state, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            _fsync_dir(path.parent)
+    """)
+    assert ast_checks.check_durability_source(src, "s.py", ingest=False) == []
+
+
+def test_unfsyncd_savez_fires_ds202():
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def write_codebooks(path, arrays):
+            np.savez(path, **arrays)           # bytes may never hit disk
+    """)
+    got = rules_of(ast_checks.check_durability_source(src, "s.py",
+                                                      ingest=False))
+    assert got == ["DS202"]
+
+
+def test_meta_log_after_wal_fires_ds203():
+    src = textwrap.dedent("""
+        class Ingest:
+            def bad_chunk(self, chunk, rec):
+                self.store.insert(chunk)       # WAL append first: wrong
+                self._append_meta(rec)
+
+            def good_chunk(self, chunk, rec):
+                self._append_meta(rec)         # meta-log-then-WAL: right
+                self.store.insert(chunk)
+    """)
+    got = ast_checks.check_durability_source(src, "p.py", ingest=True)
+    assert rules_of(got) == ["DS203"]
+    assert "bad_chunk" in got[0].message
+    # the same source is NOT an ingest concern in store/ modules
+    assert ast_checks.check_durability_source(src, "p.py",
+                                              ingest=False) == []
+
+
+def test_current_durability_tree_is_clean():
+    findings, _ = ast_checks.run_ast_checks(REPO)
+    assert findings == [], [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# JX00x jaxpr contract audits
+# ---------------------------------------------------------------------------
+G = dict(jaxpr_checks.CANON)
+
+
+def test_jx001_fires_on_legacy_path_and_not_on_fused():
+    # THE acceptance-criterion pair: SearchConfig.fused_topk=False's
+    # scan-then-select materializes the (Q, N) score matrix and must be
+    # flagged; the default fused path must trace clean.
+    legacy = jaxpr_checks._entry_search_batch(False, True, False, "jnp")
+    fn, args = legacy(G)
+    j = jaxpr_checks.trace_jaxpr(fn, args)
+    got = jaxpr_checks.check_qn_materialization(j, G["Q"], G["N"],
+                                                "legacy", "anns.py")
+    assert rules_of(got) == ["JX001"]
+    assert "score matrix" in got[0].message
+
+    fused = jaxpr_checks._entry_search_batch(True, True, False, "jnp")
+    fn, args = fused(G)
+    j = jaxpr_checks.trace_jaxpr(fn, args)
+    assert jaxpr_checks.check_qn_materialization(
+        j, G["Q"], G["N"], "fused", "anns.py") == []
+
+
+def test_jx002_fires_on_f64_trace():
+    import jax
+    import jax.numpy as jnp
+
+    def promote(x):
+        return x.astype(jnp.float64) * 2.0
+
+    with jax.experimental.enable_x64():
+        j = jaxpr_checks.trace_jaxpr(
+            promote, [jax.ShapeDtypeStruct((4,), np.float32)])
+        got = jaxpr_checks.check_no_f64(j, "promote", "x.py")
+    assert rules_of(got) == ["JX002"]
+
+
+def test_jx003_fires_on_wrong_id_dtype():
+    import jax.numpy as jnp
+
+    def search_like(q):
+        return {"ids": q.astype(jnp.float32), "scores": q}
+
+    got = jaxpr_checks.check_id_dtype(
+        search_like, [jaxpr_checks._sds((8,), np.float32)], ("ids",),
+        "fake", "x.py")
+    assert rules_of(got) == ["JX003"]
+    # int32 ids pass
+    ok = lambda q: {"ids": q.astype(jnp.int32)}
+    assert jaxpr_checks.check_id_dtype(
+        ok, [jaxpr_checks._sds((8,), np.float32)], ("ids",),
+        "fake", "x.py") == []
+
+
+def test_jx004_fires_on_debug_print():
+    import jax
+
+    def noisy(x):
+        jax.debug.print("x={x}", x=x.sum())
+        return x * 2
+
+    j = jaxpr_checks.trace_jaxpr(
+        noisy, [jax.ShapeDtypeStruct((4,), np.float32)])
+    got = jaxpr_checks.check_no_callbacks(j, "noisy", "x.py")
+    assert rules_of(got) == ["JX004"]
+
+
+def test_jx005_fires_on_shape_dependent_branch():
+    import jax
+
+    def leaky(x):            # Python branch on a trace-time shape value
+        if x.shape[0] > 5:
+            return x * 2.0
+        return x + 1.0
+
+    a = [jax.ShapeDtypeStruct((7,), np.float32)]
+    b = [jax.ShapeDtypeStruct((5,), np.float32)]
+    got = jaxpr_checks.check_retrace_stable(leaky, a, leaky, b,
+                                            "leaky", "x.py")
+    assert rules_of(got) == ["JX005"]
+    stable = lambda x: x * 2.0
+    assert jaxpr_checks.check_retrace_stable(stable, a, stable, b,
+                                             "stable", "x.py") == []
+
+
+def test_jaxpr_battery_clean_on_current_tree():
+    findings = jaxpr_checks.run_jaxpr_checks()
+    assert findings == [], [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# suppressions + baseline
+# ---------------------------------------------------------------------------
+def test_suppression_drops_finding_but_bare_suppression_is_finding():
+    src = ("import os\n"
+           "os.replace('a', 'b')  # repro-lint: allow[DS201] test fixture\n"
+           "os.rename('c', 'd')  # repro-lint: allow[DS204]\n")
+    f1 = Finding("DS201", "f.py", 2, "error", "msg", snippet="x")
+    kept, suppressed = apply_suppressions([f1], {"f.py": src})
+    assert [f.rule for f in suppressed] == ["DS201"]
+    assert [f.rule for f in kept] == [RULE_SUPPRESSION]   # line 3 is bare
+    assert kept[0].line == 3
+
+
+def test_suppression_scan_parses_rules_and_justification():
+    sups = scan_suppressions(
+        "x = 1  # repro-lint: allow[KN101, KN102] trace-time constant\n")
+    assert sups[0].rules == ("KN101", "KN102")
+    assert sups[0].justification == "trace-time constant"
+
+
+def test_baseline_fingerprint_survives_line_shift(tmp_path):
+    f_old = Finding("DS201", "s.py", 10, "error", "m",
+                    snippet="os.replace(tmp, path)")
+    path = tmp_path / "base.json"
+    entries = basemod.save(path, [f_old])
+    # same flagged line, different location/message formatting
+    f_new = Finding("DS201", "s.py", 42, "error", "m2",
+                    snippet="  os.replace(tmp,  path)")
+    m = basemod.match([f_new], basemod.load(path))
+    assert m.new == [] and m.accepted == [f_new]
+    # entries carry the placeholder until a human justifies them
+    assert entries[0].justification == basemod.PLACEHOLDER
+    assert m.unjustified
+
+
+def test_baseline_save_preserves_justifications_and_flags_stale(tmp_path):
+    path = tmp_path / "base.json"
+    f1 = Finding("KN102", "k.py", 3, "error", "m", snippet="np.take(x, 0)")
+    basemod.save(path, [f1])
+    entries = basemod.load(path)
+    entries[0].justification = "trace-time constant fold, reviewed"
+    basemod.save(path, [f1], previous=entries)
+    kept = basemod.load(path)
+    assert kept[0].justification == "trace-time constant fold, reviewed"
+    m = basemod.match([], kept)          # finding fixed -> entry stale
+    assert [e.fingerprint for e in m.stale] == [kept[0].fingerprint]
+    assert not m.unjustified
+
+
+# ---------------------------------------------------------------------------
+# the real CI gate on the working tree
+# ---------------------------------------------------------------------------
+def test_tools_lint_strict_passes_on_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.lint", "--strict"], cwd=REPO,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 new" in proc.stdout
+
+
+def test_committed_baseline_is_current_version():
+    data = json.loads((REPO / "tools/lint_baseline.json").read_text())
+    assert data["version"] == basemod.VERSION

@@ -1,0 +1,123 @@
+"""repro-lint: the CI-gated static invariant checker (DESIGN.md §14).
+
+    python -m tools.lint                  # report findings vs the baseline
+    python -m tools.lint --strict         # CI gate: nonzero on ANY new
+                                          # finding, stale or unjustified
+                                          # baseline entry
+    python -m tools.lint --changed-only   # fast pre-commit mode: AST rules
+                                          # only on files changed vs HEAD
+                                          # (jaxpr battery skipped)
+    python -m tools.lint --write-baseline # accept current findings into
+                                          # tools/lint_baseline.json (new
+                                          # entries get a FIXME placeholder
+                                          # that --strict rejects until a
+                                          # human writes the justification)
+    python -m tools.lint --no-jaxpr       # AST layers only (no jax import)
+
+Exit code 0 = clean (new findings absent; in --strict additionally no
+stale/unjustified baseline entries), 1 = violations, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = REPO / "tools" / "lint_baseline.json"
+
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import ast_checks, baseline as basemod  # noqa: E402
+from repro.analysis.findings import (  # noqa: E402
+    Finding,
+    apply_suppressions,
+)
+
+
+def _changed_files() -> set[str]:
+    """Repo-relative posix paths changed vs HEAD (staged + unstaged)."""
+    out = subprocess.run(
+        ["git", "diff", "--name-only", "HEAD"], cwd=REPO,
+        capture_output=True, text=True, check=True).stdout
+    return {line.strip() for line in out.splitlines() if line.strip()}
+
+
+def collect(*, jaxpr: bool = True, files: set[str] | None = None
+            ) -> tuple[list[Finding], list[Finding]]:
+    """All findings on the tree -> (kept, suppressed)."""
+    findings, sources = ast_checks.run_ast_checks(REPO, files=files)
+    if jaxpr:
+        from repro.analysis import jaxpr_checks
+        findings.extend(jaxpr_checks.run_jaxpr_checks())
+    return apply_suppressions(findings, sources)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools.lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on stale/unjustified baseline entries too "
+                         "(the CI mode)")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="AST rules only, restricted to files changed vs "
+                         "HEAD (fast local pre-commit mode)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings into the baseline file")
+    ap.add_argument("--baseline", type=pathlib.Path, default=BASELINE,
+                    help=f"baseline file (default {BASELINE})")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr trace battery (no jax import)")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    files = None
+    run_jaxpr = not args.no_jaxpr and not args.changed_only
+    if args.changed_only:
+        files = _changed_files()
+        if not files:
+            print("repro-lint: no files changed vs HEAD; nothing to check")
+            return 0
+    kept, suppressed = collect(jaxpr=run_jaxpr, files=files)
+
+    entries = basemod.load(args.baseline)
+    if args.write_baseline:
+        written = basemod.save(args.baseline, kept, previous=entries)
+        fresh = sum(1 for e in written
+                    if e.justification == basemod.PLACEHOLDER)
+        print(f"repro-lint: wrote {len(written)} baseline entries to "
+              f"{args.baseline} ({fresh} need a justification before "
+              "--strict passes)")
+        return 0
+
+    m = basemod.match(kept, entries)
+    for f in sorted(m.new, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.format())
+    if m.stale:
+        for e in m.stale:
+            print(f"stale-baseline[{e.rule}] {e.path}: entry "
+                  f"{e.fingerprint} matches no current finding — remove "
+                  "it (or rerun --write-baseline)")
+    if m.unjustified:
+        for e in m.unjustified:
+            print(f"unjustified-baseline[{e.rule}] {e.path}: entry "
+                  f"{e.fingerprint} has no justification")
+
+    dt = time.perf_counter() - t0
+    scope = f"{len(files)} changed file(s)" if files is not None else "tree"
+    print(f"repro-lint: {len(m.new)} new, {len(m.accepted)} baselined, "
+          f"{len(suppressed)} suppressed, {len(m.stale)} stale, "
+          f"{len(m.unjustified)} unjustified ({scope}, "
+          f"jaxpr={'on' if run_jaxpr else 'off'}, {dt:.2f}s)")
+    if m.new:
+        return 1
+    if args.strict and (m.stale or m.unjustified):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
