@@ -1,0 +1,158 @@
+"""Cost-based optimizer benchmark: physical plan choice + result cache.
+
+  PYTHONPATH=src python -m benchmarks.query_optimizer [--smoke]
+
+Measures the optimizer layer (DESIGN.md §15) against the fixed physical
+plan at two selectivity extremes over the same compound query:
+
+  * 1% selectivity  — the cost model keeps bitmap PUSHDOWN (a post-filter
+    would drag nearly the whole index through the refine stage)
+  * 50% selectivity — the cost model switches to guaranteed-overfetch
+    POST-FILTER (skipping the (Q, N) bitmap build + device transfer)
+
+and reports the predicate-aware result cache's hit latency vs the cold
+plan execution.  Gates (a failed gate is a nonzero exit, CI-visible):
+
+  * optimized and unoptimized ids are IDENTICAL at every selectivity (the
+    plan-equivalence invariant, measured here on benchmark-scale data)
+  * cache hit >= 10x faster than cold execution
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _build(n: int, d: int = 64, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imi
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    return imi.build_imi(jax.random.PRNGKey(seed + 1), x, ids,
+                         K=8, P=8, M=32, kmeans_iters=5)
+
+
+def _encode(texts, d=64):
+    import jax.numpy as jnp
+    out = np.zeros((len(texts), d), np.float32)
+    for i, t in enumerate(texts):
+        r = np.random.default_rng(sum(t.encode()) % 2**32)
+        v = r.standard_normal(d).astype(np.float32)
+        out[i] = v / np.linalg.norm(v)
+    return jnp.asarray(out)
+
+
+def _time(fn, reps: int) -> float:
+    fn()                                   # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def main(smoke: bool = False) -> dict:
+    import dataclasses
+
+    import jax.numpy as jnp
+    from repro.core import anns
+    from repro.core import optimizer as O
+    from repro.core import plan as P
+
+    n = 4096 if smoke else 65_536
+    reps = 5 if smoke else 20
+    kp = 4
+    index = _build(n)
+    rows = np.asarray(index.ids)
+    meta = P.PlanMeta(
+        row_video=np.zeros(n, np.int32),
+        row_time=(rows // kp).astype(np.int32),
+        frame_video=np.zeros(n // kp, np.int32),
+        frame_time=np.arange(n // kp, dtype=np.int32),
+        patches_per_frame=kp)
+    stats = O.PlanStats.from_meta(
+        meta, cell_offsets=np.asarray(index.cell_offsets))
+    # covering config: the envelope under which post-filter is provably
+    # exact (every cell, full windows, fetch covers all rows)
+    cfg = anns.SearchConfig(top_a=64, max_cell_size=max(1024, n // 32),
+                            top_k=64, rerank_overfetch=n // 64 + 1)
+    assert O.exact_envelope(cfg, stats)
+
+    def binding(base_cfg):
+        def search_texts(texts, masks, top_k=None):
+            c = base_cfg if top_k is None else \
+                dataclasses.replace(base_cfg, top_k=int(top_k))
+            res = anns.search_batch(
+                index, _encode(texts), c,
+                None if masks is None else
+                jnp.asarray(np.asarray(masks, np.uint8)))
+            return np.asarray(res["ids"]), np.asarray(res["scores"])
+        return search_texts
+
+    search_texts = binding(cfg)
+    out: dict = {"n": n, "by_sel": {}}
+    for sel in (0.01, 0.50):
+        frames = n // kp
+        node = P.And(P.Text("a red truck"), P.Text("nighttime"),
+                     P.TimeRange(0, int(sel * frames)))
+        phys = O.optimize(node, meta, stats, cfg=cfg)
+        unopt_ms = _time(lambda: P.execute(node, meta, search_texts), reps)
+        opt_ms = _time(
+            lambda: O.execute_physical(phys, meta, search_texts), reps)
+        want = P.execute(node, meta, search_texts)
+        got = O.execute_physical(phys, meta, search_texts)
+        ids_match = bool(np.array_equal(got.frames, want.frames))
+        physical = ("post-filter" if any(phys.post_filter) else "pushdown")
+        out["by_sel"][sel] = {
+            "unopt_ms": unopt_ms, "opt_ms": opt_ms, "physical": physical,
+            "ids_match": ids_match,
+        }
+        print(f"sel={sel:.2f}: unopt={unopt_ms:.1f}ms opt={opt_ms:.1f}ms "
+              f"physical={physical} ids_match={ids_match}")
+
+    # result cache: cold plan execution vs a fingerprint-keyed hit
+    cache = O.ResultCache()
+    node = P.And(P.Text("a red truck"), P.Text("nighttime"),
+                 P.TimeRange(0, (n // kp) // 2))
+    key = P.plan_fingerprint(node)
+
+    def cold():
+        return O.execute_optimized(node, meta, search_texts,
+                                   cfg=cfg, stats=stats)
+
+    cold_ms = _time(cold, reps)
+    cache.put(key, None, cold())
+
+    def hit():
+        res = cache.get(key, None)
+        assert res is not None
+        return res
+
+    hit_ms = _time(hit, max(reps * 20, 100))
+    speedup = cold_ms / max(hit_ms, 1e-9)
+    out["cache"] = {"cold_ms": cold_ms, "hit_ms": hit_ms,
+                    "speedup": speedup}
+    print(f"cache: cold={cold_ms:.2f}ms hit={hit_ms*1e3:.0f}us "
+          f"speedup={speedup:.0f}x")
+
+    bad = [s for s, r in out["by_sel"].items() if not r["ids_match"]]
+    if bad:
+        raise SystemExit(f"optimizer gate: ids diverged at sel={bad}")
+    if out["by_sel"][0.01]["physical"] != "pushdown" \
+            or out["by_sel"][0.50]["physical"] != "post-filter":
+        raise SystemExit(
+            f"optimizer gate: wrong physical choice "
+            f"({ {s: r['physical'] for s, r in out['by_sel'].items()} })")
+    if speedup < 10.0:
+        raise SystemExit(
+            f"optimizer gate: cache hit speedup {speedup:.1f}x < 10x")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

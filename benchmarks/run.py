@@ -133,6 +133,17 @@ def main() -> None:
                     f"speedup_vs_posthoc={r1['speedup_vs_posthoc']:.2f}x "
                     f"oracle_match={r1['ids_match_oracle']:.3f}")
 
+    @bench("query_optimizer")
+    def qopt():
+        from benchmarks import query_optimizer
+        t0 = time.perf_counter()
+        out = query_optimizer.main(smoke=args.quick)
+        us = (time.perf_counter() - t0) * 1e6
+        r1, r50 = out["by_sel"][0.01], out["by_sel"][0.50]
+        return us, (f"1pct={r1['physical']}:{r1['opt_ms']:.1f}ms "
+                    f"50pct={r50['physical']}:{r50['opt_ms']:.1f}ms "
+                    f"cache={out['cache']['speedup']:.0f}x")
+
     @bench("index_build")
     def ibuild():
         from benchmarks import index_build

@@ -59,6 +59,44 @@ class SearchConfig:
     use_kernel: str = "auto"   # 'auto' | 'jnp' | 'pallas'
     fused_topk: bool = True    # in-kernel scan->select (False: legacy
     #                            materialize-(Q,N)-then-lax.top_k path)
+    candidate_overfetch: int = 4  # stage-2 rerank pool: top_n * this
+    #                               candidate frames enter the cross-modal
+    #                               rerank (QueryEngine._candidate_frames;
+    #                               the optimizer's adaptive-depth dial)
+
+
+def tighten_probe(cfg: SearchConfig, *, n: int, n_cells: int,
+                  max_cell_rows: int) -> SearchConfig:
+    """Clamp probe-width knobs to statistics-known exact bounds — a
+    result-IDENTICAL shrink, never a recall trade.
+
+    Each clamp is applied only under its identity condition:
+
+      * ``max_cell_size -> max_cell_rows``: per-cell counts are already
+        ``<= max_cell_rows``, so a wider window only gathers invalid slots;
+      * ``top_a -> n_cells``: probing more cells than exist re-probes the
+        same CSR ranges;
+
+    both gated on ``fetch_k`` (``min(top_k * rerank_overfetch, top_a * W)``)
+    being unchanged by the shrink — if the A*W term was the binding clamp,
+    shrinking it would change which approximate candidates survive to the
+    exact refine.  Callers with no statistics pass the current values and
+    get ``cfg`` back unchanged.
+    """
+    new_a = min(cfg.top_a, max(n_cells, 1))
+    new_w = min(cfg.max_cell_size, max(max_cell_rows, 1))
+    if (new_a, new_w) == (cfg.top_a, cfg.max_cell_size):
+        return cfg
+    fetch = cfg.top_k * max(cfg.rerank_overfetch, 1)
+    old_pool = cfg.top_a * cfg.max_cell_size
+    new_pool = new_a * new_w
+    if min(fetch, old_pool) != min(fetch, new_pool):
+        return cfg
+    # shrinking below n would also flip the shared-coverage branch for
+    # covering configs — keep the branch (and thus the tie-break rule) fixed
+    if old_pool >= n > new_pool:
+        return cfg
+    return dataclasses.replace(cfg, top_a=new_a, max_cell_size=new_w)
 
 
 def _resolve_kernel(use_kernel: str) -> str:

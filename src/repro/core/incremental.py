@@ -115,6 +115,20 @@ class SegmentedIndex:
         return self.base.n + sum(len(s.ids) for s in self.segments) \
             - len(self.tombstones)
 
+    def data_version(self) -> tuple:
+        """Monotone data-version token for result-cache invalidation.
+
+        Changes on every result-visible mutation: inserts grow the raw row
+        count, deletes grow the tombstone count, compaction/codebook swaps
+        bump ``generation`` (which also resets the other two components —
+        the tuple as a whole still changes).  Snapshotted under
+        ``_swap_lock`` so a concurrent compaction can't produce a token
+        describing a half-swapped state.
+        """
+        with self._swap_lock:
+            raw = self.base.n + sum(len(s.ids) for s in self.segments)
+            return (self.generation, raw, len(self.tombstones))
+
     # -- writes ---------------------------------------------------------------
     def insert(self, x: jax.Array, ids: np.ndarray) -> None:
         """Quantize new vectors against the frozen codebooks; append."""

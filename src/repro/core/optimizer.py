@@ -1,0 +1,634 @@
+"""Cost-based plan optimizer + predicate-aware result cache (DESIGN.md §15).
+
+LOVO's query phase wins by choosing *how little work to do*.  This module
+adds the layer that makes those choices per query instead of per config:
+
+  * :class:`Catalog` / :func:`bind` — resolve camera names, video ids,
+    time ranges, and class labels in incoming plan JSON against
+    ``PlanMeta``/store sidecar metadata.  Unknown names fail at bind time
+    with :class:`BindError`, not deep inside execution.
+  * :class:`PlanStats` — cheap statistics maintained at build/ingest time:
+    per-video row counts, per-video time histograms over frame metadata,
+    per-cell row counts straight from the IMI CSR, and a measured ADC
+    score margin.  Persisted as a store sidecar (``store.plan_stats``) and
+    refreshed on compaction.
+  * :class:`CostModel` — chooses between physical alternatives: bitmap
+    pushdown vs post-hoc filter by estimated selectivity, probe width /
+    overfetch tightening from cell statistics, per-query adaptive rerank
+    depth from the fast-scan score margin, single-replica vs sharded
+    fanout.
+  * :func:`optimize` / :func:`execute_physical` — canonicalize the plan
+    (``plan.canonicalize``), pick a physical strategy per leaf, execute.
+  * :class:`ResultCache` — keyed on (canonical plan fingerprint, search
+    config), guarded by a data-version token (store segment generation +
+    codebook generation); invalidated by ingest append/delete/compact/
+    ``refresh_codebooks`` — never by wall-clock.
+
+The load-bearing invariant: **the optimizer never changes results** —
+only latency.  Every physical alternative is gated on a condition under
+which it is provably bit-identical to the unoptimized ``plan.execute``:
+
+  * post-filter replaces a leaf's (Q, N) bitmap only inside the *exactness
+    envelope* (every cell probed, windows cover the largest cell, fetch
+    covers all rows — so both alternatives refine the FULL row set by
+    exact score) and with *guaranteed overfetch*: the unmasked search
+    fetches ``top_k + (#rows failing the predicate)`` candidates — an
+    exact count from the row bitmap, not an estimate — so after host-side
+    filtering at least ``top_k`` valid rows remain, in exactly the order
+    the masked scan would have returned them (removing invalid rows never
+    reorders the valid ones, and the exact-score argsort is stable).
+  * probe tightening (``anns.tighten_probe``) only clamps windows to
+    statistics-known exact bounds, never below them.
+
+``tests/test_optimizer_equiv.py`` enforces this over hundreds of random
+plan trees across fresh/reopened/sharded/tombstoned environments.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import anns
+from repro.core import plan as planmod
+
+
+class BindError(ValueError):
+    """A plan referenced a name/id/label the catalog cannot resolve."""
+
+
+# ---------------------------------------------------------------------------
+# Catalog / binder
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Catalog:
+    """Name-resolution view of the dataset the planner binds plans against.
+
+    ``video_names`` maps camera/video names to video ids (the ingest tier's
+    camera registry; empty for anonymous datasets); ``labels`` maps class
+    labels to canonical query texts (the VQPy-style declarative surface).
+    ``time_lo``/``time_hi`` are the global source-frame bounds.
+    """
+
+    n_videos: int
+    time_lo: int
+    time_hi: int
+    video_names: dict[str, int] = dataclasses.field(default_factory=dict)
+    labels: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_meta(cls, meta: planmod.PlanMeta, *,
+                  video_names: Optional[dict[str, int]] = None,
+                  labels: Optional[dict[str, str]] = None) -> "Catalog":
+        """Derive bounds from the planner metadata (works for fresh AND
+        store-reopened indexes — the sidecar persists the same arrays)."""
+        fv = np.asarray(meta.frame_video)
+        ft = np.asarray(meta.frame_time)
+        return cls(
+            n_videos=int(fv.max()) + 1 if fv.size else 0,
+            time_lo=int(ft.min()) if ft.size else 0,
+            time_hi=int(ft.max()) + 1 if ft.size else 0,
+            video_names=dict(video_names or {}),
+            labels=dict(labels or {}),
+        )
+
+    def resolve_video(self, v: Any) -> int:
+        """Camera name or video id -> video id; unknown fails loudly."""
+        if isinstance(v, str):
+            if v not in self.video_names:
+                raise BindError(
+                    f"unknown camera/video name {v!r} (catalog has "
+                    f"{sorted(self.video_names) or 'no names'})")
+            return self.video_names[v]
+        v = int(v)
+        if not 0 <= v < self.n_videos:
+            raise BindError(f"video id {v} out of range "
+                            f"[0, {self.n_videos})")
+        return v
+
+    def resolve_label(self, label: str) -> str:
+        if label not in self.labels:
+            raise BindError(f"unknown class label {label!r} (catalog has "
+                            f"{sorted(self.labels) or 'no labels'})")
+        return self.labels[label]
+
+
+def bind(obj: Any, catalog: Catalog) -> planmod.Node:
+    """Resolve + validate a plan (JSON/dict/Node) against ``catalog``.
+
+    The binder extension of ``plan.from_json``: camera names in ``videos``
+    / ``time_range.video`` resolve through the catalog, ``{"label": ...}``
+    resolves a class label to its canonical ``Text`` query, video ids are
+    range-checked, and malformed nodes raise :class:`BindError` here — at
+    bind time — instead of a generic failure deep in execution.
+    """
+    import json as _json
+    if isinstance(obj, str):
+        try:
+            obj = _json.loads(obj)
+        except _json.JSONDecodeError as e:
+            raise BindError(f"plan is not valid JSON: {e}") from e
+    if isinstance(obj, planmod.Node):
+        return _bind_node(obj, catalog)
+    if not isinstance(obj, dict) or len(obj) != 1:
+        raise BindError(f"plan node must be a single-key dict, got {obj!r}")
+    (key, val), = obj.items()
+    try:
+        if key == "label":
+            return planmod.Text(catalog.resolve_label(str(val)))
+        if key == "videos":
+            return planmod.VideoIn([catalog.resolve_video(v) for v in val])
+        if key == "time_range":
+            if isinstance(val, dict):
+                video = val.get("video")
+                if video is not None:
+                    video = catalog.resolve_video(video)
+                lo, hi = int(val["lo"]), int(val["hi"])
+            else:
+                (lo, hi), video = val, None
+            return planmod.TimeRange(int(lo), int(hi), video)
+        if key == "and":
+            return planmod.And(*[bind(c, catalog) for c in val])
+        if key == "or":
+            return planmod.Or(*[bind(c, catalog) for c in val])
+        if key == "not":
+            return planmod.Not(bind(val, catalog))
+        if key == "group_top_k":
+            return planmod.GroupTopK(
+                bind(val["child"], catalog), per=val.get("per", "video"),
+                k=int(val.get("k", 1)), mode=val.get("mode", "frames"),
+                max_gap=int(val.get("max_gap", 1)))
+        if key == "text":
+            return planmod.from_json({key: val})
+    except BindError:
+        raise
+    except (KeyError, TypeError, ValueError) as e:
+        raise BindError(f"malformed {key!r} node: {e}") from e
+    raise BindError(f"unknown plan node kind {key!r}")
+
+
+def _bind_node(node: planmod.Node, catalog: Catalog) -> planmod.Node:
+    """Validate an already-parsed tree (range-checks video ids)."""
+    if isinstance(node, planmod.VideoIn):
+        return planmod.VideoIn([catalog.resolve_video(v)
+                                for v in node.videos])
+    if isinstance(node, planmod.TimeRange):
+        if node.video is not None:
+            catalog.resolve_video(node.video)
+        return node
+    if isinstance(node, (planmod.And, planmod.Or)):
+        kids = [_bind_node(c, catalog) for c in node.children]
+        return planmod.And(*kids) if isinstance(node, planmod.And) \
+            else planmod.Or(*kids)
+    if isinstance(node, planmod.Not):
+        return planmod.Not(_bind_node(node.child, catalog))
+    if isinstance(node, planmod.GroupTopK):
+        return dataclasses.replace(node,
+                                   child=_bind_node(node.child, catalog))
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Statistics
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanStats:
+    """Cheap statistics the cost model consumes.
+
+    Built in one pass over the planner metadata plus the IMI CSR offsets
+    (``from_meta``), persisted npz-round-trippable (``to_arrays`` /
+    ``from_arrays``) as the store's statistics sidecar.  Estimates are
+    advisory (the optimizer's SAFETY never depends on them — only exact
+    counts gate result-changing choices); ``selectivity`` is within one
+    histogram bin of truth for single predicates.
+    """
+
+    n_rows: int
+    n_cells: int                 # K*K (0 = unknown: no CSR available)
+    max_cell_rows: int
+    video_rows: np.ndarray       # (V,) rows per video
+    time_edges: np.ndarray       # (B+1,) global row_time bin edges, f64
+    time_counts: np.ndarray      # (V, B) per-video row_time histogram
+    cell_counts: np.ndarray      # (K*K,) rows per IMI cell
+    score_margin: float = 0.0    # measured ADC margin (0 = unmeasured)
+
+    N_BINS = 32
+
+    @classmethod
+    def from_meta(cls, meta: planmod.PlanMeta, *,
+                  cell_offsets: Optional[np.ndarray] = None,
+                  index: Any = None, bins: int = N_BINS) -> "PlanStats":
+        """One cheap pass over row metadata (+ the CSR already in memory).
+
+        ``index``: optionally an ``IMIIndex`` — measures the ADC score
+        margin on a small row/query sample (``measure_score_margin``)."""
+        rv = np.asarray(meta.row_video, np.int64)
+        rt = np.asarray(meta.row_time, np.float64)
+        n = len(rv)
+        n_videos = int(np.asarray(meta.frame_video).max()) + 1 \
+            if len(meta.frame_video) else 0
+        video_rows = np.bincount(rv, minlength=max(n_videos, 1))
+        lo = float(rt.min()) if n else 0.0
+        hi = float(rt.max()) + 1.0 if n else 1.0
+        edges = np.linspace(lo, hi, bins + 1)
+        counts = np.zeros((len(video_rows), bins), np.int64)
+        if n:
+            b = np.clip(np.searchsorted(edges, rt, side="right") - 1,
+                        0, bins - 1)
+            np.add.at(counts, (rv, b), 1)
+        if cell_offsets is not None:
+            cell_counts = np.diff(np.asarray(cell_offsets, np.int64))
+        else:
+            cell_counts = np.zeros((0,), np.int64)
+        margin = measure_score_margin(index) if index is not None else 0.0
+        return cls(n_rows=n, n_cells=len(cell_counts),
+                   max_cell_rows=int(cell_counts.max())
+                   if len(cell_counts) else 0,
+                   video_rows=video_rows, time_edges=edges,
+                   time_counts=counts, cell_counts=cell_counts,
+                   score_margin=float(margin))
+
+    # -- estimates ----------------------------------------------------------
+    def _time_fraction(self, lo: float, hi: float) -> np.ndarray:
+        """Per-video fraction of rows with ``row_time`` in [lo, hi),
+        linearly interpolated inside partial histogram bins."""
+        cum = np.concatenate(
+            [np.zeros((len(self.time_counts), 1)),
+             np.cumsum(self.time_counts, axis=1)], axis=1)  # (V, B+1)
+        total = np.maximum(cum[:, -1], 1.0)
+        frac_hi = np.stack([np.interp(hi, self.time_edges, c) for c in cum])
+        frac_lo = np.stack([np.interp(lo, self.time_edges, c) for c in cum])
+        return np.clip((frac_hi - frac_lo) / total, 0.0, 1.0)
+
+    def estimate_rows(self, preds: Sequence[planmod.Node]) -> float:
+        """Estimated #index rows satisfying the predicate conjunction
+        (independence across predicates, exact per-video marginals)."""
+        w = self.video_rows.astype(np.float64).copy()
+        for p in preds:
+            if isinstance(p, planmod.VideoIn):
+                keep = np.zeros(len(w), bool)
+                vids = [v for v in p.videos if 0 <= v < len(w)]
+                keep[vids] = True
+                w[~keep] = 0.0
+            elif isinstance(p, planmod.TimeRange):
+                frac = self._time_fraction(float(p.lo), float(p.hi))
+                if p.video is not None:
+                    keep = np.zeros(len(w), bool)
+                    if 0 <= p.video < len(w):
+                        keep[p.video] = True
+                    w[~keep] = 0.0
+                w *= frac
+            else:
+                raise ValueError(f"not a metadata predicate: {p!r}")
+        return float(w.sum())
+
+    def estimate_selectivity(self, preds: Sequence[planmod.Node]) -> float:
+        return self.estimate_rows(preds) / max(self.n_rows, 1)
+
+    # -- persistence (store statistics sidecar) -----------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        return {
+            "n_rows": np.asarray(self.n_rows, np.int64),
+            "n_cells": np.asarray(self.n_cells, np.int64),
+            "max_cell_rows": np.asarray(self.max_cell_rows, np.int64),
+            "video_rows": np.asarray(self.video_rows, np.int64),
+            "time_edges": np.asarray(self.time_edges, np.float64),
+            "time_counts": np.asarray(self.time_counts, np.int64),
+            "cell_counts": np.asarray(self.cell_counts, np.int64),
+            "score_margin": np.asarray(self.score_margin, np.float64),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "PlanStats":
+        return cls(n_rows=int(arrays["n_rows"]),
+                   n_cells=int(arrays["n_cells"]),
+                   max_cell_rows=int(arrays["max_cell_rows"]),
+                   video_rows=np.asarray(arrays["video_rows"]),
+                   time_edges=np.asarray(arrays["time_edges"]),
+                   time_counts=np.asarray(arrays["time_counts"]),
+                   cell_counts=np.asarray(arrays["cell_counts"]),
+                   score_margin=float(arrays["score_margin"]))
+
+
+def measure_score_margin(index: Any, *, k: int = 8, n_queries: int = 4,
+                         sample_rows: int = 8192, seed: int = 0) -> float:
+    """Measured ADC score margin: mean gap between exact-score ranks k-1
+    and k over random unit probe queries against a row sample.
+
+    This is the cost model's early-exit threshold for adaptive rerank
+    depth: a candidate whose fast score trails the top-n boundary by more
+    than the typical rank-k margin is unlikely to overtake after rerank.
+    Deterministic (seeded) and cheap — one (n_queries, sample) matmul.
+    """
+    vecs = np.asarray(index.vectors).astype(np.float32)
+    n = len(vecs)
+    if n < k + 1:
+        return 0.0
+    step = max(1, n // sample_rows)
+    vecs = vecs[::step]
+    rng = np.random.default_rng(seed)
+    qs = rng.standard_normal((n_queries, vecs.shape[1])).astype(np.float32)
+    qs /= np.maximum(np.linalg.norm(qs, axis=1, keepdims=True), 1e-12)
+    scores = qs @ vecs.T                                     # (nq, sample)
+    scores = -np.sort(-scores, axis=1)
+    kk = min(k, scores.shape[1] - 1)
+    return float(np.mean(scores[:, kk - 1] - scores[:, kk]))
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Relative-cost constants for the physical choices.
+
+    Inside the exactness envelope the pushdown-vs-post-filter tradeoff is:
+    a (Q, N) bitmap build + transfer + per-row kernel read
+    (``mask_cost_per_row``) against a wider in-kernel top-k carry of
+    ``(1 - selectivity) * N`` extra slots (``select_cost_per_row``).  The
+    defaults put the crossover at 50% selectivity — the crossover the PR 4
+    pushdown benchmark measured — with hard bounds at 5%/50% encoded as
+    regression anchors (``tests/test_optimizer_cost.py``).
+    """
+
+    pushdown_below: float = 0.05     # always pushdown under this selectivity
+    postfilter_above: float = 0.50   # always post-filter above (if provable)
+    mask_cost_per_row: float = 1.0
+    select_cost_per_row: float = 2.0
+    shard_merge_overhead_rows: int = 65_536
+
+    def choose_pushdown(self, selectivity: float, *,
+                        exact_envelope: bool) -> bool:
+        """True -> compile the (Q, N) bitmap; False -> unmasked search with
+        guaranteed overfetch + host post-filter.  Post-filter is only ever
+        chosen when ``exact_envelope`` proves it result-identical."""
+        if not exact_envelope:
+            return True
+        if selectivity <= self.pushdown_below:
+            return True
+        if selectivity >= self.postfilter_above:
+            return False
+        extra_select = (1.0 - selectivity) * self.select_cost_per_row
+        return extra_select > self.mask_cost_per_row
+
+    def rerank_depth(self, fast_scores: np.ndarray, top_n: int, *,
+                     full_depth: int, margin: float) -> int:
+        """Per-query adaptive rerank depth from the fast-scan score margin.
+
+        Keeps every candidate whose fast score is within ``margin`` (the
+        measured ADC margin, ``PlanStats.score_margin``) of the rank-top_n
+        score — those are the only frames that can plausibly overtake after
+        cross-modal rerank.  Early-exits to ``top_n`` when the boundary gap
+        already separates; falls back to ``full_depth`` when no margin was
+        measured (margin <= 0)."""
+        s = np.asarray(fast_scores, np.float32)
+        s = s[np.isfinite(s)]
+        if margin <= 0 or len(s) <= top_n:
+            return full_depth
+        thresh = s[top_n - 1] - margin
+        depth = int(np.sum(s >= thresh))
+        return int(np.clip(depth, top_n, full_depth))
+
+    def choose_fanout(self, n_rows: int, n_shards: int) -> int:
+        """1 (single replica) or ``n_shards`` (``call_sharded`` broadcast):
+        fan out only when the per-shard scan saving beats the fixed
+        cross-shard merge overhead — small indexes answer faster on one
+        replica than they can merge."""
+        if n_shards <= 1:
+            return 1
+        saved = n_rows - n_rows / n_shards
+        return n_shards if saved > self.shard_merge_overhead_rows else 1
+
+
+def exact_envelope(cfg: anns.SearchConfig,
+                   stats: Optional[PlanStats]) -> bool:
+    """True when fast search is provably EXACT over valid rows: every cell
+    probed, window covers the largest cell, fetch covers all rows, exact
+    rerank on.  Inside this envelope pushdown and guaranteed-overfetch
+    post-filter return bit-identical answers (module docstring); outside
+    it the optimizer never substitutes physical alternatives."""
+    return (stats is not None
+            and cfg.exact_rerank
+            and stats.n_cells > 0
+            and cfg.top_a >= stats.n_cells
+            and cfg.max_cell_size >= stats.max_cell_rows
+            and cfg.top_k * max(cfg.rerank_overfetch, 1) >= stats.n_rows)
+
+
+# ---------------------------------------------------------------------------
+# Physical plans
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PhysicalPlan:
+    """A canonicalized plan plus the per-leaf physical strategy.
+
+    ``post_filter[i]``/``post_k[i]``: leaf i runs unmasked with ``top_k``
+    overridden to ``post_k[i]`` and its predicate applied host-side (the
+    guaranteed-overfetch contract); otherwise the leaf's predicates compile
+    into the pushdown bitmap as usual.  ``cfg`` is the (possibly
+    statistics-tightened) search config; ``explain`` records every decision
+    and estimate for observability."""
+
+    plan: planmod.Node
+    fingerprint: str
+    leaves: list
+    post_filter: tuple
+    post_k: tuple
+    cfg: anns.SearchConfig
+    explain: dict
+
+
+def _round_up(x: int, mult: int = 32) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def optimize(plan: Any, meta: planmod.PlanMeta,
+             stats: Optional[PlanStats] = None, *,
+             cfg: anns.SearchConfig, cost: Optional[CostModel] = None,
+             catalog: Optional[Catalog] = None) -> PhysicalPlan:
+    """Canonicalize ``plan`` and choose a physical strategy per leaf.
+
+    Pure planning — no search runs here.  With ``catalog``, the plan is
+    bound first (names resolved, ids validated, :class:`BindError` on
+    unknowns).  Without ``stats`` every choice degrades to the unoptimized
+    physical plan (pushdown everywhere, untouched config) — the optimizer
+    is safe to call with nothing but metadata."""
+    cost = cost or CostModel()
+    if catalog is not None:
+        node = bind(plan, catalog)
+    else:
+        node = plan if isinstance(plan, planmod.Node) \
+            else planmod.from_json(plan)
+    node = planmod.canonicalize(node)
+    leaves = planmod.collect_leaves(node)
+    n = len(meta.row_video)
+    envelope = exact_envelope(cfg, stats)
+    post_filter, post_k, leaf_notes = [], [], []
+    for leaf, preds in leaves:
+        choice, k_over, sel = "pushdown", 0, None
+        if preds and stats is not None:
+            sel = stats.estimate_selectivity(preds)
+            if not cost.choose_pushdown(sel, exact_envelope=envelope):
+                m = np.ones(n, bool)
+                for p in preds:
+                    m &= planmod.predicate_row_mask(p, meta)
+                invalid = int(n - m.sum())
+                k_over = _round_up(min(cfg.top_k + invalid, n))
+                choice = "post-filter"
+        post_filter.append(choice == "post-filter")
+        post_k.append(k_over)
+        leaf_notes.append({"text": leaf.query, "n_predicates": len(preds),
+                           "selectivity": sel, "physical": choice,
+                           "post_k": k_over})
+    tightened = cfg
+    if stats is not None and stats.n_cells:
+        tightened = anns.tighten_probe(cfg, n=n, n_cells=stats.n_cells,
+                                       max_cell_rows=stats.max_cell_rows)
+    return PhysicalPlan(
+        plan=node, fingerprint=planmod.plan_fingerprint(node),
+        leaves=leaves, post_filter=tuple(post_filter),
+        post_k=tuple(post_k), cfg=tightened,
+        explain={"exact_envelope": envelope, "leaves": leaf_notes,
+                 "probe_tightened": tightened != cfg,
+                 "top_a": tightened.top_a,
+                 "max_cell_size": tightened.max_cell_size})
+
+
+def _frame_valid_mask(preds: Sequence[planmod.Node],
+                      meta: planmod.PlanMeta) -> np.ndarray:
+    """(F,) conjunction of predicates at frame level — the host side of the
+    post-filter (rows and their key frames carry identical metadata, the
+    same invariant pushdown + frame-level merge already rely on)."""
+    fv = np.asarray(meta.frame_video)
+    ft = np.asarray(meta.frame_time)
+    m = np.ones(len(fv), bool)
+    for p in preds:
+        if isinstance(p, planmod.TimeRange):
+            pm = (ft >= p.lo) & (ft < p.hi)
+            if p.video is not None:
+                pm &= fv == p.video
+        elif isinstance(p, planmod.VideoIn):
+            pm = np.isin(fv, np.asarray(p.videos))
+        else:
+            raise ValueError(f"not a metadata predicate: {p!r}")
+        m &= pm
+    return m
+
+
+def execute_physical(phys: PhysicalPlan, meta: planmod.PlanMeta,
+                     search_texts: Callable) -> planmod.PlanResult:
+    """Execute a physical plan; same answer as ``plan.execute`` on the
+    logical plan, by construction (module docstring).
+
+    ``search_texts(texts, masks, top_k=None)`` — the 2-argument
+    ``plan.SearchTextsFn`` contract extended with an optional ``top_k``
+    override for the guaranteed-overfetch post-filter call.  Pushdown
+    leaves ride one masked batched call exactly like the unoptimized path;
+    post-filter leaves share one unmasked call at the widest required
+    ``top_k``, then each filters host-side and cuts back to ``cfg.top_k``.
+    """
+    leaves = phys.leaves
+    leaf_sets: dict[int, Any] = {}
+    push_idx = [i for i in range(len(leaves)) if not phys.post_filter[i]]
+    post_idx = [i for i in range(len(leaves)) if phys.post_filter[i]]
+    if push_idx:
+        sub = [leaves[i] for i in push_idx]
+        masks = planmod.compile_masks(sub, meta)
+        ids, scores = search_texts([leaf.query for leaf, _ in sub], masks)
+        for j, i in enumerate(push_idx):
+            leaf_sets[i] = planmod._leaf_frame_set(
+                np.asarray(ids[j]), np.asarray(scores[j]),
+                leaves[i][0].weight, meta)
+    if post_idx:
+        k_wide = max(phys.post_k[i] for i in post_idx)
+        ids, scores = search_texts(
+            [leaves[i][0].query for i in post_idx], None, k_wide)
+        for j, i in enumerate(post_idx):
+            leaf, preds = leaves[i]
+            ok = _frame_valid_mask(preds, meta)
+            li = np.asarray(ids[j])
+            ls = np.asarray(scores[j])
+            live = li >= 0
+            li, ls = li[live], ls[live]
+            keep = ok[li // meta.patches_per_frame]
+            li, ls = li[keep][: phys.cfg.top_k], ls[keep][: phys.cfg.top_k]
+            leaf_sets[i] = planmod._leaf_frame_set(li, ls, leaf.weight, meta)
+    return planmod.evaluate_tree(phys.plan, meta, leaf_sets)
+
+
+def execute_optimized(plan: Any, meta: planmod.PlanMeta,
+                      search_texts: Callable, *, cfg: anns.SearchConfig,
+                      stats: Optional[PlanStats] = None,
+                      cost: Optional[CostModel] = None,
+                      catalog: Optional[Catalog] = None
+                      ) -> planmod.PlanResult:
+    """Convenience: :func:`optimize` + :func:`execute_physical`."""
+    phys = optimize(plan, meta, stats, cfg=cfg, cost=cost, catalog=catalog)
+    return execute_physical(phys, meta, search_texts)
+
+
+# ---------------------------------------------------------------------------
+# Result cache
+# ---------------------------------------------------------------------------
+class ResultCache:
+    """Predicate-aware LRU result cache for plan queries.
+
+    Keys are caller-chosen (canonical plan fingerprint + search-config
+    fingerprint); every entry stores the data-version token current when
+    it was filled.  ``get`` re-checks the entry's token against the
+    caller's CURRENT token: a mismatch is counted as an invalidation and
+    served as a miss — so ingest appends, deletes, compactions, and
+    codebook refreshes (each of which changes the token, see
+    ``VectorStore.cache_token`` / ``SegmentedIndex.data_version``)
+    invalidate without any wall-clock TTL, and a result computed against
+    one store generation is NEVER served for another.  Thread-safe.
+    """
+
+    def __init__(self, capacity: int = 128,
+                 token_fn: Optional[Callable[[], Any]] = None):
+        self.capacity = capacity
+        self._token_fn = token_fn
+        self._d: "collections.OrderedDict[Any, tuple]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+
+    def token(self) -> Any:
+        """The CURRENT data-version token (None without a provider —
+        entries then never invalidate, for immutable indexes)."""
+        return self._token_fn() if self._token_fn is not None else None
+
+    def get(self, key: Any, token: Any = None):
+        with self._lock:
+            entry = self._d.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            etoken, res = entry
+            if etoken != token:
+                self.invalidations += 1
+                self.misses += 1
+                del self._d[key]
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            # hand back a fresh dataclass shell so a caller truncating /
+            # annotating the result can't corrupt the cached copy
+            return dataclasses.replace(res) \
+                if dataclasses.is_dataclass(res) else res
+
+    def put(self, key: Any, token: Any, result: Any) -> None:
+        with self._lock:
+            self._d[key] = (token, result)
+            self._d.move_to_end(key)
+            while len(self._d) > self.capacity:
+                self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)

@@ -34,6 +34,7 @@ Execution (DESIGN.md §10) is two phases:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any, Callable, Optional, Sequence
 
@@ -198,6 +199,130 @@ def to_json(node: Node) -> dict:
                                 "k": node.k, "mode": node.mode,
                                 "max_gap": node.max_gap}}
     raise ValueError(f"unknown plan node {node!r}")
+
+
+# ---------------------------------------------------------------------------
+# Canonicalization (the optimizer's logical rewrite pass)
+# ---------------------------------------------------------------------------
+def _canon_key(node: Node) -> str:
+    """Deterministic serialization used for child ordering, deduplication,
+    and the plan fingerprint."""
+    return json.dumps(to_json(node), sort_keys=True)
+
+
+def _score_free(node: Node) -> bool:
+    """True when the subtree carries no scores and no reduction state: no
+    ``Text`` leaf (complementing twice would strip its scores) and no
+    ``GroupTopK`` (its moments/state would surface differently).  Only for
+    such subtrees is ``Not(Not(x)) -> x`` result-identical."""
+    if isinstance(node, _PREDICATES):
+        return True
+    if isinstance(node, (And, Or)):
+        return all(_score_free(c) for c in node.children)
+    if isinstance(node, Not):
+        return _score_free(node.child)
+    return False
+
+
+def _merge_and_predicates(children: list) -> list:
+    """Fold the direct predicate children of an ``And`` into at most one
+    ``TimeRange`` and one ``VideoIn``.  Sound because their row masks AND
+    frame sets compose by pure conjunction: two time windows intersect to
+    one window (two distinct pinned videos intersect to the empty window),
+    two video sets intersect to one set — the conjunction the pushdown
+    compiles and the merge intersects is bit-identical either way."""
+    trs = [c for c in children if isinstance(c, TimeRange)]
+    vis = [c for c in children if isinstance(c, VideoIn)]
+    rest = [c for c in children if not isinstance(c, _PREDICATES)]
+    if trs:
+        lo = max(t.lo for t in trs)
+        hi = min(t.hi for t in trs)
+        videos = {t.video for t in trs if t.video is not None}
+        if len(videos) > 1 or lo >= hi:
+            rest.append(TimeRange(0, 0))
+        else:
+            rest.append(TimeRange(lo, hi, videos.pop() if videos else None))
+    if vis:
+        inter = set(vis[0].videos)
+        for v in vis[1:]:
+            inter &= set(v.videos)
+        rest.append(VideoIn(sorted(inter)))
+    return rest
+
+
+def canonicalize(node: Node) -> Node:
+    """Rewrite a plan to canonical form with IDENTICAL execution semantics.
+
+    Every rewrite is proven result-identical against :func:`execute` (the
+    property harness in ``tests/test_optimizer_equiv.py`` checks this over
+    random trees, DESIGN.md §15):
+
+      * ``And``/``Or`` flattening — associative merges; an inner ``And`` is
+        only inlined when it has no DIRECT predicate children, since those
+        scope pushdown masks to the inner leaves only (``collect_leaves``)
+        and hoisting them would widen the masked set.
+      * child sorting + deduplication by canonical JSON — intersection /
+        union are commutative and idempotent with exact min/max score
+        fusion, and duplicate ``Text`` leaves produce identical posting
+        lists (the search is deterministic per (text, mask)).
+      * predicate merging inside ``And`` (see ``_merge_and_predicates``),
+        empty-``TimeRange`` normalization, ``VideoIn`` dedup.
+      * ``Not(Not(x)) -> x`` only for score-free subtrees
+        (``_score_free``): a double complement restores membership but
+        zeroes scores, so subtrees with ``Text`` keep both ``Not``\\ s.
+      * singleton unwrap ``And(x)``/``Or(x) -> x`` — the fold over one
+        child is the child; guarded for ``GroupTopK(mode="moment")`` whose
+        promotion to root would surface moments the wrapper discarded.
+    """
+    if isinstance(node, Text):
+        return node
+    if isinstance(node, TimeRange):
+        return node if node.lo < node.hi else TimeRange(0, 0)
+    if isinstance(node, VideoIn):
+        return VideoIn(sorted(set(node.videos)))
+    if isinstance(node, Not):
+        c = canonicalize(node.child)
+        if isinstance(c, Not) and _score_free(c.child):
+            return c.child
+        return Not(c)
+    if isinstance(node, GroupTopK):
+        return dataclasses.replace(node, child=canonicalize(node.child))
+    if isinstance(node, (And, Or)):
+        is_and = isinstance(node, And)
+        flat: list = []
+        for c in (canonicalize(c) for c in node.children):
+            if is_and and isinstance(c, And) and not any(
+                    isinstance(g, _PREDICATES) for g in c.children):
+                flat.extend(c.children)
+            elif not is_and and isinstance(c, Or):
+                flat.extend(c.children)
+            else:
+                flat.append(c)
+        if is_and:
+            flat = _merge_and_predicates(flat)
+        seen: set[str] = set()
+        uniq = []
+        for c in flat:
+            k = _canon_key(c)
+            if k not in seen:
+                seen.add(k)
+                uniq.append(c)
+        uniq.sort(key=_canon_key)
+        if len(uniq) == 1 and not (isinstance(uniq[0], GroupTopK)
+                                   and uniq[0].mode == "moment"):
+            return uniq[0]
+        return And(*uniq) if is_and else Or(*uniq)
+    raise ValueError(f"unknown plan node {node!r}")
+
+
+def plan_fingerprint(node: Node) -> str:
+    """Hex digest of the canonicalized plan — the logical-plan component of
+    the result-cache key (``repro.core.optimizer.ResultCache``).  Plans that
+    differ only in child order / duplicate children / mergeable predicates
+    share a fingerprint, so a dashboard re-issuing an equivalent plan hits
+    the cache."""
+    return hashlib.sha256(
+        _canon_key(canonicalize(node)).encode()).hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -491,6 +616,23 @@ def execute(plan: Node, meta: PlanMeta, search_texts: SearchTextsFn
             leaf_sets[i] = _leaf_frame_set(np.asarray(ids[i]),
                                            np.asarray(scores[i]),
                                            leaf.weight, meta)
+    return evaluate_tree(plan, meta, leaf_sets)
+
+
+def evaluate_tree(plan: Node, meta: PlanMeta,
+                  leaf_sets: dict[int, _FrameSet]) -> PlanResult:
+    """The merge phase of :func:`execute`: fold precomputed leaf frame sets
+    up the tree (intersection/min, union/max, complement, grouped
+    reductions) and order the final set by descending score (stable).
+
+    ``leaf_sets[i]`` must be the frame set of the i-th ``Text`` leaf in
+    ``collect_leaves(plan)`` depth-first order.  Split out so the
+    cost-based optimizer (``repro.core.optimizer``) can substitute its own
+    physical leaf evaluation — bitmap pushdown or guaranteed-overfetch
+    post-filter — while sharing the exact merge semantics with the
+    unoptimized path (the plan-equivalence harness depends on this being
+    the same code, not a copy).
+    """
     n_frames = len(meta.frame_video)
     counter = {"i": 0}
 

@@ -126,9 +126,12 @@ class QueryEngine:
 
         self._encode_text = jax.jit(
             lambda p, t, m: textmod.text_encode(p, t, m, self.text_cfg))
-        self._search_batch = lambda qs, row_mask=None: anns.search_batch(
-            self.built.index, qs, self.search_cfg, row_mask)
-        self._plan_meta = None  # built lazily by query_plan
+        self._search_batch = \
+            lambda qs, row_mask=None, cfg=None: anns.search_batch(
+                self.built.index, qs, cfg or self.search_cfg, row_mask)
+        self._plan_meta = None   # built lazily by query_plan
+        self._plan_stats = None  # built lazily when optimize=True
+        self._result_cache = None  # enable_result_cache() installs one
         self._vit_tokens = jax.jit(
             lambda p, im: vitmod.vit_tokens(p, im, self.vit_cfg))
         self._rerank = jax.jit(
@@ -182,14 +185,17 @@ class QueryEngine:
         return ids, scores, {"encode": t_enc, "fast_search": t_search}
 
     def _search_embeds(self, qs: np.ndarray,
-                       row_masks: Optional[np.ndarray] = None
+                       row_masks: Optional[np.ndarray] = None,
+                       cfg: Optional[anns.SearchConfig] = None
                        ) -> tuple[np.ndarray, np.ndarray]:
         """(Q, D') embeddings -> (ids (Q, k), scores (Q, k)) via batched
         Algorithm 1, padded per static ``query_batch_size`` chunk.
 
         ``row_masks``: optional (Q, N) validity bitmap, one row per query
         (plan filter pushdown) — padded tail queries get all-False rows
-        (their results are discarded anyway)."""
+        (their results are discarded anyway).  ``cfg`` overrides the
+        engine's ``SearchConfig`` for this call (the optimizer's probe
+        tightening / post-filter overfetch)."""
         B = self.query_batch_size
         ids_out, scores_out = [], []
         for lo in range(0, len(qs), B):
@@ -199,7 +205,7 @@ class QueryEngine:
             if row_masks is not None:
                 mask = jnp.asarray(_pad_rows(
                     np.ascontiguousarray(row_masks[lo: lo + B], np.uint8), B))
-            res = self._search_batch(jnp.asarray(chunk), mask)
+            res = self._search_batch(jnp.asarray(chunk), mask, cfg)
             ids_out.append(np.asarray(res["ids"])[:n])
             scores_out.append(np.asarray(res["scores"])[:n])
         return np.concatenate(ids_out), np.concatenate(scores_out)
@@ -211,28 +217,45 @@ class QueryEngine:
 
     # -- candidate frames (host-side ~= SQL join) ------------------------------
     def _candidate_frames(self, ids: np.ndarray, scores: np.ndarray,
-                          top_n: int) -> tuple[np.ndarray, np.ndarray]:
+                          top_n: int, depth: Optional[int] = None
+                          ) -> tuple[np.ndarray, np.ndarray]:
         """Patch ids (k,) -> unique key-frame rows in best-score-first order
-        (score per frame = its best patch's fast-search score)."""
+        (score per frame = its best patch's fast-search score).
+
+        The rerank pool is cut to ``depth`` frames when given (the
+        optimizer's per-query adaptive rerank depth), otherwise to the
+        configured ``top_n * search_cfg.candidate_overfetch`` (legacy
+        default 4), floored at ``rerank_batch``."""
         live = ids >= 0   # drop exactly-k padding slots (id -1, -inf score)
         ids, scores = ids[live], scores[live]
         Kp = self.built.patches_per_frame
         frame_rows = ids // Kp
         uniq, first = np.unique(frame_rows, return_index=True)
         order = np.argsort(first)
-        cand = uniq[order][: max(top_n * 4, self.rerank_batch)]
+        if depth is None:
+            depth = max(top_n * self.search_cfg.candidate_overfetch,
+                        self.rerank_batch)
+        cand = uniq[order][: depth]
         frame_scores = scores[first][order][: len(cand)]
         return cand, frame_scores
 
     # -- stage 2 -------------------------------------------------------------
     def query_batch(self, texts: Sequence[str], *, top_n: int = 5,
-                    use_rerank: bool = True) -> list[QueryResult]:
+                    use_rerank: bool = True,
+                    adaptive_rerank: bool = False) -> list[QueryResult]:
         """Batched Algorithm 2 over Q texts -> one ``QueryResult`` each.
 
         Rerank encodes the UNION of candidate frames across the batch once
         (shared ViT work for overlapping candidates), then scores
         (query, frame) pairs in ``rerank_batch`` chunks and gathers back
         per query.
+
+        ``adaptive_rerank`` sets the rerank depth PER QUERY from the fused
+        scan's score margin (``optimizer.CostModel.rerank_depth``): when the
+        fast-search scores already separate the top-n from the tail by more
+        than the measured ADC margin, frames below the gap cannot plausibly
+        overtake after rerank and are skipped — an accuracy/latency dial,
+        off by default (it may change which frames get reranked).
         """
         t0 = time.perf_counter()
         qs, txt_tokens, masks = self._encode_texts(texts)
@@ -242,7 +265,17 @@ class QueryEngine:
         timings = {"encode": t_enc,
                    "fast_search": time.perf_counter() - t0}
         Q = len(texts)
-        cands = [self._candidate_frames(ids[i], scores[i], top_n)
+        depths = [None] * Q
+        if adaptive_rerank:
+            from repro.core import optimizer as optmod
+            full = max(top_n * self.search_cfg.candidate_overfetch,
+                       self.rerank_batch)
+            cost = optmod.CostModel()
+            margin = self.plan_stats().score_margin
+            depths = [cost.rerank_depth(scores[i], top_n,
+                                        full_depth=full, margin=margin)
+                      for i in range(Q)]
+        cands = [self._candidate_frames(ids[i], scores[i], top_n, depths[i])
                  for i in range(Q)]
 
         if not use_rerank:
@@ -317,12 +350,60 @@ class QueryEngine:
             self._plan_meta = planmod.plan_meta_from_built(self.built)
         return self._plan_meta
 
-    def query_plan(self, plan, *, top_n: Optional[int] = None):
+    def plan_stats(self):
+        """Cheap planner statistics over this engine's index (per-video row
+        counts, time histograms, IMI cell counts, measured ADC score
+        margin), built once and cached — the cost model's input."""
+        from repro.core import optimizer as optmod
+        if self._plan_stats is None:
+            self._plan_stats = optmod.PlanStats.from_meta(
+                self.plan_meta(),
+                cell_offsets=np.asarray(self.built.index.cell_offsets),
+                index=self.built.index)
+        return self._plan_stats
+
+    def enable_result_cache(self, capacity: int = 128,
+                            token_fn=None) -> None:
+        """Install a predicate-aware result cache for ``query_plan``.
+
+        Keys are (canonical plan fingerprint, search-config fingerprint);
+        entries are guarded by a data-version token — ``token_fn()`` when
+        given (bind ``store.cache_token`` for a store-backed deployment so
+        ingest appends/deletes/compactions/codebook refreshes invalidate),
+        else a constant (this engine's ``built`` index is immutable).
+        Never invalidated by wall-clock (DESIGN.md §15)."""
+        from repro.core import optimizer as optmod
+        if token_fn is None:
+            token_fn = lambda: "static-built-index"  # noqa: E731
+        self._result_cache = optmod.ResultCache(capacity=capacity,
+                                                token_fn=token_fn)
+
+    def cache_stats(self) -> dict[str, int]:
+        """Hit/miss/invalidation counters of the plan result cache
+        (zeros when no cache is installed) — surfaced by ``serve.py
+        --optimize`` responses."""
+        c = self._result_cache
+        if c is None:
+            return {"hits": 0, "misses": 0, "invalidations": 0}
+        return {"hits": c.hits, "misses": c.misses,
+                "invalidations": c.invalidations}
+
+    def query_plan(self, plan, *, top_n: Optional[int] = None,
+                   optimize: bool = True):
         """Answer a compound query plan (``repro.core.plan`` tree, dict, or
         JSON string) index-only: every ``Text`` leaf is searched in ONE
         batched Algorithm-1 call with its metadata predicates pushed into
         the PQ scan as a row bitmap, then the posting lists merge on the
         host (boolean fusion, grouping, moment localization).
+
+        ``optimize`` (default) routes through ``repro.core.optimizer``:
+        the plan is canonicalized and a cost model picks the physical
+        execution per leaf — bitmap pushdown vs guaranteed-overfetch
+        post-filter by estimated selectivity, statistics-tightened probe
+        widths — under invariants that keep the answer BIT-IDENTICAL to
+        the unoptimized path (the plan-equivalence harness enforces this).
+        With a result cache installed (``enable_result_cache``), repeated
+        equivalent plans skip the scan entirely.
 
         No frame is re-encoded and no rerank runs — complex queries stay at
         fast-search latency.  Returns a ``plan.PlanResult``; ``top_n``
@@ -333,14 +414,48 @@ class QueryEngine:
             planmod.from_json(plan)
         meta = self.plan_meta()
 
-        def search_texts(texts, masks):
-            qs, _, _ = self._encode_texts(texts)
-            return self._search_embeds(qs, row_masks=masks)
+        cache_key = token = None
+        if self._result_cache is not None:
+            cache_key = (planmod.plan_fingerprint(node),
+                         repr(self.search_cfg))
+            token = self._result_cache.token()
+            hit = self._result_cache.get(cache_key, token)
+            if hit is not None:
+                return self._truncate_result(hit, top_n)
 
-        res = planmod.execute(node, meta, search_texts)
-        if top_n is not None:
-            res = planmod.PlanResult(
-                frames=res.frames[:top_n], scores=res.scores[:top_n],
-                videos=res.videos[:top_n], times=res.times[:top_n],
-                moments=res.moments)
-        return res
+        def search_texts(texts, masks, top_k=None):
+            qs, _, _ = self._encode_texts(texts)
+            cfg = None if top_k is None else \
+                dataclasses.replace(self.search_cfg, top_k=int(top_k))
+            return self._search_embeds(qs, row_masks=masks, cfg=cfg)
+
+        if optimize:
+            from repro.core import optimizer as optmod
+            phys = optmod.optimize(node, meta, self.plan_stats(),
+                                   cfg=self.search_cfg)
+            if phys.cfg != self.search_cfg:
+                tightened = phys.cfg
+
+                def search_texts(texts, masks, top_k=None,  # noqa: F811
+                                 _base=tightened):
+                    qs, _, _ = self._encode_texts(texts)
+                    cfg = _base if top_k is None else \
+                        dataclasses.replace(_base, top_k=int(top_k))
+                    return self._search_embeds(qs, row_masks=masks, cfg=cfg)
+
+            res = optmod.execute_physical(phys, meta, search_texts)
+        else:
+            res = planmod.execute(node, meta, search_texts)
+        if cache_key is not None:
+            self._result_cache.put(cache_key, token, res)
+        return self._truncate_result(res, top_n)
+
+    @staticmethod
+    def _truncate_result(res, top_n: Optional[int]):
+        from repro.core import plan as planmod
+        if top_n is None:
+            return res
+        return planmod.PlanResult(
+            frames=res.frames[:top_n], scores=res.scores[:top_n],
+            videos=res.videos[:top_n], times=res.times[:top_n],
+            moments=res.moments)

@@ -180,6 +180,18 @@ class IngestService:
         if auto_recover:
             self.recover()
 
+    def data_version(self) -> tuple:
+        """The store's current cache token (``VectorStore.cache_token``).
+
+        Every ingest append lands through ``store.insert`` (and deletes /
+        compactions through their store calls), each of which advances the
+        underlying ``SegmentedIndex.data_version`` — so plan-result caches
+        keyed on this token (``repro.core.optimizer.ResultCache``) are
+        invalidated by ingest automatically, with no TTLs and no explicit
+        cache wiring in the ingest loop.
+        """
+        return self.store.cache_token()
+
     def _present_max_id(self) -> int:
         """Highest row id currently in the index (base + deltas)."""
         ids = np.asarray(self.seg.base.ids)

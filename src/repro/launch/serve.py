@@ -322,6 +322,13 @@ def main() -> None:
                     help="shard the index across S devices and prove the "
                          "distributed fused scan bit-identical to the "
                          "single-host path (DESIGN.md §13)")
+    ap.add_argument("--optimize", action="store_true",
+                    help="with --plan: run plans through the cost-based "
+                         "optimizer (catalog bind, canonicalize, pushdown "
+                         "vs post-filter by selectivity, probe tightening) "
+                         "and a predicate-aware result cache; each plan "
+                         "runs twice to demonstrate the cache hit, and "
+                         "hit/miss/invalidation counters are printed")
     ap.add_argument("--sharded-reexec", action="store_true",
                     help="with --sharded S: if fewer than S devices exist, "
                          "relaunch this process with XLA_FLAGS forcing S "
@@ -388,11 +395,20 @@ def main() -> None:
 
     if args.plan:
         # complex-query path: plans are answered index-only (one batched
-        # leaf search with filter pushdown + host merge, DESIGN.md §10)
+        # leaf search with filter pushdown + host merge, DESIGN.md §10).
+        # --optimize routes them through the cost-based planner + result
+        # cache (DESIGN.md §15) and repeats each plan to show the hit.
+        if args.optimize:
+            engine.enable_result_cache()
+        runs = 2 if args.optimize else 1
         for spec in args.plan:
-            t0 = time.perf_counter()
-            res = engine.query_plan(spec, top_n=5)
-            ms = (time.perf_counter() - t0) * 1e3
+            for attempt in range(runs):
+                t0 = time.perf_counter()
+                res = engine.query_plan(spec, top_n=5,
+                                        optimize=args.optimize)
+                ms = (time.perf_counter() - t0) * 1e3
+                if attempt + 1 < runs:
+                    print(f"plan {spec}: warmed in {ms:.0f}ms (cold)")
             print(f"plan {spec}")
             for f, s, v, t in zip(res.frames, res.scores, res.videos,
                                   res.times):
@@ -405,6 +421,10 @@ def main() -> None:
                           f"({res.moments['n_frames'][i]} key frames, "
                           f"score {res.moments['score'][i]:.3f})")
             print(f"  answered index-only in {ms:.0f}ms")
+        if args.optimize:
+            cs = engine.cache_stats()
+            print(f"result cache: {cs['hits']} hits / {cs['misses']} misses"
+                  f" / {cs['invalidations']} invalidations")
         return
 
     queries = ["a large red square", "a small blue circle",

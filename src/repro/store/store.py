@@ -56,6 +56,7 @@ def _savez_synced(path: pathlib.Path, **arrays: np.ndarray) -> None:
 WAL_FILE = "wal.log"
 SEGMENTS_DIR = "segments"
 SIDECAR = "sidecar"
+PLAN_STATS = "plan_stats.npz"
 
 
 class StoreError(RuntimeError):
@@ -153,6 +154,10 @@ class VectorStore:
         store.seg = SegmentedIndex(index, max_segments=max_segments,
                                    segment_capacity=segment_capacity,
                                    persistence=store)
+        if isinstance(built, BuiltIndex):
+            store._sidecar, store._sidecar_extra = segmentmod.open_segment(
+                root / SIDECAR)
+            store._write_plan_stats()
         return store
 
     @classmethod
@@ -332,6 +337,7 @@ class VectorStore:
                                      _base_arrays(self.seg.base),
                                      {"kind": "base"})
             m["base"] = name
+            self._write_plan_stats()  # stats track the rewritten base
         names = []
         for i, delta in enumerate(self.seg.segments):
             if i < len(self._delta_names) \
@@ -366,6 +372,73 @@ class VectorStore:
         for p in seg_root.iterdir():
             if p.is_dir() and p.name not in live:
                 shutil.rmtree(p, ignore_errors=True)
+
+    # -- planner statistics sidecar -------------------------------------------
+    def _plan_meta(self):
+        """Planner metadata view over the CURRENT base rows (sidecar-backed).
+        None when the store has no sidecar or inserted ids have outrun it."""
+        from repro.core import plan as planmod
+
+        if self._sidecar is None:
+            return None
+        sc = self._sidecar
+        ids = np.asarray(self.seg.base.ids)
+        if ids.size and int(ids.max()) >= len(sc["video_of"]):
+            return None  # ingested rows with no metadata: stats would lie
+        kp = int(self._sidecar_extra.get(
+            "patches_per_frame",
+            self.manifest.get("meta", {}).get("patches_per_frame", 1)))
+        return planmod.PlanMeta(
+            row_video=np.asarray(sc["video_of"])[ids],
+            row_time=np.asarray(sc["frame_of"])[ids],
+            frame_video=np.asarray(sc["kf_video"]),
+            frame_time=np.asarray(sc["kf_frame"]),
+            patches_per_frame=kp)
+
+    def _write_plan_stats(self) -> None:
+        """Refresh the statistics sidecar (``plan_stats.npz``) from the
+        current base — called at create and on every base rewrite
+        (compaction / codebook refresh), so persisted statistics track the
+        rows the cost model will plan over.  Synced before the manifest
+        swap that may reference the new base (DS202)."""
+        from repro.core import optimizer as optmod
+
+        meta = self._plan_meta()
+        if meta is None:
+            return
+        stats = optmod.PlanStats.from_meta(
+            meta, cell_offsets=np.asarray(self.seg.base.cell_offsets),
+            index=self.seg.base)
+        _savez_synced(self.root / PLAN_STATS, **stats.to_arrays())
+
+    def plan_stats(self):
+        """Persisted planner statistics (falls back to recomputing when the
+        sidecar file predates this store version).  None without metadata."""
+        from repro.core import optimizer as optmod
+
+        p = self.root / PLAN_STATS
+        if p.exists():
+            with np.load(p) as z:
+                return optmod.PlanStats.from_arrays(dict(z))
+        meta = self._plan_meta()
+        if meta is None:
+            return None
+        return optmod.PlanStats.from_meta(
+            meta, cell_offsets=np.asarray(self.seg.base.cell_offsets))
+
+    def cache_token(self) -> tuple:
+        """Data-version token for :class:`repro.core.optimizer.ResultCache`.
+
+        Combines the durable identity (manifest base + codebooks names,
+        last folded WAL seq, delta names, tombstones) with the live
+        in-memory version (``SegmentedIndex.data_version``): any ingest
+        append/delete, compaction, or ``refresh_codebooks`` — flushed or
+        not — changes it, and two opens of different on-disk states never
+        collide.  Wall-clock never enters the token.
+        """
+        m = self.manifest
+        return (m.get("base"), m.get("codebooks"), int(m.get("last_seq", 0)),
+                tuple(m.get("deltas", ())), self.seg.data_version())
 
     # -- reads / bridges ------------------------------------------------------
     def search(self, q, cfg) -> dict:

@@ -1,0 +1,226 @@
+"""Predicate-aware result cache: invalidation is driven by data versions,
+never wall-clock.  Every mutation class — ingest append, delete, compaction,
+codebook refresh — must flip the store's cache token (flushed or not), a
+reopen of UNCHANGED state must keep it (hits survive restarts), and a crash
+reopen that replays WAL records must flip it (no stale hit against rows the
+replay re-added).  The cache itself is exercised with a live brute-force
+query over the store so a stale hit would be OBSERVABLE, not just counted.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import imi
+from repro.core import optimizer as O
+from repro.core.index_builder import BuiltIndex, MetadataStore
+from repro.store.store import VectorStore
+
+N, D, KP = 256, 16, 4
+F = N // KP
+
+
+def _built(seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (N, D))
+    index = imi.build_imi(jax.random.PRNGKey(seed + 1), x,
+                          jnp.arange(N, dtype=jnp.int32),
+                          K=4, P=4, M=8, kmeans_iters=3)
+    return BuiltIndex(
+        index=index,
+        metadata=MetadataStore(
+            video_of=(np.arange(N) // (N // 2)).astype(np.int32),
+            frame_of=((np.arange(N) // KP) % (F // 2)).astype(np.int32),
+            bbox_of=np.zeros((N, 4), np.float32)),
+        keyframes=np.zeros((F, 8, 8, 3), np.float32),
+        keyframe_video=(np.arange(F) // (F // 2)).astype(np.int32),
+        keyframe_frame=(np.arange(F) % (F // 2)).astype(np.int32),
+        patches_per_frame=KP)
+
+
+@pytest.fixture()
+def store(tmp_path):
+    s = VectorStore.create(tmp_path / "s", _built())
+    yield s
+    s.close()
+
+
+def _live_top1(store) -> int:
+    """Brute-force best row id for a fixed probe over the LIVE store rows —
+    recomputing this after a mutation gives a different answer, so serving
+    a cached copy across a token change is an observable wrong result."""
+    q = np.full((D,), 0.25, np.float32)
+    pools = [(np.asarray(store.seg.base.ids),
+              np.asarray(store.seg.base.vectors, np.float32))]
+    pools += [(np.asarray(s.ids), np.asarray(s.vectors, np.float32))
+              for s in store.seg.segments]
+    best, best_s = -1, -np.inf
+    dead = store.seg.tombstones
+    for ids, vecs in pools:
+        for i, r in enumerate(ids):
+            if int(r) in dead:
+                continue
+            s = float(vecs[i] @ q)
+            if s > best_s:
+                best, best_s = int(r), s
+    return best
+
+
+def _cached_query(store, cache: O.ResultCache):
+    key = "probe-plan"
+    token = cache.token()
+    hit = cache.get(key, token)
+    if hit is not None:
+        return hit
+    res = _live_top1(store)
+    cache.put(key, token, res)
+    return res
+
+
+def _new_rows(seed, n=8):
+    r = np.random.default_rng(seed)
+    # rows pointing (almost) exactly along the probe direction: after the
+    # store's normalization they dominate any random base row's dot product
+    x = (np.ones((n, D)) + 0.01 * r.standard_normal((n, D))).astype(
+        np.float32)
+    ids = np.arange(10_000 + 100 * seed, 10_000 + 100 * seed + n,
+                    dtype=np.int32)
+    return x, ids
+
+
+def test_append_invalidates(store):
+    cache = O.ResultCache(token_fn=store.cache_token)
+    first = _cached_query(store, cache)
+    assert _cached_query(store, cache) == first and cache.hits == 1
+
+    x, ids = _new_rows(1)
+    store.insert(x, ids)
+    fresh = _cached_query(store, cache)
+    assert cache.invalidations == 1
+    assert fresh != first          # the new dominating rows must be seen
+    assert fresh == _live_top1(store)
+
+
+def test_delete_invalidates(store):
+    cache = O.ResultCache(token_fn=store.cache_token)
+    x, ids = _new_rows(2)
+    store.insert(x, ids)
+    first = _cached_query(store, cache)
+    assert first in set(int(i) for i in ids)
+
+    store.delete(np.asarray([first], np.int32))
+    fresh = _cached_query(store, cache)
+    assert cache.invalidations == 1
+    assert fresh != first and fresh == _live_top1(store)
+
+
+def test_compact_invalidates_token_even_without_result_change(store):
+    """Compaction folds deltas into a new base: same logical rows, but a
+    new generation + a new base segment — the token must flip (results
+    were computed against arrays that no longer exist)."""
+    cache = O.ResultCache(token_fn=store.cache_token)
+    x, ids = _new_rows(4)
+    store.insert(x, ids)
+    _cached_query(store, cache)
+    t0 = store.cache_token()
+    store.compact()
+    assert store.cache_token() != t0       # generation bump flips the token
+    _cached_query(store, cache)
+    assert cache.invalidations == 1
+
+
+def test_refresh_codebooks_invalidates(store):
+    cache = O.ResultCache(token_fn=store.cache_token)
+    _cached_query(store, cache)
+    t0 = store.cache_token()
+    store.refresh_codebooks(seed=3, kmeans_iters=2)
+    assert store.cache_token() != t0       # new codebooks name + generation
+    _cached_query(store, cache)
+    assert cache.invalidations == 1
+
+
+def test_unchanged_reopen_keeps_token_hit(tmp_path):
+    """Restart with no intervening writes: the durable part of the token is
+    identical, so results cached before shutdown stay valid after."""
+    VectorStore.create(tmp_path / "s", _built()).close()
+    with VectorStore.open(tmp_path / "s") as s1:
+        t1 = s1.cache_token()
+    with VectorStore.open(tmp_path / "s") as s2:
+        assert s2.cache_token() == t1
+
+
+def test_mutated_reopen_never_serves_stale(tmp_path):
+    cache = O.ResultCache()               # token passed explicitly per open
+    with VectorStore.create(tmp_path / "s", _built()) as s1:
+        first = _cached_query_open(s1, cache)
+        x, ids = _new_rows(5)
+        s1.insert(x, ids)
+        s1.flush()
+    with VectorStore.open(tmp_path / "s") as s2:
+        fresh = _cached_query_open(s2, cache)
+        assert cache.invalidations == 1
+        assert fresh != first and fresh == _live_top1(s2)
+
+
+def test_crash_reopen_replays_wal_and_invalidates(tmp_path):
+    """Mutate WITHOUT flushing, drop the store (simulated crash): reopen
+    replays the WAL, so the live rows differ from the pre-crash snapshot
+    and the token must differ too."""
+    s1 = VectorStore.create(tmp_path / "s", _built())
+    cache = O.ResultCache()
+    first = _cached_query_open(s1, cache)
+    t0 = s1.cache_token()
+    x, ids = _new_rows(6)
+    s1.insert(x, ids)                     # WAL-logged, NOT flushed
+    s1.close()
+    with VectorStore.open(tmp_path / "s") as s2:
+        assert s2.cache_token() != t0
+        fresh = _cached_query_open(s2, cache)
+        assert cache.invalidations == 1
+        assert fresh != first and fresh == _live_top1(s2)
+
+
+def _cached_query_open(store, cache):
+    key = "probe-plan"
+    token = store.cache_token()
+    hit = cache.get(key, token)
+    if hit is not None:
+        return hit
+    res = _live_top1(store)
+    cache.put(key, token, res)
+    return res
+
+
+def test_lru_eviction_and_counters():
+    cache = O.ResultCache(capacity=2)
+    cache.put("a", None, 1)
+    cache.put("b", None, 2)
+    assert cache.get("a", None) == 1      # refresh a
+    cache.put("c", None, 3)               # evicts b (least recent)
+    assert cache.get("b", None) is None
+    assert cache.get("a", None) == 1 and cache.get("c", None) == 3
+    assert (cache.hits, cache.misses) == (3, 1)
+    assert len(cache) == 2
+
+
+# -- engine level: query_plan + enable_result_cache -------------------------
+@pytest.fixture(scope="module")
+def engine():
+    from repro.launch.serve import build_engine
+    eng, _ = build_engine(seed=0, n_videos=2, res=96)
+    return eng
+
+
+def test_engine_plan_cache_hit_is_identical(engine):
+    engine.enable_result_cache()
+    spec = ('{"and": [{"text": "a large red square"}, '
+            '{"time_range": [0, 24]}]}')
+    cold = engine.query_plan(spec, top_n=5)
+    warm = engine.query_plan(spec, top_n=5)
+    np.testing.assert_array_equal(cold.frames, warm.frames)
+    np.testing.assert_array_equal(cold.scores, warm.scores)
+    stats = engine.cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    # an EQUIVALENT plan (reordered And) hits via the canonical fingerprint
+    engine.query_plan('{"and": [{"time_range": [0, 24]}, '
+                      '{"text": "a large red square"}]}', top_n=5)
+    assert engine.cache_stats()["hits"] == 2

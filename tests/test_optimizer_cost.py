@@ -1,0 +1,326 @@
+"""Cost model calibration + binder + canonicalization unit tests.
+
+Regression anchors the ISSUE pins: selectivity estimates within bounded
+error of exact counts, bitmap pushdown always chosen below ~5% selectivity,
+post-hoc filtering above ~50% (inside the exactness envelope), probe
+tightening provably inert on results, and the legacy stage-2 rerank pool
+default (``top_n * 4`` floored at ``rerank_batch``) now routed through
+``SearchConfig.candidate_overfetch`` instead of a hardcoded constant.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import anns
+from repro.core import optimizer as O
+from repro.core import plan as P
+
+V, FR, KP = 4, 32, 4
+F, N = V * FR, V * FR * KP
+
+
+def _meta():
+    return P.PlanMeta(
+        row_video=np.repeat(np.arange(V), FR * KP).astype(np.int32),
+        row_time=np.tile(np.repeat(np.arange(FR), KP), V).astype(np.int32),
+        frame_video=np.repeat(np.arange(V), FR).astype(np.int32),
+        frame_time=np.tile(np.arange(FR), V).astype(np.int32),
+        patches_per_frame=KP)
+
+
+def _stats(meta=None):
+    return O.PlanStats.from_meta(meta or _meta())
+
+
+# -- selectivity calibration ------------------------------------------------
+@pytest.mark.parametrize("pred", [
+    P.TimeRange(0, 8),                 # 25% of every video
+    P.TimeRange(0, 8, video=1),        # 25% of one video = 1/16 overall
+    P.TimeRange(0, 0),                 # empty
+    P.TimeRange(0, 10_000),            # all rows
+    P.VideoIn([0, 2]),                 # half the videos
+    P.VideoIn([]),                     # nothing
+])
+def test_selectivity_within_bounded_error(pred):
+    meta, stats = _meta(), _stats()
+    exact = P.predicate_row_mask(pred, meta).mean()
+    got = stats.estimate_selectivity([pred])
+    # one histogram bin of slack on each boundary (uniform data: exact)
+    bin_frac = 1.0 / stats.time_counts.shape[1]
+    assert abs(got - exact) <= 2 * bin_frac + 1e-9
+
+
+def test_selectivity_conjunction_independence():
+    meta, stats = _meta(), _stats()
+    preds = [P.TimeRange(0, 16), P.VideoIn([0, 1])]
+    exact = (P.predicate_row_mask(preds[0], meta)
+             & P.predicate_row_mask(preds[1], meta)).mean()
+    got = stats.estimate_selectivity(preds)
+    assert got == pytest.approx(exact, abs=0.05)
+
+
+def test_stats_npz_round_trip(tmp_path):
+    stats = _stats()
+    path = tmp_path / "stats.npz"
+    np.savez(path, **stats.to_arrays())
+    with np.load(path) as z:
+        back = O.PlanStats.from_arrays(dict(z))
+    assert back.n_rows == stats.n_rows
+    np.testing.assert_array_equal(back.video_rows, stats.video_rows)
+    np.testing.assert_array_equal(back.time_counts, stats.time_counts)
+    p = [P.TimeRange(3, 19, video=2)]
+    assert back.estimate_rows(p) == stats.estimate_rows(p)
+
+
+# -- pushdown / post-filter crossover (regression anchors) ------------------
+def test_pushdown_below_5pct_postfilter_above_50pct():
+    cost = O.CostModel()
+    for sel in (0.0, 0.01, 0.049):
+        assert cost.choose_pushdown(sel, exact_envelope=True)
+    for sel in (0.50, 0.7, 1.0):
+        assert not cost.choose_pushdown(sel, exact_envelope=True)
+
+
+def test_postfilter_never_chosen_outside_envelope():
+    cost = O.CostModel()
+    for sel in (0.0, 0.5, 1.0):
+        assert cost.choose_pushdown(sel, exact_envelope=False)
+
+
+def test_envelope_requires_full_coverage():
+    stats = _stats()
+    stats.n_cells, stats.max_cell_rows = 16, 40
+    good = anns.SearchConfig(top_a=16, max_cell_size=64, top_k=64,
+                             rerank_overfetch=N // 64 + 1)
+    assert O.exact_envelope(good, stats)
+    assert not O.exact_envelope(
+        dataclasses.replace(good, top_a=8), stats)            # cells missed
+    assert not O.exact_envelope(
+        dataclasses.replace(good, max_cell_size=32), stats)   # window short
+    assert not O.exact_envelope(
+        dataclasses.replace(good, rerank_overfetch=1), stats)  # fetch short
+    assert not O.exact_envelope(
+        dataclasses.replace(good, exact_rerank=False), stats)
+    assert not O.exact_envelope(good, None)
+
+
+def test_optimize_leaf_choices_follow_selectivity():
+    meta, stats = _meta(), _stats()
+    stats.n_cells, stats.max_cell_rows = 16, 40
+    cfg = anns.SearchConfig(top_a=16, max_cell_size=64, top_k=64,
+                            rerank_overfetch=N // 64 + 1)
+    node = P.Or(
+        P.And(P.Text("rare"), P.TimeRange(0, 1, video=0)),     # ~0.1% sel
+        P.And(P.Text("common"), P.TimeRange(0, 31)))           # ~97% sel
+    phys = O.optimize(node, meta, stats, cfg=cfg)
+    by_text = {leaf.query: phys.post_filter[i]
+               for i, (leaf, _) in enumerate(phys.leaves)}
+    assert by_text["rare"] is False            # pushdown
+    assert by_text["common"] is True           # post-filter
+    # and the guaranteed overfetch covers top_k + every invalid row
+    i = next(i for i, (l, _) in enumerate(phys.leaves)
+             if l.query == "common")
+    invalid = N - (P.predicate_row_mask(P.TimeRange(0, 31), meta)).sum()
+    assert phys.post_k[i] >= cfg.top_k + invalid
+
+
+# -- probe tightening -------------------------------------------------------
+def test_tighten_probe_clamps_only_when_inert():
+    cfg = anns.SearchConfig(top_a=64, max_cell_size=1024, top_k=32,
+                            rerank_overfetch=16)
+    t = anns.tighten_probe(cfg, n=480, n_cells=16, max_cell_rows=40)
+    assert (t.top_a, t.max_cell_size) == (16, 40)
+    # fetch_k unchanged: still covers min(top_k * overfetch, pool)
+    assert min(t.top_k * t.rerank_overfetch, t.top_a * t.max_cell_size) \
+        == min(cfg.top_k * cfg.rerank_overfetch, 512)
+    # refuses a clamp that would flip the shared->paired kernel branch
+    same = anns.tighten_probe(cfg, n=630, n_cells=16, max_cell_rows=39)
+    assert same == cfg
+    # refuses a clamp that would shrink the refine pool below fetch_k
+    same2 = anns.tighten_probe(
+        dataclasses.replace(cfg, rerank_overfetch=1024),
+        n=480, n_cells=16, max_cell_rows=20)
+    assert same2 == cfg or same2.top_a * same2.max_cell_size >= 480
+
+
+def test_tighten_probe_identical_results_on_real_index():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imi
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (480, 32))
+    index = imi.build_imi(jax.random.PRNGKey(1), x,
+                          jnp.arange(480, dtype=jnp.int32),
+                          K=4, P=4, M=16, kmeans_iters=3)
+    counts = np.diff(np.asarray(index.cell_offsets))
+    cfg = anns.SearchConfig(top_a=16, max_cell_size=512, top_k=24,
+                            rerank_overfetch=20)
+    tight = anns.tighten_probe(cfg, n=480, n_cells=len(counts),
+                               max_cell_rows=int(counts.max()))
+    assert tight != cfg
+    qs = jax.random.normal(jax.random.PRNGKey(2), (3, 32))
+    a = anns.search_batch(index, qs, cfg)
+    b = anns.search_batch(index, qs, tight)
+    np.testing.assert_array_equal(np.asarray(a["ids"]),
+                                  np.asarray(b["ids"]))
+
+
+# -- adaptive rerank depth --------------------------------------------------
+def test_rerank_depth_margin_behavior():
+    cost = O.CostModel()
+    scores = np.r_[np.linspace(1.0, 0.9, 5), np.linspace(0.3, 0.2, 20)]
+    # wide boundary gap: everything below top_n is outside the margin
+    assert cost.rerank_depth(scores, 5, full_depth=25, margin=0.05) == 5
+    # margin wide enough to reach into the tail keeps part of it
+    d = cost.rerank_depth(scores, 5, full_depth=25, margin=0.65)
+    assert 5 < d <= 25
+    # no measured margin -> no early exit
+    assert cost.rerank_depth(scores, 5, full_depth=25, margin=0.0) == 25
+    # fewer scores than top_n -> full depth (nothing to separate)
+    assert cost.rerank_depth(scores[:3], 5, full_depth=25, margin=0.1) == 25
+
+
+def test_measured_margin_is_positive_on_real_index():
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imi
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+    index = imi.build_imi(jax.random.PRNGKey(1), x,
+                          jnp.arange(256, dtype=jnp.int32),
+                          K=4, P=4, M=8, kmeans_iters=3)
+    m = O.measure_score_margin(index)
+    assert m > 0.0
+    assert m == O.measure_score_margin(index)      # deterministic
+
+
+def test_choose_fanout_small_index_stays_single_replica():
+    cost = O.CostModel()
+    assert cost.choose_fanout(10_000, 4) == 1      # merge overhead dominates
+    assert cost.choose_fanout(10_000_000, 4) == 4
+    assert cost.choose_fanout(10_000_000, 1) == 1
+
+
+# -- binder / catalog -------------------------------------------------------
+def _catalog():
+    return O.Catalog.from_meta(
+        _meta(), video_names={"lobby": 0, "garage": 1},
+        labels={"truck": "a red truck"})
+
+
+def test_bind_resolves_names_and_labels():
+    node = O.bind({"and": [{"label": "truck"},
+                           {"videos": ["lobby", "garage"]},
+                           {"time_range": {"lo": 0, "hi": 8,
+                                           "video": "garage"}}]},
+                  _catalog())
+    leaves = P.collect_leaves(node)
+    assert leaves[0][0].query == "a red truck"
+    kinds = {type(p) for p in leaves[0][1]}
+    assert kinds == {P.VideoIn, P.TimeRange}
+    vi = next(p for p in leaves[0][1] if isinstance(p, P.VideoIn))
+    assert tuple(vi.videos) == (0, 1)
+
+
+@pytest.mark.parametrize("bad", [
+    {"videos": ["rooftop"]},                       # unknown camera name
+    {"videos": [99]},                              # id out of range
+    {"label": "llama"},                            # unknown class label
+    {"time_range": {"lo": 0, "hi": 8, "video": "rooftop"}},
+    {"frobnicate": 1},                             # unknown node kind
+    {"time_range": {"lo": "a"}},                   # malformed payload
+    "not json {",                                  # unparseable string
+])
+def test_bind_errors_fail_at_bind_time(bad):
+    with pytest.raises(O.BindError):
+        O.bind(bad, _catalog())
+
+
+def test_bind_validates_parsed_trees_too():
+    with pytest.raises(O.BindError):
+        O.bind(P.And(P.Text("x"), P.VideoIn([99])), _catalog())
+
+
+# -- canonicalization + fingerprints ----------------------------------------
+def test_fingerprint_invariant_to_child_order_and_duplicates():
+    a, b = P.Text("red truck"), P.Text("pedestrian")
+    f1 = P.plan_fingerprint(P.And(a, b))
+    assert f1 == P.plan_fingerprint(P.And(b, a))
+    assert f1 == P.plan_fingerprint(P.And(a, b, a))
+    assert f1 != P.plan_fingerprint(P.Or(a, b))
+    assert f1 != P.plan_fingerprint(P.And(a, P.Text("blue car")))
+
+
+def test_canonicalize_merges_and_predicates():
+    node = P.And(P.Text("x"), P.TimeRange(2, 20), P.TimeRange(5, 30),
+                 P.VideoIn([0, 1, 2]), P.VideoIn([1, 2, 3]))
+    c = P.canonicalize(node)
+    preds = [n for n in c.children if not isinstance(n, P.Text)]
+    assert {type(p) for p in preds} == {P.TimeRange, P.VideoIn}
+    tr = next(p for p in preds if isinstance(p, P.TimeRange))
+    vi = next(p for p in preds if isinstance(p, P.VideoIn))
+    assert (tr.lo, tr.hi) == (5, 20)
+    assert tuple(vi.videos) == (1, 2)
+    # distinct pinned videos can never both hold -> empty range
+    c2 = P.canonicalize(P.And(P.Text("x"), P.TimeRange(0, 9, video=0),
+                              P.TimeRange(0, 9, video=1)))
+    tr2 = next(p for p in c2.children if isinstance(p, P.TimeRange))
+    assert tr2.lo >= tr2.hi
+
+
+def test_canonicalize_flatten_respects_pushdown_scoping():
+    """An inner And that carries its own predicates must NOT be flattened:
+    collect_leaves scopes direct-child predicates to the leaves under that
+    And, and hoisting them would widen the masked sets."""
+    inner = P.And(P.Text("a"), P.TimeRange(0, 4))
+    outer = P.canonicalize(P.And(inner, P.Text("b")))
+    assert any(isinstance(ch, P.And) for ch in outer.children)
+    # predicate-free inner Ands DO flatten
+    flat = P.canonicalize(P.And(P.And(P.Text("a"), P.Text("b")),
+                                P.Text("c")))
+    assert not any(isinstance(ch, P.And) for ch in flat.children)
+    assert len(flat.children) == 3
+
+
+def test_canonicalize_double_not_only_for_score_free():
+    scored = P.Not(P.Not(P.Text("a")))
+    assert isinstance(P.canonicalize(scored), P.Not)    # scores differ
+    free = P.Not(P.Not(P.VideoIn([1, 0])))
+    assert isinstance(P.canonicalize(free), P.VideoIn)  # sets identical
+
+
+def test_canonicalize_singleton_unwrap_guards_moments():
+    g = P.GroupTopK(P.Text("a"), per="video", mode="moment")
+    assert isinstance(P.canonicalize(P.And(g)), P.And)  # moments stay inner
+    assert isinstance(P.canonicalize(P.And(P.Text("a"))), P.Text)
+
+
+# -- legacy rerank pool default now routed through SearchConfig -------------
+def test_candidate_overfetch_default_pins_legacy_behavior():
+    assert anns.SearchConfig().candidate_overfetch == 4
+
+
+def test_engine_candidate_pool_uses_config(monkeypatch):
+    """QueryEngine._candidate_frames must derive its pool from
+    ``search_cfg.candidate_overfetch`` (was: hardcoded ``top_n * 4``)."""
+    from repro.core.query import QueryEngine
+
+    eng = QueryEngine.__new__(QueryEngine)      # no heavy init needed
+    eng.search_cfg = anns.SearchConfig(candidate_overfetch=4)
+    eng.rerank_batch = 8
+
+    class _B:                                   # minimal built stand-in
+        patches_per_frame = 1
+    eng.built = _B()
+
+    ids = np.arange(64, dtype=np.int64)
+    scores = np.linspace(1.0, 0.0, 64, dtype=np.float32)
+    cand, _ = eng._candidate_frames(ids, scores, top_n=5)
+    assert len(cand) == 20                      # top_n * candidate_overfetch
+    eng.search_cfg = anns.SearchConfig(candidate_overfetch=8)
+    cand, _ = eng._candidate_frames(ids, scores, top_n=5)
+    assert len(cand) == 40
+    # explicit depth (the adaptive-rerank path) overrides the config pool
+    cand, _ = eng._candidate_frames(ids, scores, top_n=5, depth=11)
+    assert len(cand) == 11

@@ -1,0 +1,302 @@
+"""Plan-equivalence harness: the cost-based optimizer NEVER changes results.
+
+Hundreds of seeded random plan trees — every node type, nesting 1–4 deep,
+adversarial selectivities (empty predicates, all-rows predicates, pinned-
+video time ranges, duplicate subtrees) — are executed both ways against the
+REAL masked search pipeline (``anns.search_batch`` over a built IMI index,
+no fakes) and must return bit-identical frame ids, bit-identical scores,
+and tie-stable ordering:
+
+    optimized  = optimizer.optimize(...) + execute_physical(...)
+    reference  = plan.execute(...)            (the unoptimized path)
+
+across four environments:
+
+    fresh       a freshly built index
+    reopened    the same index persisted through VectorStore and reopened
+    tombstoned  rows deleted (an alive-mask riding every search, both sides)
+    sharded     1/2/4 frame-aligned shards, per-shard optimized execution
+                merged by ``plan.merge_grouped`` vs the UNSHARDED reference
+
+There is no per-plan special-casing anywhere: one generator, one assertion.
+``PLANNER_EQUIV_EXAMPLES`` scales the sweep (default 80 -> 200 plans
+total; the ``planner-equivalence`` CI job raises it).  The hypothesis-wired
+property test at the bottom runs under the conftest shim locally and under
+real Hypothesis (with shrinking) in CI.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import anns, imi
+from repro.core import optimizer as O
+from repro.core import plan as P
+
+N_EXAMPLES = int(os.environ.get("PLANNER_EQUIV_EXAMPLES", "80"))
+
+# -- a small but real world: V videos x FR key frames x KP patches ----------
+V, FR, KP, D = 4, 30, 4, 32
+F = V * FR                    # 120 key frames
+N = F * KP                    # 480 index rows
+TMAX = FR                     # per-video source-frame indexes 0..FR-1
+TEXTS = ["red truck", "pedestrian", "blue car", "a dog",
+         "traffic light", "white van"]
+
+# covering config: every cell probed, windows cover the largest cell, fetch
+# covers all rows -> both physical alternatives are exact (the envelope the
+# optimizer's post-filter substitution is gated on)
+CFG = anns.SearchConfig(top_a=16, max_cell_size=512, top_k=24,
+                        rerank_overfetch=20)
+
+
+def _encode(texts):
+    """Deterministic text -> unit embedding (stable across processes)."""
+    out = np.zeros((len(texts), D), np.float32)
+    for i, t in enumerate(texts):
+        r = np.random.default_rng(sum(t.encode()) % 2**32)
+        v = r.standard_normal(D).astype(np.float32)
+        out[i] = v / np.linalg.norm(v)
+    return jnp.asarray(out)
+
+
+def _make_meta(index):
+    ids = np.asarray(index.ids)
+    frame = ids // KP
+    return P.PlanMeta(
+        row_video=(frame // FR).astype(np.int32),
+        row_time=(frame % FR).astype(np.int32),
+        frame_video=np.repeat(np.arange(V), FR).astype(np.int32),
+        frame_time=np.tile(np.arange(FR), V).astype(np.int32),
+        patches_per_frame=KP)
+
+
+_WORLD: list = []   # lazy singleton: shared by fixtures AND the property
+                    # test (the hypothesis shim cannot inject fixtures)
+
+
+def _get_world():
+    if not _WORLD:
+        x = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+        index = imi.build_imi(jax.random.PRNGKey(1), x,
+                              jnp.arange(N, dtype=jnp.int32),
+                              K=4, P=4, M=16, kmeans_iters=4)
+        meta = _make_meta(index)
+        stats = O.PlanStats.from_meta(
+            meta, cell_offsets=np.asarray(index.cell_offsets))
+        assert O.exact_envelope(CFG, stats), "harness config must be covering"
+        _WORLD.append((index, meta, stats))
+    return _WORLD[0]
+
+
+@pytest.fixture(scope="module")
+def world():
+    return _get_world()
+
+
+def _binding(index, base_mask=None):
+    """The engine's search_texts contract over a real index, memoized.
+
+    ``base_mask`` (N,) rides every call — tombstone alive-masks and shard
+    row-ranges enter here, on BOTH the optimized and reference paths."""
+    cache = {}
+
+    def search_texts(texts, masks, top_k=None):
+        key = (tuple(texts),
+               None if masks is None else np.asarray(masks).tobytes(),
+               top_k)
+        if key in cache:
+            return cache[key]
+        eff = None if masks is None else np.asarray(masks, bool)
+        if base_mask is not None:
+            bm = np.broadcast_to(base_mask, (len(texts), N))
+            eff = bm.copy() if eff is None else (eff & bm)
+        cfg = CFG if top_k is None else \
+            dataclasses.replace(CFG, top_k=int(top_k))
+        res = anns.search_batch(
+            index, _encode(texts), cfg,
+            None if eff is None else jnp.asarray(eff.astype(np.uint8)))
+        out = (np.asarray(res["ids"]), np.asarray(res["scores"]))
+        cache[key] = out
+        return out
+
+    return search_texts
+
+
+# -- seeded random plan trees (no per-plan special-casing) ------------------
+def _rand_pred(r):
+    if r.random() < 0.5:
+        lo = int(r.integers(0, TMAX + 1))
+        hi = int(r.integers(0, TMAX + 1))
+        if r.random() < 0.8:
+            lo, hi = min(lo, hi), max(lo, hi)   # else possibly empty/reversed
+        video = int(r.integers(0, V)) if r.random() < 0.3 else None
+        return P.TimeRange(lo, hi, video)
+    k = int(r.integers(0, V + 1))               # includes empty + all videos
+    return P.VideoIn(sorted(r.choice(V, size=k, replace=False).tolist()))
+
+
+def _rand_tree(r, depth, allow_not):
+    if depth <= 0 or r.random() < 0.25:
+        return P.Text(TEXTS[int(r.integers(len(TEXTS)))])
+    roll = r.random()
+    if roll < 0.15 and allow_not:
+        return P.Not(_rand_tree(r, depth - 1, allow_not))
+    kids = [_rand_tree(r, depth - 1, allow_not)
+            for _ in range(int(r.integers(2, 4)))]
+    if roll < 0.6:
+        if r.random() < 0.7:                    # And carries predicates
+            kids += [_rand_pred(r) for _ in range(int(r.integers(1, 3)))]
+        return P.And(*kids)
+    return P.Or(*kids)
+
+
+def _rand_plan(seed, *, allow_not=True):
+    r = np.random.default_rng(seed)
+    root = _rand_tree(r, int(r.integers(1, 5)), allow_not)
+    if not P.collect_leaves(root):              # ensure a scored leaf exists
+        root = P.And(root, P.Text(TEXTS[seed % len(TEXTS)]))
+    if r.random() < 0.3:
+        root = P.GroupTopK(root, per="video", k=int(r.integers(1, 4)),
+                           mode=("moment" if r.random() < 0.4 else "frames"),
+                           max_gap=int(r.integers(1, 3)))
+    return root
+
+
+def _assert_bit_identical(got, want, ctx):
+    """Bit-identical ids and tie-stable ordering; scores ulp-tight.
+
+    Frame ids, videos, times, and their ORDER must match exactly — exact
+    score ties included (both paths end in the same stable argsort over
+    candidates in the same deterministic order).  Scores themselves are
+    compared at float32-ulp tolerance: XLA tiles the exact-rescore matmul
+    differently for different batch shapes (canonicalization dedups leaf
+    texts, changing Q), which legitimately perturbs the last mantissa bit
+    of identical row dot products."""
+    __tracebackhide__ = True
+    np.testing.assert_array_equal(got.frames, want.frames, err_msg=ctx)
+    np.testing.assert_array_equal(got.videos, want.videos, err_msg=ctx)
+    np.testing.assert_array_equal(got.times, want.times, err_msg=ctx)
+    np.testing.assert_allclose(got.scores, want.scores,
+                               rtol=2e-6, atol=2e-7, err_msg=ctx)
+    assert (got.moments is None) == (want.moments is None), ctx
+    if got.moments is not None:
+        for key in ("video", "start", "end", "n_frames"):
+            np.testing.assert_array_equal(got.moments[key],
+                                          want.moments[key], err_msg=ctx)
+        np.testing.assert_allclose(got.moments["score"],
+                                   want.moments["score"],
+                                   rtol=2e-6, atol=2e-7, err_msg=ctx)
+
+
+def _check_seed(seed, index, meta, stats, base_mask=None, env="fresh"):
+    node = _rand_plan(seed)
+    search_texts = _binding(index, base_mask)
+    want = P.execute(node, meta, search_texts)
+    got = O.execute_optimized(node, meta, search_texts, cfg=CFG, stats=stats)
+    _assert_bit_identical(got, want, f"env={env} seed={seed} plan={node!r}")
+
+
+# -- environment 1: fresh index ---------------------------------------------
+def test_equivalence_fresh(world):
+    index, meta, stats = world
+    for seed in range(N_EXAMPLES):
+        _check_seed(seed, index, meta, stats, env="fresh")
+
+
+# -- environment 2: store round trip ----------------------------------------
+@pytest.fixture(scope="module")
+def reopened(world, tmp_path_factory):
+    from repro.core.index_builder import BuiltIndex, MetadataStore
+    from repro.store.store import VectorStore
+
+    index, meta, _ = world
+    built = BuiltIndex(
+        index=index,
+        metadata=MetadataStore(
+            video_of=(np.arange(N) // KP // FR).astype(np.int32),
+            frame_of=((np.arange(N) // KP) % FR).astype(np.int32),
+            bbox_of=np.zeros((N, 4), np.float32)),
+        keyframes=np.zeros((F, 8, 8, 3), np.float32),
+        keyframe_video=np.asarray(meta.frame_video),
+        keyframe_frame=np.asarray(meta.frame_time),
+        patches_per_frame=KP)
+    root = tmp_path_factory.mktemp("optstore")
+    VectorStore.create(root, built).close()
+    with VectorStore.open(root) as store:
+        built2 = store.to_built_index()
+        stats2 = store.plan_stats()
+    index2 = built2.index
+    meta2 = _make_meta(index2)
+    return index2, meta2, stats2
+
+
+def test_equivalence_reopened_store(world, reopened):
+    index2, meta2, stats2 = reopened
+    assert stats2 is not None          # persisted sidecar came back
+    assert O.exact_envelope(CFG, stats2)
+    for seed in range(1000, 1000 + N_EXAMPLES // 2):
+        _check_seed(seed, index2, meta2, stats2, env="reopened")
+
+
+def test_reopened_rows_bit_equal(world, reopened):
+    """The store round trip itself must be lossless, or 'equivalence on the
+    reopened index' would be vacuous."""
+    index, _, _ = world
+    index2, _, _ = reopened
+    np.testing.assert_array_equal(np.asarray(index.ids),
+                                  np.asarray(index2.ids))
+    np.testing.assert_array_equal(np.asarray(index.codes),
+                                  np.asarray(index2.codes))
+
+
+# -- environment 3: tombstones ----------------------------------------------
+def test_equivalence_with_tombstones(world):
+    index, meta, stats = world
+    r = np.random.default_rng(99)
+    dead_frames = r.choice(F, size=F // 5, replace=False)
+    alive = ~np.isin(np.asarray(index.ids) // KP, dead_frames)
+    for seed in range(2000, 2000 + N_EXAMPLES // 2):
+        _check_seed(seed, index, meta, stats, base_mask=alive,
+                    env="tombstoned")
+
+
+# -- environment 4: sharded 1/2/4 -------------------------------------------
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_equivalence_sharded(world, n_shards):
+    """Per-shard optimized execution + cross-shard merge must equal the
+    per-shard UNOPTIMIZED execution + the same merge.  (Shard count itself
+    changes answers whenever a leaf's top_k doesn't cover all its matching
+    rows — per-shard quotas refill — so the equivalence claim is within the
+    sharded environment, matching ``plan.execute_sharded`` semantics.)"""
+    index, meta, stats = world
+    frame_of_row = np.asarray(index.ids) // KP
+    bounds = np.linspace(0, F, n_shards + 1).astype(np.int64)
+    shard_bindings = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        shard_mask = (frame_of_row >= lo) & (frame_of_row < hi)
+        shard_bindings.append(_binding(index, shard_mask))
+    for seed in range(3000 + 100 * n_shards,
+                      3000 + 100 * n_shards + N_EXAMPLES // 4):
+        node = _rand_plan(seed, allow_not=False)   # shard_plan refuses Not
+        sp = P.shard_plan(node)
+        want = P.merge_grouped(
+            [P.execute(sp, meta, b) for b in shard_bindings], node, meta)
+        got = P.merge_grouped(
+            [O.execute_optimized(sp, meta, b, cfg=CFG, stats=stats)
+             for b in shard_bindings], node, meta)
+        _assert_bit_identical(got, want,
+                              f"env=sharded{n_shards} seed={seed} "
+                              f"plan={node!r}")
+
+
+# -- hypothesis property (shim locally, real Hypothesis + shrinking in CI) --
+@settings(max_examples=max(10, N_EXAMPLES // 4), deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_equivalence_property(seed):
+    index, meta, stats = _get_world()
+    _check_seed(seed, index, meta, stats, env="property")
