@@ -208,6 +208,50 @@ def main() -> None:
                     f"n_independent={r['traffic_n_independent']} "
                     f"@n={r['n']}")
 
+    @bench("retry_overhead")
+    def retry_overhead():
+        # DESIGN.md §16 zero-cost-off gate: with no chaos schedule
+        # installed, a call THROUGH the router (failpoint check + breaker
+        # bookkeeping + deadline plumbing) must cost < 2% extra p50 over
+        # calling the backend directly.  Busy-wait backend so the
+        # comparison is not at the mercy of sleep granularity.
+        from repro.serving.router import QueryRouter
+
+        def work(x, _spin_s=0.005):
+            t_end = time.perf_counter() + _spin_s
+            while time.perf_counter() < t_end:
+                pass
+            return x
+
+        n = 80
+
+        def p50(fn):
+            ts = []
+            for i in range(n):
+                t0 = time.perf_counter()
+                fn(i)
+                ts.append(time.perf_counter() - t0)
+            ts.sort()
+            return ts[n // 2]
+
+        p50(work)                                  # warm both paths
+        direct = p50(work)
+        r = QueryRouter(hedge=False)
+        r.add_replica("a", work)
+        p50(r)
+        routed = p50(r)
+        r.close()
+        us = routed * 1e6
+        overhead = routed / direct - 1.0
+        if overhead > 0.02:
+            raise SystemExit(
+                f"retry_overhead gate: routed p50 {routed*1e3:.3f}ms vs "
+                f"direct {direct*1e3:.3f}ms = +{overhead*100:.2f}% > 2% "
+                f"budget")
+        return us, (f"direct_p50={direct*1e3:.3f}ms "
+                    f"routed_p50={routed*1e3:.3f}ms "
+                    f"overhead={overhead*100:+.2f}% budget=2%")
+
     @bench("static_analysis")
     def lint():
         # the DESIGN.md §14 invariant gate, timed end-to-end as CI pays

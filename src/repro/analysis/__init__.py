@@ -8,4 +8,9 @@ from repro.analysis.findings import (  # noqa: F401
     apply_suppressions,
     scan_suppressions,
 )
-from repro.analysis import ast_checks, baseline, jaxpr_checks  # noqa: F401
+from repro.analysis import (  # noqa: F401
+    ast_checks,
+    baseline,
+    chaos_checks,
+    jaxpr_checks,
+)

@@ -419,4 +419,11 @@ def run_ast_checks(root: str | pathlib.Path,
                 continue
             findings.extend(check_durability_source(
                 read(rel), rel, ingest="ingest" in d))
+
+    # CH401/CH402: failpoint-call vs chaos registry, kill-harness coverage
+    from repro.analysis import chaos_checks
+    ch_findings, ch_sources = chaos_checks.run_chaos_checks(root, files=files)
+    findings.extend(ch_findings)
+    for rel, text in ch_sources.items():
+        sources.setdefault(rel, text)
     return findings, sources

@@ -1,0 +1,204 @@
+"""Failpoint registry cross-checks (``CH4xx``, DESIGN.md §16.1/§16.5).
+
+Two rules, pure ``ast`` over the tree — the same philosophy as RG301's
+kernel/oracle cross-check, applied to the chaos subsystem:
+
+**CH401 — call sites vs the registry.**  Every ``chaos.failpoint(<name>)``
+call threaded through ``src/repro/`` must pass a STRING LITERAL naming a
+site declared in ``repro.chaos.registry.SITES`` (a computed name cannot be
+cross-checked statically and is itself a finding), and — the converse —
+every registered site must have at least one call site: a registry entry
+nobody calls is dead configuration that silently exempts its seam from
+the kill harness's coverage guarantee.
+
+**CH402 — kill-harness coverage.**  Every ``durability``-kind site must
+appear in the harness's ``EXERCISED_SITES`` literal
+(``repro.chaos.harness``), and every entry there must be a registered
+durability site.  Proves "no durability seam is unexercised by the
+kill-at-every-failpoint battery" without importing (or running) the
+harness.
+
+The chaos package itself (engine, registry, harness) is excluded from the
+call-site scan — it defines ``failpoint`` and manipulates site names as
+data, not as injection seams.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.findings import Finding, finding_at
+
+RULE_FAILPOINT_SITE = "CH401"   # failpoint call / registry mismatch
+RULE_KILL_COVERAGE = "CH402"    # durability site not kill-harness-exercised
+
+REGISTRY_REL = "src/repro/chaos/registry.py"
+HARNESS_REL = "src/repro/chaos/harness.py"
+SCAN_ROOT = "src/repro"
+_EXCLUDE_PREFIX = "src/repro/chaos/"
+
+
+def _callee_tail(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def registry_sites(registry_src: str) -> dict[str, tuple[int, str]]:
+    """Parse ``Site(...)`` literals -> ``{name: (lineno, kind)}``."""
+    out: dict[str, tuple[int, str]] = {}
+    for node in ast.walk(ast.parse(registry_src)):
+        if not (isinstance(node, ast.Call) and _callee_tail(node) == "Site"):
+            continue
+        name = kind = None
+        if node.args and isinstance(node.args[0], ast.Constant):
+            name = node.args[0].value
+        if len(node.args) > 1 and isinstance(node.args[1], ast.Constant):
+            kind = node.args[1].value
+        for kw in node.keywords:
+            if kw.arg == "name" and isinstance(kw.value, ast.Constant):
+                name = kw.value.value
+            if kw.arg == "kind" and isinstance(kw.value, ast.Constant):
+                kind = kw.value.value
+        if isinstance(name, str):
+            out[name] = (node.lineno, kind if isinstance(kind, str) else "?")
+    return out
+
+
+def failpoint_calls(src: str) -> list[tuple[int, str | None]]:
+    """Every ``*.failpoint(...)`` call -> ``(lineno, literal_name_or_None)``
+    (None = the site name is not a plain string literal)."""
+    out: list[tuple[int, str | None]] = []
+    for node in ast.walk(ast.parse(src)):
+        if not (isinstance(node, ast.Call)
+                and _callee_tail(node) == "failpoint"):
+            continue
+        name = None
+        if node.args and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str):
+            name = node.args[0].value
+        out.append((node.lineno, name))
+    return out
+
+
+def check_failpoint_source(src: str, path: str,
+                           sites: dict[str, tuple[int, str]]
+                           ) -> tuple[list[Finding], set[str]]:
+    """CH401 per-file half: non-literal or unregistered site names.
+    Returns ``(findings, site names called in this file)``."""
+    out: list[Finding] = []
+    called: set[str] = set()
+    for lineno, name in failpoint_calls(src):
+        if name is None:
+            out.append(finding_at(
+                RULE_FAILPOINT_SITE, path, lineno,
+                "failpoint() name must be a string literal — a computed "
+                "site name cannot be cross-checked against "
+                "repro.chaos.registry (CH401)", src))
+        elif name not in sites:
+            out.append(finding_at(
+                RULE_FAILPOINT_SITE, path, lineno,
+                f"failpoint site {name!r} is not declared in "
+                "repro.chaos.registry.SITES — register the seam (with its "
+                "kind and supported actions) before injecting there", src))
+        else:
+            called.add(name)
+    return out, called
+
+
+def harness_exercised(harness_src: str) -> dict[str, int]:
+    """Parse the harness's ``EXERCISED_SITES`` literal -> name -> lineno."""
+    out: dict[str, int] = {}
+    for node in ast.parse(harness_src).body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "EXERCISED_SITES"):
+            continue
+        if isinstance(node.value, (ast.List, ast.Tuple)):
+            for elt in node.value.elts:
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, str):
+                    out[elt.value] = elt.lineno
+    return out
+
+
+def check_kill_coverage(registry_src: str, harness_src: str, *,
+                        registry_path: str = REGISTRY_REL,
+                        harness_path: str = HARNESS_REL) -> list[Finding]:
+    """CH402 both ways: durability sites missing from the harness, and
+    harness entries that are not registered durability sites."""
+    sites = registry_sites(registry_src)
+    exercised = harness_exercised(harness_src)
+    out: list[Finding] = []
+    for name, (lineno, kind) in sorted(sites.items(),
+                                       key=lambda kv: kv[1][0]):
+        if kind == "durability" and name not in exercised:
+            out.append(finding_at(
+                RULE_KILL_COVERAGE, registry_path, lineno,
+                f"durability site {name!r} is not exercised by the kill "
+                "harness — add a SitePlan and EXERCISED_SITES entry in "
+                "repro.chaos.harness (DESIGN.md §16.5)", registry_src))
+    for name, lineno in sorted(exercised.items(), key=lambda kv: kv[1]):
+        if name not in sites:
+            out.append(finding_at(
+                RULE_KILL_COVERAGE, harness_path, lineno,
+                f"EXERCISED_SITES entry {name!r} is not a registered "
+                "site — stale after a registry rename?", harness_src))
+        elif sites[name][1] != "durability":
+            out.append(finding_at(
+                RULE_KILL_COVERAGE, harness_path, lineno,
+                f"EXERCISED_SITES entry {name!r} is kind "
+                f"{sites[name][1]!r}, not 'durability' — the kill harness "
+                "covers crash-consistency seams only", harness_src))
+    return out
+
+
+def run_chaos_checks(root: str | pathlib.Path,
+                     files: set[str] | None = None
+                     ) -> tuple[list[Finding], dict[str, str]]:
+    """CH401 + CH402 over the repo at ``root``.
+
+    ``files`` restricts the per-file CH401 half (``--changed-only``); the
+    global halves (never-called sites, kill coverage) need the whole tree
+    and run on full-tree passes or when a chaos/ file is in scope — same
+    gating shape as RG301.
+    """
+    root = pathlib.Path(root)
+    findings: list[Finding] = []
+    sources: dict[str, str] = {}
+
+    def read(rel: str) -> str:
+        if rel not in sources:
+            sources[rel] = (root / rel).read_text(encoding="utf-8")
+        return sources[rel]
+
+    registry_src = read(REGISTRY_REL)
+    sites = registry_sites(registry_src)
+
+    called_anywhere: set[str] = set()
+    for p in sorted((root / SCAN_ROOT).rglob("*.py")):
+        rel = p.relative_to(root).as_posix()
+        if rel.startswith(_EXCLUDE_PREFIX):
+            continue
+        per_file, called = check_failpoint_source(read(rel), rel, sites)
+        called_anywhere |= called
+        if files is None or rel in files:
+            findings.extend(per_file)
+
+    chaos_in_scope = files is not None and any(
+        f.startswith(_EXCLUDE_PREFIX) for f in files)
+    if files is None or chaos_in_scope:
+        for name, (lineno, _) in sorted(sites.items(),
+                                        key=lambda kv: kv[1][0]):
+            if name not in called_anywhere:
+                findings.append(finding_at(
+                    RULE_FAILPOINT_SITE, REGISTRY_REL, lineno,
+                    f"registered site {name!r} has no "
+                    "chaos.failpoint() call site under src/repro/ — dead "
+                    "registry entry (its seam is never injectable)",
+                    registry_src))
+        findings.extend(check_kill_coverage(registry_src, read(HARNESS_REL)))
+    return findings, sources

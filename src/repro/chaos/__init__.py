@@ -1,0 +1,33 @@
+"""repro.chaos — deterministic failpoint injection (DESIGN.md §16).
+
+Named injection sites are threaded through every durability and RPC seam
+(``repro.chaos.registry.SITES``); a seeded :class:`ChaosSchedule` decides
+which hits raise, delay, tear, or hard-kill the process, so every failure
+is replayable from ``(seed, rules)``.  ``repro.chaos.harness`` runs the
+kill-at-every-failpoint property harness over the durability sites.
+
+With no schedule installed, ``failpoint()`` is a global load + None check
+— the zero-cost-off contract gated by the ``retry_overhead`` benchmark.
+"""
+from repro.chaos import registry  # noqa: F401
+from repro.chaos.failpoints import (  # noqa: F401
+    CRASH_EXIT,
+    ChaosSchedule,
+    FailpointError,
+    Rule,
+    active,
+    crash_now,
+    failpoint,
+    fired,
+    hits,
+    install,
+    install_from_env,
+    is_active,
+    uninstall,
+)
+
+__all__ = [
+    "CRASH_EXIT", "ChaosSchedule", "FailpointError", "Rule", "active",
+    "crash_now", "failpoint", "fired", "hits", "install",
+    "install_from_env", "is_active", "uninstall", "registry",
+]

@@ -1,0 +1,211 @@
+"""Deterministic, seeded failpoint engine (DESIGN.md §16.1).
+
+A :class:`ChaosSchedule` is a list of rules — "on the Nth hit of site X,
+do ACTION" — plus a seed that fixes every random choice (delay jitter),
+so any observed failure replays exactly from ``(seed, rules)``.  Install
+one with :func:`install` / the :func:`active` context manager, or from
+the ``REPRO_CHAOS_SPEC`` environment variable (the subprocess crash-test
+path).
+
+``failpoint(name)`` is the only call threaded through production code.
+With no schedule installed it is a single global load + ``is None``
+check returning ``None`` — the zero-cost-off contract the
+``retry_overhead`` benchmark gates.  With a schedule installed it counts
+the hit and, when a rule matches:
+
+  * ``raise``  — raises :class:`FailpointError` (exercises retry /
+    breaker / recovery paths in-process);
+  * ``delay``  — sleeps a seeded-jittered ``delay_s`` (deadline and
+    hedging paths);
+  * ``crash``  — ``os._exit(CRASH_EXIT)``: no atexit, no flushing, the
+    closest userspace gets to yanking the power cord;
+  * ``torn``   — RETURNS ``"torn"`` so the call site can write the
+    partial bytes only it knows how to construct, then call
+    :func:`crash_now`.  Sites that support ``torn`` are marked in
+    ``repro.chaos.registry``.
+
+Hit counters are per-install and queryable (:func:`hits`) so the kill
+harness can verify a site actually fired before trusting a "survived"
+run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import threading
+import time
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+from repro.chaos import registry
+
+CRASH_EXIT = 42        # the harness asserts this exact exit code
+ENV_SPEC = "REPRO_CHAOS_SPEC"
+
+
+class FailpointError(RuntimeError):
+    """The injected fault for ``raise`` rules — distinct type so tests and
+    breakers can assert provenance."""
+
+    def __init__(self, site: str, hit: int):
+        super().__init__(f"injected failpoint fault at {site} (hit {hit})")
+        self.site = site
+        self.hit = hit
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    site: str
+    action: str            # "raise" | "delay" | "torn" | "crash"
+    hit: int = 1           # fire on the Nth hit of the site (1-based)
+    every: bool = False    # fire on hit, hit+1, hit+2, ... (raise/delay)
+    delay_s: float = 0.01
+
+    def matches(self, count: int) -> bool:
+        return count == self.hit or (self.every and count >= self.hit)
+
+
+class ChaosSchedule:
+    """A seed plus an ordered rule list; JSON round-trippable."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self.rules: list[Rule] = []
+
+    def on(self, site: str, action: str, *, hit: int = 1,
+           every: bool = False, delay_s: float = 0.01) -> "ChaosSchedule":
+        """Add a rule (chainable).  Validates the site is registered and
+        the action is one the site supports — a typo'd site name or an
+        impossible action is a schedule bug, caught at build time."""
+        s = registry.site(site)
+        if action not in registry.ACTIONS:
+            raise ValueError(f"unknown action {action!r}")
+        if action not in s.supports:
+            raise ValueError(
+                f"site {site!r} does not support action {action!r} "
+                f"(supports: {s.supports})")
+        if hit < 1:
+            raise ValueError("hit is 1-based")
+        self.rules.append(Rule(site=site, action=action, hit=int(hit),
+                               every=bool(every), delay_s=float(delay_s)))
+        return self
+
+    def to_spec(self) -> dict:
+        return {"seed": self.seed,
+                "rules": [dataclasses.asdict(r) for r in self.rules]}
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "ChaosSchedule":
+        sched = cls(seed=int(spec.get("seed", 0)))
+        for r in spec.get("rules", ()):
+            sched.on(r["site"], r["action"], hit=int(r.get("hit", 1)),
+                     every=bool(r.get("every", False)),
+                     delay_s=float(r.get("delay_s", 0.01)))
+        return sched
+
+
+class _Runtime:
+    """One installed schedule: hit counters + fired log, thread-safe."""
+
+    def __init__(self, schedule: ChaosSchedule):
+        self.schedule = schedule
+        self.hit_counts: dict[str, int] = {}
+        self.fired: list[tuple[str, str, int]] = []   # (site, action, hit)
+        self.lock = threading.Lock()
+
+    def jitter(self, site: str, hit: int) -> float:
+        # derived, not shared: replayable without cross-thread ordering
+        return random.Random((self.schedule.seed, site, hit)).random()
+
+
+_ACTIVE: Optional[_Runtime] = None
+
+
+def install(schedule: ChaosSchedule) -> None:
+    global _ACTIVE
+    _ACTIVE = _Runtime(schedule)
+
+
+def uninstall() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def is_active() -> bool:
+    return _ACTIVE is not None
+
+
+def hits() -> dict[str, int]:
+    """Per-site hit counters of the installed schedule ({} when off)."""
+    rt = _ACTIVE
+    if rt is None:
+        return {}
+    with rt.lock:
+        return dict(rt.hit_counts)
+
+
+def fired() -> list[tuple[str, str, int]]:
+    """(site, action, hit) log of every rule that fired ([] when off)."""
+    rt = _ACTIVE
+    if rt is None:
+        return []
+    with rt.lock:
+        return list(rt.fired)
+
+
+@contextmanager
+def active(schedule: ChaosSchedule) -> Iterator[_Runtime]:
+    """Install for the duration of a with-block (test scoping)."""
+    install(schedule)
+    try:
+        yield _ACTIVE  # type: ignore[misc]
+    finally:
+        uninstall()
+
+
+def install_from_env(environ=os.environ) -> bool:
+    """Install a schedule from ``REPRO_CHAOS_SPEC`` (JSON) if present —
+    how harness subprocesses arm themselves before running a workload.
+    Returns True when a schedule was installed."""
+    spec = environ.get(ENV_SPEC)
+    if not spec:
+        return False
+    install(ChaosSchedule.from_spec(json.loads(spec)))
+    return True
+
+
+def crash_now(code: int = CRASH_EXIT) -> None:
+    """Hard process death: no atexit handlers, no buffer flushing.  Call
+    sites use it to finish a ``torn`` action after writing partial bytes."""
+    os._exit(code)
+
+
+def failpoint(name: str) -> Optional[str]:
+    """The injection seam.  Returns None (no action / action handled
+    here) or ``"torn"`` (the call site must write partial bytes and call
+    :func:`crash_now`).  See module docstring for the action semantics."""
+    rt = _ACTIVE
+    if rt is None:
+        return None
+    if name not in registry.site_names():
+        raise KeyError(f"failpoint {name!r} is not a registered site "
+                       "(repro.chaos.registry.SITES)")
+    with rt.lock:
+        count = rt.hit_counts.get(name, 0) + 1
+        rt.hit_counts[name] = count
+        rule = next((r for r in rt.schedule.rules
+                     if r.site == name and r.matches(count)), None)
+        if rule is not None:
+            rt.fired.append((name, rule.action, count))
+    if rule is None:
+        return None
+    if rule.action == "raise":
+        raise FailpointError(name, count)
+    if rule.action == "delay":
+        time.sleep(rule.delay_s * (0.5 + rt.jitter(name, count)))
+        return None
+    if rule.action == "crash":
+        crash_now()
+    return "torn"

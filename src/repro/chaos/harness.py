@@ -1,0 +1,443 @@
+"""Kill-at-every-failpoint crash-consistency harness (DESIGN.md §16.5).
+
+For each registered DURABILITY failpoint site, run a deterministic
+insert/ingest/query workload in a SUBPROCESS armed (via
+``REPRO_CHAOS_SPEC``) to hard-crash — ``os._exit``, no atexit, no
+flushing — at that site, then reopen the survivors in the parent and
+assert the invariant catalog:
+
+  * no acknowledged row is lost, no acked delete resurrects (the
+    workload writes an INTENT record before and an ACK record after
+    every op to a fsync'd ops log OUTSIDE the store root, so "acked" is
+    crash-survivable ground truth);
+  * the one in-flight op may have landed or not — live state must equal
+    ``apply(acked)`` or ``apply(acked + inflight)``, nothing else;
+  * reopen is idempotent (a second open sees the identical state);
+  * ``VectorStore.open(verify=True)`` succeeds — the manifest never
+    names a missing or corrupt file;
+  * the store's ``cache_token()`` differs from the pre-mutation token
+    (cached plan results can never survive a crash-recovery cycle);
+  * ingest alerts are exactly-once-effect: after crash + recovery, the
+    key-deduplicated alert set equals the no-crash expectation.
+
+``EXERCISED_SITES`` is a LITERAL list so the CH402 analysis rule can
+cross-check it against the registry without executing anything: every
+registered durability site must appear here, and :func:`check_coverage`
+re-asserts the same at runtime.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+from typing import Optional
+
+import numpy as np
+
+from repro import chaos
+from repro.chaos import registry as chaos_registry
+from repro.chaos.failpoints import CRASH_EXIT, ENV_SPEC, ChaosSchedule
+
+# Every registered durability site, as literals (CH402 parses this list).
+EXERCISED_SITES = [
+    "store.wal.append.pre_fsync",
+    "store.wal.reset",
+    "store.segment.write.torn",
+    "store.manifest.replace",
+    "store.checkpoint.pre_manifest",
+    "store.codebooks.write",
+    "ingest.meta_log.append",
+    "ingest.state.replace",
+    "ingest.compaction.run",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePlan:
+    """Which workload reaches the site, and where in it to kill."""
+
+    workload: str   # "store" | "ingest"
+    action: str     # "torn" | "crash"
+    hit: int        # Nth arrival at the site (see workload op order)
+
+
+# Hit numbers follow the fixed op order of the workloads below — e.g.
+# manifest hit 1 is VectorStore.create, hit 2 the first flush commit.
+SITE_PLANS: dict[str, SitePlan] = {
+    "store.wal.append.pre_fsync": SitePlan("store", "torn", 4),
+    "store.wal.reset": SitePlan("store", "crash", 1),
+    "store.segment.write.torn": SitePlan("store", "torn", 2),
+    "store.manifest.replace": SitePlan("store", "crash", 2),
+    "store.checkpoint.pre_manifest": SitePlan("store", "crash", 2),
+    "store.codebooks.write": SitePlan("store", "crash", 1),
+    "ingest.meta_log.append": SitePlan("ingest", "torn", 3),
+    "ingest.state.replace": SitePlan("ingest", "crash", 2),
+    "ingest.compaction.run": SitePlan("ingest", "crash", 1),
+}
+
+
+def check_coverage() -> None:
+    """Every registered durability site must be exercised (CH402's
+    runtime twin)."""
+    registered = set(chaos_registry.durability_sites())
+    exercised = set(EXERCISED_SITES)
+    if registered != exercised:
+        raise AssertionError(
+            f"kill-harness coverage drift: unexercised="
+            f"{sorted(registered - exercised)} "
+            f"unregistered={sorted(exercised - registered)}")
+    missing = exercised - set(SITE_PLANS)
+    if missing:
+        raise AssertionError(f"sites without a kill plan: {sorted(missing)}")
+
+
+# ---------------------------------------------------------------------------
+# Fsync'd intent/ack ops log (lives OUTSIDE the store root)
+# ---------------------------------------------------------------------------
+class _OpsLog:
+    def __init__(self, path: pathlib.Path):
+        self._f = open(path, "a", encoding="utf-8")
+
+    def write(self, obj: dict) -> None:
+        self._f.write(json.dumps(obj, sort_keys=True) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+
+def _read_ops(path: pathlib.Path) -> tuple[list[dict], Optional[dict]]:
+    """-> (acked ops in order, the single un-acked in-flight op or None)."""
+    intents: dict[int, dict] = {}
+    acked: set[int] = set()
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            rec = json.loads(line)
+            if "ack" in rec:
+                acked.add(rec["ack"])
+            else:
+                intents[rec["i"]] = rec
+    inflight = [intents[i] for i in sorted(intents) if i not in acked]
+    assert len(inflight) <= 1, f"more than one in-flight op: {inflight}"
+    return ([intents[i] for i in sorted(intents) if i in acked],
+            inflight[0] if inflight else None)
+
+
+def _apply_ops(base_ids: set[int], ops: list[dict]) -> set[int]:
+    live = set(base_ids)
+    for op in ops:
+        if op["kind"] == "insert":
+            live |= set(op["ids"])
+        elif op["kind"] == "delete":
+            live -= set(op["ids"])
+    return live
+
+
+# ---------------------------------------------------------------------------
+# Store-flavored workload: insert / delete / flush / compact / refresh
+# ---------------------------------------------------------------------------
+N_BASE = 256
+D_STORE = 16
+
+
+def _store_index(seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imi as imimod
+
+    x = np.random.default_rng(seed).normal(
+        0, 1, (N_BASE, D_STORE)).astype(np.float32)
+    return imimod.build_imi(jax.random.PRNGKey(seed), jnp.asarray(x),
+                            jnp.arange(N_BASE), K=4, P=2, M=8,
+                            kmeans_iters=2)
+
+
+def _batch(lo: int, n: int = 10) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(lo)
+    return (rng.normal(0, 1, (n, D_STORE)).astype(np.float32),
+            np.arange(lo, lo + n))
+
+
+def run_store_workload(workdir: pathlib.Path) -> None:
+    """The crashing side: a fixed op sequence crossing every store
+    durability seam, each op intent/ack-logged."""
+    from repro.store import VectorStore
+
+    chaos.install_from_env()
+    workdir = pathlib.Path(workdir)
+    workdir.mkdir(parents=True, exist_ok=True)
+    log = _OpsLog(workdir / "ops.jsonl")
+    store = VectorStore.create(workdir / "store", _store_index(),
+                               flush_rows=10 ** 9)
+    log.write({"i": 0, "kind": "create", "n": N_BASE,
+               "token": repr(store.cache_token())})
+    log.write({"ack": 0})
+
+    i = 0
+
+    def op(kind: str, fn, ids=None) -> None:
+        nonlocal i
+        i += 1
+        rec = {"i": i, "kind": kind}
+        if ids is not None:
+            rec["ids"] = [int(v) for v in ids]
+        log.write(rec)
+        fn()
+        log.write({"ack": i})
+
+    xa, ia = _batch(10_000)
+    op("insert", lambda: store.insert(xa, ia), ia)          # wal hit 1
+    xb, ib = _batch(10_010)
+    op("insert", lambda: store.insert(xb, ib), ib)          # wal hit 2
+    dels = [10_003, 5]
+    op("delete", lambda: store.delete(dels), dels)          # wal hit 3
+    op("flush", store.flush)         # seg hit 2, manifest hit 2, reset hit 1
+    xc, ic = _batch(10_020)
+    op("insert", lambda: store.insert(xc, ic), ic)          # wal hit 4
+    op("compact", store.compact)     # checkpoint hit 2 (new base)
+    op("refresh", lambda: store.refresh_codebooks(kmeans_iters=2))
+    xd, idd = _batch(10_030)
+    op("insert", lambda: store.insert(xd, idd), idd)        # wal hit 5
+    op("flush", store.flush)
+    store.close()
+
+
+def _live_ids(store) -> set[int]:
+    seg = store.seg
+    ids = [int(v) for v in np.asarray(seg.base.ids) if int(v) >= 0]
+    for s in seg.segments:
+        ids.extend(int(v) for v in np.asarray(s.ids))
+    tomb = {int(t) for t in seg.tombstones}
+    return {v for v in ids if v not in tomb}
+
+
+def verify_store(workdir: pathlib.Path) -> dict:
+    """Parent-side invariant checks after the subprocess died."""
+    from repro.store import VectorStore
+
+    workdir = pathlib.Path(workdir)
+    acked, inflight = _read_ops(workdir / "ops.jsonl")
+    assert acked and acked[0]["kind"] == "create", "create never acked"
+    base = set(range(N_BASE))
+    must = _apply_ops(base, acked)
+    may = _apply_ops(base, acked + ([inflight] if inflight else []))
+
+    # open(verify=True): the manifest must never name a missing or
+    # corrupt file, whatever instant the process died at
+    with VectorStore.open(workdir / "store", verify=True) as store:
+        live = _live_ids(store)
+        n1, token1 = store.n, repr(store.cache_token())
+    assert live in (must, may), (
+        f"acked-row invariant violated at {workdir}: "
+        f"live-must={sorted(live - must)[:8]} "
+        f"must-live={sorted(must - live)[:8]} inflight={inflight}")
+
+    # double reopen: recovery itself must be idempotent
+    with VectorStore.open(workdir / "store", verify=True) as store2:
+        assert _live_ids(store2) == live and store2.n == n1, \
+            "second reopen disagrees with first (non-idempotent recovery)"
+        token2 = repr(store2.cache_token())
+
+    mutated = any(op["kind"] in ("insert", "delete") for op in acked)
+    if mutated:
+        assert token1 != acked[0]["token"], \
+            "cache_token did not flip across acked mutations + crash"
+    assert token1 == token2, "cache_token differs between identical opens"
+    return {"ok": True, "workload": "store", "live_rows": len(live),
+            "inflight": inflight["kind"] if inflight else None,
+            "inflight_applied": (live == may and must != may)
+            if inflight else None}
+
+
+# ---------------------------------------------------------------------------
+# Ingest-flavored workload: deterministic 2-camera world, standing
+# queries, durable JSONL alert sink, terminal compaction
+# ---------------------------------------------------------------------------
+D_ING = 16
+KP = 2
+_LABELS = ["red square", "blue circle", "nothing"]
+_BASIS = np.random.default_rng(7).normal(
+    0, 1, (16, D_ING)).astype(np.float32)
+
+# ground truth by construction: cam0 shows "red square" on frames 6..8,
+# cam1 shows "blue circle" on frames 0..1 and 14..15
+EXPECTED_KEYS = ({("red@0", 0, t) for t in range(6, 9)}
+                 | {("blue@1", 1, t) for t in (0, 1, 14, 15)})
+
+
+def _dir(text: str) -> np.ndarray:
+    import zlib
+    return _BASIS[zlib.crc32(text.encode()) % 16]
+
+
+def encode_texts(texts):
+    return np.stack([_dir(t) for t in texts])
+
+
+def _label_frames(labels, res=4) -> np.ndarray:
+    out = np.zeros((len(labels), res, res, 3), np.float32)
+    for i, lab in enumerate(labels):
+        out[i, :, :, 0] = _LABELS.index(lab) / 10.0
+    return out
+
+
+def encode_frames(frames):
+    out = np.zeros((frames.shape[0], KP, D_ING), np.float32)
+    for i in range(frames.shape[0]):
+        lab = _LABELS[int(round(float(frames[i, 0, 0, 0]) * 10))]
+        for p in range(KP):
+            out[i, p] = _dir(lab) + 0.01 * _BASIS[(p + 3) % 16]
+    return out
+
+
+def _ingest_world(workdir: pathlib.Path):
+    from repro.ingest import (CameraBandit, IngestService, JsonlSink,
+                              ReplayCamera, RetryingSink,
+                              StandingQueryRegistry)
+    from repro.store import VectorStore
+
+    workdir = pathlib.Path(workdir)
+    workdir.mkdir(parents=True, exist_ok=True)
+    store_dir = workdir / "store"
+    if (store_dir / "MANIFEST.json").exists():
+        store = VectorStore.open(store_dir)
+    else:
+        import jax
+        import jax.numpy as jnp
+        from repro.core import imi as imimod
+
+        x = np.random.default_rng(1).normal(
+            0, 1, (128, D_ING)).astype(np.float32)
+        idx = imimod.build_imi(jax.random.PRNGKey(1), jnp.asarray(x),
+                               jnp.arange(128), K=4, P=2, M=8,
+                               kmeans_iters=2)
+        store = VectorStore.create(store_dir, idx, flush_rows=10 ** 9)
+
+    reg = StandingQueryRegistry(encode_texts, patches_per_frame=KP,
+                                pad_rows=64)
+    reg.register("red@0", {"and": [{"text": "red square"},
+                                   {"videos": [0]}]},
+                 threshold=0.5, top_k=32)
+    reg.register("blue@1", {"and": [{"text": "blue circle"},
+                                    {"videos": [1]}]},
+                 threshold=0.5, top_k=32)
+    cam0 = ReplayCamera(_label_frames(
+        ["nothing"] * 6 + ["red square"] * 3 + ["nothing"] * 7))
+    cam1 = ReplayCamera(_label_frames(
+        ["blue circle"] * 2 + ["nothing"] * 12 + ["blue circle"] * 2))
+    fps = 8
+    svc = IngestService(
+        store, [cam0, cam1], encode_frames, reg,
+        sink=RetryingSink(JsonlSink(workdir / "alerts.jsonl")),
+        bandit=CameraBandit(2, min_per_camera=fps),
+        frames_per_step=fps, keyframe_stride=1, keyframe_budget=fps * 2,
+        checkpoint_every_steps=1)
+    return store, svc
+
+
+def run_ingest_workload(workdir: pathlib.Path) -> None:
+    from repro.ingest import CompactionPolicy, CompactionScheduler
+
+    chaos.install_from_env()
+    store, svc = _ingest_world(workdir)
+    svc.run()
+    # terminal maintenance slot: pending in-memory deltas force a compact
+    CompactionScheduler(store, CompactionPolicy(max_segments=0,
+                                                max_delta_rows=0),
+                        lock=svc.write_lock).maybe_run()
+    svc.close()
+    store.close()
+
+
+def verify_ingest(workdir: pathlib.Path) -> dict:
+    """Reopen the crashed world, resume to completion, and require the
+    deduplicated alert key set to equal the no-crash expectation."""
+    from repro.ingest import JsonlSink, dedup_by_key
+    from repro.store import VectorStore
+
+    workdir = pathlib.Path(workdir)
+    store, svc = _ingest_world(workdir)   # auto_recover replays the tail
+    svc.run()
+    svc.close()
+    store.close()
+
+    alerts = dedup_by_key(JsonlSink.read(workdir / "alerts.jsonl"))
+    keys = {(a.subscription, a.camera, a.frame) for a in alerts}
+    assert keys == EXPECTED_KEYS, (
+        f"alert exactly-once-effect violated: missing="
+        f"{sorted(EXPECTED_KEYS - keys)} extra={sorted(keys - EXPECTED_KEYS)}")
+    # the store itself must still reopen clean
+    with VectorStore.open(workdir / "store", verify=True) as s2:
+        n = s2.n
+    return {"ok": True, "workload": "ingest", "alerts": len(alerts),
+            "rows": int(n)}
+
+
+_WORKLOADS = {"store": run_store_workload, "ingest": run_ingest_workload}
+_VERIFIERS = {"store": verify_store, "ingest": verify_ingest}
+
+
+# ---------------------------------------------------------------------------
+# Orchestration (parent side)
+# ---------------------------------------------------------------------------
+def kill_at_site(site: str, workdir, *, seed: int = 0,
+                 timeout_s: float = 600.0) -> dict:
+    """Run the site's workload in a subprocess armed to die at ``site``,
+    assert it died THERE (exit code ``CRASH_EXIT``), then verify the
+    invariant catalog over what survived.  Returns a report dict."""
+    plan = SITE_PLANS[site]
+    d = pathlib.Path(workdir) / site.replace(".", "_")
+    d.mkdir(parents=True, exist_ok=True)
+    schedule = ChaosSchedule(seed=seed).on(site, plan.action, hit=plan.hit)
+    env = dict(os.environ)
+    env[ENV_SPEC] = json.dumps(schedule.to_spec())
+    src_root = pathlib.Path(__file__).resolve().parents[2]
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(src_root)] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH")
+                           else []))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.chaos.harness",
+         "--workload", plan.workload, "--dir", str(d)],
+        env=env, capture_output=True, text=True, timeout=timeout_s)
+    if proc.returncode != CRASH_EXIT:
+        raise AssertionError(
+            f"site {site!r}: expected the workload to crash at the "
+            f"failpoint (exit {CRASH_EXIT}), got exit {proc.returncode}\n"
+            f"stderr tail:\n{proc.stderr[-2000:]}")
+    report = _VERIFIERS[plan.workload](d)
+    report.update(site=site, action=plan.action, hit=plan.hit, seed=seed)
+    return report
+
+
+def run_all(workdir, *, seed: int = 0) -> list[dict]:
+    check_coverage()
+    return [kill_at_site(site, workdir, seed=seed)
+            for site in EXERCISED_SITES]
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="kill-at-every-failpoint crash-consistency harness")
+    ap.add_argument("--workload", choices=sorted(_WORKLOADS),
+                    help="run ONE workload in-process (the subprocess "
+                         "side; arm via REPRO_CHAOS_SPEC)")
+    ap.add_argument("--all", action="store_true",
+                    help="kill + verify every durability site")
+    ap.add_argument("--dir", required=True, help="working directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.workload:
+        _WORKLOADS[args.workload](pathlib.Path(args.dir))
+        return 0
+    if args.all:
+        for rep in run_all(args.dir, seed=args.seed):
+            print(json.dumps(rep, sort_keys=True))
+        return 0
+    ap.error("pass --workload or --all")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

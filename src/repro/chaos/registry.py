@@ -1,0 +1,123 @@
+"""Central catalog of failpoint injection sites (DESIGN.md §16.1).
+
+Every ``chaos.failpoint(<name>)`` call threaded through the tree must name
+a :class:`Site` declared here — the analysis rule CH401 cross-checks call
+sites against this registry the same way RG301 cross-checks kernels
+against their oracles, and CH402 requires every ``durability``-kind site
+to be exercised by the kill-at-every-failpoint harness
+(``repro.chaos.harness``).
+
+A site is a *seam*, not a fault: it marks the exact instruction boundary
+where the system's crash-consistency or RPC contract is supposed to hold,
+so a deterministic schedule can raise / delay / tear / hard-kill there
+and the invariant catalog can be asserted on the other side.
+
+Kinds:
+  * ``durability`` — sits inside a write→fsync→rename commit chain; a
+    crash here must be recoverable by reopen (store WAL/segment/manifest,
+    ingest meta-log/state, compaction and codebook refresh).
+  * ``rpc`` — a delivery or dispatch seam (replica calls, shard
+    broadcast, alert sink, batcher dispatch); a fault here must be
+    absorbed by the retry/breaker/degradation layer, never corrupt state.
+
+``supports`` lists the legal actions per site.  ``torn`` (write a prefix
+of the payload, then hard-exit) is only meaningful where the call site
+cooperates by writing partial bytes — offering it elsewhere would inject
+*bugs* (e.g. atomically renaming a half-written manifest) rather than
+simulate crashes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+ACTIONS = ("raise", "delay", "torn", "crash")
+
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    name: str                      # dotted site id, e.g. "store.wal.append.pre_fsync"
+    kind: str                      # "durability" | "rpc"
+    module: str                    # module that hosts the failpoint() call
+    supports: tuple[str, ...]      # subset of ACTIONS
+    doc: str
+
+
+SITES: tuple[Site, ...] = (
+    # -- store durability chain (DESIGN.md §5) ------------------------------
+    Site("store.wal.append.pre_fsync", "durability", "repro.store.wal",
+         ("raise", "delay", "torn", "crash"),
+         "between writing a WAL record and its fsync; torn = half the "
+         "framed record reaches the file"),
+    Site("store.wal.reset", "durability", "repro.store.wal",
+         ("raise", "delay", "crash"),
+         "before the post-checkpoint WAL truncation rewrites the header"),
+    Site("store.segment.write.torn", "durability", "repro.store.segment",
+         ("raise", "delay", "torn", "crash"),
+         "after the segment's array files, before the footer; torn = the "
+         "last .npy is truncated (footer never written)"),
+    Site("store.manifest.replace", "durability", "repro.store.manifest",
+         ("raise", "delay", "crash"),
+         "after the tmp manifest is fsync'd, before os.replace publishes "
+         "it (the §5 commit point)"),
+    Site("store.checkpoint.pre_manifest", "durability", "repro.store.store",
+         ("raise", "delay", "crash"),
+         "segments written, manifest swap not yet attempted — the widest "
+         "window where new segment dirs are unreferenced garbage"),
+    Site("store.codebooks.write", "durability", "repro.store.store",
+         ("raise", "delay", "crash"),
+         "versioned codebooks file synced, commit checkpoint not yet run "
+         "(refresh_codebooks must be atomic across both)"),
+    # -- ingest durability chain (DESIGN.md §12.3) --------------------------
+    Site("ingest.meta_log.append", "durability", "repro.ingest.pipeline",
+         ("raise", "delay", "torn", "crash"),
+         "meta-first frame attribution append; torn = half a JSON line"),
+    Site("ingest.state.replace", "durability", "repro.ingest.pipeline",
+         ("raise", "delay", "crash"),
+         "before os.replace publishes ingest-state.json (watermarks, "
+         "bandit, pending alerts)"),
+    Site("ingest.compaction.run", "durability", "repro.ingest.compaction",
+         ("raise", "delay", "crash"),
+         "a maintenance slot decided to compact/refresh but has not yet "
+         "taken the writer lock"),
+    # -- RPC / delivery seams ----------------------------------------------
+    Site("ingest.sink.deliver", "rpc", "repro.ingest.alerts",
+         ("raise", "delay", "crash"),
+         "before the sink emit attempt (at-least-once delivery retry "
+         "loop)"),
+    Site("router.replica.call", "rpc", "repro.serving.router",
+         ("raise", "delay", "crash"),
+         "before a replica fn/batch_fn invocation (per-call and shard "
+         "paths share it)"),
+    Site("serving.batcher.dispatch", "rpc", "repro.serving.batcher",
+         ("raise", "delay", "crash"),
+         "before the micro-batch is handed to run_batch"),
+    Site("distributed.shard.rpc", "rpc", "repro.core.distributed",
+         ("raise", "delay", "crash"),
+         "host-side dispatch of the sharded fused scan (fires per "
+         "untraced invocation: under jit it runs at trace time and "
+         "leaves nothing in the jaxpr)"),
+)
+
+
+@lru_cache(maxsize=1)
+def site_names() -> frozenset[str]:
+    return frozenset(s.name for s in SITES)
+
+
+@lru_cache(maxsize=None)
+def site(name: str) -> Site:
+    for s in SITES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unregistered failpoint site {name!r} "
+                   f"(declare it in repro.chaos.registry.SITES)")
+
+
+def durability_sites() -> tuple[str, ...]:
+    """The sites the kill-at-every-failpoint harness must cover (CH402)."""
+    return tuple(s.name for s in SITES if s.kind == "durability")
+
+
+def rpc_sites() -> tuple[str, ...]:
+    return tuple(s.name for s in SITES if s.kind == "rpc")

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import chaos
 from repro.core import anns
 from repro.core import pq as pqmod
 from repro.core.imi import IMIIndex
@@ -362,6 +363,10 @@ def make_sharded_search(mesh: Mesh, *,
 
     def search(sidx: ShardedIndex, qs: jax.Array,
                row_mask: Optional[jax.Array] = None) -> dict[str, jax.Array]:
+        # Host-side injection seam: fires per invocation (at trace time
+        # under jit — leaves nothing in the jaxpr), modeling the pod-level
+        # RPC into the sharded-search collective.
+        chaos.failpoint("distributed.shard.rpc")
         qs = pqmod.normalize(qs.astype(jnp.float32))
         Q = qs.shape[0]
         pq = pqmod.PQ(sidx.pq_centroids, rotation=sidx.pq_rotation)

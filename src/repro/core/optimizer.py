@@ -585,6 +585,14 @@ class ResultCache:
     ``VectorStore.cache_token`` / ``SegmentedIndex.data_version``)
     invalidate without any wall-clock TTL, and a result computed against
     one store generation is NEVER served for another.  Thread-safe.
+
+    Degraded-read exclusion (DESIGN.md §16.4): anything carrying an
+    incomplete ``Completeness`` — a ``DegradedResult`` from
+    ``QueryRouter.call_sharded(degraded_ok=True)`` with missing shards, or
+    any object exposing ``.completeness.complete == False`` — is REFUSED
+    by ``put`` (counted in ``rejected_degraded``).  A partial answer is a
+    one-shot emergency response, never a cacheable fact: serving it from
+    cache after the shards recover would silently pin the outage.
     """
 
     def __init__(self, capacity: int = 128,
@@ -597,6 +605,7 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        self.rejected_degraded = 0
 
     def token(self) -> Any:
         """The CURRENT data-version token (None without a provider —
@@ -623,6 +632,11 @@ class ResultCache:
                 if dataclasses.is_dataclass(res) else res
 
     def put(self, key: Any, token: Any, result: Any) -> None:
+        comp = getattr(result, "completeness", None)
+        if comp is not None and not getattr(comp, "complete", True):
+            with self._lock:
+                self.rejected_degraded += 1
+            return
         with self._lock:
             self._d[key] = (token, result)
             self._d.move_to_end(key)

@@ -1,0 +1,322 @@
+"""Unified retry / deadline / circuit-breaker / degradation primitives
+(DESIGN.md §16.2–§16.3).
+
+One policy vocabulary for every seam that can fail, replacing the
+scattered ad-hoc versions (the router's consecutive-failure counters, the
+alert sink's fixed doubling, bare sleeps):
+
+  * :class:`RetryPolicy` — exponential backoff with deterministic seeded
+    jitter and a per-call deadline budget; ``backoff_s(attempt)`` is the
+    pure schedule, ``call(fn, ...)`` the retry loop.
+  * :class:`Deadline` — an absolute time budget propagated
+    MicroBatcher → router → shard calls; ``expired``/``remaining`` are
+    the only questions anyone asks of it.
+  * :class:`CircuitBreaker` — per-replica closed → open → half-open
+    state machine: open after ``failure_threshold`` consecutive
+    failures, refuse while open, allow ``half_open_probes`` trial calls
+    after ``recovery_s``, close again on probe success.
+  * :class:`Completeness` / :class:`DegradedResult` — the graceful-
+    degradation contract: a degraded read says exactly which shards
+    answered and how many rows they cover, and anything carrying an
+    incomplete :class:`Completeness` must never enter a result cache
+    (``ResultCache.put`` enforces the exclusion).
+
+Pure stdlib + dataclasses: importable from the router, the batcher, the
+ingest sink, and tests without dragging jax in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's time budget ran out (before or between attempts)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Deadline:
+    """An absolute expiry on the monotonic clock.
+
+    Built once at the request edge (``Deadline.after(budget_s)``) and
+    passed down the call tree by value — every layer subtracts nothing,
+    computes nothing, just asks ``remaining()``/``expired()`` against the
+    same clock.
+    """
+
+    expires_at: float
+    clock: Callable[[], float] = time.monotonic
+
+    @classmethod
+    def after(cls, seconds: float,
+              clock: Callable[[], float] = time.monotonic) -> "Deadline":
+        return cls(expires_at=clock() + float(seconds), clock=clock)
+
+    def remaining(self) -> float:
+        return self.expires_at - self.clock()
+
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0
+
+    def check(self, what: str = "request") -> None:
+        if self.expired():
+            raise DeadlineExceeded(f"{what} deadline exceeded "
+                                   f"({-self.remaining():.3f}s over)")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic seeded jitter.
+
+    ``backoff_s(attempt)`` for attempt = 1, 2, ... is
+    ``min(base * multiplier**(attempt-1), max)`` scaled by a jitter
+    factor drawn from ``random.Random((seed, attempt))`` — the same
+    (policy, attempt) always sleeps the same time, so retry storms are
+    decorrelated across seeds yet every run is replayable.
+    """
+
+    max_attempts: int = 4
+    base_backoff_s: float = 0.05
+    max_backoff_s: float = 2.0
+    multiplier: float = 2.0
+    jitter: float = 0.5        # backoff is scaled by 1 +/- jitter*u
+    seed: int = 0
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (1-based failure count)."""
+        if attempt < 1:
+            raise ValueError("attempt is 1-based")
+        raw = min(self.base_backoff_s * self.multiplier ** (attempt - 1),
+                  self.max_backoff_s)
+        if self.jitter:
+            u = random.Random((self.seed, attempt)).random()   # [0, 1)
+            raw *= 1.0 + self.jitter * (2.0 * u - 1.0)
+        return min(raw, self.max_backoff_s)
+
+    def call(self, fn: Callable[..., Any], *args: Any,
+             deadline: Optional[Deadline] = None,
+             retry_on: Tuple[type, ...] = (Exception,),
+             sleep: Callable[[float], None] = time.sleep,
+             **kwargs: Any) -> Any:
+        """Run ``fn`` with retries.  ``deadline`` caps the WHOLE loop: an
+        expired budget raises :class:`DeadlineExceeded` instead of
+        sleeping into a window nobody is waiting for, and a backoff is
+        clipped to the remaining budget."""
+        last: Optional[BaseException] = None
+        for attempt in range(1, self.max_attempts + 1):
+            if deadline is not None:
+                deadline.check("retry")
+            try:
+                return fn(*args, **kwargs)
+            except DeadlineExceeded:
+                raise
+            except retry_on as e:
+                last = e
+                if attempt == self.max_attempts:
+                    raise
+                pause = self.backoff_s(attempt)
+                if deadline is not None:
+                    left = deadline.remaining()
+                    if left <= 0:
+                        raise DeadlineExceeded(
+                            "retry deadline exceeded after "
+                            f"{attempt} attempt(s)") from e
+                    pause = min(pause, left)
+                if pause > 0:
+                    sleep(pause)
+        raise last  # type: ignore[misc]  # unreachable
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+STATE_CLOSED = "closed"
+STATE_OPEN = "open"
+STATE_HALF_OPEN = "half-open"
+
+
+class CircuitBreaker:
+    """Per-target failure gate with half-open probing.
+
+    CLOSED: all calls pass; ``failure_threshold`` consecutive failures
+    trip it OPEN.  OPEN: calls refused until ``recovery_s`` has elapsed,
+    then the next :meth:`try_acquire` moves to HALF-OPEN and admits up to
+    ``half_open_probes`` concurrent probe calls.  A probe success closes
+    the breaker (counter reset); a probe failure re-opens it (the
+    recovery window restarts).  ``recovery_s=0`` means an open breaker
+    is immediately probeable — the legacy ``recovery_probe_s=0.0``
+    router behavior.
+
+    Thread-safe; every decision point is under one lock.
+    """
+
+    def __init__(self, *, failure_threshold: int = 3,
+                 recovery_s: float = 5.0, half_open_probes: int = 1,
+                 clock: Callable[[], float] = time.monotonic):
+        self.failure_threshold = int(failure_threshold)
+        self.recovery_s = float(recovery_s)
+        self.half_open_probes = max(1, int(half_open_probes))
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._state = STATE_CLOSED
+        self._failures = 0            # consecutive, resets on success
+        self._opened_at = 0.0
+        self._probes_inflight = 0
+        self.opens = 0                # lifetime trips (observability)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._state
+
+    @property
+    def failures(self) -> int:
+        with self._lock:
+            return self._failures
+
+    @property
+    def closed(self) -> bool:
+        return self.state == STATE_CLOSED
+
+    def can_attempt(self) -> bool:
+        """Would a call be admitted right now?  Non-consuming: does not
+        take a probe slot (use :meth:`try_acquire` to actually claim)."""
+        with self._lock:
+            if self._state == STATE_CLOSED:
+                return True
+            if self._state == STATE_OPEN:
+                return self._clock() - self._opened_at >= self.recovery_s
+            return self._probes_inflight < self.half_open_probes
+
+    # -- transitions ---------------------------------------------------------
+    def try_acquire(self) -> bool:
+        """Claim permission for one call.  In OPEN-past-recovery this
+        transitions to HALF-OPEN and takes a probe slot; callers MUST
+        follow up with :meth:`record_success` or :meth:`record_failure`."""
+        with self._lock:
+            if self._state == STATE_CLOSED:
+                return True
+            if self._state == STATE_OPEN:
+                if self._clock() - self._opened_at < self.recovery_s:
+                    return False
+                self._state = STATE_HALF_OPEN
+                self._probes_inflight = 0
+            if self._probes_inflight >= self.half_open_probes:
+                return False
+            self._probes_inflight += 1
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            if self._state == STATE_HALF_OPEN:
+                self._probes_inflight = max(0, self._probes_inflight - 1)
+            self._state = STATE_CLOSED
+            self._failures = 0
+
+    def record_failure(self) -> None:
+        with self._lock:
+            if self._state == STATE_HALF_OPEN:
+                self._probes_inflight = max(0, self._probes_inflight - 1)
+                self._trip()
+                return
+            self._failures += 1
+            if self._state == STATE_CLOSED \
+                    and self._failures >= self.failure_threshold:
+                self._trip()
+
+    def force_close(self) -> None:
+        """Operator override (the router's ``mark_recovered``)."""
+        with self._lock:
+            self._state = STATE_CLOSED
+            self._failures = 0
+            self._probes_inflight = 0
+
+    def force_open(self) -> None:
+        with self._lock:
+            self._trip()
+
+    def _trip(self) -> None:
+        # caller holds the lock
+        self._state = STATE_OPEN
+        self._opened_at = self._clock()
+        self._failures = max(self._failures, self.failure_threshold)
+        self._probes_inflight = 0
+        self.opens += 1
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation contract
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Completeness:
+    """How much of the index a (possibly degraded) answer covers.
+
+    Attached to every opted-in degraded read (``QueryRouter.call_sharded``
+    with ``degraded_ok=True``): the caller can decide whether "3 of 4
+    shards, 75% of rows, generation 7" is good enough to show — the
+    system never decides that silently.  ``complete`` is the cache
+    admission test: ``ResultCache.put`` refuses anything incomplete.
+    """
+
+    shards_total: int
+    shards_answered: int
+    missing: tuple[str, ...] = ()       # replica names that did not answer
+    rows_total: Optional[int] = None    # from RoutingTable row ranges
+    rows_covered: Optional[int] = None
+    generation: Optional[int] = None    # routing generation answered under
+
+    @property
+    def complete(self) -> bool:
+        return self.shards_answered == self.shards_total \
+            and not self.missing
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of rows covered (falls back to shard fraction when
+        row ranges are unknown)."""
+        if self.rows_total:
+            return (self.rows_covered or 0) / self.rows_total
+        if self.shards_total:
+            return self.shards_answered / self.shards_total
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedResult:
+    """A merged answer plus its :class:`Completeness`.  ``value`` is
+    whatever the caller's merge fn produced over the shards that DID
+    answer; consumers must check ``completeness.complete`` before
+    treating it as authoritative."""
+
+    value: Any
+    completeness: Completeness
+
+
+def completeness_from_routing(answered: Sequence[str],
+                              missing: Sequence[str],
+                              routing: Any = None) -> Completeness:
+    """Build a :class:`Completeness` from answered/missing replica names,
+    pulling row ranges and the generation off a
+    ``core.distributed.RoutingTable`` when one is installed."""
+    answered = list(answered)
+    missing = tuple(missing)
+    rows_total = rows_covered = generation = None
+    if routing is not None:
+        generation = getattr(routing, "generation", None)
+        assignments = getattr(routing, "assignments", None)
+        if assignments:
+            spans = {a.replica: a.row_range[1] - a.row_range[0]
+                     for a in assignments}
+            total = sum(spans.values())
+            if total > 0:
+                rows_total = total
+                rows_covered = sum(spans.get(n, 0) for n in answered)
+    return Completeness(
+        shards_total=len(answered) + len(missing),
+        shards_answered=len(answered), missing=missing,
+        rows_total=rows_total, rows_covered=rows_covered,
+        generation=generation)

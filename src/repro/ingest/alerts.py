@@ -18,6 +18,9 @@ import time
 from collections import deque
 from typing import Callable, Optional, Protocol, Sequence
 
+from repro import chaos
+from repro.core.resilience import RetryPolicy
+
 
 @dataclasses.dataclass(frozen=True)
 class Alert:
@@ -120,19 +123,33 @@ class RetryingSink:
 
     def __init__(self, sink: AlertSink, *, max_queue: int = 4096,
                  base_backoff_s: float = 0.05, max_backoff_s: float = 2.0,
+                 policy: Optional[RetryPolicy] = None,
+                 give_up_after_s: Optional[float] = None,
+                 seed: int = 0,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep):
         self.sink = sink
         self.max_queue = int(max_queue)
         self.base_backoff_s = float(base_backoff_s)
         self.max_backoff_s = float(max_backoff_s)
+        # The policy owns the backoff curve: exponential with deterministic
+        # per-attempt jitter, capped at max_backoff_s.  max_attempts is not
+        # used here — the queue retries forever unless give_up_after_s caps
+        # the total time a failing batch may hold the head of the queue.
+        self.policy = policy or RetryPolicy(
+            base_backoff_s=float(base_backoff_s),
+            max_backoff_s=float(max_backoff_s), seed=int(seed))
+        self.give_up_after_s = (None if give_up_after_s is None
+                                else float(give_up_after_s))
         self._clock = clock
         self._sleep = sleep
         self._queue: deque[Alert] = deque()
         self._failures = 0
         self._next_attempt = 0.0
+        self._first_failure_at: Optional[float] = None
         self.delivered = 0
         self.dropped = 0
+        self.expired = 0
 
     @property
     def pending(self) -> int:
@@ -172,18 +189,32 @@ class RetryingSink:
             return False
         batch = list(self._queue)
         try:
+            chaos.failpoint("ingest.sink.deliver")
             self.sink.emit(batch)
         except Exception:
             self._failures += 1
-            backoff = min(self.base_backoff_s * (2 ** (self._failures - 1)),
-                          self.max_backoff_s)
-            self._next_attempt = now + backoff
+            if self._first_failure_at is None:
+                self._first_failure_at = now
+            if self.give_up_after_s is not None \
+                    and now - self._first_failure_at >= self.give_up_after_s:
+                # Total-deadline cap: this batch has been failing for the
+                # whole budget — drop it so fresh alerts aren't starved
+                # behind a dead sink, and count the loss loudly.
+                for _ in batch:
+                    self._queue.popleft()
+                self.expired += len(batch)
+                self._failures = 0
+                self._next_attempt = 0.0
+                self._first_failure_at = None
+                return not self._queue
+            self._next_attempt = now + self.policy.backoff_s(self._failures)
             return False
         for _ in batch:
             self._queue.popleft()
         self.delivered += len(batch)
         self._failures = 0
         self._next_attempt = 0.0
+        self._first_failure_at = None
         return not self._queue
 
     def drain(self, timeout_s: float = 5.0) -> bool:

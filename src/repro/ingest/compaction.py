@@ -28,6 +28,8 @@ import dataclasses
 import threading
 from typing import Optional
 
+from repro import chaos
+
 
 @dataclasses.dataclass
 class CompactionPolicy:
@@ -86,6 +88,7 @@ class CompactionScheduler:
         action = self.policy.decide(self.seg)
         if action is None:
             return None
+        chaos.failpoint("ingest.compaction.run")
         with self.lock:
             if action == "refresh" \
                     and hasattr(self.store, "refresh_codebooks"):

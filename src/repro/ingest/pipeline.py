@@ -34,6 +34,7 @@ from typing import Callable, Optional, Protocol, Sequence
 
 import numpy as np
 
+from repro import chaos
 from repro.core import imi as imimod
 from repro.data import video as videomod
 from repro.ingest.alerts import Alert, MemorySink, RetryingSink
@@ -352,8 +353,15 @@ class IngestService:
             os.close(fd)
 
     def _append_meta(self, rec: dict) -> None:
+        line = json.dumps(rec, sort_keys=True) + "\n"
         with open(self.meta_log_path, "a", encoding="utf-8") as f:
-            f.write(json.dumps(rec, sort_keys=True) + "\n")
+            if chaos.failpoint("ingest.meta_log.append") == "torn":
+                # crash mid-append: half a JSON line reaches the log; the
+                # recovery scan treats the unparsable tail as dead
+                f.write(line[: max(1, len(line) // 2)])
+                f.flush()
+                chaos.crash_now()
+            f.write(line)
             f.flush()
             os.fsync(f.fileno())
 
@@ -370,6 +378,7 @@ class IngestService:
             json.dump(state, f)
             f.flush()
             os.fsync(f.fileno())
+        chaos.failpoint("ingest.state.replace")
         os.replace(tmp, self.state_path)
         self._fsync_dir(self.state_path.parent)
 

@@ -333,7 +333,27 @@ def main() -> None:
                     help="with --sharded S: if fewer than S devices exist, "
                          "relaunch this process with XLA_FLAGS forcing S "
                          "simulated host devices")
+    ap.add_argument("--request-deadline-ms", type=float, default=None,
+                    help="per-request time budget: every submitted query "
+                         "carries a Deadline; queries that expire in the "
+                         "batcher queue fail fast with DeadlineExceeded "
+                         "instead of occupying a device batch "
+                         "(DESIGN.md §16.2)")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="install a deterministic failpoint schedule "
+                         "(repro.chaos spec JSON, e.g. "
+                         '\'{"seed": 0, "rules": [{"site": '
+                         '"serving.batcher.dispatch", "action": "raise", '
+                         '"hit": 1}]}\'); equivalently set the '
+                         "REPRO_CHAOS_SPEC env var — DESIGN.md §16.1")
     args = ap.parse_args()
+
+    if args.chaos:
+        import json as _json
+
+        from repro import chaos
+        chaos.install(chaos.ChaosSchedule.from_spec(_json.loads(args.chaos)))
+        print(f"chaos schedule installed: {args.chaos}")
 
     if args.sharded and args.sharded_reexec \
             and len(jax.devices()) < args.sharded \
@@ -441,18 +461,30 @@ def main() -> None:
         backend = HedgedExecutor([run_texts, run_texts])
 
     batcher = MicroBatcher(backend, batch_size=args.batch_size,
-                           max_wait_ms=args.max_wait_ms)
+                           max_wait_ms=args.max_wait_ms,
+                           default_deadline_ms=args.request_deadline_ms)
     t0 = time.perf_counter()
     futures = [batcher.submit(q) for q in queries]
+    failed = 0
     for q, f in zip(queries, futures):
-        r = f.result()
+        try:
+            r = f.result()
+        except Exception as e:             # expired deadline / injected fault
+            failed += 1
+            print(f"  {q!r}: FAILED ({type(e).__name__}: {e})")
+            continue
         print(f"  {q!r}: frames {r.frames.tolist()} "
               f"scores {np.round(r.scores, 3).tolist()} "
               f"timings {{{', '.join(f'{k}: {v*1e3:.0f}ms' for k, v in r.timings.items())}}}")
     wall = time.perf_counter() - t0
     batcher.close()
-    print(f"served {len(queries)} queries (batch_size={args.batch_size}, "
-          f"max_wait={args.max_wait_ms:.0f}ms); "
+    extras = ""
+    if args.request_deadline_ms is not None:
+        extras += (f", deadline={args.request_deadline_ms:.0f}ms "
+                   f"({batcher.expired} expired)")
+    print(f"served {len(queries) - failed}/{len(queries)} queries "
+          f"(batch_size={args.batch_size}, "
+          f"max_wait={args.max_wait_ms:.0f}ms{extras}); "
           f"p50 {batcher.latency.quantile(0.5)*1e3:.0f}ms, "
           f"{len(queries)/wall:.1f} QPS")
 

@@ -17,6 +17,7 @@ TPU serving stack must provide itself:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import queue
 import threading
 import time
@@ -24,6 +25,9 @@ from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
+
+from repro import chaos
+from repro.core.resilience import Deadline, DeadlineExceeded
 
 
 class LatencyTracker:
@@ -50,6 +54,21 @@ class _Pending:
     payload: Any
     future: Future
     t_enqueue: float
+    deadline: Optional[Deadline] = None
+
+
+def _accepts_deadline(fn: Callable) -> bool:
+    """Does ``fn`` take a ``deadline=`` keyword?  Inspected once at
+    construction; backends that don't are called without it."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    p = sig.parameters.get("deadline")
+    if p is not None and p.kind in (p.KEYWORD_ONLY,
+                                    p.POSITIONAL_OR_KEYWORD):
+        return True
+    return any(q.kind == q.VAR_KEYWORD for q in sig.parameters.values())
 
 
 class MicroBatcher:
@@ -60,22 +79,38 @@ class MicroBatcher:
     ``query_batch``/``fast_search_batch`` pad to ``query_batch_size``).
     A batch is dispatched when full or when the oldest request has waited
     ``max_wait_ms`` — the latency/throughput knob of the serving front door.
+
+    ``default_deadline_ms`` stamps every request with a
+    :class:`~repro.core.resilience.Deadline` at ``submit`` time (a
+    ``submit(..., deadline=...)`` override wins).  Requests already expired
+    when their batch is assembled are failed with ``DeadlineExceeded``
+    instead of being dispatched — shedding dead work before it reaches the
+    backend — and, when the backend's ``run_batch`` accepts a ``deadline=``
+    keyword (inspected once), the tightest surviving deadline is passed
+    through so the router/shard layer below can keep honoring it.
     """
 
     def __init__(self, run_batch: Callable[[list], list], batch_size: int,
-                 max_wait_ms: float = 5.0):
+                 max_wait_ms: float = 5.0,
+                 default_deadline_ms: Optional[float] = None):
         self.run_batch = run_batch
         self.batch_size = batch_size
         self.max_wait = max_wait_ms / 1e3
+        self.default_deadline_ms = default_deadline_ms
+        self._pass_deadline = _accepts_deadline(run_batch)
+        self.expired = 0               # requests shed before dispatch
         self._q: "queue.Queue[_Pending]" = queue.Queue()
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
         self.latency = LatencyTracker()
 
-    def submit(self, payload: Any) -> Future:
+    def submit(self, payload: Any,
+               deadline: Optional[Deadline] = None) -> Future:
+        if deadline is None and self.default_deadline_ms is not None:
+            deadline = Deadline.after(self.default_deadline_ms / 1e3)
         f: Future = Future()
-        self._q.put(_Pending(payload, f, time.perf_counter()))
+        self._q.put(_Pending(payload, f, time.perf_counter(), deadline))
         return f
 
     def close(self) -> None:
@@ -98,8 +133,29 @@ class MicroBatcher:
                     batch.append(self._q.get(timeout=left))
                 except queue.Empty:
                     break
+            # shed requests whose budget ran out while queued
+            live: list[_Pending] = []
+            for p in batch:
+                if p.deadline is not None and p.deadline.expired():
+                    self.expired += 1
+                    p.future.set_exception(DeadlineExceeded(
+                        "request expired in batch queue"))
+                else:
+                    live.append(p)
+            batch = live
+            if not batch:
+                continue
             try:
-                results = self.run_batch([p.payload for p in batch])
+                chaos.failpoint("serving.batcher.dispatch")
+                kwargs = {}
+                if self._pass_deadline:
+                    budgets = [p.deadline for p in batch
+                               if p.deadline is not None]
+                    if budgets:
+                        kwargs["deadline"] = min(
+                            budgets, key=lambda d: d.expires_at)
+                results = self.run_batch([p.payload for p in batch],
+                                         **kwargs)
                 if len(results) != len(batch):
                     # a silent zip would strand the tail futures forever
                     raise RuntimeError(

@@ -25,6 +25,17 @@ Replicas are callables (in production: per-pod jitted search fns behind an
 RPC stub; in tests: functions).  Pure host-side logic — the module imports
 no jax; `add_replica_from_store` pulls the store in lazily so the router
 can still front any backend.
+
+Failure handling is delegated to one `core.resilience.CircuitBreaker` per
+replica (closed / open / half-open with timed recovery probes); the old
+`unhealthy_after` / `recovery_probe_s` constructor knobs map onto the
+breaker's `failure_threshold` / `recovery_s` and keep their meaning.
+Callers may pass a `core.resilience.Deadline` down `__call__` /
+`call_batch` / `call_sharded`; the router refuses to start (or keep
+retrying) work past the deadline.  `call_sharded(..., degraded_ok=True)`
+opts into partial merges: missing shards are skipped and the merged value
+comes back wrapped in a `DegradedResult` carrying a `Completeness` record
+instead of raising — the strict default still refuses silent partials.
 """
 from __future__ import annotations
 
@@ -35,6 +46,9 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Optional, Sequence
 
+from repro import chaos
+from repro.core.resilience import (CircuitBreaker, Deadline, DegradedResult,
+                                   RetryPolicy, completeness_from_routing)
 from repro.serving.batcher import HedgedExecutor, LatencyTracker
 
 
@@ -43,13 +57,21 @@ class Replica:
     name: str
     fn: Callable[[Any], Any]
     batch_fn: Optional[Callable[[list], list]] = None
-    healthy: bool = True
+    breaker: CircuitBreaker = dataclasses.field(
+        default_factory=CircuitBreaker)
     outstanding: int = 0
-    failures: int = 0
     last_error: Optional[str] = None
     # routing-table generation this replica last acknowledged
     # (core.distributed.RoutingTable protocol); -1 = never installed
     generation: int = -1
+
+    @property
+    def healthy(self) -> bool:
+        return self.breaker.closed
+
+    @property
+    def failures(self) -> int:
+        return self.breaker.failures
 
 
 class ReplicaUnavailable(RuntimeError):
@@ -58,17 +80,24 @@ class ReplicaUnavailable(RuntimeError):
 
 class QueryRouter:
     def __init__(self, *, unhealthy_after: int = 3,
-                 recovery_probe_s: float = 5.0, hedge: bool = True):
+                 recovery_probe_s: float = 5.0, hedge: bool = True,
+                 retry: Optional[RetryPolicy] = None):
         self._replicas: dict[str, Replica] = {}
         self._lock = threading.Lock()
         self.unhealthy_after = unhealthy_after
         self.recovery_probe_s = recovery_probe_s
         self.hedge = hedge
+        # Optional backoff between failover attempts in __call__; None
+        # keeps the historical retry-immediately behavior.
+        self.retry = retry
         self.latency = LatencyTracker()
         self._rng = random.Random(0)
-        self._last_probe: dict[str, float] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
         self._routing: Optional[Any] = None   # distributed.RoutingTable
+
+    def _new_breaker(self) -> CircuitBreaker:
+        return CircuitBreaker(failure_threshold=self.unhealthy_after,
+                              recovery_s=self.recovery_probe_s)
 
     # -- membership -----------------------------------------------------------
     def add_replica(self, name: str, fn: Callable[[Any], Any], *,
@@ -80,7 +109,8 @@ class QueryRouter:
         by mapping ``fn`` inside the shard's worker thread."""
         with self._lock:
             self._replicas[name] = Replica(name=name, fn=fn,
-                                           batch_fn=batch_fn)
+                                           batch_fn=batch_fn,
+                                           breaker=self._new_breaker())
 
     def add_replica_from_store(self, name: str, store_dir: str, *,
                                search_cfg: Any = None,
@@ -135,10 +165,11 @@ class QueryRouter:
             self._replicas.pop(name, None)
 
     def mark_recovered(self, name: str) -> None:
+        """Administrative override: force the replica's breaker closed."""
         with self._lock:
             r = self._replicas.get(name)
             if r:
-                r.healthy, r.failures = True, 0
+                r.breaker.force_close()
 
     def healthy_replicas(self) -> list[Replica]:
         with self._lock:
@@ -148,12 +179,12 @@ class QueryRouter:
     def _pick(self) -> Replica:
         healthy = self.healthy_replicas()
         if not healthy:
-            # probe one unhealthy replica occasionally (self-healing)
+            # No closed breaker: ask each open/half-open breaker for a
+            # recovery-probe slot (self-healing; rate-limited by the
+            # breaker's recovery window + half-open probe budget).
             with self._lock:
                 for r in self._replicas.values():
-                    last = self._last_probe.get(r.name, 0.0)
-                    if time.monotonic() - last > self.recovery_probe_s:
-                        self._last_probe[r.name] = time.monotonic()
+                    if r.breaker.try_acquire():
                         return r
             raise ReplicaUnavailable("no healthy replicas")
         if len(healthy) == 1:
@@ -161,36 +192,44 @@ class QueryRouter:
         a, b = self._rng.sample(healthy, 2)  # power of two choices
         return a if a.outstanding <= b.outstanding else b
 
-    def __call__(self, payload: Any) -> Any:
+    def __call__(self, payload: Any, *,
+                 deadline: Optional[Deadline] = None) -> Any:
         last_exc: Optional[BaseException] = None
-        for _ in range(max(2, len(self._replicas))):
+        for attempt in range(1, max(2, len(self._replicas)) + 1):
+            if deadline is not None:
+                deadline.check("router call")
             r = self._pick()
             t0 = time.perf_counter()
             with self._lock:
                 r.outstanding += 1
             try:
+                chaos.failpoint("router.replica.call")
                 out = r.fn(payload)
                 self.latency.record(time.perf_counter() - t0)
                 with self._lock:
-                    r.failures = 0
-                    r.healthy = True
+                    r.breaker.record_success()
                 return out
             except ReplicaUnavailable:
                 raise
             except BaseException as e:  # replica fault -> demote, retry next
                 last_exc = e
                 with self._lock:
-                    r.failures += 1
+                    r.breaker.record_failure()
                     r.last_error = repr(e)
-                    if r.failures >= self.unhealthy_after:
-                        r.healthy = False
             finally:
                 with self._lock:
                     r.outstanding -= 1
+            if self.retry is not None:
+                backoff = self.retry.backoff_s(attempt)
+                if deadline is not None:
+                    backoff = min(backoff, max(deadline.remaining(), 0.0))
+                if backoff > 0.0:
+                    time.sleep(backoff)
         raise ReplicaUnavailable(f"all replicas failing; last: {last_exc!r}")
 
     # -- batched scatter/gather -------------------------------------------------
-    def call_batch(self, payloads: Sequence[Any]) -> list:
+    def call_batch(self, payloads: Sequence[Any], *,
+                   deadline: Optional[Deadline] = None) -> list:
         """Scatter a batch across healthy replicas, gather in submit order.
 
         The batch is split into up to ``len(healthy)`` contiguous shards
@@ -202,6 +241,8 @@ class QueryRouter:
         payloads = list(payloads)
         if not payloads:
             return []
+        if deadline is not None:
+            deadline.check("router call_batch")
         healthy = self.healthy_replicas()
         if len(healthy) <= 1:
             # single (or no) healthy replica: per-item path handles
@@ -212,7 +253,7 @@ class QueryRouter:
                     return self._run_shard(r, payloads)
                 except Exception:
                     pass                      # demoted; re-route per item
-            return [self(p) for p in payloads]
+            return [self(p, deadline=deadline) for p in payloads]
 
         n_shards = min(len(healthy), len(payloads))
         base, rem = divmod(len(payloads), n_shards)
@@ -232,16 +273,21 @@ class QueryRouter:
                 for i, (_, items) in enumerate(shards)]
         for (off, items), f in zip(shards, futs):
             try:
-                out = f.result()
+                out = f.result(timeout=(None if deadline is None
+                                        else max(deadline.remaining(), 0.0)))
             except ReplicaUnavailable:
                 raise
             except Exception:
-                out = [self(p) for p in items]   # per-item re-route
+                if deadline is not None:
+                    deadline.check("router call_batch re-route")
+                out = [self(p, deadline=deadline) for p in items]
             results[off: off + len(items)] = out
         return results
 
     def call_sharded(self, payload: Any, merge: Callable[[list], Any],
-                     *, replicas: Optional[Sequence[str]] = None) -> Any:
+                     *, replicas: Optional[Sequence[str]] = None,
+                     deadline: Optional[Deadline] = None,
+                     degraded_ok: bool = False) -> Any:
         """Broadcast ONE payload to every healthy replica and merge.
 
         The partitioned-index path: when each replica holds a SHARD of the
@@ -256,13 +302,25 @@ class QueryRouter:
 
         Unlike ``call_batch``, a faulting OR already-demoted replica here
         means a MISSING SHARD — the merged answer would be silently
-        incomplete — so the broadcast refuses to run without every shard
-        and a mid-call fault is demoted and re-raised, never degraded.
-        With a ``RoutingTable`` installed (``install_routing``), the
-        default targets come from the table (one per shard) and any target
-        stamped with an older generation is refused the same way — a
-        straggler from before a migration/split must not be merged.
+        incomplete — so by default the broadcast refuses to run without
+        every shard and a mid-call fault is demoted and re-raised, never
+        degraded.  With a ``RoutingTable`` installed (``install_routing``),
+        the default targets come from the table (one per shard) and any
+        target stamped with an older generation is refused the same way —
+        a straggler from before a migration/split must not be merged.
+
+        ``degraded_ok=True`` is the EXPLICIT opt-in to partial answers:
+        unhealthy, stale, and mid-call-faulting shards are skipped instead
+        of refused, and the return value is always a
+        :class:`~repro.core.resilience.DegradedResult` whose
+        ``completeness`` records exactly which shards (and, with a routing
+        table, which row spans) the merge covers — there is no silent
+        partial merge, only a labeled one.  A degraded result must never
+        be inserted into the plan-level ``ResultCache`` (the cache refuses
+        it; DESIGN.md §16).  Raises only when NO shard can answer.
         """
+        if deadline is not None:
+            deadline.check("router call_sharded")
         with self._lock:
             routing = self._routing
             if replicas is None and routing is not None:
@@ -272,30 +330,56 @@ class QueryRouter:
             if not targets:
                 raise ReplicaUnavailable("no shard replicas registered")
             dead = [r.name for r in targets if not r.healthy]
-            if dead:
-                raise ReplicaUnavailable(
-                    f"shard replicas unhealthy (merge would be "
-                    f"incomplete): {dead}")
+            stale = []
             if routing is not None:
                 stale = [r.name for r in targets
-                         if r.generation != routing.generation]
+                         if r.generation != routing.generation
+                         and r.name not in dead]
+            if not degraded_ok:
+                if dead:
+                    raise ReplicaUnavailable(
+                        f"shard replicas unhealthy (merge would be "
+                        f"incomplete): {dead}")
                 if stale:
                     raise ReplicaUnavailable(
                         f"shard replicas stale (routing generation "
                         f"{routing.generation}, merge would be "
                         f"incomplete): {stale}")
+            skipped = list(dead) + list(stale)
+            live = [r for r in targets if r.name not in skipped]
+            if not live:
+                raise ReplicaUnavailable(
+                    f"no shard replica can answer (unhealthy: {dead}, "
+                    f"stale: {stale})")
             if self._pool is None:
                 self._pool = ThreadPoolExecutor(max_workers=32)
         futs = [self._pool.submit(self._run_shard, r, [payload])
-                for r in targets]
-        outs = [f.result()[0] for f in futs]   # _run_shard demotes on fault
-        return merge(outs)
+                for r in live]
+        if not degraded_ok:
+            outs = [f.result()[0] for f in futs]  # _run_shard demotes on fault
+            return merge(outs)
+        outs, answered, failed = [], [], []
+        for r, f in zip(live, futs):
+            try:
+                out = f.result(timeout=(None if deadline is None
+                                        else max(deadline.remaining(), 0.0)))
+                outs.append(out[0])
+                answered.append(r.name)
+            except Exception:               # demoted by _run_shard; skip
+                failed.append(r.name)
+        if not answered:
+            raise ReplicaUnavailable(
+                f"no shard replica answered (failed: {failed})")
+        comp = completeness_from_routing(answered, skipped + failed,
+                                         routing=routing)
+        return DegradedResult(value=merge(outs), completeness=comp)
 
     def _run_shard(self, r: Replica, items: list) -> list:
         t0 = time.perf_counter()
         with self._lock:
             r.outstanding += len(items)
         try:
+            chaos.failpoint("router.replica.call")
             if r.batch_fn is not None:
                 out = list(r.batch_fn(items))
             else:
@@ -306,15 +390,12 @@ class QueryRouter:
                     f"results for {len(items)} payloads")
             self.latency.record(time.perf_counter() - t0)
             with self._lock:
-                r.failures = 0
-                r.healthy = True
+                r.breaker.record_success()
             return out
         except Exception as e:
             with self._lock:
-                r.failures += 1
+                r.breaker.record_failure()
                 r.last_error = repr(e)
-                if r.failures >= self.unhealthy_after:
-                    r.healthy = False
             raise
         finally:
             with self._lock:
@@ -330,5 +411,7 @@ class QueryRouter:
     def stats(self) -> dict:
         with self._lock:
             return {name: {"healthy": r.healthy, "failures": r.failures,
-                           "outstanding": r.outstanding}
+                           "outstanding": r.outstanding,
+                           "state": r.breaker.state,
+                           "opens": r.breaker.opens}
                     for name, r in self._replicas.items()}

@@ -15,6 +15,8 @@ import os
 import pathlib
 from typing import Any
 
+from repro import chaos
+
 MANIFEST = "MANIFEST.json"
 VERSION = 1
 
@@ -68,5 +70,6 @@ def write_manifest(root: str | pathlib.Path, m: dict) -> None:
         json.dump(m, f, indent=1)
         f.flush()
         os.fsync(f.fileno())
+    chaos.failpoint("store.manifest.replace")
     os.replace(tmp, root / MANIFEST)
     _fsync_dir(root)

@@ -23,6 +23,8 @@ from typing import Any, Mapping
 import ml_dtypes
 import numpy as np
 
+from repro import chaos
+
 FOOTER = "footer.json"
 _CRC_CHUNK = 1 << 22  # rows per crc chunk (bounded memory on mmap reads)
 
@@ -62,6 +64,7 @@ def write_segment(seg_dir: str | pathlib.Path,
     seg_dir = pathlib.Path(seg_dir)
     seg_dir.mkdir(parents=True, exist_ok=False)
     footer: dict[str, Any] = {"version": 1, "arrays": {}, "extra": extra or {}}
+    last_path: pathlib.Path | None = None
     for name, arr in arrays.items():
         arr = np.ascontiguousarray(arr)
         logical = str(arr.dtype)
@@ -76,6 +79,15 @@ def write_segment(seg_dir: str | pathlib.Path,
             "dtype": logical, "storage_dtype": str(arr.dtype),
             "shape": list(arr.shape), "crc32": _crc32(arr),
         }
+        last_path = path
+    if chaos.failpoint("store.segment.write.torn") == "torn":
+        # crash between array files and footer: truncate the last .npy so
+        # the dir is visibly incomplete (no footer -> SegmentCorrupt, and
+        # nothing references it until a manifest swap commits the name)
+        if last_path is not None:
+            with open(last_path, "r+b") as f:
+                f.truncate(max(1, last_path.stat().st_size // 2))
+        chaos.crash_now()
     fpath = seg_dir / FOOTER
     with open(fpath, "w") as f:
         json.dump(footer, f, indent=1)
@@ -102,8 +114,14 @@ def open_segment(seg_dir: str | pathlib.Path, *, mmap: bool = True,
     footer = json.loads(fpath.read_text())
     out: dict[str, np.ndarray] = {}
     for name, meta in footer["arrays"].items():
-        arr = np.load(seg_dir / f"{name}.npy",
-                      mmap_mode="r" if mmap else None)
+        try:
+            arr = np.load(seg_dir / f"{name}.npy",
+                          mmap_mode="r" if mmap else None)
+        except (ValueError, OSError) as e:
+            # damage inside the .npy header/frame surfaces as numpy parse
+            # errors — refuse with the segment-corruption type, loudly
+            raise SegmentCorrupt(
+                f"{seg_dir}/{name}: unreadable array file ({e})") from e
         if str(arr.dtype) != meta["storage_dtype"] \
                 or list(arr.shape) != meta["shape"]:
             raise SegmentCorrupt(

@@ -34,6 +34,7 @@ from typing import Any, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import chaos
 from repro.core import imi as imimod
 from repro.core.imi import IMIIndex
 from repro.core.incremental import DeltaSegment, SegmentedIndex
@@ -311,6 +312,9 @@ class VectorStore:
             cb_arrays["rotation"] = np.asarray(new_base.pq.rotation,
                                                np.float32)
         _savez_synced(self.root / name, **cb_arrays)
+        # the window where the new codebooks file exists but nothing
+        # references it: a crash here must leave the OLD generation live
+        chaos.failpoint("store.codebooks.write")
         old = self.manifest["codebooks"]
         self.manifest = {**self.manifest, "codebooks": name}
         self._checkpoint(rewrite_base=True)   # <- the atomic commit
@@ -357,6 +361,9 @@ class VectorStore:
         m["deltas"] = names
         m["tombstones"] = sorted(self.seg.tombstones)
         m["last_seq"] = self._seq
+        # every new segment is written but unreferenced: a crash in this
+        # window must reopen on the OLD manifest, replaying the un-reset WAL
+        chaos.failpoint("store.checkpoint.pre_manifest")
         manifestmod.write_manifest(self.root, m)   # <- commit point
         self.manifest = m
         self._delta_names = [(n, len(s.ids))

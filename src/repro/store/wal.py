@@ -28,6 +28,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro import chaos
+
 MAGIC = b"LVWL"
 VERSION = 1
 _HDR = struct.Struct("<II")      # body_len, crc32
@@ -150,6 +152,12 @@ class WriteAheadLog:
 
     def _commit(self, blob: bytes) -> None:
         assert self._f is not None, "WAL is closed"
+        if chaos.failpoint("store.wal.append.pre_fsync") == "torn":
+            # crash mid-append: a prefix of the framed record reaches the
+            # file (the CRC check makes scan() treat it as a damaged tail)
+            self._f.write(blob[: max(1, len(blob) // 2)])
+            self._f.flush()
+            chaos.crash_now()
         self._f.write(blob)
         self._f.flush()
         if self.fsync:
@@ -167,6 +175,7 @@ class WriteAheadLog:
     def reset(self) -> None:
         """Drop all records (after they were folded into segments)."""
         assert self._f is not None, "WAL is closed"
+        chaos.failpoint("store.wal.reset")
         self._f.close()
         with open(self.path, "wb") as f:
             f.write(MAGIC + struct.pack("<I", VERSION))

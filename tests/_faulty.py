@@ -30,12 +30,14 @@ class FaultyReplica:
     def __init__(self, fn: Callable[[Any], Any], *, seed: int = 0,
                  fail_rate: float = 0.0,
                  fail_calls: Optional[set] = None,
-                 fail_after: Optional[int] = None):
+                 fail_after: Optional[int] = None,
+                 flap_period: Optional[int] = None):
         self._fn = fn
         self._rng = random.Random(seed)
         self._fail_rate = fail_rate
         self._fail_calls = fail_calls
         self._fail_after = fail_after
+        self._flap_period = flap_period
         self.calls = 0
         self.faults = 0
 
@@ -44,6 +46,11 @@ class FaultyReplica:
             return idx in self._fail_calls
         if self._fail_after is not None and idx >= self._fail_after:
             return True
+        if self._flap_period is not None:
+            # flapping replica: alternates P bad calls, P good calls, ...
+            # (starts BAD, so breakers trip, half-open probes catch the
+            # good window, and the cycle repeats deterministically)
+            return (idx // self._flap_period) % 2 == 0
         return self._rng.random() < self._fail_rate
 
     def __call__(self, payload: Any) -> Any:

@@ -17,7 +17,8 @@ import textwrap
 import numpy as np
 import pytest
 
-from repro.analysis import ast_checks, baseline as basemod, jaxpr_checks
+from repro.analysis import (ast_checks, baseline as basemod, chaos_checks,
+                            jaxpr_checks)
 from repro.analysis.findings import (
     Finding,
     RULE_SUPPRESSION,
@@ -185,6 +186,83 @@ def test_meta_log_after_wal_fires_ds203():
 
 def test_current_durability_tree_is_clean():
     findings, _ = ast_checks.run_ast_checks(REPO)
+    assert findings == [], [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# CH4xx failpoint / kill-harness cross-checks
+# ---------------------------------------------------------------------------
+CHAOS_REGISTRY_FIXTURE = textwrap.dedent("""
+    SITES = (
+        Site("store.thing.write", "durability", "repro.store.thing",
+             ("raise", "crash"), "doc"),
+        Site("rpc.thing.call", "rpc", "repro.thing", ("raise",), "doc"),
+    )
+""")
+
+
+def test_ch401_flags_non_literal_and_unregistered_names():
+    sites = chaos_checks.registry_sites(CHAOS_REGISTRY_FIXTURE)
+    src = textwrap.dedent("""
+        from repro import chaos
+
+        def f(name):
+            chaos.failpoint(name)               # computed: not checkable
+            chaos.failpoint("no.such.site")     # unregistered
+            chaos.failpoint("store.thing.write")
+    """)
+    got, called = chaos_checks.check_failpoint_source(src, "m.py", sites)
+    assert rules_of(got) == ["CH401", "CH401"]
+    assert "string literal" in got[0].message
+    assert "no.such.site" in got[1].message
+    assert called == {"store.thing.write"}
+
+
+def test_ch402_flags_unexercised_site_stale_entry_and_wrong_kind():
+    harness = 'EXERCISED_SITES = ["rpc.thing.call", "gone.site"]\n'
+    got = chaos_checks.check_kill_coverage(CHAOS_REGISTRY_FIXTURE, harness)
+    assert rules_of(got) == ["CH402", "CH402", "CH402"]
+    assert "store.thing.write" in got[0].message      # durability, missing
+    assert "not 'durability'" in got[1].message        # rpc in kill list
+    assert "not a registered" in got[2].message        # gone.site, stale
+
+
+def _chaos_mini_tree(tmp_path, *, call_rpc):
+    (tmp_path / "src/repro/chaos").mkdir(parents=True, exist_ok=True)
+    (tmp_path / "src/repro/chaos/registry.py").write_text(
+        CHAOS_REGISTRY_FIXTURE)
+    (tmp_path / "src/repro/chaos/harness.py").write_text(
+        'EXERCISED_SITES = ["store.thing.write"]\n')
+    body = ('from repro import chaos\n\n'
+            'def f():\n    chaos.failpoint("store.thing.write")\n')
+    if call_rpc:
+        body += '    chaos.failpoint("rpc.thing.call")\n'
+    (tmp_path / "src/repro/mod.py").write_text(body)
+
+
+def test_ch401_flags_dead_registry_entry(tmp_path):
+    # a site nobody calls is dead configuration; adding the call site
+    # makes the mini tree fully clean
+    _chaos_mini_tree(tmp_path, call_rpc=False)
+    findings, _ = chaos_checks.run_chaos_checks(tmp_path)
+    assert rules_of(findings) == ["CH401"]
+    assert "rpc.thing.call" in findings[0].message
+    _chaos_mini_tree(tmp_path, call_rpc=True)
+    findings, _ = chaos_checks.run_chaos_checks(tmp_path)
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_ch4_parsed_registry_matches_imported_catalog():
+    from repro.chaos import registry as live
+    parsed = chaos_checks.registry_sites(
+        (REPO / chaos_checks.REGISTRY_REL).read_text(encoding="utf-8"))
+    assert set(parsed) == set(live.site_names())
+    assert {n for n, (_, k) in parsed.items() if k == "durability"} \
+        == set(live.durability_sites())
+
+
+def test_ch4_current_tree_is_clean():
+    findings, _ = chaos_checks.run_chaos_checks(REPO)
     assert findings == [], [f.format() for f in findings]
 
 

@@ -1,0 +1,417 @@
+"""repro.chaos + repro.core.resilience: deterministic failpoints, the
+unified retry/deadline/breaker layer, and the graceful-degradation
+contract (DESIGN.md §16)."""
+import json
+
+import pytest
+
+from repro import chaos
+from repro.chaos import registry as chaos_registry
+from repro.chaos.failpoints import ChaosSchedule, FailpointError
+from repro.core.resilience import (CircuitBreaker, Completeness, Deadline,
+                                   DeadlineExceeded, DegradedResult,
+                                   RetryPolicy, completeness_from_routing)
+
+
+# ---------------------------------------------------------------------------
+# Registry + failpoint engine
+# ---------------------------------------------------------------------------
+def test_registry_catalog_well_formed():
+    names = chaos_registry.site_names()
+    assert len(names) == len(chaos_registry.SITES)
+    for s in chaos_registry.SITES:
+        assert s.kind in ("durability", "rpc")
+        assert s.supports and set(s.supports) <= set(chaos_registry.ACTIONS)
+        # torn requires call-site cooperation; crash is universal
+        assert "crash" in s.supports
+    assert set(chaos_registry.durability_sites()) \
+        | set(chaos_registry.rpc_sites()) == names
+    with pytest.raises(KeyError):
+        chaos_registry.site("no.such.site")
+
+
+def test_failpoint_inactive_is_noop_and_uncounted():
+    assert not chaos.is_active()
+    assert chaos.failpoint("store.wal.append.pre_fsync") is None
+    assert chaos.hits() == {} and chaos.fired() == []
+
+
+def test_schedule_validates_at_build_time():
+    with pytest.raises(KeyError):
+        ChaosSchedule().on("no.such.site", "raise")
+    with pytest.raises(ValueError):
+        # manifest replace must not offer torn (that would inject a bug,
+        # not simulate a crash — registry docstring)
+        ChaosSchedule().on("store.manifest.replace", "torn")
+    with pytest.raises(ValueError):
+        ChaosSchedule().on("router.replica.call", "explode")
+    with pytest.raises(ValueError):
+        ChaosSchedule().on("router.replica.call", "raise", hit=0)
+
+
+def test_failpoint_nth_hit_raise_and_counters():
+    sched = ChaosSchedule(seed=3).on("router.replica.call", "raise", hit=3)
+    with chaos.active(sched):
+        assert chaos.failpoint("router.replica.call") is None
+        assert chaos.failpoint("router.replica.call") is None
+        with pytest.raises(FailpointError) as ei:
+            chaos.failpoint("router.replica.call")
+        assert ei.value.site == "router.replica.call" and ei.value.hit == 3
+        assert chaos.failpoint("router.replica.call") is None  # only hit 3
+        assert chaos.hits() == {"router.replica.call": 4}
+        assert chaos.fired() == [("router.replica.call", "raise", 3)]
+    assert not chaos.is_active() and chaos.hits() == {}
+
+
+def test_failpoint_every_and_torn_return():
+    sched = (ChaosSchedule()
+             .on("router.replica.call", "raise", hit=2, every=True)
+             .on("store.wal.append.pre_fsync", "torn", hit=1))
+    with chaos.active(sched):
+        assert chaos.failpoint("router.replica.call") is None
+        for _ in range(3):                       # fires on 2, 3, 4, ...
+            with pytest.raises(FailpointError):
+                chaos.failpoint("router.replica.call")
+        # torn is returned to the call site, not acted on here
+        assert chaos.failpoint("store.wal.append.pre_fsync") == "torn"
+
+
+def test_failpoint_active_rejects_unregistered_name():
+    with chaos.active(ChaosSchedule()):
+        with pytest.raises(KeyError):
+            chaos.failpoint("not.a.site")
+
+
+def test_schedule_spec_roundtrip_and_env_install():
+    sched = (ChaosSchedule(seed=11)
+             .on("router.replica.call", "raise", hit=2)
+             .on("serving.batcher.dispatch", "delay", delay_s=0.5))
+    spec = json.loads(json.dumps(sched.to_spec()))   # through real JSON
+    back = ChaosSchedule.from_spec(spec)
+    assert back.seed == 11 and back.rules == sched.rules
+    assert not chaos.install_from_env(environ={})
+    assert chaos.install_from_env(
+        environ={chaos.failpoints.ENV_SPEC: json.dumps(spec)})
+    try:
+        assert chaos.is_active()
+        with pytest.raises(FailpointError):
+            chaos.failpoint("router.replica.call")
+            chaos.failpoint("router.replica.call")
+    finally:
+        chaos.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy + Deadline
+# ---------------------------------------------------------------------------
+def test_retry_policy_backoff_deterministic_exponential_capped():
+    p = RetryPolicy(base_backoff_s=0.1, max_backoff_s=1.0, jitter=0.5,
+                    seed=4)
+    seq = [p.backoff_s(a) for a in range(1, 8)]
+    assert seq == [p.backoff_s(a) for a in range(1, 8)]  # deterministic
+    for a, b in enumerate(seq, start=1):
+        assert 0.05 * 2 ** (a - 1) * 0.999 <= b or b <= 1.0
+        assert b <= 1.0 + 1e-9                            # hard cap
+    assert RetryPolicy(seed=1).backoff_s(1) != \
+        RetryPolicy(seed=2).backoff_s(1)                  # decorrelated
+    no_jitter = RetryPolicy(base_backoff_s=0.1, max_backoff_s=10.0,
+                            jitter=0.0)
+    assert [no_jitter.backoff_s(a) for a in (1, 2, 3)] == [0.1, 0.2, 0.4]
+
+
+def test_retry_policy_call_retries_then_succeeds():
+    calls = {"n": 0}
+    slept = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    p = RetryPolicy(max_attempts=4, base_backoff_s=0.01)
+    assert p.call(flaky, sleep=slept.append) == "ok"
+    assert calls["n"] == 3 and len(slept) == 2
+    assert slept == [p.backoff_s(1), p.backoff_s(2)]
+
+
+def test_retry_policy_exhaustion_reraises():
+    p = RetryPolicy(max_attempts=3, base_backoff_s=0.0, jitter=0.0)
+    calls = {"n": 0}
+
+    def always():
+        calls["n"] += 1
+        raise ValueError("nope")
+
+    with pytest.raises(ValueError):
+        p.call(always, sleep=lambda s: None)
+    assert calls["n"] == 3
+
+
+def test_deadline_budget_caps_retry_loop():
+    clock = {"t": 0.0}
+    dl = Deadline.after(1.0, clock=lambda: clock["t"])
+    assert not dl.expired() and dl.remaining() == 1.0
+    p = RetryPolicy(max_attempts=100, base_backoff_s=0.4, jitter=0.0)
+    attempts = {"n": 0}
+
+    def failing():
+        attempts["n"] += 1
+        clock["t"] += 0.3
+        raise RuntimeError("down")
+
+    def sleep(s):
+        clock["t"] += s
+
+    with pytest.raises(DeadlineExceeded):
+        p.call(failing, deadline=dl, sleep=sleep)
+    assert attempts["n"] < 100       # the budget, not max_attempts, ended it
+    clock["t"] = 2.0
+    with pytest.raises(DeadlineExceeded):
+        dl.check("late work")
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker lifecycle
+# ---------------------------------------------------------------------------
+def test_breaker_trips_after_threshold_and_half_open_recovers():
+    clock = {"t": 0.0}
+    b = CircuitBreaker(failure_threshold=3, recovery_s=5.0,
+                       clock=lambda: clock["t"])
+    assert b.closed and b.can_attempt()
+    b.record_failure()
+    b.record_failure()
+    assert b.closed and b.failures == 2
+    b.record_failure()
+    assert b.state == "open" and not b.can_attempt() and b.opens == 1
+    assert not b.try_acquire()                     # still inside recovery_s
+    clock["t"] = 5.0
+    assert b.can_attempt()
+    assert b.try_acquire()                         # -> half-open, probe slot
+    assert b.state == "half-open"
+    assert not b.try_acquire()                     # probe budget exhausted
+    b.record_success()
+    assert b.closed and b.failures == 0
+
+
+def test_breaker_half_open_probe_failure_retrips():
+    clock = {"t": 0.0}
+    b = CircuitBreaker(failure_threshold=1, recovery_s=2.0,
+                       clock=lambda: clock["t"])
+    b.record_failure()
+    clock["t"] = 2.0
+    assert b.try_acquire()
+    b.record_failure()                             # probe failed
+    assert b.state == "open" and b.opens == 2
+    assert not b.try_acquire()                     # window restarted
+    clock["t"] = 4.0
+    assert b.try_acquire()
+
+
+def test_breaker_zero_recovery_probes_immediately_and_force_close():
+    b = CircuitBreaker(failure_threshold=1, recovery_s=0.0)
+    b.record_failure()
+    assert b.try_acquire()           # legacy recovery_probe_s=0.0 semantics
+    b.record_failure()
+    assert b.try_acquire()
+    b.force_close()
+    assert b.closed and b.failures == 0
+    b.force_open()
+    assert b.state == "open"
+
+
+# ---------------------------------------------------------------------------
+# Completeness / DegradedResult / cache exclusion
+# ---------------------------------------------------------------------------
+def test_completeness_coverage_and_complete():
+    full = Completeness(shards_total=4, shards_answered=4)
+    assert full.complete and full.coverage == 1.0
+    part = Completeness(shards_total=4, shards_answered=3,
+                        missing=("shard-2",), rows_total=1000,
+                        rows_covered=700, generation=7)
+    assert not part.complete and part.coverage == 0.7
+
+
+def test_completeness_from_routing_rows():
+    import dataclasses as dc
+
+    @dc.dataclass
+    class A:
+        shard_id: int
+        row_range: tuple
+        replica: str
+
+    class RT:
+        generation = 7
+        assignments = (A(0, (0, 600), "r0"), A(1, (600, 1000), "r1"))
+
+    comp = completeness_from_routing(["r0"], ["r1"], routing=RT())
+    assert comp.shards_total == 2 and comp.shards_answered == 1
+    assert comp.rows_total == 1000 and comp.rows_covered == 600
+    assert comp.generation == 7 and not comp.complete
+    bare = completeness_from_routing(["a", "b"], [])
+    assert bare.complete and bare.rows_total is None
+
+
+def test_result_cache_refuses_degraded_results():
+    from repro.core.optimizer import ResultCache
+
+    cache = ResultCache(capacity=8)
+    degraded = DegradedResult(
+        value={"ids": [1, 2]},
+        completeness=Completeness(shards_total=2, shards_answered=1,
+                                  missing=("s1",)))
+    cache.put("k", None, degraded)
+    assert cache.get("k", None) is None
+    assert len(cache) == 0 and cache.rejected_degraded == 1
+    # a COMPLETE degraded-path result is admissible
+    ok = DegradedResult(
+        value={"ids": [1, 2]},
+        completeness=Completeness(shards_total=2, shards_answered=2))
+    cache.put("k", None, ok)
+    assert cache.get("k", None) == ok and cache.rejected_degraded == 1
+    # plain results unaffected
+    cache.put("p", None, {"ids": [3]})
+    assert cache.get("p", None) == {"ids": [3]}
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher deadlines + dispatch failpoint
+# ---------------------------------------------------------------------------
+def test_batcher_sheds_expired_requests_and_propagates_deadline():
+    from repro.serving.batcher import MicroBatcher
+
+    seen = {"deadline": "unset"}
+
+    def backend(payloads, deadline=None):
+        seen["deadline"] = deadline
+        return [p * 2 for p in payloads]
+
+    mb = MicroBatcher(backend, batch_size=4, max_wait_ms=5.0)
+    try:
+        dl = Deadline.after(30.0)
+        assert mb.submit(3, deadline=dl).result(timeout=5) == 6
+        assert seen["deadline"] is dl            # tightest budget forwarded
+        # an already-expired request never reaches the backend
+        dead = Deadline.after(-1.0)
+        with pytest.raises(DeadlineExceeded):
+            mb.submit(4, deadline=dead).result(timeout=5)
+        assert mb.expired >= 1
+    finally:
+        mb.close()
+
+
+def test_batcher_default_deadline_and_backend_without_kwarg():
+    from repro.serving.batcher import MicroBatcher
+
+    mb = MicroBatcher(lambda ps: [p + 1 for p in ps], batch_size=2,
+                      default_deadline_ms=30_000.0)
+    try:
+        assert mb.submit(1).result(timeout=5) == 2   # no kwarg passed
+    finally:
+        mb.close()
+
+
+def test_batcher_dispatch_failpoint_fails_the_batch():
+    from repro.serving.batcher import MicroBatcher
+
+    mb = MicroBatcher(lambda ps: ps, batch_size=1, max_wait_ms=1.0)
+    try:
+        with chaos.active(ChaosSchedule().on("serving.batcher.dispatch",
+                                             "raise", hit=1)):
+            with pytest.raises(FailpointError):
+                mb.submit("x").result(timeout=5)
+        assert mb.submit("y").result(timeout=5) == "y"   # off again
+    finally:
+        mb.close()
+
+
+# ---------------------------------------------------------------------------
+# Router deadlines + degraded reads
+# ---------------------------------------------------------------------------
+def test_router_deadline_refuses_expired_call():
+    from repro.serving.router import QueryRouter
+
+    r = QueryRouter(hedge=False)
+    r.add_replica("a", lambda p: p)
+    assert r(1, deadline=Deadline.after(30.0)) == 1
+    with pytest.raises(DeadlineExceeded):
+        r(1, deadline=Deadline.after(-1.0))
+    with pytest.raises(DeadlineExceeded):
+        r.call_batch([1, 2], deadline=Deadline.after(-1.0))
+    with pytest.raises(DeadlineExceeded):
+        r.call_sharded(1, sum, deadline=Deadline.after(-1.0))
+    r.close()
+
+
+def test_router_degraded_read_skips_dead_shard_and_labels_result():
+    from repro.serving.router import QueryRouter, ReplicaUnavailable
+
+    r = QueryRouter(hedge=False, unhealthy_after=1)
+    r.add_replica("s0", lambda p: [p])
+    r.add_replica("s1", lambda p: [p * 10])
+    # strict + healthy: plain merged value (not wrapped)
+    assert r.call_sharded(2, lambda outs: sorted(
+        v for o in outs for v in o)) == [2, 20]
+    # demote s1
+    r._replicas["s1"].breaker.force_open()
+    with pytest.raises(ReplicaUnavailable):
+        r.call_sharded(2, lambda outs: outs)          # strict refuses
+    res = r.call_sharded(2, lambda outs: sorted(
+        v for o in outs for v in o), degraded_ok=True)
+    assert isinstance(res, DegradedResult)
+    assert res.value == [2]
+    assert not res.completeness.complete
+    assert res.completeness.missing == ("s1",)
+    assert res.completeness.shards_answered == 1
+    # degraded with every shard up: complete, still labeled
+    r.mark_recovered("s1")
+    res2 = r.call_sharded(2, lambda outs: sorted(
+        v for o in outs for v in o), degraded_ok=True)
+    assert isinstance(res2, DegradedResult) and res2.completeness.complete
+    assert res2.value == [2, 20]
+    r.close()
+
+
+def test_router_degraded_read_with_all_shards_dead_raises():
+    from repro.serving.router import QueryRouter, ReplicaUnavailable
+
+    r = QueryRouter(hedge=False)
+    r.add_replica("s0", lambda p: [p])
+    r._replicas["s0"].breaker.force_open()
+    with pytest.raises(ReplicaUnavailable):
+        r.call_sharded(1, lambda o: o, degraded_ok=True)
+    r.close()
+
+
+def test_router_degraded_result_never_enters_cache():
+    from repro.core.optimizer import ResultCache
+    from repro.serving.router import QueryRouter
+
+    r = QueryRouter(hedge=False, unhealthy_after=1)
+    r.add_replica("s0", lambda p: [p])
+    r.add_replica("s1", lambda p: [p])
+    r._replicas["s1"].breaker.force_open()
+    res = r.call_sharded(5, lambda outs: outs, degraded_ok=True)
+    cache = ResultCache()
+    cache.put("plan-key", None, res)
+    assert len(cache) == 0 and cache.rejected_degraded == 1
+    r.close()
+
+
+def test_router_replica_call_failpoint_drives_breaker():
+    from repro.serving.router import QueryRouter
+
+    r = QueryRouter(hedge=False, unhealthy_after=2)
+    r.add_replica("only", lambda p: p)
+    sched = ChaosSchedule().on("router.replica.call", "raise", hit=1,
+                               every=True)
+    with chaos.active(sched):
+        with pytest.raises(Exception):
+            for _ in range(4):
+                r(1)
+    assert not r.stats()["only"]["healthy"]
+    assert r.stats()["only"]["state"] == "open"
+    r.mark_recovered("only")
+    assert r(1) == 1 and r.stats()["only"]["healthy"]
+    r.close()

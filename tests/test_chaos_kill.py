@@ -1,0 +1,48 @@
+"""Kill-at-every-failpoint crash-consistency harness (DESIGN.md §16.5).
+
+Each test arms a subprocess to hard-crash (``os._exit``) at one
+registered durability failpoint, then reopens the survivors and asserts
+the invariant catalog (no acked row lost, idempotent replay,
+exactly-once-effect alerts, cache-token flip, manifest integrity).  The
+subprocess MUST die with ``CRASH_EXIT`` — a clean exit means the
+failpoint never fired and the test would be vacuous.
+"""
+import pytest
+
+from repro.chaos import harness
+from repro.chaos import registry as chaos_registry
+
+STORE_SITES = [s for s in harness.EXERCISED_SITES
+               if harness.SITE_PLANS[s].workload == "store"]
+INGEST_SITES = [s for s in harness.EXERCISED_SITES
+                if harness.SITE_PLANS[s].workload == "ingest"]
+
+
+def test_every_durability_site_has_a_kill_plan():
+    harness.check_coverage()
+    assert set(harness.EXERCISED_SITES) \
+        == set(chaos_registry.durability_sites())
+
+
+@pytest.mark.parametrize("site", STORE_SITES)
+def test_kill_store_site(site, tmp_path):
+    rep = harness.kill_at_site(site, tmp_path)
+    assert rep["ok"] and rep["site"] == site
+
+
+@pytest.mark.parametrize("site", INGEST_SITES)
+def test_kill_ingest_site(site, tmp_path):
+    rep = harness.kill_at_site(site, tmp_path)
+    assert rep["ok"] and rep["site"] == site
+    assert rep["alerts"] == len(harness.EXPECTED_KEYS)
+
+
+def test_clean_run_exits_zero_and_verifies(tmp_path):
+    """Without a chaos spec the same workloads complete and verify —
+    the harness's invariants hold on the happy path too."""
+    harness.run_store_workload(tmp_path / "store_flavor")
+    rep = harness.verify_store(tmp_path / "store_flavor")
+    assert rep["ok"] and rep["inflight"] is None
+    harness.run_ingest_workload(tmp_path / "ingest_flavor")
+    rep = harness.verify_ingest(tmp_path / "ingest_flavor")
+    assert rep["ok"] and rep["alerts"] == len(harness.EXPECTED_KEYS)

@@ -125,16 +125,42 @@ def test_retrying_sink_backoff_then_delivery():
     flaky = FlakySink(fail_times=2)
     sink = RetryingSink(flaky, base_backoff_s=1.0, max_backoff_s=8.0,
                         clock=lambda: clock["t"], sleep=lambda s: None)
+    # the RetryPolicy owns the (jittered, exponential, capped) schedule;
+    # pin the windows it actually produces rather than bare doubling
+    b1, b2 = sink.policy.backoff_s(1), sink.policy.backoff_s(2)
+    assert 0.5 <= b1 <= 1.5 and b2 > b1 and b2 <= 8.0
+    assert b1 == sink.policy.backoff_s(1)   # deterministic per attempt
     sink.enqueue([_alert(1), _alert(2)])
     assert not sink.try_deliver() and sink.pending == 2
     # backoff window: an immediate retry is a no-op (no sink call)
     assert not sink.try_deliver() and flaky.calls == 1
-    clock["t"] = 1.1
+    clock["t"] = b1 / 2
+    assert not sink.try_deliver() and flaky.calls == 1   # still inside
+    clock["t"] = b1 + 1e-6
     assert not sink.try_deliver() and flaky.calls == 2   # fails again
-    clock["t"] = 1.1 + 2.0                                # doubled backoff
+    clock["t"] = b1 + 1e-6 + b2 + 1e-6                    # wider 2nd window
     assert sink.try_deliver() and sink.pending == 0
     assert [a.frame for a in flaky.alerts] == [1, 2]
     assert sink.delivered == 2
+
+
+def test_retrying_sink_gives_up_after_total_deadline():
+    clock = {"t": 0.0}
+    flaky = FlakySink(fail_times=10**9)     # never recovers
+    sink = RetryingSink(flaky, base_backoff_s=0.1, max_backoff_s=0.5,
+                        give_up_after_s=2.0,
+                        clock=lambda: clock["t"], sleep=lambda s: None)
+    sink.enqueue([_alert(1), _alert(2)])
+    while clock["t"] < 2.0:
+        sink.try_deliver()
+        clock["t"] += 0.25
+    sink.try_deliver()
+    # the batch held the queue head for > 2s of failures -> dropped loudly
+    assert sink.pending == 0 and sink.expired == 2 and sink.delivered == 0
+    # and the failure state reset: a fresh batch starts a fresh budget
+    flaky.fail_times = flaky.calls          # sink recovers now
+    sink.enqueue([_alert(3)])
+    assert sink.try_deliver() and sink.delivered == 1 and sink.expired == 2
 
 
 def test_retrying_sink_bounded_queue_drops_oldest():

@@ -1,0 +1,238 @@
+"""Torn-tail / corruption fuzz for store reopen (DESIGN.md §16.5).
+
+Two families of damage, exhaustively applied:
+
+  * WAL truncation at EVERY byte offset — the tail record is torn at
+    every possible instant; ``wal.scan`` must return exactly the intact
+    record prefix (bit-identical payloads), flag the damaged tail, and
+    never raise or fabricate rows.  Representative offsets then go
+    through a full ``VectorStore.open`` to prove the recovered live-id
+    set equals the intact-prefix expectation.
+  * Segment corruption — a single bit flipped in any base array, a
+    truncated array file, a deleted footer: ``open(verify=True)`` must
+    refuse loudly (``SegmentCorrupt``), never serve wrong rows.
+"""
+import json
+import pathlib
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.store import VectorStore
+from repro.store import manifest as manifestmod
+from repro.store import segment as segmentmod
+from repro.store import wal as walmod
+
+D = 8
+
+
+def _records():
+    rng = np.random.default_rng(0)
+    return [
+        ("insert", 1, rng.normal(0, 1, (4, D)).astype(np.float32),
+         np.arange(100, 104)),
+        ("delete", 2, None, np.array([101])),
+        ("insert", 3, rng.normal(0, 1, (3, D)).astype(np.float32),
+         np.arange(104, 107)),
+    ]
+
+
+def _write_wal(path: pathlib.Path) -> list[int]:
+    """Write the fixture records; return the byte offset after each
+    record (frame boundaries, starting with the header end)."""
+    wal = walmod.WriteAheadLog.open(path)
+    bounds = [path.stat().st_size]
+    for kind, seq, vecs, ids in _records():
+        if kind == "insert":
+            wal.append_insert(seq, vecs, ids)
+        else:
+            wal.append_delete(seq, ids)
+        bounds.append(path.stat().st_size)
+    wal.close()
+    return bounds
+
+
+def _same_record(a: walmod.WalRecord, b: walmod.WalRecord) -> bool:
+    if (a.seq, a.kind) != (b.seq, b.kind):
+        return False
+    if not np.array_equal(a.ids, b.ids):
+        return False
+    if (a.vectors is None) != (b.vectors is None):
+        return False
+    return a.vectors is None or np.array_equal(a.vectors, b.vectors)
+
+
+def test_wal_scan_survives_truncation_at_every_byte(tmp_path):
+    path = tmp_path / "wal.log"
+    bounds = _write_wal(path)
+    data = path.read_bytes()
+    full = walmod.scan(path)
+    assert len(full.records) == 3 and not full.damaged_tail
+    assert full.good_end == bounds[-1] == len(data)
+
+    cut = tmp_path / "cut.log"
+    for off in range(len(data) + 1):
+        cut.write_bytes(data[:off])
+        res = walmod.scan(cut)           # must never raise
+        # exactly the records whose frames fit under the cut, no more
+        n_expect = sum(1 for b in bounds[1:] if b <= off)
+        assert len(res.records) == n_expect, f"offset {off}"
+        for got, want in zip(res.records, full.records):
+            assert _same_record(got, want), f"offset {off}: payload drift"
+        assert res.good_end == (bounds[n_expect] if off >= bounds[0] else 0)
+        # damaged iff the cut landed inside a frame (or a non-empty
+        # partial header; a zero-byte file is absent, not damaged)
+        expect_damaged = off > 0 if off < bounds[0] \
+            else off not in bounds
+        assert res.damaged_tail == expect_damaged, f"offset {off}"
+
+
+def test_wal_bitflip_in_any_record_drops_only_the_tail(tmp_path):
+    """A flipped bit inside record k kills k and everything after (scan
+    cannot trust framing past a bad CRC) but records < k replay intact."""
+    path = tmp_path / "wal.log"
+    bounds = _write_wal(path)
+    data = bytearray(path.read_bytes())
+    full = walmod.scan(path).records
+    flip = tmp_path / "flip.log"
+    for k in range(3):                    # corrupt one byte inside record k
+        mid = (bounds[k] + bounds[k + 1]) // 2
+        mutated = bytearray(data)
+        mutated[mid] ^= 0x40
+        flip.write_bytes(bytes(mutated))
+        res = walmod.scan(flip)
+        assert res.damaged_tail and len(res.records) == k
+        for got, want in zip(res.records, full[:k]):
+            assert _same_record(got, want)
+
+
+def _mini_store(tmp_path, *, n=200):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imi as imimod
+
+    x = np.random.default_rng(3).normal(0, 1, (n, D)).astype(np.float32)
+    idx = imimod.build_imi(jax.random.PRNGKey(3), jnp.asarray(x),
+                           jnp.arange(n), K=4, P=2, M=8, kmeans_iters=2)
+    store = VectorStore.create(tmp_path / "s", idx, flush_rows=10 ** 9)
+    rng = np.random.default_rng(4)
+    for lo in (1000, 1010, 1020):
+        store.insert(rng.normal(0, 1, (10, D)).astype(np.float32),
+                     np.arange(lo, lo + 10))
+    store.delete([1003, 7])
+    store.close()
+    return tmp_path / "s", set(range(n))
+
+
+def _live_ids(store) -> set:
+    ids = [int(v) for v in np.asarray(store.seg.base.ids) if int(v) >= 0]
+    for s in store.seg.segments:
+        ids.extend(int(v) for v in np.asarray(s.ids))
+    tomb = {int(t) for t in store.seg.tombstones}
+    return {v for v in ids if v not in tomb}
+
+
+def test_store_reopen_after_wal_truncation_representative_offsets(tmp_path):
+    """Full-open spot checks over the same offset space: the recovered
+    id set must equal applying exactly the surviving record prefix."""
+    root, base = _mini_store(tmp_path)
+    wal_path = root / "wal.log"
+    data = wal_path.read_bytes()
+    res = walmod.scan(wal_path)
+    assert len(res.records) == 4          # 3 inserts + 1 delete
+
+    def apply(records):
+        live = set(base)
+        for r in records:
+            if r.kind == walmod.KIND_INSERT:
+                live |= {int(i) for i in r.ids}
+            else:
+                live -= {int(i) for i in r.ids}
+        return live
+
+    # representative cuts: header-only, mid-record-1, exactly after
+    # record 2, mid-last-record, one byte short of intact
+    head = len(walmod.MAGIC) + 4
+    frame_ends = [head]
+    off = head
+    for r in walmod.scan(wal_path).records:
+        body = (walmod._encode_insert(r.seq, r.vectors, r.ids)
+                if r.kind == walmod.KIND_INSERT
+                else walmod._encode_delete(r.seq, r.ids))
+        off += walmod._HDR.size + len(body)
+        frame_ends.append(off)
+    assert frame_ends[-1] == len(data)
+    cuts = [head, (frame_ends[0] + frame_ends[1]) // 2, frame_ends[2],
+            (frame_ends[3] + frame_ends[4]) // 2, len(data) - 1]
+    for off in cuts:
+        with open(wal_path, "wb") as f:
+            f.write(data[:off])
+        surviving = walmod.scan(wal_path).records
+        with VectorStore.open(root, verify=True) as store:
+            assert _live_ids(store) == apply(surviving), f"offset {off}"
+        # reopen trimmed/repaired the tail: put the full WAL back for
+        # the next cut (open may rewrite the file)
+        with open(wal_path, "wb") as f:
+            f.write(data)
+
+
+def test_segment_bitflip_refuses_loudly(tmp_path):
+    root, _ = _mini_store(tmp_path)
+    m = manifestmod.read_manifest(root)
+    seg_dir = root / "segments" / m["base"]
+    npys = sorted(seg_dir.glob("*.npy"))
+    assert npys, "base segment should contain array files"
+    for npy in npys:
+        orig = npy.read_bytes()
+        mutated = bytearray(orig)
+        mutated[len(mutated) // 2] ^= 0x01          # single bit
+        npy.write_bytes(bytes(mutated))
+        with pytest.raises(segmentmod.SegmentCorrupt):
+            VectorStore.open(root, verify=True)
+        npy.write_bytes(orig)                       # restore
+    with VectorStore.open(root, verify=True) as store:
+        assert store.n > 0                          # clean again
+
+
+def test_segment_truncation_and_missing_footer_refuse(tmp_path):
+    root, _ = _mini_store(tmp_path)
+    m = manifestmod.read_manifest(root)
+    seg_dir = root / "segments" / m["base"]
+    npy = sorted(seg_dir.glob("*.npy"))[0]
+    orig = npy.read_bytes()
+    npy.write_bytes(orig[: len(orig) // 2])
+    with pytest.raises(segmentmod.SegmentCorrupt):
+        VectorStore.open(root, verify=True)
+    npy.write_bytes(orig)
+    footer = seg_dir / segmentmod.FOOTER
+    saved = footer.read_text()
+    footer.unlink()
+    with pytest.raises(segmentmod.SegmentCorrupt):
+        VectorStore.open(root, verify=True)
+    footer.write_text(saved)
+    # corrupt CRC in the footer itself: the array is fine but the
+    # contract (footer describes the bytes) is broken -> refuse
+    doc = json.loads(saved)
+    name = next(iter(doc["arrays"]))
+    doc["arrays"][name]["crc32"] = (doc["arrays"][name]["crc32"] + 1) \
+        % (2 ** 32)
+    footer.write_text(json.dumps(doc))
+    with pytest.raises(segmentmod.SegmentCorrupt):
+        VectorStore.open(root, verify=True)
+    footer.write_text(saved)
+    with VectorStore.open(root, verify=True) as store:
+        assert store.n > 0
+
+
+def test_manifest_never_names_missing_segment(tmp_path):
+    root, _ = _mini_store(tmp_path)
+    m = manifestmod.read_manifest(root)
+    seg_dir = root / "segments" / m["base"]
+    moved = seg_dir.with_suffix(".gone")
+    shutil.move(seg_dir, moved)
+    with pytest.raises(Exception):
+        VectorStore.open(root, verify=True)
+    shutil.move(moved, seg_dir)
+    with VectorStore.open(root, verify=True) as store:
+        assert store.n > 0
